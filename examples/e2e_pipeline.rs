@@ -1,0 +1,121 @@
+//! END-TO-END driver — proves all layers compose on a realistic workload.
+//!
+//! Pipeline: generate a ~1M-node / ~14M-edge skewed social network (RMAT) →
+//! build CSR → ≺-orient → cost-balanced partitioning → run the paper's two
+//! algorithms on the real threaded message-passing runtime → run the hybrid
+//! counter through the **AOT XLA/PJRT artifact** (L1 Pallas kernel inside)
+//! → cross-check every count for exact equality → report the paper's
+//! headline metrics (memory ratio, message economics, load balance) plus a
+//! virtual-time P=200 projection. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+//! (≈ 1-2 minutes; set E2E_SCALE=small for a 10× smaller run.)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tricount::algo::{dynamic_lb, surrogate};
+use tricount::config::CostFn;
+use tricount::gen::rng::Rng;
+use tricount::graph::ordering::Oriented;
+use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::cost::{cost_vector, prefix_sums};
+use tricount::partition::{nonoverlap, overlap};
+use tricount::runtime::engine::Engine;
+use tricount::seq::node_iterator;
+use tricount::sim;
+use tricount::tensor::hybrid;
+
+fn main() -> anyhow::Result<()> {
+    let small = std::env::var("E2E_SCALE").map(|s| s == "small").unwrap_or(false);
+    let (scale, ef) = if small { (17u32, 14usize) } else { (20u32, 14usize) };
+
+    // ---- 1. Workload ------------------------------------------------------
+    let t0 = Instant::now();
+    let g = tricount::gen::rmat::rmat(scale, ef, Default::default(), &mut Rng::seeded(0xE2E));
+    let stats = tricount::graph::stats::degree_stats(&g);
+    println!("[1] workload (RMAT 2^{scale}, ef={ef}): {stats}  [{:.1?}]", t0.elapsed());
+
+    // ---- 2. Orientation ---------------------------------------------------
+    let t0 = Instant::now();
+    let o = Arc::new(Oriented::from_graph(&g));
+    println!("[2] ≺-oriented: {} directed edges, d̂_max={}  [{:.1?}]",
+        o.num_edges(),
+        (0..g.num_nodes() as u32).map(|v| o.effective_degree(v)).max().unwrap_or(0),
+        t0.elapsed());
+
+    // ---- 3. Sequential baseline ------------------------------------------
+    let t0 = Instant::now();
+    let t_seq = node_iterator::count(&o);
+    let seq_time = t0.elapsed();
+    println!("[3] sequential (Fig 1): {t_seq} triangles  [{seq_time:.1?}]");
+
+    // ---- 4. Partitioning + memory accounting (paper Table II headline) ----
+    let p = 8usize;
+    let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+    let ranges = balanced_ranges(&prefix, p);
+    let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+    let non_mb = nonoverlap::partition_sizes(&o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+    let over_mb = overlap::overlap_sizes(&g, &o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+    println!("[4] largest partition @P={p}: non-overlap {non_mb:.1}MB vs PATRIC-overlap {over_mb:.1}MB ({:.1}x)", over_mb / non_mb);
+
+    // ---- 5. §IV surrogate algorithm on the real message-passing runtime ---
+    let t0 = Instant::now();
+    let s = surrogate::run(&o, &ranges, &owner)?;
+    let st = s.metrics.totals();
+    println!(
+        "[5] surrogate (threads, P={p}): {} triangles, {} msgs, {:.1}MB moved, imbalance {:.2}  [{:.1?}]",
+        s.triangles,
+        st.messages_sent,
+        st.bytes_sent as f64 / 1e6,
+        s.metrics.imbalance(),
+        t0.elapsed()
+    );
+
+    // ---- 6. §V dynamic load balancing on the real runtime -----------------
+    let t0 = Instant::now();
+    let d = dynamic_lb::run(&o, p, dynamic_lb::Options::default())?;
+    println!(
+        "[6] dynamic-LB (threads, P={p}): {} triangles, imbalance {:.2}  [{:.1?}]",
+        d.triangles,
+        d.metrics.imbalance(),
+        t0.elapsed()
+    );
+
+    // ---- 7. Hybrid dense-core through the XLA/PJRT artifact ---------------
+    let engine = Engine::cpu()?;
+    let t0 = Instant::now();
+    let h = hybrid::count_with_engine(&o, &engine, "artifacts", 0)?;
+    println!(
+        "[7] hybrid (XLA {} block, core {} nodes, {} edges offloaded): {} = {} dense + {} sparse  [{:.1?}]",
+        h.block, h.core_size, h.offloaded_edges, h.triangles, h.dense_triangles, h.sparse_triangles,
+        t0.elapsed()
+    );
+
+    // ---- 8. Cross-check ----------------------------------------------------
+    assert_eq!(t_seq, s.triangles, "surrogate mismatch");
+    assert_eq!(t_seq, d.triangles, "dynamic-LB mismatch");
+    assert_eq!(t_seq, h.triangles, "hybrid/XLA mismatch");
+    println!("[8] all counters agree exactly ✓");
+
+    // ---- 9. Virtual-time projection at the paper's P=200 ------------------
+    let model = sim::calibrate::calibrated();
+    let sur = sim::space_efficient::simulate_balanced(
+        &o, 200, CostFn::SurrogateNew, sim::space_efficient::Scheme::Surrogate, &model);
+    let dir = sim::space_efficient::simulate_balanced(
+        &o, 200, CostFn::SurrogateNew, sim::space_efficient::Scheme::Direct, &model);
+    let pat = sim::space_efficient::simulate_patric_balanced(&o, 200, CostFn::PatricBest, &model);
+    let dyn200 = sim::dynamic::simulate(
+        &o, 200, CostFn::Degree, sim::dynamic::SimGranularity::Shrinking, &model);
+    println!(
+        "[9] virtual P=200 (α={:.2}ns): patric {:.0}ms | direct {:.0}ms | surrogate {:.0}ms | dynamic {:.0}ms (speedup {:.0})",
+        model.alpha_ns,
+        pat.makespan_ns / 1e6,
+        dir.makespan_ns / 1e6,
+        sur.makespan_ns / 1e6,
+        dyn200.makespan_ns / 1e6,
+        dyn200.speedup()
+    );
+    println!("e2e pipeline complete ✓ (record in EXPERIMENTS.md)");
+    Ok(())
+}

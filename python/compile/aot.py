@@ -1,0 +1,56 @@
+"""AOT entry point: lower the L2 model to HLO text artifacts.
+
+Run via ``make artifacts`` (or ``cd python && python -m compile.aot``).
+Writes ``artifacts/triangle_count_<N>.hlo.txt`` for each supported size.
+Python runs only here, at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import os
+import sys
+
+# Force float64 support before jax initializes (exact tile reduction).
+os.environ.setdefault("JAX_ENABLE_X64", "true")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in model.EXPORT_SIZES),
+        help="comma-separated matrix sizes to export",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="(compat) also write the largest artifact to this exact path",
+    )
+    args = ap.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+    last_path = None
+    for n in sizes:
+        text = model.lower_to_hlo_text(model.triangle_count, n)
+        path = os.path.join(args.out_dir, f"triangle_count_{n}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        last_path = path
+    if args.out and last_path:
+        with open(last_path) as src, open(args.out, "w") as dst:
+            dst.write(src.read())
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

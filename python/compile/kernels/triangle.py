@@ -1,0 +1,109 @@
+"""L1 — Pallas blocked dense triangle-count kernel.
+
+TPU adaptation of the paper's compute hot-spot (DESIGN.md §Hardware-
+Adaptation): the sorted-list intersection ``|N_v ∩ N_u|`` of the CPU/MPI
+algorithm becomes, on a dense 0/1 oriented adjacency block ``L``, the fused
+matmul + mask + reduce
+
+    T = sum((L @ L) * L)
+
+which is exactly what the MXU systolic array wants.  The kernel tiles the
+``(I, J, K)`` contraction over ``B x B`` VMEM blocks:
+
+* grid ``(N/B, N/B, N/B)``; step ``(i, j, k)`` loads ``L[i,k]`` and
+  ``L[k,j]`` (the two matmul operands) plus ``L[i,j]`` (the mask tile);
+* a VMEM scratch accumulator carries the partial ``(L@L)[i,j]`` across the
+  ``k`` steps (double-buffered HBM->VMEM pipelining is Pallas's default
+  behaviour for sequential grid axes);
+* on the last ``k`` step the accumulated tile is masked by ``L[i,j]``,
+  reduced, and accumulated into a per-``(i,j)`` partial-sum output.
+
+The host-side wrapper sums the ``(N/B)²`` f32 partials in f64.
+
+Exactness: every ``acc`` entry is a count ``<= N``; the masked per-tile sum
+is ``<= B*B*N`` (= 2^23 for B=128, N=512) — below 2^24, so f32 arithmetic
+is exact; the final f64 tree-sum of partials is exact far beyond any count
+representable here.
+
+VMEM/MXU estimate (B = 128, f32): 4 input/scratch tiles x 64 KiB = 256 KiB
+of VMEM (1.6% of 16 MiB — double-buffering and larger B both fit easily);
+the inner op is a 128x128x128 MXU matmul with one VPU multiply + reduce —
+compute intensity identical to a standard blocked matmul, so the roofline
+ratio tracks XLA's own GEMM (see DESIGN.md §Perf).
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is what the Rust
+runtime loads.  On a real TPU the same ``pallas_call`` compiles natively.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, m_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step.
+
+    x_ref: L[i·B:(i+1)·B, k·B:(k+1)·B]   (matmul LHS tile)
+    y_ref: L[k·B:(k+1)·B, j·B:(j+1)·B]   (matmul RHS tile)
+    m_ref: L[i·B:(i+1)·B, j·B:(j+1)·B]   (mask tile)
+    o_ref: per-(i,j) partial sum (1x1)
+    acc_ref: VMEM scratch, B x B accumulator across k
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU: B x B x B matmul accumulated in f32.
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        # VPU: mask by the adjacency tile and reduce to one scalar.
+        o_ref[0, 0] = jnp.sum(acc_ref[...] * m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def triangle_count_tiles(mat: jnp.ndarray, block: int = 128) -> jnp.ndarray:
+    """Per-(i,j)-tile partial triangle counts, shape (N/B, N/B), f32.
+
+    ``mat`` must be square with side divisible by ``block``.
+    """
+    n = mat.shape[0]
+    assert mat.shape == (n, n), f"square matrix required, got {mat.shape}"
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    nb = n // block
+    grid = (nb, nb, nb)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),  # LHS
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),  # RHS
+            pl.BlockSpec((block, block), lambda i, j, k: (i, j)),  # mask
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, nb), jnp.float32),
+        scratch_shapes=[pltpu_scratch(block)],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(mat, mat, mat)
+
+
+def pltpu_scratch(block: int):
+    """VMEM scratch accumulator spec (API differs across jax versions)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((block, block), jnp.float32)
+    except Exception:  # pragma: no cover - fallback for non-tpu pallas builds
+        return pl.ANY((block, block), jnp.float32)
+
+
+def triangle_count_pallas(mat: jnp.ndarray, block: int = 128) -> jnp.ndarray:
+    """Full dense triangle count: Pallas tiles + exact f64 tile reduction."""
+    tiles = triangle_count_tiles(mat, block=block)
+    return jnp.sum(tiles.astype(jnp.float64))

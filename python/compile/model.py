@@ -1,0 +1,61 @@
+"""L2 — the JAX compute graph around the L1 Pallas kernel.
+
+The "model" of this systems paper is the dense-core triangle counter: a
+blocked ``sum((L @ L) * L)`` over a 0/1 oriented adjacency matrix, with the
+per-tile work done by the Pallas kernel (kernels/triangle.py) and the exact
+f64 tile reduction done here.  ``aot.py`` lowers :func:`triangle_count` once
+per supported block size to HLO text; the Rust runtime executes it on the
+request path (python never is).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.triangle import triangle_count_tiles
+
+#: Matrix sizes the AOT pipeline exports. 512 is the default dense-core
+#: size; 128/256 serve smaller graphs. Per-tile f32 partials stay exact
+#: (< 2^24) for all of these (see kernels/triangle.py).
+EXPORT_SIZES = (128, 256, 512)
+
+#: Pallas tile edge. 128 = one MXU-aligned f32 tile.
+BLOCK = 128
+
+
+def triangle_count(mat: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Count triangles in the dense 0/1 oriented adjacency ``mat``.
+
+    Returns a 1-tuple (lowered with ``return_tuple=True``) of an f64 scalar;
+    integral for every valid 0/1 input of supported size.
+    """
+    n = mat.shape[0]
+    block = min(BLOCK, n)
+    tiles = triangle_count_tiles(mat, block=block)
+    return (jnp.sum(tiles.astype(jnp.float64)),)
+
+
+def triangle_count_ref_model(mat: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Reference L2 graph using the pure-jnp oracle (compiled for A/B
+    validation of the AOT pipeline itself)."""
+    from compile.kernels.ref import triangle_count_ref
+
+    return (triangle_count_ref(mat),)
+
+
+def lower_to_hlo_text(fn, n: int) -> str:
+    """Lower ``fn`` over an (n, n) f32 input to HLO text.
+
+    HLO *text* (not ``HloModuleProto.serialize``) is the interchange format:
+    jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 (the
+    version the published ``xla`` rust crate binds) rejects; the text parser
+    reassigns ids (see /opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc
+
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

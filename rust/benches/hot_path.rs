@@ -1,0 +1,136 @@
+//! Micro-benchmarks of the hot paths (criterion is unavailable offline —
+//! this is a self-contained harness: warmup + N timed reps, reporting
+//! median and throughput). Run with `cargo bench --offline hot_path`.
+
+use std::time::Instant;
+
+use tricount::gen::rng::Rng;
+use tricount::graph::ordering::Oriented;
+use tricount::intersect;
+use tricount::seq::node_iterator;
+
+fn bench<F: FnMut() -> u64>(name: &str, units: u64, unit_name: &str, mut f: F) {
+    // Warmup.
+    let mut sink = 0u64;
+    sink = sink.wrapping_add(f());
+    // Timed reps.
+    let mut samples = Vec::new();
+    let reps = 5;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        sink = sink.wrapping_add(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[reps / 2];
+    println!(
+        "{name:<44} {:>10.3} ms   {:>10.1} M{unit_name}/s",
+        med * 1e3,
+        units as f64 / med / 1e6
+    );
+    std::hint::black_box(sink);
+}
+
+fn sorted_list(rng: &mut Rng, len: usize, universe: u32) -> Vec<u32> {
+    let mut v: Vec<u32> = (0..len).map(|_| rng.next_u32() % universe).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn main() {
+    println!("== intersection kernels ==");
+    let mut rng = Rng::seeded(1);
+    let a = sorted_list(&mut rng, 10_000, 1_000_000);
+    let b = sorted_list(&mut rng, 10_000, 1_000_000);
+    let units = (a.len() + b.len()) as u64 * 200;
+    bench("merge balanced 10K∩10K ×200", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..200 {
+            intersect::count_merge(&a, &b, &mut c);
+        }
+        c
+    });
+    bench("adaptive balanced 10K∩10K ×200", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..200 {
+            intersect::count_adaptive(&a, &b, &mut c);
+        }
+        c
+    });
+
+    let small = sorted_list(&mut rng, 64, 1_000_000);
+    let units = (small.len() + b.len()) as u64 * 2000;
+    bench("merge skewed 64∩10K ×2000", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..2000 {
+            intersect::count_merge(&small, &b, &mut c);
+        }
+        c
+    });
+    bench("gallop skewed 64∩10K ×2000", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..2000 {
+            intersect::count_galloping(&small, &b, &mut c);
+        }
+        c
+    });
+    bench("adaptive skewed 64∩10K ×2000", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..2000 {
+            intersect::count_adaptive(&small, &b, &mut c);
+        }
+        c
+    });
+
+    println!("\n== end-to-end sequential counting ==");
+    for (name, g) in [
+        ("PA(200K, 16)", tricount::gen::pa::preferential_attachment(200_000, 16, &mut Rng::seeded(2))),
+        ("RMAT(2^17, 16)", tricount::gen::rmat::rmat(17, 16, Default::default(), &mut Rng::seeded(3))),
+        ("contact(200K, 30)", tricount::gen::geometric::miami_like(200_000, 30, &mut Rng::seeded(4))),
+    ] {
+        let o = Oriented::from_graph(&g);
+        let work: u64 = (0..o.num_nodes() as u32).map(|v| node_iterator::node_work(&o, v)).sum();
+        bench(&format!("count {name} (m={})", g.num_edges()), work, "workunit", || {
+            node_iterator::count(&o)
+        });
+    }
+
+    println!("\n== orientation + partitioning ==");
+    let g = tricount::gen::pa::preferential_attachment(500_000, 20, &mut Rng::seeded(5));
+    bench("orient PA(500K,20)", g.num_edges() * 2, "edge", || {
+        Oriented::from_graph(&g).num_edges()
+    });
+    let o = Oriented::from_graph(&g);
+    bench("cost vector (new estimator)", o.num_edges(), "edge", || {
+        tricount::partition::cost::cost_vector(&o, tricount::config::CostFn::SurrogateNew)
+            .len() as u64
+    });
+    let costs = tricount::partition::cost::cost_vector(&o, tricount::config::CostFn::SurrogateNew);
+    bench("prefix sums + 200 balanced ranges", o.num_nodes() as u64, "node", || {
+        let prefix = tricount::partition::cost::prefix_sums(&costs);
+        tricount::partition::balance::balanced_ranges(&prefix, 200).len() as u64
+    });
+
+    println!("\n== XLA dense-core path (requires `make artifacts`) ==");
+    match tricount::runtime::artifact::discover("artifacts") {
+        Ok(arts) if !arts.is_empty() => {
+            let engine = tricount::runtime::engine::Engine::cpu().unwrap();
+            for art in &arts {
+                let counter = engine.load_dense_counter(&art.path, art.n).unwrap();
+                let core = {
+                    let g = tricount::graph::classic::complete(art.n.min(256));
+                    let o = Oriented::from_graph(&g);
+                    let c = tricount::tensor::core_extract::DenseCore::extract(&o, art.n.min(256));
+                    tricount::tensor::pack::pack_core(&o, &c, art.n)
+                };
+                // FLOPs of the blocked matmul: 2·N³ per execution.
+                let flops = 2 * (art.n as u64).pow(3);
+                bench(&format!("XLA dense count N={}", art.n), flops, "flop", || {
+                    counter.count(&core).unwrap()
+                });
+            }
+        }
+        _ => println!("  [skipped: no artifacts]"),
+    }
+}

@@ -1,0 +1,37 @@
+//! One bench target per paper table/figure: each runs the corresponding
+//! experiment driver from `tricount::exp` (quick workloads unless
+//! `TRICOUNT_BENCH_FULL=1`) and reports wall time, regenerating the
+//! paper-shaped rows as a side effect. `cargo bench --offline paper`.
+//!
+//! Full-scale results for EXPERIMENTS.md come from `tricount exp --id all`.
+
+use std::time::Instant;
+
+fn main() {
+    let full = std::env::var("TRICOUNT_BENCH_FULL").map(|s| s == "1").unwrap_or(false);
+    let opts = tricount::exp::Options {
+        scale: 1.0,
+        out_dir: Some("results/bench".into()),
+        quick: !full,
+    };
+    println!(
+        "paper benches ({} mode) — one per table/figure\n",
+        if full { "FULL" } else { "quick" }
+    );
+    let mut failures = 0;
+    for e in tricount::exp::registry() {
+        let t0 = Instant::now();
+        match (e.run)(&opts) {
+            Ok(report) => {
+                println!("bench_{:<8} {:>9.2?}   ({} rows, {})", e.id, t0.elapsed(), report.rows.len(), e.paper_ref);
+            }
+            Err(err) => {
+                failures += 1;
+                println!("bench_{:<8} FAILED: {err}", e.id);
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

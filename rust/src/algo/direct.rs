@@ -1,0 +1,191 @@
+//! §IV-C — the **direct approach** baseline.
+//!
+//! For every oriented edge `(v, u)` with a remote `u`, rank `i` requests
+//! `N_u` from `u`'s owner and intersects locally. No redundancy elimination:
+//! if `u` appears in many of rank `i`'s lists, `N_u` crosses the wire once
+//! *per occurrence* — the high communication overhead the paper measures in
+//! Fig 4 / Table III and the surrogate scheme exists to eliminate.
+
+use std::sync::Arc;
+
+use crate::algo::surrogate::RunResult;
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+use crate::intersect::count_adaptive;
+use crate::partition::nonoverlap::PartitionView;
+use crate::{TriangleCount, VertexId};
+
+/// Wire messages of the direct scheme.
+pub enum Msg {
+    /// "Send me `N_u`; it's for my node `v`."
+    Request { u: VertexId, v: VertexId },
+    /// `N_u`, echoed with the requester's `v` so no pending-state is needed.
+    Response { v: VertexId, nu: Vec<VertexId> },
+    /// Termination notifier (§IV-D).
+    Completion,
+}
+
+impl Payload for Msg {
+    fn size_bytes(&self) -> u64 {
+        match self {
+            Msg::Request { .. } => 16,
+            Msg::Response { nu, .. } => 12 + 4 * nu.len() as u64,
+            Msg::Completion => 8,
+        }
+    }
+}
+
+/// Run the direct-approach algorithm over the same non-overlapping
+/// partitions as [`crate::algo::surrogate::run`].
+pub fn run(
+    graph: &Arc<Oriented>,
+    ranges: &[std::ops::Range<u32>],
+    owner: &Arc<Vec<u32>>,
+) -> Result<RunResult> {
+    let p = ranges.len();
+    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
+    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
+        rank_main(c, graph.clone(), ranges[c.rank()].clone(), owner.clone())
+    })?;
+    let mut metrics = ClusterMetrics::default();
+    let mut triangles = 0;
+    for (t, m) in results {
+        triangles += t;
+        metrics.per_rank.push(m);
+    }
+    Ok(RunResult { triangles, metrics })
+}
+
+struct RankState {
+    t: TriangleCount,
+    work: u64,
+    completions: usize,
+    pending: u64,
+}
+
+fn handle(c: &mut Comm<Msg>, view: &PartitionView, src: usize, msg: Msg, st: &mut RankState) {
+    match msg {
+        Msg::Request { u, v } => {
+            // We own u; ship N_u back, tagged with the requester's v.
+            let nu = view.nbrs(u).to_vec();
+            c.send(src, Msg::Response { v, nu }).expect("send response");
+        }
+        Msg::Response { v, nu } => {
+            let nv = view.nbrs(v);
+            count_adaptive(nv, &nu, &mut st.t);
+            st.work += (nv.len() + nu.len()) as u64;
+            st.pending -= 1;
+        }
+        Msg::Completion => st.completions += 1,
+    }
+}
+
+fn rank_main(
+    c: &mut Comm<Msg>,
+    graph: Arc<Oriented>,
+    range: std::ops::Range<u32>,
+    owner: Arc<Vec<u32>>,
+) -> TriangleCount {
+    let me = c.rank() as u32;
+    let view = PartitionView::new(graph, range.clone());
+    let mut st = RankState { t: 0, work: 0, completions: 0, pending: 0 };
+
+    for v in range.clone() {
+        let nv = view.nbrs(v);
+        let dv = nv.len();
+        for &u in nv {
+            let j = owner[u as usize];
+            if j == me {
+                let nu = view.nbrs(u);
+                count_adaptive(nv, nu, &mut st.t);
+                st.work += (dv + nu.len()) as u64;
+            } else {
+                // One request per remote oriented edge — redundancy included.
+                c.send(j as usize, Msg::Request { u, v }).expect("send request");
+                st.pending += 1;
+            }
+        }
+        while let Some((src, msg)) = c.try_recv() {
+            handle(c, &view, src, msg, &mut st);
+        }
+    }
+
+    // Drain until all our responses arrived (serving peers' requests too,
+    // otherwise two ranks could wait on each other forever).
+    while st.pending > 0 {
+        let (src, msg) = c.recv().expect("recv");
+        handle(c, &view, src, msg, &mut st);
+    }
+
+    c.bcast_control(|| Msg::Completion).expect("bcast");
+
+    while st.completions < c.size() - 1 {
+        let (src, msg) = c.recv().expect("recv");
+        handle(c, &view, src, msg, &mut st);
+    }
+
+    c.metrics.work_units = st.work;
+    c.reduce_sum(st.t);
+    st.t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::partition::balance::{balanced_ranges, owner_table};
+    use crate::partition::cost::{cost_vector, prefix_sums};
+
+    fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
+        let o = Arc::new(Oriented::from_graph(g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, p);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        run(&o, &ranges, &owner).unwrap()
+    }
+
+    #[test]
+    fn karate_exact_at_many_p() {
+        for p in [1, 2, 4, 9] {
+            assert_eq!(run_on(&classic::karate(), p).triangles, 45, "P={p}");
+        }
+    }
+
+    #[test]
+    fn matches_sequential_on_random() {
+        use crate::gen::rng::Rng;
+        let mut rng = Rng::seeded(77);
+        let g = crate::gen::erdos_renyi::gnm(250, 1500, &mut rng);
+        let o = Oriented::from_graph(&g);
+        let expect = crate::seq::node_iterator::count(&o);
+        assert_eq!(run_on(&g, 5).triangles, expect);
+    }
+
+    #[test]
+    fn direct_sends_more_messages_than_surrogate() {
+        // The paper's core §IV observation, as a test.
+        let g = crate::gen::pa::preferential_attachment(
+            600,
+            10,
+            &mut crate::gen::rng::Rng::seeded(88),
+        );
+        let o = Arc::new(Oriented::from_graph(&g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, 6);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        let d = run(&o, &ranges, &owner).unwrap();
+        let s = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap();
+        assert_eq!(d.triangles, s.triangles);
+        let dm = d.metrics.totals();
+        let sm = s.metrics.totals();
+        assert!(
+            dm.messages_sent > 2 * sm.messages_sent,
+            "direct={} surrogate={}",
+            dm.messages_sent,
+            sm.messages_sent
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! §V — the fast parallel algorithm with **dynamic load balancing**
+//! (paper Fig 11).
+//!
+//! Assumes every machine stores the whole network (shared read-only `Arc`
+//! here, faithful to that assumption). Rank 0 is the dedicated
+//! **coordinator**; ranks `1..P` are **workers**.
+//!
+//! * Initial assignment (Eqn 1): half the total cost is split into `P−1`
+//!   equal tasks, picked up deterministically without coordinator traffic.
+//! * Dynamic phase (Eqn 2): the coordinator serves tasks from a queue whose
+//!   granularity shrinks geometrically; an idle worker sends `⟨i⟩`, gets
+//!   `⟨v,t⟩` back, or `⟨terminate⟩` when the queue is dry.
+//! * Cost functions `f(v) = 1` or `f(v) = d_v` (paper §V-A: cheap,
+//!   zero-overhead choices), plus the richer estimators for ablations.
+
+use std::sync::Arc;
+
+use crate::algo::surrogate::RunResult;
+use crate::algo::tasks::{self, Task};
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::seq::node_iterator;
+use crate::TriangleCount;
+
+/// Task-granularity policy for the dynamic phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// Paper's scheme: size shrinks by `1/(P−1)` of the remainder (Eqn 2).
+    Shrinking,
+    /// Static strawman (Fig 13): the dynamic region is cut into `k` tasks
+    /// of equal cost up front.
+    Fixed(usize),
+}
+
+/// Wire messages of the coordinator/worker protocol.
+pub enum Msg {
+    /// Worker `i` is idle (paper `⟨i⟩`; sender rank is carried by the envelope).
+    Request,
+    /// A task assignment `⟨v, t⟩`.
+    Assign(Task),
+    /// No more tasks (`⟨terminate⟩`).
+    Terminate,
+}
+
+impl Payload for Msg {
+    fn size_bytes(&self) -> u64 {
+        match self {
+            Msg::Request => 8,
+            Msg::Assign(_) => 16,
+            Msg::Terminate => 8,
+        }
+    }
+}
+
+/// Options for a dynamic-LB run.
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub cost_fn: CostFn,
+    pub granularity: Granularity,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { cost_fn: CostFn::Degree, granularity: Granularity::Shrinking }
+    }
+}
+
+/// Run with `p` ranks (1 coordinator + `p−1` workers; `p ≥ 2`).
+pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> {
+    assert!(p >= 2, "dynamic LB needs a coordinator and at least one worker");
+    let costs = cost_vector(graph, opts.cost_fn);
+    let prefix = Arc::new(prefix_sums(&costs));
+    let workers = p - 1;
+
+    // Deterministic pre-computation shared by all ranks (paper: "all P
+    // processors work in parallel to determine initial tasks").
+    let tp = tasks::half_point(&prefix);
+    let initial = Arc::new(tasks::equal_cost_tasks(&prefix, 0, tp, workers));
+    let queue: Arc<Vec<Task>> = Arc::new(match opts.granularity {
+        Granularity::Shrinking => tasks::shrinking_tasks(&prefix, tp, workers),
+        Granularity::Fixed(k) => tasks::fixed_tasks(&prefix, tp, k),
+    });
+
+    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
+        if c.rank() == 0 {
+            coordinator(c, &queue)
+        } else {
+            worker(c, graph.clone(), &initial, &prefix)
+        }
+    })?;
+
+    let mut metrics = ClusterMetrics::default();
+    let mut triangles = 0;
+    for (t, m) in results {
+        triangles += t;
+        metrics.per_rank.push(m);
+    }
+    Ok(RunResult { triangles, metrics })
+}
+
+/// Coordinator (paper Fig 11 lines 4-12).
+fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> TriangleCount {
+    let mut next = 0usize;
+    let mut terminated = 0usize;
+    let workers = c.size() - 1;
+    while terminated < workers {
+        let (src, msg) = c.recv().expect("coordinator recv");
+        match msg {
+            Msg::Request => {
+                if next < queue.len() {
+                    let t = queue[next];
+                    next += 1;
+                    c.send_control(src, Msg::Assign(t)).expect("assign");
+                } else {
+                    c.send_control(src, Msg::Terminate).expect("terminate");
+                    terminated += 1;
+                }
+            }
+            _ => unreachable!("coordinator only receives requests"),
+        }
+    }
+    c.reduce_sum(0);
+    0
+}
+
+/// Worker (paper Fig 11 lines 14-23).
+fn worker(
+    c: &mut Comm<Msg>,
+    graph: Arc<Oriented>,
+    initial: &Arc<Vec<Task>>,
+    _prefix: &Arc<Vec<u64>>,
+) -> TriangleCount {
+    let wid = c.rank() - 1; // worker index 0..P-1
+    let mut t: TriangleCount = 0;
+    let mut work = 0u64;
+
+    // Initial task — deterministic, no coordinator involved (Eqn 1).
+    if let Some(task) = initial.get(wid) {
+        run_task(&graph, *task, &mut t, &mut work);
+    }
+
+    // Dynamic phase: request → assign/terminate loop.
+    loop {
+        c.send_control(0, Msg::Request).expect("request");
+        let (_src, msg) = c.recv().expect("worker recv");
+        match msg {
+            Msg::Assign(task) => run_task(&graph, task, &mut t, &mut work),
+            Msg::Terminate => break,
+            Msg::Request => unreachable!("workers never receive requests"),
+        }
+    }
+
+    c.metrics.work_units = work;
+    c.reduce_sum(t);
+    t
+}
+
+/// `COUNTTRIANGLES⟨v,t⟩` (paper Fig 10) + work accounting.
+#[inline]
+fn run_task(o: &Oriented, task: Task, t: &mut TriangleCount, work: &mut u64) {
+    node_iterator::count_range(o, task.start, task.end(), t);
+    for v in task.range() {
+        *work += node_iterator::node_work(o, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+
+    fn run_on(g: &crate::graph::csr::Csr, p: usize, opts: Options) -> RunResult {
+        let o = Arc::new(Oriented::from_graph(g));
+        run(&o, p, opts).unwrap()
+    }
+
+    #[test]
+    fn exact_on_classics_all_cost_fns() {
+        for cost_fn in [CostFn::Unit, CostFn::Degree, CostFn::PatricBest, CostFn::SurrogateNew] {
+            let opts = Options { cost_fn, granularity: Granularity::Shrinking };
+            assert_eq!(run_on(&classic::karate(), 4, opts).triangles, 45, "{cost_fn:?}");
+            assert_eq!(run_on(&classic::complete(13), 3, opts).triangles, 286);
+        }
+    }
+
+    #[test]
+    fn fixed_granularity_also_exact() {
+        let opts = Options { cost_fn: CostFn::Degree, granularity: Granularity::Fixed(10) };
+        assert_eq!(run_on(&classic::karate(), 5, opts).triangles, 45);
+    }
+
+    #[test]
+    fn matches_sequential_on_random() {
+        use crate::gen::rng::Rng;
+        let g = crate::gen::pa::preferential_attachment(800, 12, &mut Rng::seeded(44));
+        let o = Oriented::from_graph(&g);
+        let expect = node_iterator::count(&o);
+        for p in [2, 3, 6, 10] {
+            assert_eq!(run_on(&g, p, Options::default()).triangles, expect, "P={p}");
+        }
+    }
+
+    #[test]
+    fn minimum_cluster_is_two() {
+        assert_eq!(run_on(&classic::complete(6), 2, Options::default()).triangles, 20);
+    }
+
+    #[test]
+    fn coordinator_does_no_counting_work() {
+        let r = run_on(&classic::karate(), 4, Options::default());
+        assert_eq!(r.metrics.per_rank[0].work_units, 0);
+        assert!(r.metrics.per_rank[1..].iter().any(|m| m.work_units > 0));
+    }
+
+    #[test]
+    fn prop_dynamic_matches_sequential() {
+        crate::prop::quickcheck("dynamic == sequential", |rng, _| {
+            let g = crate::prop::arb_graph(rng, 60);
+            let o = Arc::new(Oriented::from_graph(&g));
+            let expect = node_iterator::count(&o);
+            let p = 2 + rng.below_usize(5);
+            let got = run(&o, p, Options::default()).map_err(|e| e.to_string())?.triangles;
+            if got != expect {
+                return Err(format!("P={p}: got {got}, expected {expect}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! PATRIC [21] — the overlapping-partition baseline.
+//!
+//! Each rank's partition contains `N_u` for its core nodes **and** for
+//! every node referenced by a core list, so counting needs no communication
+//! at all: rank `i` runs the Fig-1 loop over its core range and the only
+//! messages are the final reduction. Its cost is paid in *memory*
+//! (overlap blow-up, Table II / Fig 7) and in *static* load balance.
+//!
+//! In-process, the overlap partition's content is a subset of the shared
+//! `Oriented`, so ranks read it directly; the memory a real PATRIC rank
+//! would allocate is accounted by [`crate::partition::overlap`].
+
+use std::sync::Arc;
+
+use crate::algo::surrogate::RunResult;
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::Cluster;
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+use crate::intersect::count_adaptive;
+use crate::TriangleCount;
+
+/// Run PATRIC over consecutive core ranges (balanced with its own best
+/// estimator `f(v) = Σ_{u∈N_v}(d̂_v + d̂_u)` by the callers that reproduce
+/// the paper's comparisons).
+pub fn run(graph: &Arc<Oriented>, ranges: &[std::ops::Range<u32>]) -> Result<RunResult> {
+    let p = ranges.len();
+    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
+    let results = Cluster::run::<u64, TriangleCount, _>(p, |c| {
+        let range = ranges[c.rank()].clone();
+        let o = graph.clone();
+        let mut t: TriangleCount = 0;
+        let mut work = 0u64;
+        for v in range {
+            let nv = o.nbrs(v);
+            for &u in nv {
+                // u's list is in the overlap portion — local on a real
+                // PATRIC rank, shared read-only here.
+                let nu = o.nbrs(u);
+                count_adaptive(nv, nu, &mut t);
+                work += (nv.len() + nu.len()) as u64;
+            }
+        }
+        c.metrics.work_units = work;
+        c.reduce_sum(t);
+        t
+    })?;
+    let mut metrics = ClusterMetrics::default();
+    let mut triangles = 0;
+    for (t, m) in results {
+        triangles += t;
+        metrics.per_rank.push(m);
+    }
+    Ok(RunResult { triangles, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::partition::balance::balanced_ranges;
+    use crate::partition::cost::{cost_vector, prefix_sums};
+
+    fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
+        let o = Arc::new(Oriented::from_graph(g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+        let ranges = balanced_ranges(&prefix, p);
+        run(&o, &ranges).unwrap()
+    }
+
+    #[test]
+    fn exact_on_classics() {
+        for p in [1, 3, 6] {
+            assert_eq!(run_on(&classic::karate(), p).triangles, 45);
+            assert_eq!(run_on(&classic::complete(15), p).triangles, 455);
+            assert_eq!(run_on(&classic::petersen(), p).triangles, 0);
+        }
+    }
+
+    #[test]
+    fn zero_data_messages() {
+        let r = run_on(&classic::karate(), 4);
+        assert_eq!(r.metrics.totals().messages_sent, 0);
+    }
+
+    #[test]
+    fn agrees_with_surrogate() {
+        use crate::partition::balance::owner_table;
+        let g = crate::gen::rmat::rmat(9, 6, Default::default(), &mut crate::gen::rng::Rng::seeded(5));
+        let o = Arc::new(Oriented::from_graph(&g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+        let ranges = balanced_ranges(&prefix, 5);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        let a = run(&o, &ranges).unwrap().triangles;
+        let b = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap().triangles;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,243 @@
+//! §IV — the space-efficient parallel algorithm with the **surrogate**
+//! communication scheme (paper Fig 3).
+//!
+//! Each rank owns a non-overlapping partition (consecutive node range
+//! `V_i`, oriented lists `N_v` for `v ∈ V_i`). For an oriented edge
+//! `(v, u)` with `u ∈ V_j, j ≠ i`, rank `i` sends `N_v` to `j` **once per
+//! destination partition** (the `LastProc` trick, sound because `N_v` is
+//! id-sorted and partitions are id-intervals), and `j` — the *surrogate* —
+//! counts `|N_u ∩ N_v|` for every `u ∈ N_v ∩ V_j` on `i`'s behalf
+//! (`SURROGATECOUNT`, paper Fig 2). Completion notifiers implement the
+//! §IV-D termination protocol; `MPI_Reduce` aggregates the counts.
+
+use std::sync::Arc;
+
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+use crate::intersect::count_adaptive;
+use crate::partition::nonoverlap::PartitionView;
+use crate::{TriangleCount, VertexId};
+
+/// Wire messages of the space-efficient algorithm (§IV-A: `⟨t, X⟩`).
+///
+/// The data payload is an `Arc<[VertexId]>`: a node sending `N_v` to
+/// several partitions materializes the list once and the sends share it —
+/// one allocation+copy per node instead of one per destination. On a real
+/// wire each send still costs the full payload, which is what
+/// [`Payload::size_bytes`] reports and the metrics account. (Wall-clock
+/// effect is not measurable on the 1-core container, where thread
+/// scheduling noise dominates the threaded backend — EXPERIMENTS.md §Perf.)
+pub enum Msg {
+    /// `⟨data, N_v⟩` — a neighbor list for surrogate counting.
+    Data(Arc<[VertexId]>),
+    /// `⟨completion, ·⟩` — the sender finished its own partition.
+    Completion,
+}
+
+impl Payload for Msg {
+    fn size_bytes(&self) -> u64 {
+        match self {
+            Msg::Data(x) => 8 + 4 * x.len() as u64,
+            Msg::Completion => 8,
+        }
+    }
+}
+
+/// Result of a parallel run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub triangles: TriangleCount,
+    pub metrics: ClusterMetrics,
+}
+
+/// `SURROGATECOUNT(X, i)` (paper Fig 2): count `|N_u ∩ X|` for every
+/// `u ∈ X` owned by this rank. `X` is id-sorted, the owned range is an
+/// id-interval, so the owned members form one contiguous slice of `X`.
+#[inline]
+fn surrogate_count(view: &PartitionView, x: &[VertexId], t: &mut TriangleCount, work: &mut u64) {
+    let r = view.range();
+    let lo = x.partition_point(|&u| u < r.start);
+    let hi = x.partition_point(|&u| u < r.end);
+    for &u in &x[lo..hi] {
+        let nu = view.nbrs(u);
+        count_adaptive(nu, x, t);
+        *work += (nu.len() + x.len()) as u64;
+    }
+}
+
+fn handle(view: &PartitionView, msg: Msg, t: &mut TriangleCount, work: &mut u64, completions: &mut usize) {
+    match msg {
+        Msg::Data(x) => surrogate_count(view, &x, t, work),
+        Msg::Completion => *completions += 1,
+    }
+}
+
+/// Run the surrogate algorithm on `p` ranks over pre-computed consecutive
+/// ranges (from [`crate::partition::balance::balanced_ranges`]).
+pub fn run(
+    graph: &Arc<Oriented>,
+    ranges: &[std::ops::Range<u32>],
+    owner: &Arc<Vec<u32>>,
+) -> Result<RunResult> {
+    let p = ranges.len();
+    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
+    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
+        rank_main(c, graph.clone(), ranges[c.rank()].clone(), owner.clone())
+    })?;
+    let mut metrics = ClusterMetrics::default();
+    let mut triangles = 0;
+    for (t, m) in results {
+        triangles += t;
+        metrics.per_rank.push(m);
+    }
+    Ok(RunResult { triangles, metrics })
+}
+
+/// The per-rank program (paper Fig 3 lines 1-22 + reduce).
+fn rank_main(
+    c: &mut Comm<Msg>,
+    graph: Arc<Oriented>,
+    range: std::ops::Range<u32>,
+    owner: Arc<Vec<u32>>,
+) -> TriangleCount {
+    let me = c.rank() as u32;
+    let view = PartitionView::new(graph, range.clone());
+    let mut t: TriangleCount = 0;
+    let mut work = 0u64;
+    let mut completions = 0usize;
+
+    // Lines 2-12: local counting + sends + opportunistic receive.
+    for v in range.clone() {
+        let nv = view.nbrs(v);
+        let dv = nv.len();
+        let mut last_proc: i64 = -1; // paper §IV-C: reset per node v
+        let mut payload: Option<Arc<[VertexId]>> = None; // materialized lazily, shared across sends
+        for &u in nv {
+            let j = owner[u as usize];
+            if j == me {
+                let nu = view.nbrs(u);
+                count_adaptive(nv, nu, &mut t);
+                work += (dv + nu.len()) as u64;
+            } else if last_proc != j as i64 {
+                // First u of this destination partition: push N_v once.
+                let data = payload.get_or_insert_with(|| Arc::from(nv)).clone();
+                c.send(j as usize, Msg::Data(data)).expect("send");
+                last_proc = j as i64;
+            }
+        }
+        // Line 10-14: check for incoming messages.
+        while let Some((_src, msg)) = c.try_recv() {
+            handle(&view, msg, &mut t, &mut work, &mut completions);
+        }
+    }
+
+    // Line 16: broadcast completion notifier.
+    c.bcast_control(|| Msg::Completion).expect("bcast");
+
+    // Lines 17-22: serve data until all peers completed.
+    while completions < c.size() - 1 {
+        let (_src, msg) = c.recv().expect("recv");
+        handle(&view, msg, &mut t, &mut work, &mut completions);
+    }
+
+    c.metrics.work_units = work;
+    // Lines 24-25: barrier + reduce.
+    c.reduce_sum(t);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::partition::balance::{balanced_ranges, owner_table};
+    use crate::partition::cost::{cost_vector, prefix_sums};
+
+    fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
+        let o = Arc::new(Oriented::from_graph(g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, p);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        run(&o, &ranges, &owner).unwrap()
+    }
+
+    #[test]
+    fn karate_exact_at_many_p() {
+        for p in [1, 2, 3, 5, 8, 13] {
+            let r = run_on(&classic::karate(), p);
+            assert_eq!(r.triangles, classic::KARATE_TRIANGLES, "P={p}");
+        }
+    }
+
+    #[test]
+    fn classics_exact() {
+        for (g, expect) in [
+            (classic::complete(12), 220u64),
+            (classic::petersen(), 0),
+            (classic::wheel(10), 10),
+            (classic::barbell_k4(), 8),
+        ] {
+            let r = run_on(&g, 4);
+            assert_eq!(r.triangles, expect);
+        }
+    }
+
+    #[test]
+    fn matches_sequential_on_random_graphs() {
+        use crate::gen::rng::Rng;
+        let mut rng = Rng::seeded(55);
+        for _ in 0..5 {
+            let g = crate::gen::erdos_renyi::gnm(300, 2000, &mut rng);
+            let o = Oriented::from_graph(&g);
+            let expect = crate::seq::node_iterator::count(&o);
+            for p in [2, 4, 7] {
+                assert_eq!(run_on(&g, p).triangles, expect, "P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_redundant_messages_vs_direct_bound() {
+        // Surrogate sends at most one data message per (node, partition)
+        // pair — far fewer than one per remote oriented edge.
+        let g = crate::gen::pa::preferential_attachment(
+            500,
+            8,
+            &mut crate::gen::rng::Rng::seeded(66),
+        );
+        let o = Arc::new(Oriented::from_graph(&g));
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, 4);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        let r = run(&o, &ranges, &owner).unwrap();
+        let msgs: u64 = r.metrics.per_rank.iter().map(|m| m.messages_sent).sum();
+        // Upper bound: Σ_v (#partitions ≤ P−1) but also ≤ remote oriented edges.
+        let remote_edges: u64 = (0..o.num_nodes() as u32)
+            .map(|v| {
+                o.nbrs(v)
+                    .iter()
+                    .filter(|&&u| owner[u as usize] != owner[v as usize])
+                    .count() as u64
+            })
+            .sum();
+        assert!(msgs <= remote_edges, "msgs={msgs} remote_edges={remote_edges}");
+        assert!(msgs <= (o.num_nodes() * 3) as u64);
+        assert_eq!(
+            r.triangles,
+            crate::seq::node_iterator::count(&o)
+        );
+    }
+
+    #[test]
+    fn empty_graph_and_single_rank() {
+        let g = crate::graph::csr::Csr::empty(10);
+        let r = run_on(&g, 3);
+        assert_eq!(r.triangles, 0);
+        let r = run_on(&classic::karate(), 1);
+        assert_eq!(r.triangles, 45);
+        assert_eq!(r.metrics.totals().messages_sent, 0);
+    }
+}

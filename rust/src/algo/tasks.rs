@@ -1,0 +1,206 @@
+//! Task model for the §V dynamic load balancer.
+//!
+//! A task `⟨v, t⟩` (paper Definition 2) is a consecutive node range
+//! `{v, …, v+t−1}`; its size `S(v,t) = Σ f(v+i)` (Definition 4). This
+//! module implements the paper's task-construction policies:
+//!
+//! * **Initial assignment** (Eqn 1): find `t'` with
+//!   `S(0,t') ≈ ½·S(0,n)` and split `⟨0,t'⟩` into `P−1` equal-size tasks,
+//!   one per worker, deterministically.
+//! * **Shrinking dynamic tasks** (Eqn 2): repeatedly carve the *remaining*
+//!   cost into `1/(P−1)` chunks, so granularity decreases geometrically
+//!   toward atomic tasks.
+//! * **Fixed granularity** — the static strawman Fig 13 compares against.
+
+use crate::VertexId;
+
+/// A task `⟨v, t⟩`: count triangles on nodes `v .. v+t`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Task {
+    pub start: VertexId,
+    pub len: u32,
+}
+
+impl Task {
+    #[inline]
+    pub fn end(&self) -> VertexId {
+        self.start + self.len
+    }
+    #[inline]
+    pub fn range(&self) -> std::ops::Range<VertexId> {
+        self.start..self.end()
+    }
+}
+
+/// Find the smallest `t'` such that `S(0,t') ≥ S(0,n)/2` (the paper's
+/// initial/dynamic split point). `prefix` are cost prefix sums, length n+1.
+pub fn half_point(prefix: &[u64]) -> usize {
+    let total = *prefix.last().unwrap();
+    let target = total / 2;
+    let mut lo = 0usize;
+    let mut hi = prefix.len() - 1;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if prefix[mid] >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Split `[lo, hi)` into `k` tasks of roughly equal cost (Eqn 1). Empty
+/// tasks are skipped, so fewer than `k` may be returned for degenerate
+/// inputs.
+pub fn equal_cost_tasks(prefix: &[u64], lo: usize, hi: usize, k: usize) -> Vec<Task> {
+    assert!(k >= 1 && lo <= hi);
+    let total = prefix[hi] - prefix[lo];
+    let mut out = Vec::with_capacity(k);
+    let mut start = lo;
+    for i in 1..=k {
+        let target = prefix[lo] + (total as u128 * i as u128 / k as u128) as u64;
+        // Smallest boundary ≥ target, but always at least start.
+        let mut b = lower_bound(prefix, target, start, hi);
+        if i == k {
+            b = hi;
+        }
+        if b > start {
+            out.push(Task { start: start as VertexId, len: (b - start) as u32 });
+            start = b;
+        }
+    }
+    out
+}
+
+fn lower_bound(prefix: &[u64], target: u64, lo: usize, hi: usize) -> usize {
+    let mut lo = lo;
+    let mut hi = hi;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if prefix[mid] >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Build the dynamic queue for `[from, n)` with **shrinking granularity**
+/// (Eqn 2): each next task takes `1/(P−1)` of the cost still unassigned.
+/// Terminates because every task contains ≥ 1 node (atomic-task floor,
+/// Definition 3).
+pub fn shrinking_tasks(prefix: &[u64], from: usize, p_workers: usize) -> Vec<Task> {
+    assert!(p_workers >= 1);
+    let n = prefix.len() - 1;
+    let mut out = Vec::new();
+    let mut start = from;
+    while start < n {
+        let remaining = prefix[n] - prefix[start];
+        let chunk = remaining / p_workers as u64; // S(v,t) per Eqn 2
+        let target = prefix[start] + chunk;
+        let mut b = lower_bound(prefix, target, start + 1, n);
+        if b <= start {
+            b = start + 1;
+        }
+        out.push(Task { start: start as VertexId, len: (b - start) as u32 });
+        start = b;
+    }
+    out
+}
+
+/// Fixed-granularity queue: `[from, n)` cut into tasks of equal cost
+/// (`count` of them) — the static scheme of Fig 13.
+pub fn fixed_tasks(prefix: &[u64], from: usize, count: usize) -> Vec<Task> {
+    equal_cost_tasks(prefix, from, prefix.len() - 1, count.max(1))
+}
+
+/// Check that a task list exactly tiles `[from, n)` (test/prop helper).
+pub fn tiles(tasks: &[Task], from: usize, n: usize) -> bool {
+    let mut at = from as u64;
+    for t in tasks {
+        if t.start as u64 != at || t.len == 0 {
+            return false;
+        }
+        at += t.len as u64;
+    }
+    at == n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cost::prefix_sums;
+
+    #[test]
+    fn half_point_balances() {
+        let prefix = prefix_sums(&[1; 10]);
+        assert_eq!(half_point(&prefix), 5);
+        let prefix = prefix_sums(&[9, 1, 1, 1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(half_point(&prefix), 1);
+    }
+
+    #[test]
+    fn equal_cost_tasks_tile_and_balance() {
+        let costs = [5, 1, 1, 1, 4, 1, 1, 1, 1, 1];
+        let prefix = prefix_sums(&costs);
+        let ts = equal_cost_tasks(&prefix, 0, 10, 3);
+        assert!(tiles(&ts, 0, 10), "{ts:?}");
+    }
+
+    #[test]
+    fn shrinking_tasks_tile_and_shrink() {
+        let prefix = prefix_sums(&[1u64; 1000]);
+        let ts = shrinking_tasks(&prefix, 500, 4);
+        assert!(tiles(&ts, 500, 1000), "{ts:?}");
+        // Cost (= len here) must be non-increasing until the atomic floor.
+        for w in ts.windows(2) {
+            assert!(
+                w[1].len <= w[0].len || w[0].len == 1,
+                "granularity must shrink: {:?}",
+                w
+            );
+        }
+        // First dynamic task ≈ remaining/P = 500/4.
+        assert!((ts[0].len as i64 - 125).abs() <= 1, "{ts:?}");
+    }
+
+    #[test]
+    fn shrinking_handles_tail() {
+        let prefix = prefix_sums(&[1u64; 7]);
+        let ts = shrinking_tasks(&prefix, 0, 3);
+        assert!(tiles(&ts, 0, 7), "{ts:?}");
+        assert_eq!(*ts.last().map(|t| &t.len).unwrap(), 1);
+    }
+
+    #[test]
+    fn fixed_tasks_tile() {
+        let prefix = prefix_sums(&[2u64; 40]);
+        let ts = fixed_tasks(&prefix, 10, 6);
+        assert!(tiles(&ts, 10, 40), "{ts:?}");
+    }
+
+    #[test]
+    fn empty_remainder() {
+        let prefix = prefix_sums(&[1u64; 4]);
+        let ts = shrinking_tasks(&prefix, 4, 2);
+        assert!(ts.is_empty());
+    }
+
+    #[test]
+    fn prop_shrinking_always_tiles() {
+        crate::prop::quickcheck("shrinking tiles", |rng, _| {
+            let n = 1 + rng.below_usize(200);
+            let costs: Vec<u64> = (0..n).map(|_| rng.below(20)).collect();
+            let prefix = prefix_sums(&costs);
+            let from = rng.below_usize(n + 1);
+            let p = 1 + rng.below_usize(8);
+            let ts = shrinking_tasks(&prefix, from, p);
+            if !tiles(&ts, from, n) {
+                return Err(format!("not a tiling: from={from} n={n} p={p} {ts:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,118 @@
+//! Approximation baselines the paper positions itself against (§I):
+//!
+//! * **DOULION** [13] — count triangles on an edge-sparsified graph (keep
+//!   each edge with probability `p`) and rescale by `1/p³`; unbiased.
+//! * **Wedge sampling** [18] — estimate the closure probability of a
+//!   uniformly sampled wedge (2-path) and scale by the wedge count / 3.
+//!
+//! Both trade exactness for speed; the paper's contribution is *exact*
+//! counting, so these serve as accuracy/cost baselines in the examples and
+//! tests.
+
+use crate::gen::rng::Rng;
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::seq::node_iterator;
+use crate::VertexId;
+
+/// DOULION: sparsify with keep-probability `p`, count exactly on the
+/// sparsified graph, rescale by `1/p³`. Unbiased; variance shrinks as p→1.
+pub fn doulion(g: &Csr, p: f64, rng: &mut Rng) -> f64 {
+    assert!(p > 0.0 && p <= 1.0);
+    let kept: Vec<(VertexId, VertexId)> =
+        g.edges().filter(|_| rng.chance(p)).collect();
+    let sparse = crate::graph::builder::from_edge_list(g.num_nodes(), kept)
+        .expect("sparsified edges are valid");
+    let t = node_iterator::count(&Oriented::from_graph(&sparse));
+    t as f64 / (p * p * p)
+}
+
+/// Wedge sampling: sample `samples` uniform wedges (center chosen
+/// ∝ d_v·(d_v−1)/2), check closure, return `closed_fraction · W / 3`
+/// where `W` is the total wedge count.
+pub fn wedge_sampling(g: &Csr, samples: usize, rng: &mut Rng) -> f64 {
+    let n = g.num_nodes();
+    // Wedge counts per node and cumulative distribution.
+    let wedges: Vec<u64> = (0..n as VertexId)
+        .map(|v| {
+            let d = g.degree(v) as u64;
+            d * d.saturating_sub(1) / 2
+        })
+        .collect();
+    let total: u64 = wedges.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0u64;
+    for &w in &wedges {
+        acc += w;
+        cum.push(acc);
+    }
+    let mut closed = 0u64;
+    for _ in 0..samples {
+        // Sample a center ∝ wedges.
+        let x = rng.below(total);
+        let v = cum.partition_point(|&c| c <= x) as VertexId;
+        let nv = g.neighbors(v);
+        let d = nv.len();
+        // Two distinct neighbors uniformly.
+        let i = rng.below_usize(d);
+        let mut j = rng.below_usize(d - 1);
+        if j >= i {
+            j += 1;
+        }
+        if g.has_edge(nv[i], nv[j]) {
+            closed += 1;
+        }
+    }
+    (closed as f64 / samples as f64) * total as f64 / 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+
+    #[test]
+    fn doulion_p1_is_exact() {
+        let g = classic::karate();
+        let est = doulion(&g, 1.0, &mut Rng::seeded(1));
+        assert_eq!(est as u64, classic::KARATE_TRIANGLES);
+    }
+
+    #[test]
+    fn doulion_is_approximately_unbiased() {
+        let g = crate::gen::pa::preferential_attachment(3000, 12, &mut Rng::seeded(2));
+        let exact = node_iterator::count(&Oriented::from_graph(&g)) as f64;
+        let mut rng = Rng::seeded(3);
+        let trials = 30;
+        let mean: f64 =
+            (0..trials).map(|_| doulion(&g, 0.5, &mut rng)).sum::<f64>() / trials as f64;
+        let rel = (mean - exact).abs() / exact;
+        assert!(rel < 0.15, "mean {mean} vs exact {exact} (rel {rel:.3})");
+    }
+
+    #[test]
+    fn wedge_sampling_converges() {
+        let g = crate::gen::geometric::miami_like(4000, 20, &mut Rng::seeded(4));
+        let exact = node_iterator::count(&Oriented::from_graph(&g)) as f64;
+        let est = wedge_sampling(&g, 200_000, &mut Rng::seeded(5));
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.1, "est {est} vs exact {exact} (rel {rel:.3})");
+    }
+
+    #[test]
+    fn wedge_sampling_zero_on_stars() {
+        let g = classic::star(50);
+        assert_eq!(wedge_sampling(&g, 10_000, &mut Rng::seeded(6)), 0.0);
+    }
+
+    #[test]
+    fn wedge_sampling_exact_on_complete() {
+        // Every wedge in K_n is closed → estimator = W/3 = C(n,3) exactly.
+        let g = classic::complete(10);
+        let est = wedge_sampling(&g, 5_000, &mut Rng::seeded(7));
+        assert_eq!(est as u64, 120);
+    }
+}

@@ -1,0 +1,144 @@
+//! MapReduce 2-path baseline analysis (Suri & Vassilvitskii [17]).
+//!
+//! The paper's §I motivation: "for networks with larger degrees,
+//! Map-Reduce based algorithms generate prohibitively large intermediate
+//! data" — the MR-NodeIterator emits every 2-path (wedge) centered at each
+//! node as intermediate key-value data, which is `Σ_v d_v(d_v−1)/2`
+//! records: quadratic in degree, catastrophic under skew.
+//!
+//! This module *measures* that blow-up exactly (record and byte counts for
+//! the shuffle phase, plus the improved ordered-emit variant) so the
+//! motivation claim can be validated against the MPI algorithms' measured
+//! message volumes (`tricount exp` / `examples/skewed_degrees`).
+
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::VertexId;
+
+/// Intermediate-data accounting for the MapReduce 2-path algorithms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MrShuffleStats {
+    /// MR-NodeIterator: wedges emitted = Σ_v C(d_v, 2).
+    pub wedges_all: u64,
+    /// MR-NodeIterator++ (degree-ordered emit): Σ_v C(d̂_v, 2) — the
+    /// "last reducer" fix, still quadratic in effective degree.
+    pub wedges_ordered: u64,
+    /// Plus one record per edge for the closure-check join.
+    pub edge_records: u64,
+    /// Largest single reducer's input in the ordered variant (the "curse
+    /// of the last reducer": the max-degree node's wedge list).
+    pub max_reducer_records: u64,
+}
+
+impl MrShuffleStats {
+    /// Shuffle bytes for the ordered variant at 12 B per wedge record
+    /// (key + two endpoints) and 8 B per edge record.
+    pub fn shuffle_bytes(&self) -> u64 {
+        self.wedges_ordered * 12 + self.edge_records * 8
+    }
+}
+
+/// Compute the exact shuffle volumes for a graph. O(n + m).
+pub fn shuffle_stats(g: &Csr) -> MrShuffleStats {
+    let o = Oriented::from_graph(g);
+    let mut wedges_all = 0u64;
+    let mut wedges_ordered = 0u64;
+    let mut max_reducer = 0u64;
+    for v in 0..g.num_nodes() as VertexId {
+        let d = g.degree(v) as u64;
+        wedges_all += d * d.saturating_sub(1) / 2;
+        let dh = o.effective_degree(v) as u64;
+        let w = dh * dh.saturating_sub(1) / 2;
+        wedges_ordered += w;
+        max_reducer = max_reducer.max(w);
+    }
+    MrShuffleStats {
+        wedges_all,
+        wedges_ordered,
+        edge_records: g.num_edges(),
+        max_reducer_records: max_reducer,
+    }
+}
+
+/// Blow-up factor of MR intermediate data vs the graph itself
+/// (records / edges) — the paper's "prohibitively large" quantity.
+pub fn blowup_factor(g: &Csr) -> f64 {
+    let s = shuffle_stats(g);
+    s.wedges_all as f64 / g.num_edges().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+    use crate::graph::classic;
+
+    #[test]
+    fn star_blowup_is_quadratic() {
+        // Star K_{1,k}: hub emits C(k,2) wedges from k edges.
+        let g = classic::star(100);
+        let s = shuffle_stats(&g);
+        assert_eq!(s.wedges_all, 100 * 99 / 2);
+        assert!(blowup_factor(&g) > 49.0);
+    }
+
+    #[test]
+    fn ordered_emit_is_smaller() {
+        let g = crate::gen::pa::preferential_attachment(3000, 20, &mut Rng::seeded(9));
+        let s = shuffle_stats(&g);
+        assert!(
+            s.wedges_ordered < s.wedges_all,
+            "ordering must shrink wedges: {} vs {}",
+            s.wedges_ordered,
+            s.wedges_all
+        );
+    }
+
+    #[test]
+    fn skew_drives_blowup() {
+        // Same edge budget: skewed PA vs near-regular contact network —
+        // PA's MR blow-up must be far larger (the paper's core claim).
+        let pa = crate::gen::pa::preferential_attachment(5000, 20, &mut Rng::seeded(10));
+        let reg = crate::gen::geometric::miami_like(5000, 20, &mut Rng::seeded(11));
+        assert!(
+            blowup_factor(&pa) > 2.0 * blowup_factor(&reg),
+            "pa {} vs regular {}",
+            blowup_factor(&pa),
+            blowup_factor(&reg)
+        );
+    }
+
+    #[test]
+    fn wedges_match_local_module() {
+        // Σ wedges must equal the transitivity denominator.
+        let g = classic::karate();
+        let s = shuffle_stats(&g);
+        let wedges: u64 = (0..34u32)
+            .map(|v| {
+                let d = g.degree(v) as u64;
+                d * d.saturating_sub(1) / 2
+            })
+            .sum();
+        assert_eq!(s.wedges_all, wedges);
+    }
+
+    #[test]
+    fn mr_shuffle_exceeds_mpi_messages() {
+        // The motivating comparison: MR shuffle bytes ≫ surrogate bytes.
+        use crate::partition::balance::{balanced_ranges, owner_table};
+        use crate::partition::cost::{cost_vector, prefix_sums};
+        use std::sync::Arc;
+        let g = crate::gen::pa::preferential_attachment(2000, 30, &mut Rng::seeded(12));
+        let o = Arc::new(Oriented::from_graph(&g));
+        let prefix = prefix_sums(&cost_vector(&o, crate::config::CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, 8);
+        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
+        let r = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap();
+        let mpi_bytes = r.metrics.totals().bytes_sent;
+        let mr_bytes = shuffle_stats(&g).shuffle_bytes();
+        assert!(
+            mr_bytes > 2 * mpi_bytes,
+            "MR {mr_bytes} bytes vs MPI surrogate {mpi_bytes} bytes"
+        );
+    }
+}

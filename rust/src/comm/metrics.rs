@@ -1,0 +1,106 @@
+//! Per-rank communication and timing metrics.
+//!
+//! The paper's evaluation reasons about *message redundancy* (direct vs
+//! surrogate, §IV-C), *communication overhead* (weak scaling, Figs 9/15)
+//! and *idle time* (Fig 13). Every backend records these uniformly so the
+//! experiment drivers can print them alongside runtime.
+
+use std::time::Duration;
+
+/// Counters a single rank accumulates during a run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CommMetrics {
+    /// Point-to-point data messages sent.
+    pub messages_sent: u64,
+    /// Payload bytes sent (sum of declared message sizes).
+    pub bytes_sent: u64,
+    /// Messages received and processed.
+    pub messages_received: u64,
+    /// Broadcast/control messages sent (completion notifiers, task protocol).
+    pub control_sent: u64,
+    /// Wall time spent blocked waiting to receive (the measured component of
+    /// idle time on the threads backend).
+    pub recv_wait: Duration,
+    /// Wall time of the rank's whole run.
+    pub total: Duration,
+    /// Work units executed (paper cost measure Σ(d̂_v + d̂_u)); filled by the
+    /// algorithms, used for load-imbalance reporting and sim calibration.
+    pub work_units: u64,
+}
+
+impl CommMetrics {
+    /// Merge another rank's counters (for cluster-wide totals).
+    pub fn merge(&mut self, other: &CommMetrics) {
+        self.messages_sent += other.messages_sent;
+        self.bytes_sent += other.bytes_sent;
+        self.messages_received += other.messages_received;
+        self.control_sent += other.control_sent;
+        self.recv_wait += other.recv_wait;
+        self.total = self.total.max(other.total);
+        self.work_units += other.work_units;
+    }
+}
+
+/// Cluster-wide summary over per-rank metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    pub per_rank: Vec<CommMetrics>,
+}
+
+impl ClusterMetrics {
+    pub fn totals(&self) -> CommMetrics {
+        let mut t = CommMetrics::default();
+        for m in &self.per_rank {
+            t.merge(m);
+        }
+        t
+    }
+
+    /// Load imbalance: max work / mean work (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.per_rank.is_empty() {
+            return 1.0;
+        }
+        let works: Vec<u64> = self.per_rank.iter().map(|m| m.work_units).collect();
+        let max = *works.iter().max().unwrap() as f64;
+        let mean = works.iter().sum::<u64>() as f64 / works.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = CommMetrics { messages_sent: 2, bytes_sent: 10, ..Default::default() };
+        let b = CommMetrics { messages_sent: 3, bytes_sent: 5, work_units: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.messages_sent, 5);
+        assert_eq!(a.bytes_sent, 15);
+        assert_eq!(a.work_units, 7);
+    }
+
+    #[test]
+    fn imbalance_computation() {
+        let cm = ClusterMetrics {
+            per_rank: vec![
+                CommMetrics { work_units: 10, ..Default::default() },
+                CommMetrics { work_units: 30, ..Default::default() },
+            ],
+        };
+        assert!((cm.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_empty_and_zero() {
+        assert_eq!(ClusterMetrics::default().imbalance(), 1.0);
+        let cm = ClusterMetrics { per_rank: vec![CommMetrics::default(); 3] };
+        assert_eq!(cm.imbalance(), 1.0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Threaded message-passing backend — the crate's "MPI".
+//!
+//! Each of the `P` ranks runs on its own OS thread with private state;
+//! ranks communicate **only** through typed point-to-point channels plus a
+//! barrier, mirroring the paper's distributed-memory model (§II Computation
+//! Model). No rank reads another rank's partition; the dynamic-LB algorithm
+//! shares the graph read-only via `Arc`, which is faithful to §V's
+//! assumption that every machine stores the whole network.
+//!
+//! The API is deliberately MPI-shaped: `send`, `try_recv`, `recv_timeout`,
+//! `barrier`, `reduce_sum` — so the algorithm modules read like the paper's
+//! pseudocode.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::metrics::CommMetrics;
+use crate::error::{Error, Result};
+
+/// Default guard against protocol deadlocks in tests/CI.
+pub const RECV_DEADLOCK_GUARD: Duration = Duration::from_secs(30);
+
+/// Messages must declare their wire size so the metrics layer can account
+/// bytes the way the paper reasons about them (neighbor-list words).
+pub trait Payload: Send + 'static {
+    /// Serialized size in bytes if this were on an MPI wire.
+    fn size_bytes(&self) -> u64;
+}
+
+struct Shared {
+    barrier: Barrier,
+    reduce_cells: Mutex<Vec<u64>>,
+    reduce_acc: AtomicU64,
+}
+
+/// A rank's endpoint: its id, channels to every peer, and its metrics.
+pub struct Comm<M: Payload> {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<(usize, M)>>,
+    receiver: Receiver<(usize, M)>,
+    shared: Arc<Shared>,
+    /// Per-rank counters, returned to the driver by [`Cluster::run`].
+    pub metrics: CommMetrics,
+}
+
+impl<M: Payload> Comm<M> {
+    /// This rank's id in `0..size`.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks `P`.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Point-to-point send (asynchronous, unbounded buffering — MPI eager
+    /// mode). Sending to self is allowed (delivered through the queue).
+    pub fn send(&mut self, dst: usize, msg: M) -> Result<()> {
+        self.metrics.messages_sent += 1;
+        self.metrics.bytes_sent += msg.size_bytes();
+        self.senders[dst]
+            .send((self.rank, msg))
+            .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
+    }
+
+    /// Control-plane send (completion notifiers, task protocol): accounted
+    /// separately from data messages.
+    pub fn send_control(&mut self, dst: usize, msg: M) -> Result<()> {
+        self.metrics.control_sent += 1;
+        self.senders[dst]
+            .send((self.rank, msg))
+            .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
+    }
+
+    /// Broadcast a control message to every other rank via `clone_fn`.
+    pub fn bcast_control(&mut self, make: impl Fn() -> M) -> Result<()> {
+        for dst in 0..self.size {
+            if dst != self.rank {
+                self.send_control(dst, make())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&mut self) -> Option<(usize, M)> {
+        match self.receiver.try_recv() {
+            Ok(x) => {
+                self.metrics.messages_received += 1;
+                Some(x)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Blocking receive with the deadlock guard; records wait time as idle.
+    pub fn recv(&mut self) -> Result<(usize, M)> {
+        let start = Instant::now();
+        let r = self.receiver.recv_timeout(RECV_DEADLOCK_GUARD);
+        self.metrics.recv_wait += start.elapsed();
+        match r {
+            Ok(x) => {
+                self.metrics.messages_received += 1;
+                Ok(x)
+            }
+            Err(RecvTimeoutError::Timeout) => Err(Error::Cluster(format!(
+                "rank {} recv timed out after {RECV_DEADLOCK_GUARD:?} (protocol deadlock?)",
+                self.rank
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Cluster(format!("rank {} peers disconnected", self.rank)))
+            }
+        }
+    }
+
+    /// Synchronize all ranks (MPI_Barrier).
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Sum-reduce a u64 across all ranks; everyone receives the total
+    /// (MPI_Allreduce(SUM)). Internally: write cell → barrier → read.
+    pub fn reduce_sum(&self, value: u64) -> u64 {
+        {
+            let mut cells = self.shared.reduce_cells.lock().unwrap();
+            cells[self.rank] = value;
+        }
+        self.shared.barrier.wait();
+        if self.rank == 0 {
+            let cells = self.shared.reduce_cells.lock().unwrap();
+            let sum = cells.iter().sum();
+            self.shared.reduce_acc.store(sum, Ordering::SeqCst);
+        }
+        self.shared.barrier.wait();
+        self.shared.reduce_acc.load(Ordering::SeqCst)
+    }
+}
+
+/// The cluster launcher: spawns `P` rank threads and runs `f` on each.
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `f(rank_comm)` on `p` ranks; returns each rank's result and its
+    /// metrics, indexed by rank. Propagates rank panics as [`Error::Cluster`].
+    pub fn run<M, R, F>(p: usize, f: F) -> Result<Vec<(R, CommMetrics)>>
+    where
+        M: Payload,
+        R: Send,
+        F: Fn(&mut Comm<M>) -> R + Sync,
+    {
+        assert!(p >= 1, "cluster needs at least one rank");
+        let mut senders = Vec::with_capacity(p);
+        let mut receivers = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = std::sync::mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let shared = Arc::new(Shared {
+            barrier: Barrier::new(p),
+            reduce_cells: Mutex::new(vec![0; p]),
+            reduce_acc: AtomicU64::new(0),
+        });
+
+        let mut comms: Vec<Comm<M>> = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, receiver)| Comm {
+                rank,
+                size: p,
+                senders: senders.clone(),
+                receiver,
+                shared: shared.clone(),
+                metrics: CommMetrics::default(),
+            })
+            .collect();
+        drop(senders);
+
+        let f = &f;
+        let results: Vec<std::thread::Result<(R, CommMetrics)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .drain(..)
+                .map(|mut comm| {
+                    s.spawn(move || {
+                        let start = Instant::now();
+                        let r = f(&mut comm);
+                        comm.metrics.total = start.elapsed();
+                        (r, comm.metrics)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join()).collect()
+        });
+
+        let mut out = Vec::with_capacity(p);
+        for (rank, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(x) => out.push(x),
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "unknown panic".into());
+                    return Err(Error::Cluster(format!("rank {rank} panicked: {msg}")));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Payload for Vec<u32> {
+    fn size_bytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+}
+
+impl Payload for u64 {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        // Each rank sends its rank² to the next; sums must match.
+        let res = Cluster::run::<u64, u64, _>(4, |c| {
+            let next = (c.rank() + 1) % c.size();
+            c.send(next, (c.rank() * c.rank()) as u64).unwrap();
+            let (_src, v) = c.recv().unwrap();
+            v
+        })
+        .unwrap();
+        let mut got: Vec<u64> = res.iter().map(|(v, _)| *v).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 4, 9]);
+    }
+
+    #[test]
+    fn reduce_sum_all_ranks_see_total() {
+        let res = Cluster::run::<u64, u64, _>(5, |c| c.reduce_sum(c.rank() as u64 + 1)).unwrap();
+        for (v, _) in res {
+            assert_eq!(v, 15);
+        }
+    }
+
+    #[test]
+    fn metrics_count_messages_and_bytes() {
+        let res = Cluster::run::<Vec<u32>, (), _>(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, vec![1, 2, 3]).unwrap();
+            } else {
+                let (src, msg) = c.recv().unwrap();
+                assert_eq!(src, 0);
+                assert_eq!(msg, vec![1, 2, 3]);
+            }
+        })
+        .unwrap();
+        assert_eq!(res[0].1.messages_sent, 1);
+        assert_eq!(res[0].1.bytes_sent, 12);
+        assert_eq!(res[1].1.messages_received, 1);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let phase1 = Arc::new(AtomicUsize::new(0));
+        let p1 = phase1.clone();
+        Cluster::run::<u64, (), _>(4, move |c| {
+            p1.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            // After the barrier every rank must observe all 4 increments.
+            assert_eq!(p1.load(Ordering::SeqCst), 4);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn single_rank_cluster() {
+        let res = Cluster::run::<u64, u64, _>(1, |c| c.reduce_sum(7)).unwrap();
+        assert_eq!(res[0].0, 7);
+    }
+
+    #[test]
+    fn rank_panic_is_reported() {
+        let r = Cluster::run::<u64, (), _>(2, |c| {
+            if c.rank() == 1 {
+                panic!("injected fault");
+            }
+        });
+        match r {
+            Err(Error::Cluster(msg)) => assert!(msg.contains("injected fault"), "{msg}"),
+            other => panic!("expected cluster error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn self_send_delivered() {
+        Cluster::run::<u64, (), _>(2, |c| {
+            let me = c.rank();
+            c.send(me, 99).unwrap();
+            let (src, v) = c.recv().unwrap();
+            assert_eq!((src, v), (me, 99));
+        })
+        .unwrap();
+    }
+}

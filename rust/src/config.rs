@@ -1,0 +1,265 @@
+//! Run configuration for the launcher (`tricount` CLI).
+//!
+//! A small, dependency-free key-value config format (TOML-subset: `key =
+//! value` lines, `#` comments, sections ignored for flatness) plus CLI
+//! override parsing. Every experiment driver takes a [`RunConfig`] so runs
+//! are reproducible from a single file; `tricount --config run.toml`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Which parallel algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Sequential Fig-1 baseline.
+    Sequential,
+    /// §IV space-efficient, surrogate communication (the paper's headline).
+    Surrogate,
+    /// §IV with the direct request/response scheme (baseline).
+    Direct,
+    /// PATRIC [21] overlapping-partition baseline.
+    Patric,
+    /// §V dynamic load balancing.
+    DynamicLb,
+    /// Hybrid dense-core (XLA tensor path) + sparse remainder.
+    Hybrid,
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "seq" | "sequential" => Algorithm::Sequential,
+            "surrogate" => Algorithm::Surrogate,
+            "direct" => Algorithm::Direct,
+            "patric" => Algorithm::Patric,
+            "dynamic" | "dynamic-lb" => Algorithm::DynamicLb,
+            "hybrid" => Algorithm::Hybrid,
+            other => return Err(Error::Config(format!("unknown algorithm `{other}`"))),
+        })
+    }
+}
+
+/// Cost function used for partition balancing / task sizing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostFn {
+    /// `f(v) = 1`.
+    Unit,
+    /// `f(v) = d_v`.
+    Degree,
+    /// PATRIC's best: `f(v) = Σ_{u∈N_v}(d̂_v + d̂_u)`.
+    PatricBest,
+    /// This paper's §IV-F estimator: `f(v) = Σ_{u∈𝒩_v−N_v}(d̂_v + d̂_u)`.
+    SurrogateNew,
+}
+
+impl std::str::FromStr for CostFn {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "unit" | "1" => CostFn::Unit,
+            "degree" | "dv" => CostFn::Degree,
+            "patric" | "patric-best" => CostFn::PatricBest,
+            "new" | "surrogate-new" => CostFn::SurrogateNew,
+            other => return Err(Error::Config(format!("unknown cost fn `{other}`"))),
+        })
+    }
+}
+
+/// Full run configuration with defaults.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Workload: a preset name (`livejournal-like`), `pa:<n>:<d>`,
+    /// `rmat:<scale>:<ef>`, `file:<path>` or `karate`.
+    pub workload: String,
+    /// Number of processors (ranks) P.
+    pub procs: usize,
+    /// Algorithm to run.
+    pub algorithm: Algorithm,
+    /// Cost function for balancing.
+    pub cost_fn: CostFn,
+    /// Relative workload scale (presets only).
+    pub scale: f64,
+    /// RNG seed for generators.
+    pub seed: u64,
+    /// Dense-core size K for the hybrid tensor path (0 = auto).
+    pub dense_core: usize,
+    /// Directory of AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workload: "karate".into(),
+            procs: 4,
+            algorithm: Algorithm::Surrogate,
+            cost_fn: CostFn::SurrogateNew,
+            scale: 1.0,
+            seed: 42,
+            dense_core: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key = value` (or CLI `--key value`) pair.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "workload" => self.workload = value.to_string(),
+            "procs" => {
+                self.procs = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("procs: {e}")))?
+            }
+            "algorithm" => self.algorithm = value.parse()?,
+            "cost_fn" | "cost-fn" => self.cost_fn = value.parse()?,
+            "scale" => {
+                self.scale = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("scale: {e}")))?
+            }
+            "seed" => {
+                self.seed = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("seed: {e}")))?
+            }
+            "dense_core" | "dense-core" => {
+                self.dense_core = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("dense_core: {e}")))?
+            }
+            "artifacts_dir" | "artifacts-dir" => self.artifacts_dir = value.to_string(),
+            other => return Err(Error::Config(format!("unknown key `{other}`"))),
+        }
+        if key == "procs" && self.procs == 0 {
+            return Err(Error::Config("procs must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse a flat TOML-subset file.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = RunConfig::default();
+        for (k, v) in parse_kv(&text)? {
+            cfg.set(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Materialize the workload graph described by `self.workload`.
+    pub fn build_graph(&self) -> Result<crate::graph::csr::Csr> {
+        build_workload(&self.workload, self.scale, self.seed)
+    }
+}
+
+/// Parse `key = value` lines; quotes optional; `[sections]` and comments skipped.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('[') {
+            continue;
+        }
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| Error::Parse { line: i + 1, msg: "expected key = value".into() })?;
+        out.insert(
+            k.trim().to_string(),
+            v.trim().trim_matches('"').trim_matches('\'').to_string(),
+        );
+    }
+    Ok(out)
+}
+
+/// Build a graph from a workload spec string (see [`RunConfig::workload`]).
+pub fn build_workload(spec: &str, scale: f64, seed: u64) -> Result<crate::graph::csr::Csr> {
+    use crate::gen::rng::Rng;
+    if spec == "karate" {
+        return Ok(crate::graph::classic::karate());
+    }
+    if let Some(p) = crate::gen::presets::by_name(spec) {
+        return Ok(p.build_scaled(scale));
+    }
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["pa", n, d] => {
+            let n: usize = n.parse().map_err(|e| Error::Config(format!("pa n: {e}")))?;
+            let d: usize = d.parse().map_err(|e| Error::Config(format!("pa d: {e}")))?;
+            let n = ((n as f64 * scale).round() as usize).max(d * 2 + 2);
+            let d = if d % 2 == 0 { d } else { d + 1 };
+            Ok(crate::gen::pa::preferential_attachment(n, d, &mut Rng::seeded(seed)))
+        }
+        ["rmat", s, ef] => {
+            let s: u32 = s.parse().map_err(|e| Error::Config(format!("rmat scale: {e}")))?;
+            let ef: usize = ef.parse().map_err(|e| Error::Config(format!("rmat ef: {e}")))?;
+            Ok(crate::gen::rmat::rmat(s, ef, Default::default(), &mut Rng::seeded(seed)))
+        }
+        ["contact", n, d] => {
+            let n: usize = n.parse().map_err(|e| Error::Config(format!("contact n: {e}")))?;
+            let d: usize = d.parse().map_err(|e| Error::Config(format!("contact d: {e}")))?;
+            let n = ((n as f64 * scale).round() as usize).max(d * 8);
+            Ok(crate::gen::geometric::miami_like(n, d, &mut Rng::seeded(seed)))
+        }
+        ["file", path] => crate::graph::io::read_edge_list(path),
+        ["bin", path] => crate::graph::io::read_binary(path),
+        _ => Err(Error::Config(format!("unknown workload spec `{spec}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_set() {
+        let mut c = RunConfig::default();
+        c.set("procs", "16").unwrap();
+        c.set("algorithm", "dynamic-lb").unwrap();
+        c.set("cost_fn", "dv").unwrap();
+        assert_eq!(c.procs, 16);
+        assert_eq!(c.algorithm, Algorithm::DynamicLb);
+        assert_eq!(c.cost_fn, CostFn::Degree);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = RunConfig::default();
+        assert!(c.set("procs", "zero").is_err());
+        assert!(c.set("procs", "0").is_err());
+        assert!(c.set("algorithm", "quantum").is_err());
+        assert!(c.set("nonsense", "1").is_err());
+    }
+
+    #[test]
+    fn parse_kv_skips_sections_and_comments() {
+        let m = parse_kv("# hi\n[run]\nworkload = \"karate\"\nprocs = 8\n").unwrap();
+        assert_eq!(m["workload"], "karate");
+        assert_eq!(m["procs"], "8");
+    }
+
+    #[test]
+    fn workload_specs() {
+        assert_eq!(build_workload("karate", 1.0, 1).unwrap().num_nodes(), 34);
+        let g = build_workload("pa:1000:6", 1.0, 1).unwrap();
+        assert_eq!(g.num_nodes(), 1000);
+        let g = build_workload("contact:2000:10", 1.0, 1).unwrap();
+        assert_eq!(g.num_nodes(), 2000);
+        assert!(build_workload("wat:1", 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("tricount_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("run.toml");
+        std::fs::write(&p, "workload = pa:500:4\nprocs = 3\nalgorithm = surrogate\n").unwrap();
+        let c = RunConfig::from_file(&p).unwrap();
+        assert_eq!(c.procs, 3);
+        assert_eq!(c.workload, "pa:500:4");
+    }
+}

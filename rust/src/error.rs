@@ -1,0 +1,44 @@
+//! Crate error types.
+
+use thiserror::Error;
+
+/// Errors surfaced by the `tricount` public API.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Graph input was structurally invalid (bad endpoint, overflow, …).
+    #[error("invalid graph: {0}")]
+    InvalidGraph(String),
+
+    /// A file could not be parsed as an edge list / binary graph.
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+
+    /// Underlying I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Invalid run configuration (CLI or TOML).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// A parallel run failed (worker panic, channel breakage).
+    #[error("cluster execution failed: {0}")]
+    Cluster(String),
+
+    /// AOT artifact missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Convenience alias used across the crate.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,100 @@
+//! Experiment harness — one driver per table/figure of the paper's
+//! evaluation (see DESIGN.md §5 for the index). Run via
+//! `tricount exp --id <id>` or `cargo bench`.
+
+pub mod ablations;
+pub mod cache;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig12;
+pub mod fig13;
+pub mod fig14;
+pub mod fig15;
+
+use crate::error::{Error, Result};
+
+/// An experiment driver: prints paper-shaped rows, optionally writes CSV.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub description: &'static str,
+    pub run: fn(&Options) -> Result<report::Report>,
+}
+
+/// Common experiment options.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Workload scale multiplier (1.0 = DESIGN.md default sizes).
+    pub scale: f64,
+    /// Output directory for CSV (None = stdout only).
+    pub out_dir: Option<String>,
+    /// Quick mode: smaller sweeps for CI.
+    pub quick: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { scale: 1.0, out_dir: Some("results".into()), quick: false }
+    }
+}
+
+/// The registry, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table1", paper_ref: "Table I", description: "dataset summary (presets vs paper)", run: table1::run },
+        Experiment { id: "table2", paper_ref: "Table II", description: "memory of largest partition, ours vs PATRIC, P=100", run: table2::run },
+        Experiment { id: "table3", paper_ref: "Table III", description: "runtime: PATRIC vs direct vs surrogate (+ counts)", run: table3::run },
+        Experiment { id: "table4", paper_ref: "Table IV", description: "runtime: dynamic-LB vs PATRIC", run: table4::run },
+        Experiment { id: "fig4", paper_ref: "Fig 4", description: "strong scaling, direct vs surrogate", run: fig4::run },
+        Experiment { id: "fig5", paper_ref: "Fig 5", description: "effect of cost-estimation function f(v)", run: fig5::run },
+        Experiment { id: "fig6", paper_ref: "Fig 6", description: "scalability with network size (§IV)", run: fig6::run },
+        Experiment { id: "fig7", paper_ref: "Fig 7", description: "partition memory vs average degree", run: fig7::run },
+        Experiment { id: "fig8", paper_ref: "Fig 8", description: "partition memory vs #processors", run: fig8::run },
+        Experiment { id: "fig9", paper_ref: "Fig 9", description: "weak scaling (§IV)", run: fig9::run },
+        Experiment { id: "fig12", paper_ref: "Fig 12", description: "strong scaling dyn-LB, f=1 vs f=d_v", run: fig12::run },
+        Experiment { id: "fig13", paper_ref: "Fig 13", description: "idle time, static vs dynamic granularity", run: fig13::run },
+        Experiment { id: "fig14", paper_ref: "Fig 14", description: "scalability with network size (§V) vs PATRIC", run: fig14::run },
+        Experiment { id: "fig15", paper_ref: "Fig 15", description: "weak scaling (§V)", run: fig15::run },
+        Experiment { id: "ablation-noise", paper_ref: "(extra)", description: "σ-sensitivity of dynamic-vs-static gap", run: ablations::run_noise },
+        Experiment { id: "ablation-granularity", paper_ref: "(extra)", description: "task granularity policies", run: ablations::run_granularity },
+        Experiment { id: "ablation-gallop", paper_ref: "(extra)", description: "intersection kernel switch point (measured)", run: ablations::run_gallop },
+    ]
+}
+
+/// Look up and run one experiment by id (or `all`).
+pub fn run_by_id(id: &str, opts: &Options) -> Result<()> {
+    let reg = registry();
+    if id == "all" {
+        for e in &reg {
+            run_one(e, opts)?;
+        }
+        return Ok(());
+    }
+    let e = reg
+        .iter()
+        .find(|e| e.id == id)
+        .ok_or_else(|| Error::Config(format!("unknown experiment `{id}`; try `tricount exp --list`")))?;
+    run_one(e, opts)
+}
+
+fn run_one(e: &Experiment, opts: &Options) -> Result<()> {
+    println!("\n=== {} ({}) — {} ===", e.id, e.paper_ref, e.description);
+    let report = (e.run)(opts)?;
+    report.print();
+    if let Some(dir) = &opts.out_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.csv", e.id);
+        report.write_csv(&path)?;
+        println!("[csv written to {path}]");
+    }
+    Ok(())
+}

@@ -1,0 +1,135 @@
+//! Ablations beyond the paper's own figures (DESIGN.md §5 "Additional"):
+//!
+//! * **noise-sigma** — σ-sensitivity of the dynamic-vs-static gap
+//!   (Table IV's ratio as a function of the execution-noise magnitude);
+//! * **granularity** — shrinking (Eqn 2) vs fixed-k task queues;
+//! * **gallop-threshold** — the adaptive intersection kernel's switch point
+//!   (EXPERIMENTS.md §Perf).
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::dynamic::{simulate, SimGranularity};
+use crate::sim::model::CostModel;
+use crate::sim::space_efficient::simulate_patric_balanced;
+
+/// σ-sensitivity: how strongly does the estimate-vs-reality gap have to be
+/// before dynamic balancing pays off (and how far it can go)?
+pub fn run_noise(opts: &Options) -> Result<Report> {
+    let (p, scale) = if opts.quick { (32, 0.05) } else { (200, opts.scale) };
+    let base = calibrated();
+    let mut r = Report::new(["sigma", "PATRIC", "dyn-LB", "ratio"]);
+    let o = cache::oriented("livejournal-like", scale)?;
+    for sigma in [0.0, 0.5, 1.0, 1.5, 2.0] {
+        let model = CostModel { exec_noise_sigma: sigma, ..base };
+        let stat = simulate_patric_balanced(&o, p, CostFn::PatricBest, &model);
+        let dynm = simulate(&o, p, CostFn::Degree, SimGranularity::Shrinking, &model);
+        r.row([
+            Cell::Float(sigma),
+            Cell::Secs(stat.makespan_ns / 1e9),
+            Cell::Secs(dynm.makespan_ns / 1e9),
+            Cell::Float(stat.makespan_ns / dynm.makespan_ns),
+        ]);
+    }
+    r.note("livejournal-like; ratio ≥ 1 means dynamic wins; paper reports ≈ 2 on its cluster");
+    Ok(r)
+}
+
+/// Task-granularity policy ablation: Eqn-2 shrinking vs fixed task counts.
+pub fn run_granularity(opts: &Options) -> Result<Report> {
+    let (p, scale) = if opts.quick { (32, 0.05) } else { (100, opts.scale) };
+    let model = calibrated();
+    let mut r = Report::new(["policy", "makespan", "idle max", "tasks"]);
+    let o = cache::oriented("livejournal-like", scale)?;
+    let policies: Vec<(String, SimGranularity)> = vec![
+        ("shrinking (Eqn 2)".into(), SimGranularity::Shrinking),
+        (format!("fixed {}", p - 1), SimGranularity::Fixed(p - 1)),
+        (format!("fixed {}", 4 * (p - 1)), SimGranularity::Fixed(4 * (p - 1))),
+        (format!("fixed {}", 16 * (p - 1)), SimGranularity::Fixed(16 * (p - 1))),
+        ("static only".into(), SimGranularity::StaticOnly),
+    ];
+    for (name, g) in policies {
+        let d = simulate(&o, p, CostFn::Degree, g, &model);
+        let idle_max = d.workers.iter().map(|w| w.idle_ns).fold(0.0f64, f64::max);
+        let tasks: u64 = d.workers.iter().map(|w| w.tasks_run).sum();
+        r.row([
+            name.into(),
+            Cell::Secs(d.makespan_ns / 1e9),
+            Cell::Secs(idle_max / 1e9),
+            Cell::Int(tasks),
+        ]);
+    }
+    r.note("shrinking should match the best fixed-k without tuning k");
+    Ok(r)
+}
+
+/// Gallop-threshold ablation on real intersection timing (measured).
+pub fn run_gallop(_opts: &Options) -> Result<Report> {
+    use crate::intersect::{count_galloping, count_merge};
+    use std::time::Instant;
+    let mut rng = crate::gen::rng::Rng::seeded(7);
+    let mut r = Report::new(["|short|", "|long|", "ratio", "merge ns", "gallop ns", "winner"]);
+    let long: Vec<u32> = {
+        let mut v: Vec<u32> = (0..200_000).map(|_| rng.next_u32() % 2_000_000).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for shorts in [50usize, 200, 1_000, 5_000, 20_000, 100_000] {
+        let short: Vec<u32> = {
+            let mut v: Vec<u32> = (0..shorts).map(|_| rng.next_u32() % 2_000_000).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let time_it = |f: &dyn Fn(&mut u64)| {
+            let mut best = f64::INFINITY;
+            for _ in 0..5 {
+                let mut c = 0u64;
+                let t0 = Instant::now();
+                f(&mut c);
+                std::hint::black_box(c);
+                best = best.min(t0.elapsed().as_nanos() as f64);
+            }
+            best
+        };
+        let m = time_it(&|c| count_merge(&short, &long, c));
+        let g = time_it(&|c| count_galloping(&short, &long, c));
+        r.row([
+            Cell::Int(short.len() as u64),
+            Cell::Int(long.len() as u64),
+            Cell::Float(long.len() as f64 / short.len() as f64),
+            Cell::Float(m),
+            Cell::Float(g),
+            if g < m { "gallop".into() } else { "merge".into() },
+        ]);
+    }
+    r.note(format!(
+        "crossover informs intersect::GALLOP_RATIO (currently {})",
+        crate::intersect::GALLOP_RATIO
+    ));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn noise_ablation_runs_and_sigma_zero_favors_static() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run_noise(&opts).unwrap();
+        assert_eq!(r.rows.len(), 5);
+        // At σ=0 the static estimator is a perfect oracle: ratio ≤ ~1.
+        if let crate::exp::report::Cell::Float(ratio0) = r.rows[0][3] {
+            assert!(ratio0 <= 1.05, "σ=0 ratio {ratio0}");
+        }
+    }
+
+    #[test]
+    fn granularity_ablation_runs() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run_granularity(&opts).unwrap();
+        assert_eq!(r.rows.len(), 5);
+    }
+}

@@ -1,0 +1,71 @@
+//! Process-wide workload cache: `exp all` reuses each generated graph (and
+//! its orientation) across experiments instead of regenerating per table.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+
+type Key = (String, u64); // (spec, scale in 1e-6 units)
+
+struct Cache {
+    graphs: HashMap<Key, Arc<crate::graph::csr::Csr>>,
+    oriented: HashMap<Key, Arc<Oriented>>,
+}
+
+fn cache() -> &'static Mutex<Cache> {
+    static C: OnceLock<Mutex<Cache>> = OnceLock::new();
+    C.get_or_init(|| Mutex::new(Cache { graphs: HashMap::new(), oriented: HashMap::new() }))
+}
+
+fn key(spec: &str, scale: f64) -> Key {
+    (spec.to_string(), (scale * 1e6).round() as u64)
+}
+
+/// Build (or fetch) a workload graph. Seeds come from the spec/presets, so
+/// equal (spec, scale) is equal graph.
+pub fn graph(spec: &str, scale: f64) -> Result<Arc<crate::graph::csr::Csr>> {
+    let k = key(spec, scale);
+    if let Some(g) = cache().lock().unwrap().graphs.get(&k) {
+        return Ok(g.clone());
+    }
+    let g = Arc::new(crate::config::build_workload(spec, scale, 42)?);
+    cache().lock().unwrap().graphs.insert(k, g.clone());
+    Ok(g)
+}
+
+/// Build (or fetch) the oriented adjacency of a workload.
+pub fn oriented(spec: &str, scale: f64) -> Result<Arc<Oriented>> {
+    let k = key(spec, scale);
+    if let Some(o) = cache().lock().unwrap().oriented.get(&k) {
+        return Ok(o.clone());
+    }
+    let g = graph(spec, scale)?;
+    let o = Arc::new(Oriented::from_graph(&g));
+    cache().lock().unwrap().oriented.insert(k, o.clone());
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_returns_same_arc() {
+        let a = graph("pa:300:4", 1.0).unwrap();
+        let b = graph("pa:300:4", 1.0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let oa = oriented("pa:300:4", 1.0).unwrap();
+        let ob = oriented("pa:300:4", 1.0).unwrap();
+        assert!(Arc::ptr_eq(&oa, &ob));
+    }
+
+    #[test]
+    fn different_scale_different_graph() {
+        let a = graph("pa:300:4", 1.0).unwrap();
+        let b = graph("pa:300:4", 0.5).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.num_nodes(), b.num_nodes());
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig 12 — strong scaling of the §V dynamic-LB algorithm with cost
+//! functions f(v)=1 vs f(v)=d_v. Paper's shape: f=d_v clearly higher.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::dynamic::{simulate, SimGranularity};
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, scale): (&[usize], f64) = if opts.quick {
+        (&[4, 16], 0.02 * opts.scale)
+    } else {
+        (super::fig4::P_SWEEP, opts.scale)
+    };
+    let model = calibrated();
+    let mut r = Report::new(["network", "P", "speedup f=d_v", "speedup f=1"]);
+    for net in super::fig4::NETWORKS {
+        let o = cache::oriented(net, scale)?;
+        for &p in ps {
+            let p = p.max(2);
+            let fd = simulate(&o, p, CostFn::Degree, SimGranularity::Shrinking, &model);
+            let f1 = simulate(&o, p, CostFn::Unit, SimGranularity::Shrinking, &model);
+            r.row([
+                (*net).into(),
+                Cell::Int(p as u64),
+                Cell::Float(fd.speedup()),
+                Cell::Float(f1.speedup()),
+            ]);
+        }
+    }
+    r.note("expected: f=d_v ≥ f=1 everywhere, gap widest on skewed nets");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn degree_cost_fn_wins_on_average() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        let (mut sum_d, mut sum_1) = (0.0, 0.0);
+        for row in &r.rows {
+            if let (Cell::Float(d), Cell::Float(u)) = (&row[2], &row[3]) {
+                sum_d += d;
+                sum_1 += u;
+            }
+        }
+        assert!(sum_d >= sum_1 * 0.98, "f=d_v {sum_d} vs f=1 {sum_1}");
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig 13 — idle time of worker processors: static task granularity vs the
+//! paper's dynamically shrinking granularity (Eqn 2), Miami- and
+//! LiveJournal-like networks. Paper's shape: static leaves some workers
+//! idle for a large fraction of the run; dynamic granularity collapses the
+//! idle tail to near zero.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::dynamic::{simulate, DynamicSim, SimGranularity};
+
+fn idle_stats(d: &DynamicSim) -> (f64, f64, f64) {
+    let idles: Vec<f64> = d.workers.iter().map(|w| w.idle_ns / 1e9).collect();
+    let max = idles.iter().copied().fold(0.0f64, f64::max);
+    let mean = idles.iter().sum::<f64>() / idles.len() as f64;
+    (mean, max, d.makespan_ns / 1e9)
+}
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (p, scale): (usize, f64) = if opts.quick { (8, 0.02 * opts.scale) } else { (100, opts.scale) };
+    let model = calibrated();
+    let mut r = Report::new([
+        "network", "granularity", "idle mean", "idle max", "idle/makespan %", "makespan",
+    ]);
+    for net in ["miami-like", "livejournal-like"] {
+        let o = cache::oriented(net, scale)?;
+        // "Static size": the dynamic region cut into one equal-cost task per
+        // worker (no granularity adaptation) — the strawman of §V-B.
+        let stat = simulate(&o, p, CostFn::Degree, SimGranularity::Fixed(p - 1), &model);
+        let dynm = simulate(&o, p, CostFn::Degree, SimGranularity::Shrinking, &model);
+        for (name, d) in [("static", &stat), ("dynamic", &dynm)] {
+            let (mean, max, makespan) = idle_stats(d);
+            r.row([
+                net.into(),
+                name.into(),
+                Cell::Secs(mean),
+                Cell::Secs(max),
+                Cell::Float(100.0 * max / makespan),
+                Cell::Secs(makespan),
+            ]);
+        }
+    }
+    r.note("expected: dynamic granularity cuts idle max and makespan");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn dynamic_reduces_idle() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        for pair in r.rows.chunks(2) {
+            let get_max = |row: &Vec<Cell>| match row[3] {
+                Cell::Secs(x) => x,
+                _ => panic!(),
+            };
+            let (stat, dynm) = (get_max(&pair[0]), get_max(&pair[1]));
+            assert!(dynm <= stat, "dynamic idle {dynm} !<= static idle {stat}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig 14 — scalability of the §V dynamic-LB algorithm with increasing
+//! network size, compared against PATRIC [21]. Paper's shape: both scale,
+//! dynamic-LB reaches clearly higher speedups at every size.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::dynamic::{simulate, SimGranularity};
+use crate::sim::space_efficient::simulate_patric_balanced;
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, sizes): (&[usize], Vec<usize>) = if opts.quick {
+        (&[16, 64], vec![5_000, 20_000])
+    } else {
+        (
+            &[25, 50, 100, 200, 400],
+            super::fig6::SIZES.iter().map(|&s| ((s as f64) * opts.scale) as usize).collect(),
+        )
+    };
+    let model = calibrated();
+    let mut r = Report::new(["n", "P", "speedup dyn-LB", "speedup PATRIC"]);
+    for &n in &sizes {
+        let o = cache::oriented(&format!("pa:{n}:50"), 1.0)?;
+        for &p in ps {
+            let p = p.max(2);
+            let d = simulate(&o, p, CostFn::Degree, SimGranularity::Shrinking, &model);
+            let patric = simulate_patric_balanced(&o, p, CostFn::PatricBest, &model);
+            r.row([
+                Cell::Int(n as u64),
+                Cell::Int(p as u64),
+                Cell::Float(d.speedup()),
+                Cell::Float(patric.speedup()),
+            ]);
+        }
+    }
+    r.note("expected: dyn-LB ≥ PATRIC at every (n, P); knee moves right with n");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn dynamic_wins_on_average() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        let (mut sd, mut sp) = (0.0, 0.0);
+        for row in &r.rows {
+            if let (Cell::Float(d), Cell::Float(p)) = (&row[2], &row[3]) {
+                sd += d;
+                sp += p;
+            }
+        }
+        assert!(sd >= sp, "dyn {sd} !>= patric {sp}");
+    }
+}

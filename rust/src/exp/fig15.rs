@@ -1,0 +1,58 @@
+//! Fig 15 — weak scaling of the §V dynamic-LB algorithm: problem size
+//! grows with P; runtime should increase only very slowly (the
+//! request/assign protocol overhead is tiny).
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::dynamic::{simulate, SimGranularity};
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, npp): (&[usize], usize) = if opts.quick {
+        (&[2, 4, 8], 500)
+    } else {
+        (super::fig9::P_SWEEP, ((super::fig9::NODES_PER_P as f64) * opts.scale) as usize)
+    };
+    let model = calibrated();
+    let mut r = Report::new(["P", "n", "virtual runtime", "control msgs", "efficiency"]);
+    let mut t0 = None;
+    for &p in ps {
+        let p = p.max(2);
+        let n = npp * p;
+        let o = cache::oriented(&format!("pa:{n}:50"), 1.0)?;
+        let d = simulate(&o, p, CostFn::Degree, SimGranularity::Shrinking, &model);
+        let t = d.makespan_ns / 1e9;
+        let t0v = *t0.get_or_insert(t);
+        r.row([
+            Cell::Int(p as u64),
+            Cell::Int(n as u64),
+            Cell::Secs(t),
+            Cell::Int(d.control_msgs),
+            Cell::Float(t0v / t),
+        ]);
+    }
+    r.note("expected: very slow runtime growth (good weak scaling)");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn runtime_growth_is_slow() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        let ts: Vec<f64> = r
+            .rows
+            .iter()
+            .map(|row| if let Cell::Secs(x) = row[2] { x } else { panic!() })
+            .collect();
+        assert!(
+            ts.last().unwrap() / ts.first().unwrap() < 6.0,
+            "weak scaling broke: {ts:?}"
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Fig 4 — strong scaling of the §IV algorithm: speedup vs P, direct vs
+//! surrogate, on Miami / LiveJournal / web-BerkStan (-like) networks.
+//! Paper's shape: surrogate speedups rise steeply; direct flattens early
+//! under redundant-message overhead.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::space_efficient::{simulate_balanced, Scheme};
+
+pub const NETWORKS: &[&str] = &["miami-like", "livejournal-like", "berkstan-like"];
+pub const P_SWEEP: &[usize] = &[10, 25, 50, 100, 150, 200];
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, scale): (&[usize], f64) = if opts.quick {
+        (&[4, 16], 0.02 * opts.scale)
+    } else {
+        (P_SWEEP, opts.scale)
+    };
+    let model = calibrated();
+    let mut r = Report::new(["network", "P", "speedup surrogate", "speedup direct", "msgs surrogate", "msgs direct"]);
+    for net in NETWORKS {
+        let o = cache::oriented(net, scale)?;
+        for &p in ps {
+            let s = simulate_balanced(&o, p, CostFn::SurrogateNew, Scheme::Surrogate, &model);
+            let d = simulate_balanced(&o, p, CostFn::SurrogateNew, Scheme::Direct, &model);
+            r.row([
+                (*net).into(),
+                Cell::Int(p as u64),
+                Cell::Float(s.speedup()),
+                Cell::Float(d.speedup()),
+                Cell::Int(s.total_msgs()),
+                Cell::Int(d.total_msgs()),
+            ]);
+        }
+    }
+    r.note("virtual time, calibrated α; expected: surrogate ≫ direct at every P");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn surrogate_dominates_direct() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        for row in &r.rows {
+            let (s, d) = match (&row[2], &row[3]) {
+                (Cell::Float(s), Cell::Float(d)) => (*s, *d),
+                _ => panic!(),
+            };
+            assert!(s >= d, "surrogate {s} !>= direct {d}");
+        }
+    }
+}

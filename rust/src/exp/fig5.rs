@@ -1,0 +1,59 @@
+//! Fig 5 — effect of the cost-estimation function: the §IV-F estimator
+//! `f(v)=Σ_{u∈𝒩_v−N_v}(d̂_v+d̂_u)` vs PATRIC's best `f(v)=Σ_{u∈N_v}(…)`.
+//! Paper's shape: the new estimator wins on skewed networks (LiveJournal,
+//! web-BerkStan); on even-degree Miami the two are indistinguishable.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::space_efficient::{simulate_balanced, Scheme};
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, scale): (&[usize], f64) = if opts.quick {
+        (&[4, 16], 0.02 * opts.scale)
+    } else {
+        (super::fig4::P_SWEEP, opts.scale)
+    };
+    let model = calibrated();
+    let mut r = Report::new(["network", "P", "speedup new f(v)", "speedup PATRIC f(v)", "gain %"]);
+    for net in super::fig4::NETWORKS {
+        let o = cache::oriented(net, scale)?;
+        for &p in ps {
+            let new = simulate_balanced(&o, p, CostFn::SurrogateNew, Scheme::Surrogate, &model);
+            let old = simulate_balanced(&o, p, CostFn::PatricBest, Scheme::Surrogate, &model);
+            r.row([
+                (*net).into(),
+                Cell::Int(p as u64),
+                Cell::Float(new.speedup()),
+                Cell::Float(old.speedup()),
+                Cell::Float(100.0 * (new.speedup() / old.speedup() - 1.0)),
+            ]);
+        }
+    }
+    r.note("expected: gain > 0 on skewed nets (livejournal/berkstan), ≈ 0 on miami-like");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn new_estimator_not_worse_on_skewed_nets() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        // Averaged over the sweep, the new estimator must not lose.
+        let mut gain_sum = 0.0;
+        for row in &r.rows {
+            if let Cell::Float(g) = row[4] {
+                gain_sum += g;
+            }
+        }
+        assert!(
+            gain_sum / r.rows.len() as f64 > -2.0,
+            "new estimator lost on average: {gain_sum}"
+        );
+    }
+}

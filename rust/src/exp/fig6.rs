@@ -1,0 +1,64 @@
+//! Fig 6 — improved scalability of the §IV algorithm with increasing
+//! network size: bigger PA(n,50) networks keep gaining speedup at higher P
+//! (the speedup knee moves right as n grows).
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::space_efficient::{simulate_balanced, Scheme};
+
+/// Network-size sweep (paper uses PA(nM, 50); we scale by 1/10, DESIGN §3).
+pub const SIZES: &[usize] = &[100_000, 200_000, 400_000];
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, sizes): (&[usize], Vec<usize>) = if opts.quick {
+        (&[4, 16, 64], vec![2_000, 8_000])
+    } else {
+        (
+            &[25, 50, 100, 200, 400],
+            SIZES.iter().map(|&s| ((s as f64) * opts.scale) as usize).collect(),
+        )
+    };
+    let model = calibrated();
+    let mut r = Report::new(["n", "P", "speedup"]);
+    for &n in &sizes {
+        let o = cache::oriented(&format!("pa:{n}:50"), 1.0)?;
+        for &p in ps {
+            let s = simulate_balanced(&o, p, CostFn::SurrogateNew, Scheme::Surrogate, &model);
+            r.row([Cell::Int(n as u64), Cell::Int(p as u64), Cell::Float(s.speedup())]);
+        }
+    }
+    r.note("expected: larger n sustains speedup growth to larger P");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn bigger_networks_scale_further() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        // At the largest P, the biggest network must have the best speedup.
+        let max_p = r
+            .rows
+            .iter()
+            .filter_map(|row| if let Cell::Int(p) = row[1] { Some(p) } else { None })
+            .max()
+            .unwrap();
+        let at_max: Vec<(u64, f64)> = r
+            .rows
+            .iter()
+            .filter_map(|row| match (&row[0], &row[1], &row[2]) {
+                (Cell::Int(n), Cell::Int(p), Cell::Float(s)) if *p == max_p => Some((*n, *s)),
+                _ => None,
+            })
+            .collect();
+        let small = at_max.iter().min_by_key(|(n, _)| *n).unwrap();
+        let large = at_max.iter().max_by_key(|(n, _)| *n).unwrap();
+        assert!(large.1 >= small.1, "larger net {large:?} !>= smaller {small:?}");
+    }
+}

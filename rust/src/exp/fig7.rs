@@ -1,0 +1,63 @@
+//! Fig 7 — space requirement vs average degree: PA(n, d) with d swept
+//! 10→100, largest-partition bytes for the non-overlapping scheme (ours)
+//! vs PATRIC's overlapping scheme. Paper's shape: ours grows slowly and
+//! linearly; PATRIC's grows rapidly (the overlap multiplies with degree).
+
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::partition::balance::balanced_ranges;
+use crate::partition::cost::prefix_sums;
+use crate::partition::nonoverlap::partition_sizes;
+use crate::partition::overlap::overlap_sizes;
+
+/// Node count at scale 1.0 (paper: 10M — scaled per DESIGN §3).
+pub const N: usize = 100_000;
+pub const DEGREES: &[usize] = &[10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (n, p, degrees): (usize, usize, &[usize]) = if opts.quick {
+        (3_000, 10, &[10, 30, 60])
+    } else {
+        (((N as f64) * opts.scale) as usize, 100, DEGREES)
+    };
+    let mut r = Report::new(["avg degree", "ours MB", "PATRIC MB", "ratio"]);
+    for &d in degrees {
+        let o = cache::oriented(&format!("pa:{n}:{d}"), 1.0)?;
+        // Same edge-balanced ranges for both schemes (see table2.rs).
+        let edge_costs: Vec<u64> =
+            (0..o.num_nodes() as u32).map(|v| o.effective_degree(v) as u64).collect();
+        let ranges = balanced_ranges(&prefix_sums(&edge_costs), p);
+        let g0 = cache::graph(&format!("pa:{n}:{d}"), 1.0)?;
+        let ours = partition_sizes(&o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+        let patric = overlap_sizes(&g0, &o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+        r.row([
+            Cell::Int(d as u64),
+            Cell::Float(ours),
+            Cell::Float(patric),
+            Cell::Float(patric / ours.max(1e-12)),
+        ]);
+    }
+    r.note(format!("PA({n}, d), P = {p}; expected: ratio grows with d"));
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn overlap_ratio_grows_with_degree() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        let ratios: Vec<f64> = r
+            .rows
+            .iter()
+            .map(|row| if let Cell::Float(x) = row[3] { x } else { panic!() })
+            .collect();
+        assert!(
+            ratios.last().unwrap() > ratios.first().unwrap(),
+            "ratio must grow with degree: {ratios:?}"
+        );
+    }
+}

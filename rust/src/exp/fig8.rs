@@ -1,0 +1,59 @@
+//! Fig 8 — memory scalability: largest non-overlapping partition shrinks
+//! as processors are added (≈ m/P decay), shown for Miami- and
+//! LiveJournal-like networks.
+
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::partition::balance::balanced_ranges;
+use crate::partition::cost::prefix_sums;
+use crate::partition::nonoverlap::partition_sizes;
+
+pub const P_SWEEP: &[usize] = &[25, 50, 100, 150, 200];
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, scale): (&[usize], f64) = if opts.quick {
+        (&[2, 8, 32], 0.02 * opts.scale)
+    } else {
+        (P_SWEEP, opts.scale)
+    };
+    let mut r = Report::new(["network", "P", "largest partition MB", "m/P edges"]);
+    for net in ["miami-like", "livejournal-like"] {
+        let o = cache::oriented(net, scale)?;
+        let edge_costs: Vec<u64> =
+            (0..o.num_nodes() as u32).map(|v| o.effective_degree(v) as u64).collect();
+        for &p in ps {
+            let ranges = balanced_ranges(&prefix_sums(&edge_costs), p);
+            let mb = partition_sizes(&o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+            r.row([
+                net.into(),
+                Cell::Int(p as u64),
+                Cell::Float(mb),
+                Cell::Int(o.num_edges() / p as u64),
+            ]);
+        }
+    }
+    r.note("expected: largest partition decays ≈ 1/P");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn memory_decreases_with_p() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        // Within each network the MB column must be non-increasing in P.
+        for chunk in r.rows.chunks(3) {
+            let mbs: Vec<f64> = chunk
+                .iter()
+                .map(|row| if let Cell::Float(x) = row[2] { x } else { panic!() })
+                .collect();
+            for w in mbs.windows(2) {
+                assert!(w[1] <= w[0] * 1.05, "memory must shrink with P: {mbs:?}");
+            }
+        }
+    }
+}

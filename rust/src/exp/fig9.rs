@@ -1,0 +1,64 @@
+//! Fig 9 — weak scaling of the §IV algorithm: PA(P/10·1M, 50) in the paper
+//! (problem size grows with P), runtime should rise only slowly with the
+//! added communication overhead.
+
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::exp::report::{Cell, Report};
+use crate::exp::{cache, Options};
+use crate::sim::calibrate::calibrated;
+use crate::sim::space_efficient::{simulate_balanced, Scheme};
+
+pub const P_SWEEP: &[usize] = &[10, 25, 50, 100, 150, 200];
+/// Nodes per processor at scale 1.0 (paper: 100K per processor, /10 per DESIGN §3).
+pub const NODES_PER_P: usize = 10_000;
+
+pub fn run(opts: &Options) -> Result<Report> {
+    let (ps, npp): (&[usize], usize) = if opts.quick {
+        (&[2, 4, 8], 500)
+    } else {
+        (P_SWEEP, ((NODES_PER_P as f64) * opts.scale) as usize)
+    };
+    let model = calibrated();
+    let mut r = Report::new(["P", "n", "m", "virtual runtime", "efficiency"]);
+    let mut t0 = None;
+    for &p in ps {
+        let n = npp * p;
+        let o = cache::oriented(&format!("pa:{n}:50"), 1.0)?;
+        let s = simulate_balanced(&o, p, CostFn::SurrogateNew, Scheme::Surrogate, &model);
+        let t = s.makespan_ns / 1e9;
+        let t0v = *t0.get_or_insert(t);
+        r.row([
+            Cell::Int(p as u64),
+            Cell::Int(n as u64),
+            Cell::Int(o.num_edges()),
+            Cell::Secs(t),
+            Cell::Float(t0v / t),
+        ]);
+    }
+    r.note("weak scaling: runtime should grow slowly (PA triangle work grows mildly superlinearly with n)");
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::exp::report::Cell;
+
+    #[test]
+    fn runtime_growth_is_bounded() {
+        let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
+        let r = super::run(&opts).unwrap();
+        let ts: Vec<f64> = r
+            .rows
+            .iter()
+            .map(|row| if let Cell::Secs(x) = row[3] { x } else { panic!() })
+            .collect();
+        // 4× more processors+work must not blow runtime up by more than ~4×
+        // (perfect weak scaling would be 1×; PA work superlinearity and comm
+        // overhead push it above, but it must stay far from linear-in-total-work ~16×).
+        assert!(
+            ts.last().unwrap() / ts.first().unwrap() < 6.0,
+            "weak scaling broke: {ts:?}"
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Tabular report emitter shared by all experiment drivers: aligned text
+//! to stdout (paper-shaped rows) + CSV for plotting.
+
+use crate::error::Result;
+use std::io::Write;
+
+/// A cell value.
+#[derive(Clone, Debug)]
+pub enum Cell {
+    Text(String),
+    Int(u64),
+    Float(f64),
+    /// Seconds, pretty-printed (ms/s/m adaptive).
+    Secs(f64),
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Text(s) => s.clone(),
+            Cell::Int(x) => x.to_string(),
+            Cell::Float(x) => {
+                if x.abs() >= 100.0 {
+                    format!("{x:.1}")
+                } else {
+                    format!("{x:.3}")
+                }
+            }
+            Cell::Secs(s) => {
+                if *s < 1e-3 {
+                    format!("{:.1}µs", s * 1e6)
+                } else if *s < 1.0 {
+                    format!("{:.2}ms", s * 1e3)
+                } else if *s < 120.0 {
+                    format!("{s:.2}s")
+                } else {
+                    format!("{:.2}m", s / 60.0)
+                }
+            }
+        }
+    }
+
+    fn csv(&self) -> String {
+        match self {
+            Cell::Text(s) => s.replace(',', ";"),
+            Cell::Int(x) => x.to_string(),
+            Cell::Float(x) => format!("{x}"),
+            Cell::Secs(s) => format!("{s}"),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Text(s.into())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Text(s)
+    }
+}
+impl From<u64> for Cell {
+    fn from(x: u64) -> Self {
+        Cell::Int(x)
+    }
+}
+impl From<usize> for Cell {
+    fn from(x: usize) -> Self {
+        Cell::Int(x as u64)
+    }
+}
+impl From<f64> for Cell {
+    fn from(x: f64) -> Self {
+        Cell::Float(x)
+    }
+}
+
+/// A report: header + rows + free-form notes.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new<I: IntoIterator<Item = S>, S: Into<String>>(columns: I) -> Self {
+        Report { columns: columns.into_iter().map(Into::into).collect(), rows: vec![], notes: vec![] }
+    }
+
+    pub fn row<I: IntoIterator<Item = Cell>>(&mut self, cells: I) {
+        let row: Vec<Cell> = cells.into_iter().collect();
+        debug_assert_eq!(row.len(), self.columns.len());
+        self.rows.push(row);
+    }
+
+    pub fn note<S: Into<String>>(&mut self, s: S) {
+        self.notes.push(s.into());
+    }
+
+    /// Aligned text table to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.render()).collect())
+            .collect();
+        for r in &rendered {
+            for (i, cell) in r.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let head: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        println!("{}", head.join("  "));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for r in rendered {
+            let line: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+    }
+
+    /// CSV (comma-separated; notes as trailing comments).
+    pub fn write_csv(&self, path: &str) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{}", self.columns.join(","))?;
+        for r in &self.rows {
+            let line: Vec<String> = r.iter().map(|c| c.csv()).collect();
+            writeln!(f, "{}", line.join(","))?;
+        }
+        for n in &self.notes {
+            writeln!(f, "# {n}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_renders() {
+        let mut r = Report::new(["net", "P", "speedup"]);
+        r.row(["miami".into(), Cell::Int(100), Cell::Float(52.5)]);
+        r.note("virtual time");
+        assert_eq!(r.rows.len(), 1);
+        r.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(Cell::Secs(0.0000005).render(), "0.5µs");
+        assert_eq!(Cell::Secs(0.5).render(), "500.00ms");
+        assert_eq!(Cell::Secs(12.0).render(), "12.00s");
+        assert_eq!(Cell::Secs(744.0).render(), "12.40m");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("tricount_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("r.csv");
+        let mut r = Report::new(["a", "b"]);
+        r.row([Cell::Int(1), Cell::Text("x,y".into())]);
+        r.write_csv(p.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("a,b\n1,x;y\n"), "{text}");
+    }
+}

@@ -1,0 +1,77 @@
+//! Erdős–Rényi `G(n, m)` generator — the "no structure" control used in
+//! tests and ablations (uniform degrees, expected triangle count known in
+//! closed form).
+
+use crate::gen::rng::Rng;
+use crate::graph::builder::from_edge_list;
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Sample a uniform graph with `n` nodes and exactly `m` distinct edges
+/// (rejection sampling; requires `m ≤ n(n-1)/2`).
+pub fn gnm(n: usize, m: usize, rng: &mut Rng) -> Csr {
+    let max = n * (n - 1) / 2;
+    assert!(m <= max, "m={m} exceeds max edges {max} for n={n}");
+    // For dense requests fall back to sampling non-edges instead.
+    if m > max / 2 {
+        return dense_gnm(n, m, rng);
+    }
+    let mut set = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let u = rng.below(n as u64) as VertexId;
+        let v = rng.below(n as u64) as VertexId;
+        if u == v {
+            continue;
+        }
+        let key = if u < v { ((u as u64) << 32) | v as u64 } else { ((v as u64) << 32) | u as u64 };
+        if set.insert(key) {
+            edges.push((u, v));
+        }
+    }
+    from_edge_list(n, edges).expect("G(n,m) edges valid")
+}
+
+fn dense_gnm(n: usize, m: usize, rng: &mut Rng) -> Csr {
+    // Enumerate all pairs, shuffle, take m. O(n²) — only for small dense tests.
+    let mut all: Vec<(VertexId, VertexId)> = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n as VertexId {
+        for v in (u + 1)..n as VertexId {
+            all.push((u, v));
+        }
+    }
+    rng.shuffle(&mut all);
+    all.truncate(m);
+    from_edge_list(n, all).expect("dense G(n,m) edges valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_edge_count() {
+        let g = gnm(100, 500, &mut Rng::seeded(4));
+        assert_eq!(g.num_edges(), 500);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn dense_path() {
+        let g = gnm(20, 150, &mut Rng::seeded(5)); // max=190, m>max/2
+        assert_eq!(g.num_edges(), 150);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn full_graph() {
+        let g = gnm(10, 45, &mut Rng::seeded(6));
+        assert_eq!(g.num_edges(), 45);
+        assert_eq!(g.max_degree(), 9);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(gnm(50, 100, &mut Rng::seeded(7)), gnm(50, 100, &mut Rng::seeded(7)));
+    }
+}

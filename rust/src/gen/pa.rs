@@ -1,0 +1,100 @@
+//! Preferential-attachment generator `PA(n, d)` (Barabási–Albert [27]).
+//!
+//! The paper's scaling experiments (Figs 6, 7, 9, 14, 15; Tables II-IV) use
+//! `PA(n, d)`: `n` nodes, average degree `d` (≈ `d/2` edges added per new
+//! node), power-law degree distribution. We use the standard
+//! repeated-endpoint trick: attachment proportional to degree is achieved by
+//! sampling uniformly from the multiset of all edge endpoints so far.
+
+use crate::gen::rng::Rng;
+use crate::graph::builder::from_edge_list;
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Generate `PA(n, d)`: `n` nodes, average degree ≈ `d` (so ≈ `n·d/2` edges).
+/// `d` must be even and ≥ 2; `n > d`.
+pub fn preferential_attachment(n: usize, d: usize, rng: &mut Rng) -> Csr {
+    assert!(d >= 2 && d % 2 == 0, "d must be even and >= 2, got {d}");
+    assert!(n > d, "need n > d (n={n}, d={d})");
+    let k = d / 2; // edges per new node
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(n * k);
+    // Endpoint pool: each inserted edge contributes both endpoints, giving
+    // degree-proportional sampling.
+    let mut pool: Vec<VertexId> = Vec::with_capacity(2 * n * k);
+    // Seed: a (k+1)-clique so every early node has degree ≥ k.
+    for u in 0..=k as VertexId {
+        for v in (u + 1)..=k as VertexId {
+            edges.push((u, v));
+            pool.push(u);
+            pool.push(v);
+        }
+    }
+    let mut picked: Vec<VertexId> = Vec::with_capacity(k);
+    for v in (k + 1)..n {
+        let v = v as VertexId;
+        picked.clear();
+        // Rejection-sample k distinct neighbors (k is small; collisions rare).
+        let mut guard = 0usize;
+        while picked.len() < k {
+            let u = pool[rng.below_usize(pool.len())];
+            if !picked.contains(&u) {
+                picked.push(u);
+            } else {
+                guard += 1;
+                if guard > 64 * k {
+                    // Degenerate corner (tiny pools): fall back to any node ≠ v.
+                    let u = rng.below(v as u64) as VertexId;
+                    if !picked.contains(&u) {
+                        picked.push(u);
+                    }
+                }
+            }
+        }
+        for &u in &picked {
+            edges.push((v, u));
+            pool.push(v);
+            pool.push(u);
+        }
+    }
+    from_edge_list(n, edges).expect("PA generator produces valid edges")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats::degree_stats;
+
+    #[test]
+    fn size_matches_spec() {
+        let g = preferential_attachment(1000, 10, &mut Rng::seeded(1));
+        assert_eq!(g.num_nodes(), 1000);
+        // m ≈ n·d/2 (exact up to the seed clique and rare duplicate edges).
+        let m = g.num_edges() as f64;
+        assert!((m - 5000.0).abs() < 150.0, "m={m}");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = preferential_attachment(500, 6, &mut Rng::seeded(9));
+        let b = preferential_attachment(500, 6, &mut Rng::seeded(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn power_law_skew() {
+        let g = preferential_attachment(5000, 10, &mut Rng::seeded(2));
+        let s = degree_stats(&g);
+        // Power-law tail: hub degree far above average, high CV.
+        assert!(s.max_degree > 10 * s.avg_degree as usize, "{s}");
+        assert!(s.cv > 0.8, "expected skew, cv={}", s.cv);
+    }
+
+    #[test]
+    fn min_degree_is_k() {
+        let g = preferential_attachment(300, 8, &mut Rng::seeded(3));
+        for v in 0..300u32 {
+            assert!(g.degree(v) >= 4, "node {v} degree {}", g.degree(v));
+        }
+    }
+}

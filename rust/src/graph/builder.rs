@@ -1,0 +1,163 @@
+//! Edge-list → CSR construction.
+//!
+//! Deduplicates parallel edges, drops self loops, symmetrizes, and sorts
+//! adjacency lists — producing a [`Csr`] that satisfies all its invariants.
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Incremental builder for undirected graphs.
+///
+/// ```
+/// use tricount::graph::builder::GraphBuilder;
+/// let g = GraphBuilder::new(4)
+///     .edges([(0, 1), (1, 2), (2, 0), (1, 1), (0, 1)]) // self loop + dup dropped
+///     .build()
+///     .unwrap();
+/// assert_eq!(g.num_edges(), 3);
+/// ```
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph on nodes `0..n`.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new() }
+    }
+
+    /// Pre-allocate for `m` expected edges.
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        GraphBuilder { n, edges: Vec::with_capacity(m) }
+    }
+
+    /// Add one undirected edge (order of endpoints irrelevant).
+    pub fn edge(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Add many edges (chainable).
+    pub fn edges<I: IntoIterator<Item = (VertexId, VertexId)>>(mut self, it: I) -> Self {
+        self.edges.extend(it);
+        self
+    }
+
+    /// Number of raw (pre-dedup) edges added so far.
+    pub fn raw_len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Build the CSR, consuming the builder.
+    pub fn build(self) -> Result<Csr> {
+        from_edge_list(self.n, self.edges)
+    }
+}
+
+/// Build a CSR from an edge list. Self loops are dropped, duplicates merged.
+/// Endpoints must be `< n`.
+pub fn from_edge_list(n: usize, mut edges: Vec<(VertexId, VertexId)>) -> Result<Csr> {
+    // Normalize: (min, max), drop self loops, validate range.
+    let mut w = 0;
+    for i in 0..edges.len() {
+        let (u, v) = edges[i];
+        if u as usize >= n || v as usize >= n {
+            return Err(Error::InvalidGraph(format!(
+                "edge ({u},{v}) out of range for n={n}"
+            )));
+        }
+        if u == v {
+            continue;
+        }
+        edges[w] = if u < v { (u, v) } else { (v, u) };
+        w += 1;
+    }
+    edges.truncate(w);
+    edges.sort_unstable();
+    edges.dedup();
+
+    // Counting sort into CSR, both directions.
+    let mut deg = vec![0u64; n + 1];
+    for &(u, v) in &edges {
+        deg[u as usize + 1] += 1;
+        deg[v as usize + 1] += 1;
+    }
+    let mut offsets = deg;
+    for i in 0..n {
+        offsets[i + 1] += offsets[i];
+    }
+    let mut cursor = offsets.clone();
+    let mut targets = vec![0 as VertexId; *offsets.last().unwrap() as usize];
+    for &(u, v) in &edges {
+        targets[cursor[u as usize] as usize] = v;
+        cursor[u as usize] += 1;
+        targets[cursor[v as usize] as usize] = u;
+        cursor[v as usize] += 1;
+    }
+    // Edge list was sorted by (u, v); the second insertion (v → u) is not
+    // globally sorted, so sort each list. Lists are typically short; the
+    // u-side entries are already in order.
+    for v in 0..n {
+        let s = offsets[v] as usize;
+        let e = offsets[v + 1] as usize;
+        targets[s..e].sort_unstable();
+    }
+    Ok(Csr::from_parts(offsets, targets))
+}
+
+/// Build directly from an iterator of edges without an intermediate builder.
+pub fn from_edges<I: IntoIterator<Item = (VertexId, VertexId)>>(n: usize, it: I) -> Result<Csr> {
+    from_edge_list(n, it.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = from_edges(3, [(0, 1), (1, 0), (1, 1), (0, 1), (2, 1)]).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(from_edges(2, [(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn triangle() {
+        let g = from_edges(3, [(0, 1), (1, 2), (2, 0)]).unwrap();
+        assert_eq!(g.num_edges(), 3);
+        for v in 0..3 {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn adjacency_sorted_even_with_reversed_input() {
+        let g = from_edges(5, [(4, 0), (3, 0), (2, 0), (1, 0)]).unwrap();
+        assert_eq!(g.neighbors(0), &[1, 2, 3, 4]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_chaining() {
+        let mut b = GraphBuilder::with_capacity(4, 3);
+        b.edge(0, 1).edge(1, 2).edge(2, 3);
+        assert_eq!(b.raw_len(), 3);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn isolated_vertices_allowed() {
+        let g = from_edges(10, [(0, 9)]).unwrap();
+        assert_eq!(g.num_nodes(), 10);
+        assert_eq!(g.degree(5), 0);
+    }
+}

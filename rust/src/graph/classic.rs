@@ -1,0 +1,137 @@
+//! Small classic graphs with known triangle counts — the exactness fixtures
+//! used across the test suite and the examples.
+
+use crate::graph::builder::from_edges;
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Complete graph `K_n` — `C(n,3)` triangles.
+pub fn complete(n: usize) -> Csr {
+    let mut es = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n as VertexId {
+        for v in (u + 1)..n as VertexId {
+            es.push((u, v));
+        }
+    }
+    from_edges(n, es).expect("K_n is valid")
+}
+
+/// Cycle `C_n` (n ≥ 3) — 1 triangle iff n == 3, else 0.
+pub fn cycle(n: usize) -> Csr {
+    assert!(n >= 3);
+    let es = (0..n as VertexId).map(|v| (v, ((v as usize + 1) % n) as VertexId));
+    from_edges(n, es).expect("C_n is valid")
+}
+
+/// Star `K_{1,k}` (hub = node 0) — 0 triangles.
+pub fn star(k: usize) -> Csr {
+    from_edges(k + 1, (1..=k as VertexId).map(|v| (0, v))).expect("star is valid")
+}
+
+/// Complete bipartite `K_{a,b}` — 0 triangles.
+pub fn complete_bipartite(a: usize, b: usize) -> Csr {
+    let mut es = Vec::with_capacity(a * b);
+    for u in 0..a as VertexId {
+        for v in 0..b as VertexId {
+            es.push((u, a as VertexId + v));
+        }
+    }
+    from_edges(a + b, es).expect("K_{a,b} is valid")
+}
+
+/// Petersen graph — famously triangle-free (girth 5).
+pub fn petersen() -> Csr {
+    let outer = (0..5).map(|i| (i, (i + 1) % 5));
+    let spokes = (0..5).map(|i| (i, i + 5));
+    let inner = (0..5).map(|i| (i + 5, (i + 2) % 5 + 5));
+    from_edges(10, outer.chain(spokes).chain(inner).map(|(u, v)| (u as VertexId, v as VertexId)))
+        .expect("petersen is valid")
+}
+
+/// Zachary's karate club (34 nodes, 78 edges) — **45 triangles**, the classic
+/// real social network used as an embedded "real data" fixture.
+pub fn karate() -> Csr {
+    // Standard edge list (0-indexed).
+    const E: [(VertexId, VertexId); 78] = [
+        (0, 1), (0, 2), (0, 3), (0, 4), (0, 5), (0, 6), (0, 7), (0, 8), (0, 10),
+        (0, 11), (0, 12), (0, 13), (0, 17), (0, 19), (0, 21), (0, 31), (1, 2),
+        (1, 3), (1, 7), (1, 13), (1, 17), (1, 19), (1, 21), (1, 30), (2, 3),
+        (2, 7), (2, 8), (2, 9), (2, 13), (2, 27), (2, 28), (2, 32), (3, 7),
+        (3, 12), (3, 13), (4, 6), (4, 10), (5, 6), (5, 10), (5, 16), (6, 16),
+        (8, 30), (8, 32), (8, 33), (9, 33), (13, 33), (14, 32), (14, 33),
+        (15, 32), (15, 33), (18, 32), (18, 33), (19, 33), (20, 32), (20, 33),
+        (22, 32), (22, 33), (23, 25), (23, 27), (23, 29), (23, 32), (23, 33),
+        (24, 25), (24, 27), (24, 31), (25, 31), (26, 29), (26, 33), (27, 33),
+        (28, 31), (28, 33), (29, 32), (29, 33), (30, 32), (30, 33), (31, 32),
+        (31, 33), (32, 33),
+    ];
+    from_edges(34, E).expect("karate is valid")
+}
+
+/// Known triangle count of [`karate`].
+pub const KARATE_TRIANGLES: u64 = 45;
+
+/// A wheel `W_n`: hub 0 joined to a cycle of n rim nodes — n triangles (n ≥ 3).
+pub fn wheel(n: usize) -> Csr {
+    assert!(n >= 3);
+    let rim = (0..n).map(|i| ((i + 1) as VertexId, ((i + 1) % n + 1) as VertexId));
+    let spokes = (1..=n).map(|i| (0 as VertexId, i as VertexId));
+    from_edges(n + 1, rim.chain(spokes)).expect("wheel is valid")
+}
+
+/// Two `K_4`s sharing one vertex — 8 triangles; exercises articulation points.
+pub fn barbell_k4() -> Csr {
+    let mut es = Vec::new();
+    for u in 0..4 {
+        for v in (u + 1)..4 {
+            es.push((u as VertexId, v as VertexId));
+        }
+    }
+    // second K4 on {3,4,5,6} (node 3 shared)
+    for u in 3..7 {
+        for v in (u + 1)..7 {
+            es.push((u as VertexId, v as VertexId));
+        }
+    }
+    from_edges(7, es).expect("barbell is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(complete(5).num_edges(), 10);
+        assert_eq!(cycle(7).num_edges(), 7);
+        assert_eq!(star(6).num_edges(), 6);
+        assert_eq!(complete_bipartite(3, 4).num_edges(), 12);
+        assert_eq!(petersen().num_edges(), 15);
+        assert_eq!(karate().num_edges(), 78);
+        assert_eq!(wheel(5).num_edges(), 10);
+    }
+
+    #[test]
+    fn all_valid() {
+        for g in [
+            complete(6),
+            cycle(4),
+            star(3),
+            complete_bipartite(2, 5),
+            petersen(),
+            karate(),
+            wheel(8),
+            barbell_k4(),
+        ] {
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn petersen_is_cubic() {
+        let g = petersen();
+        for v in 0..10 {
+            assert_eq!(g.degree(v), 3);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Compressed sparse row (CSR) representation of an undirected graph.
+//!
+//! This is the substrate every algorithm in the crate works on. Nodes are
+//! labelled `0..n-1` (`VertexId = u32`); every undirected edge `{u, v}` is
+//! stored twice (once in each endpoint's adjacency list) and each list is
+//! sorted ascending by node id, which the intersection kernels and the
+//! paper's `LastProc` message-elimination trick both rely on.
+
+use crate::VertexId;
+
+/// An immutable undirected graph in CSR form.
+///
+/// Invariants (upheld by [`crate::graph::builder`] and checked by
+/// [`Csr::validate`]):
+/// * no self loops, no parallel edges;
+/// * adjacency lists sorted ascending;
+/// * symmetry: `v ∈ adj(u) ⇔ u ∈ adj(v)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `targets` for node `v`'s list.
+    offsets: Vec<u64>,
+    /// Concatenated adjacency lists.
+    targets: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from raw parts. `offsets` must have length `n + 1`, start at 0,
+    /// be non-decreasing and end at `targets.len()`.
+    pub fn from_parts(offsets: Vec<u64>, targets: Vec<VertexId>) -> Self {
+        debug_assert!(!offsets.is_empty());
+        debug_assert_eq!(*offsets.first().unwrap(), 0);
+        debug_assert_eq!(*offsets.last().unwrap() as usize, targets.len());
+        Csr { offsets, targets }
+    }
+
+    /// The empty graph on `n` nodes.
+    pub fn empty(n: usize) -> Self {
+        Csr { offsets: vec![0; n + 1], targets: Vec::new() }
+    }
+
+    /// Number of nodes `n`.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges `m` (each stored twice internally).
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.targets.len() as u64 / 2
+    }
+
+    /// Degree `d_v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sorted neighbor list `𝒩_v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.targets[s..e]
+    }
+
+    /// `true` iff `{u, v} ∈ E` (binary search over the shorter list).
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
+        let (a, b) = if self.degree(u) <= self.degree(v) { (u, v) } else { (v, u) };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    /// Iterate all undirected edges `(u, v)` with `u < v`, each once.
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_nodes() as VertexId).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Raw offsets (length `n + 1`).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw concatenated targets (length `2m`).
+    pub fn targets(&self) -> &[VertexId] {
+        &self.targets
+    }
+
+    /// Bytes used by the CSR arrays (the paper's "memory for a partition"
+    /// accounting uses the same formula on subgraphs).
+    pub fn memory_bytes(&self) -> u64 {
+        (self.offsets.len() * std::mem::size_of::<u64>()
+            + self.targets.len() * std::mem::size_of::<VertexId>()) as u64
+    }
+
+    /// Maximum degree `d_max`.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Average degree `d̄ = 2m / n`.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            return 0.0;
+        }
+        self.targets.len() as f64 / self.num_nodes() as f64
+    }
+
+    /// Exhaustively check the structural invariants. Intended for tests and
+    /// debug assertions — O(m log m).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        for v in 0..n {
+            if self.offsets[v] > self.offsets[v + 1] {
+                return Err(format!("offsets decrease at {v}"));
+            }
+        }
+        if *self.offsets.last().unwrap() as usize != self.targets.len() {
+            return Err("offsets end != targets.len()".into());
+        }
+        for v in 0..n as VertexId {
+            let ns = self.neighbors(v);
+            for w in ns.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("adjacency of {v} not strictly sorted"));
+                }
+            }
+            for &u in ns {
+                if u as usize >= n {
+                    return Err(format!("edge ({v},{u}) out of range"));
+                }
+                if u == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if self.neighbors(u).binary_search(&v).is_err() {
+                    return Err(format!("asymmetric edge ({v},{u})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn path3() -> Csr {
+        // 0 - 1 - 2
+        GraphBuilder::new(3).edges([(0, 1), (1, 2)]).build().unwrap()
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::empty(5);
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.degree(3), 0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = path3();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn has_edge_both_directions() {
+        let g = path3();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 2));
+        assert!(!g.has_edge(1, 1));
+    }
+
+    #[test]
+    fn edges_iterator_yields_each_once() {
+        let g = path3();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn memory_accounting_matches_layout() {
+        let g = path3();
+        assert_eq!(g.memory_bytes(), (4 * 8 + 4 * 4) as u64);
+    }
+
+    #[test]
+    fn max_and_avg_degree() {
+        let g = path3();
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 4.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Graph I/O: whitespace-separated edge-list text (the SNAP interchange
+//! format the paper's datasets ship in) and a compact binary CSR format for
+//! fast reloads of generated workloads.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::builder::from_edge_list;
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Read a SNAP-style edge list: one `u v` pair per line, `#` comments and
+/// blank lines ignored, node ids need not be contiguous — they are compacted
+/// to `0..n` preserving relative order.
+pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let f = File::open(path)?;
+    parse_edge_list(BufReader::new(f))
+}
+
+/// Parse an edge list from any reader (see [`read_edge_list`]).
+pub fn parse_edge_list<R: BufRead>(r: R) -> Result<Csr> {
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    for (i, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let parse = |s: Option<&str>| -> Result<u64> {
+            s.ok_or_else(|| Error::Parse { line: i + 1, msg: "missing endpoint".into() })?
+                .parse()
+                .map_err(|e| Error::Parse { line: i + 1, msg: format!("{e}") })
+        };
+        let u = parse(it.next())?;
+        let v = parse(it.next())?;
+        raw.push((u, v));
+    }
+    // Compact ids.
+    let mut ids: Vec<u64> = raw.iter().flat_map(|&(u, v)| [u, v]).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let lookup = |x: u64| ids.binary_search(&x).unwrap() as VertexId;
+    let edges: Vec<(VertexId, VertexId)> = raw.iter().map(|&(u, v)| (lookup(u), lookup(v))).collect();
+    from_edge_list(ids.len(), edges)
+}
+
+/// Write a graph as an edge list (`u v` per line, each undirected edge once).
+pub fn write_edge_list<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# tricount edge list: n={} m={}", g.num_nodes(), g.num_edges())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"TRICSR01";
+
+/// Write the compact binary CSR format:
+/// `magic | n: u64 | len(targets): u64 | offsets: (n+1)×u64 LE | targets: len×u32 LE`.
+pub fn write_binary<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    w.write_all(&(g.targets().len() as u64).to_le_bytes())?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &t in g.targets() {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary CSR format written by [`write_binary`].
+pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        return Err(Error::Parse { line: 0, msg: "bad magic (not a TRICSR01 file)".into() });
+    }
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    let tl = u64::from_le_bytes(buf8) as usize;
+    let mut offsets = vec![0u64; n + 1];
+    for o in offsets.iter_mut() {
+        r.read_exact(&mut buf8)?;
+        *o = u64::from_le_bytes(buf8);
+    }
+    let mut targets = vec![0 as VertexId; tl];
+    let mut buf4 = [0u8; 4];
+    for t in targets.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        *t = u32::from_le_bytes(buf4);
+    }
+    let g = Csr::from_parts(offsets, targets);
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_with_comments_and_gaps() {
+        let txt = "# header\n10 20\n20 30\n\n% alt comment\n30 10\n";
+        let g = parse_edge_list(Cursor::new(txt)).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn parse_error_reports_line() {
+        let err = parse_edge_list(Cursor::new("1 2\nxyz 4\n")).unwrap_err();
+        match err {
+            Error::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("expected parse error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn missing_endpoint_rejected() {
+        assert!(parse_edge_list(Cursor::new("7\n")).is_err());
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = classic::karate();
+        let dir = std::env::temp_dir().join("tricount_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("karate.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = classic::petersen();
+        let dir = std::env::temp_dir().join("tricount_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("petersen.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_bad_magic() {
+        let dir = std::env::temp_dir().join("tricount_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bin");
+        std::fs::write(&p, b"NOTMAGIC rest").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

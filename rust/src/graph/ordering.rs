@@ -1,0 +1,214 @@
+//! Degree-based total order `≺` and the oriented adjacency `N_v`.
+//!
+//! The paper (after [15], [16], [21]) orders nodes by
+//! `u ≺ v ⇔ d_u < d_v or (d_u = d_v and u < v)` and keeps, for every node,
+//! only the *higher-ordered* neighbors: `N_v = {u : (u,v) ∈ E, v ≺ u}`.
+//! Each triangle `x₁ ≺ x₂ ≺ x₃` then survives exactly once, as
+//! `x₂, x₃ ∈ N_{x₁}` and `x₃ ∈ N_{x₂}`, and is found by the intersection
+//! `N_{x₁} ∩ N_{x₂}`.
+//!
+//! `N_v` is stored sorted ascending **by node id** (not by `≺`): the
+//! intersection kernels need a common sort key, and the surrogate
+//! algorithm's `LastProc` trick (§IV-C) needs nodes belonging to the same
+//! consecutive-id partition to sit consecutively inside `N_v`.
+
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// The `≺` comparison given a degree lookup.
+#[inline]
+pub fn precedes(deg_u: u32, u: VertexId, deg_v: u32, v: VertexId) -> bool {
+    deg_u < deg_v || (deg_u == deg_v && u < v)
+}
+
+/// Degree-ordered oriented adjacency: for every `v`, the sorted list
+/// `N_v = {u ∈ 𝒩_v : v ≺ u}` plus the original degrees (kept because `≺`
+/// and the cost estimators need `d_v` after orientation).
+#[derive(Clone, Debug)]
+pub struct Oriented {
+    offsets: Vec<u64>,
+    targets: Vec<VertexId>,
+    degree: Vec<u32>,
+}
+
+impl Oriented {
+    /// Orient a CSR graph by `≺`. O(m).
+    pub fn from_graph(g: &Csr) -> Self {
+        let n = g.num_nodes();
+        let degree: Vec<u32> = (0..n as VertexId).map(|v| g.degree(v) as u32).collect();
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n as VertexId {
+            let dv = degree[v as usize];
+            let cnt = g
+                .neighbors(v)
+                .iter()
+                .filter(|&&u| precedes(dv, v, degree[u as usize], u))
+                .count() as u64;
+            offsets[v as usize + 1] = offsets[v as usize] + cnt;
+        }
+        let mut targets = vec![0 as VertexId; *offsets.last().unwrap() as usize];
+        for v in 0..n as VertexId {
+            let dv = degree[v as usize];
+            let mut w = offsets[v as usize] as usize;
+            // Source list is id-sorted; the filtered list stays id-sorted.
+            for &u in g.neighbors(v) {
+                if precedes(dv, v, degree[u as usize], u) {
+                    targets[w] = u;
+                    w += 1;
+                }
+            }
+            debug_assert_eq!(w as u64, offsets[v as usize + 1]);
+        }
+        Oriented { offsets, targets, degree }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total oriented edges — equals `m` of the source graph.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.targets.len() as u64
+    }
+
+    /// `N_v`, sorted ascending by node id.
+    #[inline]
+    pub fn nbrs(&self, v: VertexId) -> &[VertexId] {
+        let s = self.offsets[v as usize] as usize;
+        let e = self.offsets[v as usize + 1] as usize;
+        &self.targets[s..e]
+    }
+
+    /// Effective degree `d̂_v = |N_v|`.
+    #[inline]
+    pub fn effective_degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Original degree `d_v` in the undirected graph.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.degree[v as usize]
+    }
+
+    /// `u ≺ v` under this orientation's degree data.
+    #[inline]
+    pub fn precedes(&self, u: VertexId, v: VertexId) -> bool {
+        precedes(self.degree[u as usize], u, self.degree[v as usize], v)
+    }
+
+    /// Raw offsets (length n+1).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw targets (length m).
+    pub fn targets(&self) -> &[VertexId] {
+        &self.targets
+    }
+
+    /// Degrees slice.
+    pub fn degrees(&self) -> &[u32] {
+        &self.degree
+    }
+
+    /// Bytes held by this structure (offsets + targets + degrees).
+    pub fn memory_bytes(&self) -> u64 {
+        (self.offsets.len() * 8 + self.targets.len() * 4 + self.degree.len() * 4) as u64
+    }
+
+    /// Check orientation invariants (tests only; O(m log m)).
+    pub fn validate(&self, g: &Csr) -> Result<(), String> {
+        if self.num_nodes() != g.num_nodes() {
+            return Err("node count mismatch".into());
+        }
+        if self.num_edges() != g.num_edges() {
+            return Err(format!(
+                "oriented edges {} != m {}",
+                self.num_edges(),
+                g.num_edges()
+            ));
+        }
+        for v in 0..g.num_nodes() as VertexId {
+            let ns = self.nbrs(v);
+            for w in ns.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("N_{v} not strictly id-sorted"));
+                }
+            }
+            for &u in ns {
+                if !self.precedes(v, u) {
+                    return Err(format!("edge ({v},{u}) violates v ≺ u"));
+                }
+                if !g.has_edge(v, u) {
+                    return Err(format!("oriented edge ({v},{u}) not in G"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+    use crate::graph::classic;
+
+    #[test]
+    fn star_orients_toward_hub() {
+        // Star K_{1,4}: leaves (deg 1) ≺ hub (deg 4).
+        let g = from_edges(5, [(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        let o = Oriented::from_graph(&g);
+        assert_eq!(o.effective_degree(0), 0);
+        for v in 1..5 {
+            assert_eq!(o.nbrs(v), &[0]);
+        }
+        o.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn ties_broken_by_id() {
+        // Triangle: all degree 2; ordering falls back to ids.
+        let g = classic::complete(3);
+        let o = Oriented::from_graph(&g);
+        assert_eq!(o.nbrs(0), &[1, 2]);
+        assert_eq!(o.nbrs(1), &[2]);
+        assert_eq!(o.nbrs(2), &[] as &[VertexId]);
+    }
+
+    #[test]
+    fn oriented_edge_count_equals_m() {
+        let g = classic::complete(10);
+        let o = Oriented::from_graph(&g);
+        assert_eq!(o.num_edges(), g.num_edges());
+        o.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn effective_degree_bounded_for_complete_graph() {
+        // In K_n with id tie-breaks, d̂_v = n-1-v.
+        let g = classic::complete(6);
+        let o = Oriented::from_graph(&g);
+        for v in 0..6u32 {
+            assert_eq!(o.effective_degree(v), 5 - v as usize);
+        }
+    }
+
+    #[test]
+    fn precedes_is_total_and_antisymmetric() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let n = g.num_nodes() as VertexId;
+        for u in 0..n {
+            for v in 0..n {
+                if u != v {
+                    assert_ne!(o.precedes(u, v), o.precedes(v, u));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Degree-order relabeling: renumber nodes so id order equals `≺` order.
+//!
+//! After relabeling, `u ≺ v ⇔ u < v`, so the orientation keeps exactly the
+//! id-increasing edges and consecutive-id partitions become consecutive-≺
+//! partitions — which concentrates the ≺-top hubs in the last partition
+//! (useful with the dense-core tensor path, whose core is exactly a suffix
+//! of the relabeled id space). Triangle counts are invariant under any
+//! relabeling; tests assert it.
+
+use crate::graph::builder::from_edge_list;
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// The permutation (old id → new id) sorting nodes by `(degree, id)`.
+pub fn degree_order_permutation(g: &Csr) -> Vec<VertexId> {
+    let n = g.num_nodes();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_unstable_by_key(|&v| (g.degree(v), v));
+    let mut perm = vec![0 as VertexId; n];
+    for (new_id, &old_id) in order.iter().enumerate() {
+        perm[old_id as usize] = new_id as VertexId;
+    }
+    perm
+}
+
+/// Apply a permutation (old id → new id) to a graph.
+pub fn relabel(g: &Csr, perm: &[VertexId]) -> Csr {
+    assert_eq!(perm.len(), g.num_nodes());
+    let edges: Vec<(VertexId, VertexId)> = g
+        .edges()
+        .map(|(u, v)| (perm[u as usize], perm[v as usize]))
+        .collect();
+    from_edge_list(g.num_nodes(), edges).expect("permutation preserves validity")
+}
+
+/// Relabel by degree order (convenience).
+pub fn relabel_by_degree(g: &Csr) -> Csr {
+    relabel(g, &degree_order_permutation(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+    use crate::seq::node_iterator;
+
+    #[test]
+    fn permutation_is_bijective() {
+        let g = classic::karate();
+        let mut p = degree_order_permutation(&g);
+        p.sort_unstable();
+        assert_eq!(p, (0..34).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degrees_sorted_after_relabel() {
+        let g = crate::gen::pa::preferential_attachment(
+            500,
+            8,
+            &mut crate::gen::rng::Rng::seeded(3),
+        );
+        let r = relabel_by_degree(&g);
+        for v in 1..500u32 {
+            assert!(r.degree(v - 1) <= r.degree(v), "degrees must be non-decreasing");
+        }
+    }
+
+    #[test]
+    fn triangle_count_invariant() {
+        crate::prop::quickcheck("relabel invariance", |rng, _| {
+            let g = crate::prop::arb_graph(rng, 60);
+            let before = node_iterator::count(&Oriented::from_graph(&g));
+            let after = node_iterator::count(&Oriented::from_graph(&relabel_by_degree(&g)));
+            if before != after {
+                return Err(format!("count changed: {before} → {after}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relabeled_orientation_points_upward_in_id() {
+        let g = classic::karate();
+        let r = relabel_by_degree(&g);
+        let o = Oriented::from_graph(&r);
+        for v in 0..34u32 {
+            for &u in o.nbrs(v) {
+                assert!(u > v, "after relabel, oriented edges go id-upward");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_core_is_id_suffix_after_relabel() {
+        let g = crate::gen::pa::preferential_attachment(
+            400,
+            8,
+            &mut crate::gen::rng::Rng::seeded(5),
+        );
+        let r = relabel_by_degree(&g);
+        let o = Oriented::from_graph(&r);
+        let core = crate::tensor::core_extract::DenseCore::extract(&o, 32);
+        let mut m = core.members.clone();
+        m.sort_unstable();
+        assert_eq!(m, (368u32..400).collect::<Vec<_>>());
+    }
+}

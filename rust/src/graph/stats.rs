@@ -1,0 +1,105 @@
+//! Degree-distribution statistics — used by the dataset-summary experiment
+//! (Table I) and by the skewed-degree example to characterize generated
+//! networks against the paper's datasets.
+
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Summary statistics of a graph's degree distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegreeStats {
+    pub nodes: usize,
+    pub edges: u64,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub median_degree: usize,
+    /// 99th-percentile degree.
+    pub p99_degree: usize,
+    /// Coefficient of variation (σ/μ) — the paper's "skewness" driver:
+    /// ≈0.1-0.3 for Miami-like even distributions, >1 for power laws.
+    pub cv: f64,
+}
+
+/// Compute [`DegreeStats`] in O(n + m).
+pub fn degree_stats(g: &Csr) -> DegreeStats {
+    let n = g.num_nodes();
+    let mut degs: Vec<usize> = (0..n as VertexId).map(|v| g.degree(v)).collect();
+    degs.sort_unstable();
+    let mu = g.avg_degree();
+    let var = if n == 0 {
+        0.0
+    } else {
+        degs.iter().map(|&d| (d as f64 - mu) * (d as f64 - mu)).sum::<f64>() / n as f64
+    };
+    DegreeStats {
+        nodes: n,
+        edges: g.num_edges(),
+        avg_degree: mu,
+        max_degree: *degs.last().unwrap_or(&0),
+        median_degree: if n == 0 { 0 } else { degs[n / 2] },
+        p99_degree: if n == 0 { 0 } else { degs[(n - 1).min(n * 99 / 100)] },
+        cv: if mu > 0.0 { var.sqrt() / mu } else { 0.0 },
+    }
+}
+
+/// Degree histogram in log₂ buckets: `hist[k]` counts nodes with
+/// `degree ∈ [2^k, 2^{k+1})` (`hist[0]` includes degree 0 and 1).
+pub fn log2_degree_histogram(g: &Csr) -> Vec<u64> {
+    let mut hist = vec![0u64; 1];
+    for v in 0..g.num_nodes() as VertexId {
+        let d = g.degree(v);
+        let b = if d <= 1 { 0 } else { (usize::BITS - d.leading_zeros()) as usize - 1 };
+        if b >= hist.len() {
+            hist.resize(b + 1, 0);
+        }
+        hist[b] += 1;
+    }
+    hist
+}
+
+impl std::fmt::Display for DegreeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} m={} d̄={:.2} d_max={} d_med={} d_p99={} cv={:.2}",
+            self.nodes, self.edges, self.avg_degree, self.max_degree,
+            self.median_degree, self.p99_degree, self.cv
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+
+    #[test]
+    fn regular_graph_zero_cv() {
+        let s = degree_stats(&classic::complete(8));
+        assert_eq!(s.max_degree, 7);
+        assert_eq!(s.median_degree, 7);
+        assert!(s.cv.abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_is_skewed() {
+        let s = degree_stats(&classic::star(100));
+        assert_eq!(s.max_degree, 100);
+        assert_eq!(s.median_degree, 1);
+        assert!(s.cv > 3.0, "star should be highly skewed, cv={}", s.cv);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        // K_5: all degrees 4 → bucket 2 ([4,8)).
+        let h = log2_degree_histogram(&classic::complete(5));
+        assert_eq!(h, vec![0, 0, 5]);
+    }
+
+    #[test]
+    fn histogram_counts_all_nodes() {
+        let g = classic::karate();
+        let h = log2_degree_histogram(&g);
+        assert_eq!(h.iter().sum::<u64>(), 34);
+    }
+}

@@ -1,0 +1,125 @@
+//! # tricount — Parallel Triangle Counting in Networks with Large Degrees
+//!
+//! A production-grade reproduction of Arifuzzaman, Khan & Marathe,
+//! *"Parallel Algorithms for Counting Triangles in Networks with Large
+//! Degrees"* (CS.DC 2014), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's distributed algorithms and every
+//!   substrate they depend on: a CSR graph library with degree-ordered
+//!   orientation, graph generators, an MPI-shaped message-passing runtime,
+//!   partitioners (non-overlapping §IV / overlapping PATRIC), the
+//!   space-efficient *surrogate* algorithm, the *direct* baseline, the
+//!   PATRIC baseline, the §V dynamic load balancer, and a calibrated
+//!   cluster cost-model simulator that regenerates the paper's scaling
+//!   figures on a single machine.
+//! * **L2/L1 (python/, build-time only)** — a blocked dense triangle-count
+//!   formulated for the MXU (`sum((L@L) ⊙ L)`) as a Pallas kernel inside a
+//!   JAX model, AOT-lowered to HLO text.
+//! * **runtime** — a PJRT CPU client (the `xla` crate) that loads the AOT
+//!   artifacts and executes them from the Rust hot path; `tensor` uses it
+//!   for hybrid dense-core counting.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use tricount::gen::{self, rng::Rng};
+//! use tricount::graph::ordering::Oriented;
+//! use tricount::seq;
+//!
+//! let g = gen::pa::preferential_attachment(10_000, 8, &mut Rng::seeded(7));
+//! let o = Oriented::from_graph(&g);
+//! let t = seq::node_iterator::count(&o);
+//! assert_eq!(t, seq::naive::edge_iterator_count(&g));
+//! ```
+
+pub mod config;
+pub mod error;
+
+pub mod graph {
+    pub mod builder;
+    pub mod classic;
+    pub mod csr;
+    pub mod io;
+    pub mod ordering;
+    pub mod relabel;
+    pub mod stats;
+}
+
+pub mod gen {
+    pub mod erdos_renyi;
+    pub mod geometric;
+    pub mod pa;
+    pub mod presets;
+    pub mod rmat;
+    pub mod rng;
+}
+
+pub mod intersect;
+
+pub mod approx;
+
+pub mod baseline {
+    pub mod mapreduce;
+}
+
+pub mod seq {
+    pub mod local;
+    pub mod naive;
+    pub mod node_iterator;
+    pub mod truss;
+}
+
+pub mod comm {
+    pub mod metrics;
+    pub mod threads;
+    pub use threads::{Cluster, Comm};
+}
+
+pub mod partition {
+    pub mod balance;
+    pub mod cost;
+    pub mod nonoverlap;
+    pub mod overlap;
+}
+
+pub mod algo {
+    pub mod direct;
+    pub mod dynamic_lb;
+    pub mod local_counts;
+    pub mod patric;
+    pub mod surrogate;
+    pub mod tasks;
+}
+
+pub mod sim {
+    pub mod calibrate;
+    pub mod dynamic;
+    pub mod model;
+    pub mod space_efficient;
+    pub mod work;
+}
+
+pub mod runtime {
+    pub mod artifact;
+    pub mod engine;
+}
+
+pub mod tensor {
+    pub mod core_extract;
+    pub mod hybrid;
+    pub mod pack;
+}
+
+pub mod exp;
+
+pub mod prop;
+
+/// Node identifier. Graphs up to 4B nodes; edge counts use `u64`/`usize`.
+pub type VertexId = u32;
+
+/// Triangle counts can exceed `u32` on modest graphs (LiveJournal: 286M;
+/// Twitter: 34.8B) — always 64-bit.
+pub type TriangleCount = u64;

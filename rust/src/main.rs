@@ -1,0 +1,355 @@
+//! `tricount` — CLI launcher for the triangle-counting framework.
+//!
+//! Subcommands:
+//! * `count`    — count triangles on a workload with a chosen algorithm;
+//! * `generate` — write a workload graph to disk (edge list / binary);
+//! * `partition-stats` — per-partition memory accounting (ours vs PATRIC);
+//! * `exp`      — run paper experiments (`--id table2|fig4|…|all`);
+//! * `info`     — PJRT backend + artifact inventory.
+//!
+//! Dependency-free argument parsing (the container is offline); every flag
+//! can also be set in a `--config run.toml` file.
+
+use std::sync::Arc;
+
+use tricount::algo::{direct, dynamic_lb, patric, surrogate};
+use tricount::config::{Algorithm, CostFn, RunConfig};
+use tricount::error::{Error, Result};
+use tricount::exp;
+use tricount::graph::ordering::Oriented;
+use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::cost::{cost_vector, prefix_sums};
+use tricount::seq::node_iterator;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "count" => cmd_count(&args[1..]),
+        "analyze" => cmd_analyze(&args[1..]),
+        "generate" => cmd_generate(&args[1..]),
+        "partition-stats" => cmd_partition_stats(&args[1..]),
+        "exp" => cmd_exp(&args[1..]),
+        "info" => cmd_info(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command `{other}` (try `tricount help`)"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "tricount — parallel triangle counting (Arifuzzaman et al. 2014 reproduction)
+
+USAGE: tricount <command> [--key value]...
+
+COMMANDS:
+  count             count triangles
+                    --workload SPEC  (karate | preset | pa:N:D | rmat:S:EF |
+                                      contact:N:D | file:PATH | bin:PATH)
+                    --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
+                    --procs P --cost-fn F (unit|dv|patric|new) --scale X
+                    --dense-core K --artifacts-dir DIR --config FILE
+  generate          build a workload and write it
+                    --workload SPEC --out PATH [--format edges|bin]
+  analyze           triangle-based network analysis (clustering,
+                    transitivity, trussness, MR-shuffle blow-up, approx
+                    baselines) --workload SPEC --procs P
+  partition-stats   memory accounting for both partition schemes
+                    --workload SPEC --procs P
+  exp               paper experiments
+                    --id ID|all [--list] [--quick] [--scale X] [--out DIR]
+  info              PJRT platform + discovered artifacts"
+    );
+}
+
+/// Parse `--key value` pairs into a RunConfig (after optional `--config`).
+fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMap<String, String>)> {
+    let mut extra = std::collections::BTreeMap::new();
+    let mut cfg = RunConfig::default();
+    // First pass: --config file.
+    let mut i = 0;
+    while i + 1 < args.len() {
+        if args[i] == "--config" {
+            cfg = RunConfig::from_file(&args[i + 1])?;
+        }
+        i += 2;
+    }
+    // Second pass: overrides.
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got `{}`", args[i])))?;
+        let value = args
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        if key != "config" {
+            if cfg.set(key, value).is_err() {
+                extra.insert(key.to_string(), value.clone());
+            }
+        }
+        i += 2;
+    }
+    Ok((cfg, extra))
+}
+
+fn cmd_count(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &[])?;
+    let t0 = std::time::Instant::now();
+    let g = cfg.build_graph()?;
+    let gen_time = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let o = Arc::new(Oriented::from_graph(&g));
+    let orient_time = t0.elapsed();
+    println!(
+        "workload={} n={} m={} d̄={:.1} (gen {:.2?}, orient {:.2?})",
+        cfg.workload,
+        g.num_nodes(),
+        g.num_edges(),
+        g.avg_degree(),
+        gen_time,
+        orient_time
+    );
+
+    let t0 = std::time::Instant::now();
+    let (triangles, detail) = match cfg.algorithm {
+        Algorithm::Sequential => (node_iterator::count(&o), String::new()),
+        Algorithm::Surrogate | Algorithm::Direct => {
+            let prefix = prefix_sums(&cost_vector(&o, cfg.cost_fn));
+            let ranges = balanced_ranges(&prefix, cfg.procs);
+            let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+            let r = if cfg.algorithm == Algorithm::Surrogate {
+                surrogate::run(&o, &ranges, &owner)?
+            } else {
+                direct::run(&o, &ranges, &owner)?
+            };
+            let t = r.metrics.totals();
+            (
+                r.triangles,
+                format!(
+                    "msgs={} bytes={} imbalance={:.3}",
+                    t.messages_sent,
+                    t.bytes_sent,
+                    r.metrics.imbalance()
+                ),
+            )
+        }
+        Algorithm::Patric => {
+            let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+            let ranges = balanced_ranges(&prefix, cfg.procs);
+            let r = patric::run(&o, &ranges)?;
+            (r.triangles, format!("imbalance={:.3}", r.metrics.imbalance()))
+        }
+        Algorithm::DynamicLb => {
+            let r = dynamic_lb::run(
+                &o,
+                cfg.procs.max(2),
+                dynamic_lb::Options {
+                    cost_fn: cfg.cost_fn,
+                    granularity: dynamic_lb::Granularity::Shrinking,
+                },
+            )?;
+            (r.triangles, format!("imbalance={:.3}", r.metrics.imbalance()))
+        }
+        Algorithm::Hybrid => {
+            let engine = tricount::runtime::engine::Engine::cpu()?;
+            let r = tricount::tensor::hybrid::count_with_engine(
+                &o,
+                &engine,
+                &cfg.artifacts_dir,
+                cfg.dense_core,
+            )?;
+            (
+                r.triangles,
+                format!(
+                    "dense={} sparse={} core={} block={} offloaded_edges={}",
+                    r.dense_triangles, r.sparse_triangles, r.core_size, r.block, r.offloaded_edges
+                ),
+            )
+        }
+    };
+    println!(
+        "triangles={} algorithm={:?} procs={} time={:.3?} {detail}",
+        triangles,
+        cfg.algorithm,
+        cfg.procs,
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &[])?;
+    let g = cfg.build_graph()?;
+    let o = Arc::new(Oriented::from_graph(&g));
+    let stats = tricount::graph::stats::degree_stats(&g);
+    println!("{stats}");
+
+    // Per-node counts through the §V dynamic load balancer.
+    let t0 = std::time::Instant::now();
+    let tv = tricount::algo::local_counts::per_node_counts(&o, cfg.procs.max(2))?;
+    let total: u64 = tv.iter().sum::<u64>() / 3;
+    println!(
+        "triangles            = {total}  (parallel per-node counts, P={}, {:.2?})",
+        cfg.procs.max(2),
+        t0.elapsed()
+    );
+    println!(
+        "avg clustering coeff = {:.5}",
+        tricount::seq::local::avg_clustering(&g, &tv)
+    );
+    println!(
+        "transitivity         = {:.5}",
+        tricount::seq::local::transitivity(&g, total)
+    );
+
+    // MapReduce baseline shuffle volume (the paper's §I motivation).
+    let mr = tricount::baseline::mapreduce::shuffle_stats(&g);
+    println!(
+        "MR 2-path shuffle    = {} wedges ({:.1}x the edge set; ordered emit {}, max reducer {})",
+        mr.wedges_all,
+        tricount::baseline::mapreduce::blowup_factor(&g),
+        mr.wedges_ordered,
+        mr.max_reducer_records
+    );
+
+    // Approximation baselines vs the exact count.
+    let mut rng = tricount::gen::rng::Rng::seeded(cfg.seed);
+    let doulion = tricount::approx::doulion(&g, 0.3, &mut rng);
+    let wedge = tricount::approx::wedge_sampling(&g, 100_000, &mut rng);
+    println!(
+        "approx: DOULION(p=.3) = {:.0} ({:+.1}%), wedge-sampling = {:.0} ({:+.1}%)",
+        doulion,
+        100.0 * (doulion / total as f64 - 1.0),
+        wedge,
+        100.0 * (wedge / total as f64 - 1.0)
+    );
+
+    // Truss decomposition for small graphs (O(m^1.5) peeling).
+    if g.num_edges() <= 2_000_000 {
+        let kmax = tricount::seq::truss::max_truss(&g);
+        println!("max k-truss          = {kmax}");
+    } else {
+        println!("max k-truss          = (skipped: m > 2M)");
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    let out = extra
+        .get("out")
+        .ok_or_else(|| Error::Config("generate needs --out PATH".into()))?;
+    let format = extra.get("format").map(String::as_str).unwrap_or("edges");
+    reject_unknown(&extra, &["out", "format"])?;
+    let g = cfg.build_graph()?;
+    match format {
+        "edges" => tricount::graph::io::write_edge_list(&g, out)?,
+        "bin" => tricount::graph::io::write_binary(&g, out)?,
+        other => return Err(Error::Config(format!("unknown format `{other}`"))),
+    }
+    println!("wrote {} (n={}, m={})", out, g.num_nodes(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_partition_stats(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &[])?;
+    let g = cfg.build_graph()?;
+    let o = Oriented::from_graph(&g);
+    let ours = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), cfg.procs);
+    let patric = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::PatricBest)), cfg.procs);
+    let non = tricount::partition::nonoverlap::partition_sizes(&o, &ours);
+    let over = tricount::partition::overlap::overlap_sizes(&g, &o, &patric);
+    let max_non = non.iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+    let max_over = over.iter().map(|s| s.mb()).fold(0.0f64, f64::max);
+    let sum_non: u64 = non.iter().map(|s| s.edges).sum();
+    let sum_over: u64 = over.iter().map(|s| s.edges).sum();
+    println!("P={} n={} m={}", cfg.procs, g.num_nodes(), g.num_edges());
+    println!("non-overlapping (ours): largest {max_non:.2} MB, total edges stored {sum_non}");
+    println!("overlapping (PATRIC):   largest {max_over:.2} MB, total edges stored {sum_over}");
+    println!("ratio (largest): {:.2}x", max_over / max_non.max(1e-12));
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let mut opts = exp::Options::default();
+    let mut id = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--list" => {
+                for e in exp::registry() {
+                    println!("{:8} {:10} {}", e.id, e.paper_ref, e.description);
+                }
+                return Ok(());
+            }
+            "--quick" => {
+                opts.quick = true;
+                i += 1;
+            }
+            "--id" => {
+                id = Some(args.get(i + 1).cloned().ok_or_else(|| Error::Config("--id needs a value".into()))?);
+                i += 2;
+            }
+            "--scale" => {
+                opts.scale = args
+                    .get(i + 1)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| Error::Config("--scale needs a number".into()))?;
+                i += 2;
+            }
+            "--out" => {
+                opts.out_dir = Some(
+                    args.get(i + 1).cloned().ok_or_else(|| Error::Config("--out needs a dir".into()))?,
+                );
+                i += 2;
+            }
+            other => return Err(Error::Config(format!("unknown exp flag `{other}`"))),
+        }
+    }
+    let id = id.ok_or_else(|| Error::Config("exp needs --id <id|all> (or --list)".into()))?;
+    exp::run_by_id(&id, &opts)
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let (cfg, _extra) = parse_config(args)?;
+    let engine = tricount::runtime::engine::Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    let arts = tricount::runtime::artifact::discover(&cfg.artifacts_dir)?;
+    if arts.is_empty() {
+        println!("artifacts: none in `{}` (run `make artifacts`)", cfg.artifacts_dir);
+    } else {
+        for a in arts {
+            println!("artifact: {} (N={})", a.path.display(), a.n);
+        }
+    }
+    Ok(())
+}
+
+fn reject_unknown(
+    extra: &std::collections::BTreeMap<String, String>,
+    allowed: &[&str],
+) -> Result<()> {
+    for k in extra.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(Error::Config(format!("unknown flag `--{k}`")));
+        }
+    }
+    Ok(())
+}

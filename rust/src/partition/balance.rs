@@ -1,0 +1,149 @@
+//! Balanced consecutive-range partitioning of the node set (§IV-B).
+//!
+//! Given a per-node cost vector, split `V` into `P` ranges of *consecutive
+//! node ids* whose cost sums are as equal as possible — the paper reuses
+//! PATRIC's parallel prefix-sum scheme; on one machine the same boundaries
+//! come from a sequential prefix-sum + binary search in `O(n + P log n)`.
+//! Consecutiveness is load-bearing: the surrogate algorithm's `LastProc`
+//! message-elimination trick requires each partition to be an id-interval.
+
+use crate::partition::cost::range_cost;
+use std::ops::Range;
+
+/// Split `[0, n)` into `p` consecutive ranges balancing `prefix` costs:
+/// boundary `k` is the smallest index whose cumulative cost reaches
+/// `k/p · total`. Ranges may be empty when `p > n` or costs are lumpy.
+pub fn balanced_ranges(prefix: &[u64], p: usize) -> Vec<Range<u32>> {
+    assert!(p >= 1);
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let mut bounds = Vec::with_capacity(p + 1);
+    bounds.push(0u32);
+    for k in 1..p {
+        // Smallest i with prefix[i] >= total·k/p.
+        let target = (total as u128 * k as u128 / p as u128) as u64;
+        let i = partition_point(prefix, target).max(bounds[k - 1] as usize);
+        bounds.push(i.min(n) as u32);
+    }
+    bounds.push(n as u32);
+    (0..p).map(|k| bounds[k]..bounds[k + 1]).collect()
+}
+
+/// Smallest `i` such that `prefix[i] >= target` (binary search).
+fn partition_point(prefix: &[u64], target: u64) -> usize {
+    let mut lo = 0usize;
+    let mut hi = prefix.len() - 1;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if prefix[mid] >= target {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Max/mean cost ratio of a set of ranges (1.0 = perfect balance).
+pub fn imbalance(prefix: &[u64], ranges: &[Range<u32>]) -> f64 {
+    if ranges.is_empty() {
+        return 1.0;
+    }
+    let costs: Vec<u64> = ranges
+        .iter()
+        .map(|r| range_cost(prefix, r.start as usize, r.end as usize))
+        .collect();
+    let max = *costs.iter().max().unwrap() as f64;
+    let mean = costs.iter().sum::<u64>() as f64 / costs.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+/// Owner lookup for consecutive ranges: `owner[v] = rank holding v`.
+/// O(n) to build, O(1) to query — the surrogate hot loop queries this for
+/// every oriented edge.
+pub fn owner_table(ranges: &[Range<u32>], n: usize) -> Vec<u32> {
+    let mut owner = vec![0u32; n];
+    for (i, r) in ranges.iter().enumerate() {
+        for v in r.clone() {
+            owner[v as usize] = i as u32;
+        }
+    }
+    owner
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::cost::prefix_sums;
+
+    #[test]
+    fn covers_and_disjoint() {
+        let prefix = prefix_sums(&[1; 10]);
+        let rs = balanced_ranges(&prefix, 3);
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].start, 0);
+        assert_eq!(rs.last().unwrap().end, 10);
+        for w in rs.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn uniform_costs_equal_ranges() {
+        let prefix = prefix_sums(&[1; 12]);
+        let rs = balanced_ranges(&prefix, 4);
+        for r in &rs {
+            assert_eq!(r.end - r.start, 3);
+        }
+    }
+
+    #[test]
+    fn skewed_costs_shift_boundaries() {
+        // One heavy node at the front: it should sit alone in range 0.
+        let costs = [100, 1, 1, 1, 1, 1, 1, 1];
+        let prefix = prefix_sums(&costs);
+        let rs = balanced_ranges(&prefix, 2);
+        assert_eq!(rs[0], 0..1);
+        assert_eq!(rs[1], 1..8);
+    }
+
+    #[test]
+    fn more_parts_than_nodes() {
+        let prefix = prefix_sums(&[1, 1]);
+        let rs = balanced_ranges(&prefix, 5);
+        assert_eq!(rs.len(), 5);
+        assert_eq!(rs.last().unwrap().end, 2);
+        let nonempty: usize = rs.iter().filter(|r| !r.is_empty()).count();
+        assert_eq!(nonempty, 2);
+    }
+
+    #[test]
+    fn zero_cost_nodes() {
+        let prefix = prefix_sums(&[0, 0, 5, 0, 5, 0]);
+        let rs = balanced_ranges(&prefix, 2);
+        assert!(imbalance(&prefix, &rs) <= 1.01, "{rs:?}");
+    }
+
+    #[test]
+    fn owner_table_roundtrip() {
+        let prefix = prefix_sums(&[1; 7]);
+        let rs = balanced_ranges(&prefix, 3);
+        let owner = owner_table(&rs, 7);
+        for (i, r) in rs.iter().enumerate() {
+            for v in r.clone() {
+                assert_eq!(owner[v as usize], i as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn imbalance_perfect_and_skewed() {
+        let prefix = prefix_sums(&[1; 8]);
+        let rs = balanced_ranges(&prefix, 4);
+        assert!((imbalance(&prefix, &rs) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,137 @@
+//! Cost-estimation functions `f(v)` for balanced partitioning (§IV-B/F, §V).
+//!
+//! The partitioners and the dynamic load balancer all need an estimate of
+//! the cost of counting triangles attributed to node `v`. The paper uses:
+//!
+//! * `f(v) = 1` and `f(v) = d_v` — the cheap §V task-sizing functions;
+//! * `f(v) = Σ_{u∈N_v}(d̂_v + d̂_u)` — PATRIC's experimentally-best
+//!   estimator [21], which models the cost of the *local* loop;
+//! * `f(v) = Σ_{u∈𝒩_v−N_v}(d̂_v + d̂_u)` — this paper's §IV-F estimator,
+//!   which attributes to `v` the cost of every intersection *executed on
+//!   v's owner* under the surrogate scheme (case analysis in §IV-F).
+
+use crate::config::CostFn;
+use crate::graph::ordering::Oriented;
+use crate::VertexId;
+
+/// Evaluate a cost function for every node. O(m).
+pub fn cost_vector(o: &Oriented, f: CostFn) -> Vec<u64> {
+    let n = o.num_nodes();
+    match f {
+        CostFn::Unit => vec![1; n],
+        CostFn::Degree => (0..n as VertexId).map(|v| o.degree(v) as u64).collect(),
+        CostFn::PatricBest => {
+            let mut c = vec![0u64; n];
+            for v in 0..n as VertexId {
+                let dv = o.effective_degree(v) as u64;
+                c[v as usize] = o
+                    .nbrs(v)
+                    .iter()
+                    .map(|&u| dv + o.effective_degree(u) as u64)
+                    .sum();
+            }
+            c
+        }
+        CostFn::SurrogateNew => {
+            // u ∈ 𝒩_v − N_v ⇔ v ∈ N_u: walk oriented edges u→v and charge v.
+            let mut c = vec![0u64; n];
+            for u in 0..n as VertexId {
+                let du = o.effective_degree(u) as u64;
+                for &v in o.nbrs(u) {
+                    c[v as usize] += du + o.effective_degree(v) as u64;
+                }
+            }
+            c
+        }
+    }
+}
+
+/// Exclusive prefix sums of a cost vector: `prefix[i] = Σ_{v<i} cost[v]`,
+/// length `n+1`. Every boundary search in the partitioners and the task
+/// splitter runs on this.
+pub fn prefix_sums(costs: &[u64]) -> Vec<u64> {
+    let mut p = Vec::with_capacity(costs.len() + 1);
+    p.push(0);
+    let mut acc = 0u64;
+    for &c in costs {
+        acc += c;
+        p.push(acc);
+    }
+    p
+}
+
+/// Cost of range `[lo, hi)` from prefix sums.
+#[inline]
+pub fn range_cost(prefix: &[u64], lo: usize, hi: usize) -> u64 {
+    prefix[hi] - prefix[lo]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+
+    #[test]
+    fn unit_and_degree() {
+        let g = classic::star(4);
+        let o = Oriented::from_graph(&g);
+        assert_eq!(cost_vector(&o, CostFn::Unit), vec![1; 5]);
+        assert_eq!(cost_vector(&o, CostFn::Degree), vec![4, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn patric_vs_new_total_identity() {
+        // Both estimators sum the same per-edge terms (d̂_v + d̂_u), just
+        // attributed to different endpoints — totals must be equal.
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let a: u64 = cost_vector(&o, CostFn::PatricBest).iter().sum();
+        let b: u64 = cost_vector(&o, CostFn::SurrogateNew).iter().sum();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn new_estimator_charges_receivers() {
+        // Star: hub (high degree) is the ≺-top; every leaf's single oriented
+        // edge points at the hub, so the surrogate intersections run on the
+        // hub's owner → all cost lands on the hub.
+        let g = classic::star(6);
+        let o = Oriented::from_graph(&g);
+        let c = cost_vector(&o, CostFn::SurrogateNew);
+        assert!(c[0] > 0);
+        assert!(c[1..].iter().all(|&x| x == 0), "{c:?}");
+        // PATRIC's estimator instead charges the leaves (senders).
+        let p = cost_vector(&o, CostFn::PatricBest);
+        assert_eq!(p[0], 0);
+        assert!(p[1..].iter().all(|&x| x > 0), "{p:?}");
+    }
+
+    #[test]
+    fn prefix_sum_and_range_cost() {
+        let p = prefix_sums(&[3, 1, 4, 1, 5]);
+        assert_eq!(p, vec![0, 3, 4, 8, 9, 14]);
+        assert_eq!(range_cost(&p, 1, 4), 6);
+        assert_eq!(range_cost(&p, 0, 5), 14);
+        assert_eq!(range_cost(&p, 2, 2), 0);
+    }
+
+    #[test]
+    fn new_estimator_matches_surrogate_work_definition() {
+        // f(v) must equal the Σ over u ∈ 𝒩_v−N_v of (d̂_v + d̂_u), computed
+        // directly from the unoriented graph.
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let c = cost_vector(&o, CostFn::SurrogateNew);
+        for v in 0..34u32 {
+            let mut expect = 0u64;
+            for &u in g.neighbors(v) {
+                // u ∈ 𝒩_v − N_v ⇔ u ≺ v
+                if o.precedes(u, v) {
+                    expect += o.effective_degree(v) as u64 + o.effective_degree(u) as u64;
+                }
+            }
+            assert_eq!(c[v as usize], expect, "node {v}");
+        }
+    }
+}

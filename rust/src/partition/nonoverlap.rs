@@ -1,0 +1,205 @@
+//! Non-overlapping partitions (paper Definition 1) and their memory
+//! accounting — the heart of the §IV space-efficiency claim.
+//!
+//! Partition `G_i(V_i', E_i')`:
+//! * `V_i` — a consecutive range of node ids (from [`balanced_ranges`]);
+//! * `E_i' = {(v,u) : v ∈ V_i, u ∈ N_v}` — each oriented edge lives in
+//!   exactly one partition;
+//! * `V_i' = V_i ∪ {u : u ∈ N_v, v ∈ V_i}`.
+//!
+//! `Σ_i |E_i'| = m`: the partitions tile the edge set, which is exactly why
+//! the scheme stays small where PATRIC's overlapping partitions blow up.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::graph::ordering::Oriented;
+use crate::VertexId;
+
+/// Size accounting for one non-overlapping partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionSize {
+    /// Core nodes `|V_i|`.
+    pub core_nodes: u64,
+    /// All referenced nodes `|V_i'|`.
+    pub all_nodes: u64,
+    /// Oriented edges stored `|E_i'|`.
+    pub edges: u64,
+}
+
+impl PartitionSize {
+    /// Bytes to store the partition: one 8-byte offset per core node (+1),
+    /// one 4-byte target per edge, 4-byte degree per referenced node —
+    /// mirroring [`Oriented`]'s layout restricted to the partition.
+    pub fn bytes(&self) -> u64 {
+        (self.core_nodes + 1) * 8 + self.edges * 4 + self.all_nodes * 4
+    }
+
+    /// Megabytes (for Table II / Fig 7 rows).
+    pub fn mb(&self) -> f64 {
+        self.bytes() as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Compute [`PartitionSize`] for every range. O(n + m) total using a stamp
+/// array for `|V_i'|`.
+pub fn partition_sizes(o: &Oriented, ranges: &[Range<u32>]) -> Vec<PartitionSize> {
+    let n = o.num_nodes();
+    let mut stamp = vec![u32::MAX; n];
+    ranges
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let i = i as u32;
+            let mut all = 0u64;
+            let mut edges = 0u64;
+            for v in r.clone() {
+                if stamp[v as usize] != i {
+                    stamp[v as usize] = i;
+                    all += 1;
+                }
+                for &u in o.nbrs(v) {
+                    edges += 1;
+                    if stamp[u as usize] != i {
+                        stamp[u as usize] = i;
+                        all += 1;
+                    }
+                }
+            }
+            PartitionSize { core_nodes: (r.end - r.start) as u64, all_nodes: all, edges }
+        })
+        .collect()
+}
+
+/// A rank's *view* of its non-overlapping partition.
+///
+/// Semantically each rank owns only `N_v` for `v ∈ V_i` (Definition 1). In
+/// this in-process reproduction the underlying arrays are shared read-only
+/// via `Arc` to avoid physically copying the graph per rank; the view
+/// **enforces** the distributed-memory discipline by panicking on any
+/// access outside the owned range (debug) — the algorithms must fetch
+/// remote lists through messages, exactly as on a real cluster. Memory
+/// *accounting* (Table II, Figs 7/8) always uses [`partition_sizes`], i.e.
+/// what a real rank would allocate, not what this process allocates.
+#[derive(Clone)]
+pub struct PartitionView {
+    graph: Arc<Oriented>,
+    range: Range<u32>,
+}
+
+impl PartitionView {
+    /// Create the view for one rank.
+    pub fn new(graph: Arc<Oriented>, range: Range<u32>) -> Self {
+        PartitionView { graph, range }
+    }
+
+    /// Owned node range `V_i`.
+    #[inline]
+    pub fn range(&self) -> Range<u32> {
+        self.range.clone()
+    }
+
+    /// `N_v` for an **owned** node (panics otherwise — that data would live
+    /// on another machine).
+    #[inline]
+    pub fn nbrs(&self, v: VertexId) -> &[VertexId] {
+        assert!(
+            self.range.contains(&v),
+            "rank owning {:?} accessed N_{v} (remote data)",
+            self.range
+        );
+        self.graph.nbrs(v)
+    }
+
+    /// Effective degree of an owned node.
+    #[inline]
+    pub fn effective_degree(&self, v: VertexId) -> usize {
+        assert!(self.range.contains(&v));
+        self.graph.effective_degree(v)
+    }
+
+    /// Total node count (global metadata — ids/ranges are public knowledge).
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::partition::balance::balanced_ranges;
+    use crate::partition::cost::{cost_vector, prefix_sums};
+
+    fn setup(p: usize) -> (Arc<Oriented>, Vec<Range<u32>>) {
+        let g = classic::karate();
+        let o = Arc::new(Oriented::from_graph(&g));
+        let costs = cost_vector(&o, CostFn::SurrogateNew);
+        let ranges = balanced_ranges(&prefix_sums(&costs), p);
+        (o, ranges)
+    }
+
+    #[test]
+    fn edges_tile_the_edge_set() {
+        let (o, ranges) = setup(5);
+        let sizes = partition_sizes(&o, &ranges);
+        let total_edges: u64 = sizes.iter().map(|s| s.edges).sum();
+        assert_eq!(total_edges, o.num_edges());
+    }
+
+    #[test]
+    fn all_nodes_at_least_core() {
+        let (o, ranges) = setup(4);
+        for s in partition_sizes(&o, &ranges) {
+            assert!(s.all_nodes >= s.core_nodes);
+            assert!(s.bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn single_partition_is_whole_graph() {
+        let (o, ranges) = setup(1);
+        let sizes = partition_sizes(&o, &ranges);
+        assert_eq!(sizes.len(), 1);
+        assert_eq!(sizes[0].edges, o.num_edges());
+        // V_0' covers every non-isolated node (karate: all 34 nodes).
+        assert_eq!(sizes[0].all_nodes, 34);
+    }
+
+    #[test]
+    fn view_allows_owned_and_rejects_remote() {
+        let (o, ranges) = setup(3);
+        let view = PartitionView::new(o, ranges[1].clone());
+        let v = ranges[1].start;
+        let _ = view.nbrs(v); // owned: fine
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let remote = ranges[0].start;
+            let _ = view.nbrs(remote);
+        }));
+        assert!(caught.is_err(), "remote access must panic");
+    }
+
+    #[test]
+    fn memory_shrinks_with_more_partitions() {
+        // Paper Fig 8: largest partition shrinks as P grows.
+        let g = crate::gen::pa::preferential_attachment(
+            2000,
+            10,
+            &mut crate::gen::rng::Rng::seeded(8),
+        );
+        let o = Arc::new(Oriented::from_graph(&g));
+        let costs = cost_vector(&o, CostFn::SurrogateNew);
+        let prefix = prefix_sums(&costs);
+        let max_bytes = |p: usize| {
+            partition_sizes(&o, &balanced_ranges(&prefix, p))
+                .iter()
+                .map(|s| s.bytes())
+                .max()
+                .unwrap()
+        };
+        assert!(max_bytes(16) < max_bytes(4));
+        assert!(max_bytes(4) < max_bytes(1));
+    }
+}

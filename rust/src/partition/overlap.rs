@@ -1,0 +1,154 @@
+//! PATRIC's overlapping partitions [21] — the baseline whose blow-up on
+//! large-degree networks motivates this paper (§III-B, Table II, Fig 7).
+//!
+//! Partition `G_i` holds the oriented lists `N_u` for every node in
+//! `V_i = V_i^c ∪ ⋃_{v∈V_i^c} 𝒩_v` — the *core* plus every **full-
+//! neighborhood** contact of a core node (PATRIC loads complete
+//! neighborhoods and orients inside the partition). On a graph with
+//! average degree `d̄` the overlap can be `d̄`× the core, and with an
+//! `O(n)`-degree hub the partition containing it *is* the whole network —
+//! exactly the §III worst case this paper's non-overlapping scheme avoids.
+
+use std::ops::Range;
+
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::partition::nonoverlap::PartitionSize;
+
+/// Size accounting for one PATRIC overlapping partition.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OverlapSize {
+    /// Core nodes `|V_i^c|`.
+    pub core_nodes: u64,
+    /// Core + overlap nodes `|V_i|`.
+    pub all_nodes: u64,
+    /// Oriented edges stored: `Σ_{u ∈ V_i} |N_u|` (core **and** overlap
+    /// lists — that is the overlap scheme's cost).
+    pub edges: u64,
+}
+
+impl OverlapSize {
+    /// Bytes, same layout accounting as the non-overlapping scheme so that
+    /// Table II compares like with like.
+    pub fn bytes(&self) -> u64 {
+        (self.all_nodes + 1) * 8 + self.edges * 4 + self.all_nodes * 4
+    }
+
+    /// Megabytes.
+    pub fn mb(&self) -> f64 {
+        self.bytes() as f64 / (1024.0 * 1024.0)
+    }
+
+    /// View as the common [`PartitionSize`] shape (for shared reporting).
+    pub fn as_partition_size(&self) -> PartitionSize {
+        PartitionSize { core_nodes: self.core_nodes, all_nodes: self.all_nodes, edges: self.edges }
+    }
+}
+
+/// Compute [`OverlapSize`] for every core range. Uses a stamp array; total
+/// `O(n + m + Σ_i overlap_i)` (the last term is the quantity being measured
+/// and can approach `P·m` on dense graphs — measurement cost mirrors the
+/// scheme's own blow-up, which is the point). Takes both the unoriented
+/// graph (full neighborhoods define the overlap membership) and the
+/// orientation (the stored lists are `N_u`).
+pub fn overlap_sizes(g: &Csr, o: &Oriented, ranges: &[Range<u32>]) -> Vec<OverlapSize> {
+    let n = o.num_nodes();
+    debug_assert_eq!(g.num_nodes(), n);
+    let mut stamp = vec![u32::MAX; n];
+    ranges
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let i = i as u32;
+            let mut members: Vec<u32> = Vec::new();
+            for v in r.clone() {
+                if stamp[v as usize] != i {
+                    stamp[v as usize] = i;
+                    members.push(v);
+                }
+                for &u in g.neighbors(v) {
+                    if stamp[u as usize] != i {
+                        stamp[u as usize] = i;
+                        members.push(u);
+                    }
+                }
+            }
+            let edges: u64 = members.iter().map(|&u| o.effective_degree(u) as u64).sum();
+            OverlapSize {
+                core_nodes: (r.end - r.start) as u64,
+                all_nodes: members.len() as u64,
+                edges,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+    use crate::partition::balance::balanced_ranges;
+    use crate::partition::cost::{cost_vector, prefix_sums};
+    use crate::partition::nonoverlap::partition_sizes;
+
+    #[test]
+    fn overlap_superset_of_nonoverlap() {
+        let g = crate::gen::pa::preferential_attachment(
+            3000,
+            20,
+            &mut crate::gen::rng::Rng::seeded(17),
+        );
+        let o = Oriented::from_graph(&g);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+        let ranges = balanced_ranges(&prefix, 8);
+        let non = partition_sizes(&o, &ranges);
+        let over = overlap_sizes(&g, &o, &ranges);
+        for (a, b) in non.iter().zip(&over) {
+            assert!(b.edges >= a.edges, "overlap must store at least the core lists");
+            assert!(b.all_nodes >= a.all_nodes, "overlap references a superset");
+        }
+    }
+
+    #[test]
+    fn hub_partition_approaches_whole_graph() {
+        // §III's worst case: with high-degree nodes, an overlapping
+        // partition's stored edges approach the whole graph. In a clique,
+        // every core node references every other node, so each partition
+        // stores (almost) every oriented list — P× duplication.
+        let g = classic::complete(60);
+        let o = Oriented::from_graph(&g);
+        let ranges = vec![0..20u32, 20..40u32, 40..60u32];
+        let over = overlap_sizes(&g, &o, &ranges);
+        // Partition 0's core lists reference all 60 nodes.
+        assert_eq!(over[0].all_nodes, 60);
+        // …so it stores (nearly) all m oriented edges, not m/3.
+        assert_eq!(over[0].edges, o.num_edges());
+        let total: u64 = over.iter().map(|s| s.edges).sum();
+        assert!(
+            total == 3 * o.num_edges(),
+            "overlap must duplicate edges heavily: {total} vs m={}",
+            o.num_edges()
+        );
+    }
+
+    #[test]
+    fn single_partition_equals_graph() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let over = overlap_sizes(&g, &o, &[0..34u32]);
+        assert_eq!(over[0].edges, o.num_edges());
+    }
+
+    #[test]
+    fn hub_pulls_in_whole_network() {
+        // §III: a node with degree n−1 makes its partition the whole graph.
+        let g = classic::star(199);
+        let o = Oriented::from_graph(&g);
+        // Partition 0 holds the hub (node 0).
+        let over = overlap_sizes(&g, &o, &[0..100u32, 100..200u32]);
+        assert_eq!(over[0].all_nodes, 200, "hub partition must reference all nodes");
+        assert_eq!(over[0].edges, o.num_edges(), "hub partition stores the whole network");
+    }
+}

@@ -1,0 +1,89 @@
+//! AOT artifact discovery.
+//!
+//! `python/compile/aot.py` writes `artifacts/triangle_count_<N>.hlo.txt`
+//! for a set of block sizes; this module finds them and picks the smallest
+//! one that fits a requested dense-core size.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One discovered artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub path: PathBuf,
+    /// Matrix side length `N`.
+    pub n: usize,
+}
+
+/// Scan a directory for `triangle_count_<N>.hlo.txt` artifacts, sorted by `N`.
+pub fn discover<P: AsRef<Path>>(dir: P) -> Result<Vec<Artifact>> {
+    let dir = dir.as_ref();
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|s| s.to_str()) else { continue };
+        if let Some(n) = parse_name(name) {
+            out.push(Artifact { path, n });
+        }
+    }
+    out.sort_by_key(|a| a.n);
+    Ok(out)
+}
+
+fn parse_name(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix("triangle_count_")?;
+    let digits = rest.strip_suffix(".hlo.txt")?;
+    digits.parse().ok()
+}
+
+/// Pick the smallest artifact with `n ≥ want`.
+pub fn pick(artifacts: &[Artifact], want: usize) -> Result<&Artifact> {
+    artifacts
+        .iter()
+        .find(|a| a.n >= want)
+        .ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifact fits core size {want} (have: {:?}) — run `make artifacts`",
+                artifacts.iter().map(|a| a.n).collect::<Vec<_>>()
+            ))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_parsing() {
+        assert_eq!(parse_name("triangle_count_256.hlo.txt"), Some(256));
+        assert_eq!(parse_name("triangle_count_abc.hlo.txt"), None);
+        assert_eq!(parse_name("other_256.hlo.txt"), None);
+        assert_eq!(parse_name("triangle_count_256.bin"), None);
+    }
+
+    #[test]
+    fn discover_and_pick() {
+        let dir = std::env::temp_dir().join("tricount_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for n in [128, 512, 256] {
+            std::fs::write(dir.join(format!("triangle_count_{n}.hlo.txt")), "x").unwrap();
+        }
+        std::fs::write(dir.join("README"), "not an artifact").unwrap();
+        let arts = discover(&dir).unwrap();
+        assert_eq!(arts.iter().map(|a| a.n).collect::<Vec<_>>(), vec![128, 256, 512]);
+        assert_eq!(pick(&arts, 100).unwrap().n, 128);
+        assert_eq!(pick(&arts, 129).unwrap().n, 256);
+        assert_eq!(pick(&arts, 512).unwrap().n, 512);
+        assert!(pick(&arts, 513).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_empty_not_error() {
+        let arts = discover("/definitely/not/here").unwrap();
+        assert!(arts.is_empty());
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT runtime — loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md). Python runs only at build time (`make
+//! artifacts`); this module is the only thing that touches XLA at runtime.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A PJRT CPU client. One per process; executables are compiled once and
+/// reused across requests.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact into a dense triangle counter
+    /// for `n × n` f32 adjacency blocks.
+    pub fn load_dense_counter<P: AsRef<Path>>(&self, path: P, n: usize) -> Result<DenseCounter> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "missing artifact {} — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(DenseCounter { exe, n })
+    }
+}
+
+/// A compiled executable computing `sum((L·L) ⊙ L)` over an `n×n` 0/1
+/// oriented adjacency matrix — the exact count of triangles in the dense
+/// block (each triangle's vertices ordered by `≺` appear once).
+pub struct DenseCounter {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+}
+
+impl DenseCounter {
+    /// Matrix side length this executable was compiled for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Count triangles in a row-major `n×n` 0/1 matrix.
+    ///
+    /// Exactness: the kernel accumulates per-tile partial sums in f32
+    /// (bounded by `B²·n < 2²⁴` for `n ≤ 512`) and reduces tiles in f64, so
+    /// the result is integral for every supported artifact size.
+    pub fn count(&self, matrix: &[f32]) -> Result<u64> {
+        if matrix.len() != self.n * self.n {
+            return Err(Error::Artifact(format!(
+                "matrix len {} != {}²",
+                matrix.len(),
+                self.n
+            )));
+        }
+        let lit = xla::Literal::vec1(matrix).reshape(&[self.n as i64, self.n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f64>()?;
+        let x = v.first().copied().ok_or_else(|| Error::Artifact("empty result".into()))?;
+        let rounded = x.round();
+        if (x - rounded).abs() > 1e-6 {
+            return Err(Error::Artifact(format!("non-integral triangle count {x}")));
+        }
+        Ok(rounded as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need artifacts live in rust/tests/runtime_xla.rs
+    // (integration), so `cargo test --lib` stays independent of `make
+    // artifacts`. Here: client creation only.
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let e = Engine::cpu().expect("PJRT CPU client");
+        assert!(!e.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        let e = Engine::cpu().unwrap();
+        let err = match e.load_dense_counter("/nonexistent/foo.hlo.txt", 8) {
+            Ok(_) => panic!("expected error"),
+            Err(err) => err,
+        };
+        match err {
+            Error::Artifact(msg) => assert!(msg.contains("make artifacts"), "{msg}"),
+            other => panic!("unexpected error {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-node triangle counts `T_v`, clustering coefficients and transitivity —
+//! the downstream analyses the paper's introduction motivates (§I): the
+//! reason triangle counting matters is that these quantities are computed
+//! from it.
+
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::intersect::intersect_vec;
+use crate::VertexId;
+
+/// Per-node triangle counts: `T_v` = number of triangles containing `v`.
+/// Computed on the oriented graph; each triangle `(v,u,w)` found once and
+/// credited to all three corners. `Σ_v T_v = 3·T`.
+pub fn per_node_counts(o: &Oriented) -> Vec<u64> {
+    let n = o.num_nodes();
+    let mut t = vec![0u64; n];
+    for v in 0..n as VertexId {
+        let nv = o.nbrs(v);
+        for &u in nv {
+            for w in intersect_vec(nv, o.nbrs(u)) {
+                t[v as usize] += 1;
+                t[u as usize] += 1;
+                t[w as usize] += 1;
+            }
+        }
+    }
+    t
+}
+
+/// Local clustering coefficient `c_v = 2·T_v / (d_v·(d_v−1))` (0 when d_v < 2).
+pub fn clustering_coefficients(g: &Csr, tv: &[u64]) -> Vec<f64> {
+    (0..g.num_nodes() as VertexId)
+        .map(|v| {
+            let d = g.degree(v) as u64;
+            if d < 2 {
+                0.0
+            } else {
+                2.0 * tv[v as usize] as f64 / (d * (d - 1)) as f64
+            }
+        })
+        .collect()
+}
+
+/// Average local clustering coefficient (Watts–Strogatz).
+pub fn avg_clustering(g: &Csr, tv: &[u64]) -> f64 {
+    let c = clustering_coefficients(g, tv);
+    if c.is_empty() {
+        0.0
+    } else {
+        c.iter().sum::<f64>() / c.len() as f64
+    }
+}
+
+/// Global transitivity `3·T / #wedges`, where
+/// `#wedges = Σ_v d_v·(d_v−1)/2` (paths of length 2).
+pub fn transitivity(g: &Csr, total_triangles: u64) -> f64 {
+    let wedges: u64 = (0..g.num_nodes() as VertexId)
+        .map(|v| {
+            let d = g.degree(v) as u64;
+            d * d.saturating_sub(1) / 2
+        })
+        .sum();
+    if wedges == 0 {
+        0.0
+    } else {
+        3.0 * total_triangles as f64 / wedges as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+    use crate::seq::node_iterator;
+
+    #[test]
+    fn per_node_sums_to_3t() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let tv = per_node_counts(&o);
+        assert_eq!(tv.iter().sum::<u64>(), 3 * classic::KARATE_TRIANGLES);
+    }
+
+    #[test]
+    fn complete_graph_clustering_is_one() {
+        let g = classic::complete(8);
+        let o = Oriented::from_graph(&g);
+        let tv = per_node_counts(&o);
+        // Every node is in C(7,2) = 21 triangles.
+        assert!(tv.iter().all(|&t| t == 21));
+        assert!((avg_clustering(&g, &tv) - 1.0).abs() < 1e-12);
+        let total = node_iterator::count(&o);
+        assert!((transitivity(&g, total) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_free_graph_zero() {
+        let g = classic::petersen();
+        let o = Oriented::from_graph(&g);
+        let tv = per_node_counts(&o);
+        assert!(tv.iter().all(|&t| t == 0));
+        assert_eq!(transitivity(&g, 0), 0.0);
+    }
+
+    #[test]
+    fn wheel_hub_in_all_triangles() {
+        let g = classic::wheel(7);
+        let o = Oriented::from_graph(&g);
+        let tv = per_node_counts(&o);
+        assert_eq!(tv[0], 7); // hub touches every rim triangle
+        assert!(tv[1..].iter().all(|&t| t == 2));
+    }
+}

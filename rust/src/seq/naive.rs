@@ -1,0 +1,78 @@
+//! Slow, independent triangle-count oracles for validating everything else.
+//!
+//! These implement *different* counting strategies from the production
+//! kernel, so agreement between them and [`crate::seq::node_iterator`] is a
+//! strong correctness signal rather than a tautology.
+
+use crate::graph::csr::Csr;
+use crate::{TriangleCount, VertexId};
+
+/// `O(n³)` brute force over all triples — only for tiny graphs (n ≤ ~300).
+pub fn triple_count(g: &Csr) -> TriangleCount {
+    let n = g.num_nodes() as VertexId;
+    let mut t = 0;
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if !g.has_edge(u, v) {
+                continue;
+            }
+            for w in (v + 1)..n {
+                if g.has_edge(u, w) && g.has_edge(v, w) {
+                    t += 1;
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Edge-iterator algorithm: for each edge `(u, v)` count common neighbors in
+/// the *full* (unoriented) adjacency; each triangle is seen at its 3 edges,
+/// so divide by 3. `O(Σ_{(u,v)∈E} (d_u + d_v))`.
+pub fn edge_iterator_count(g: &Csr) -> TriangleCount {
+    let mut t3 = 0u64;
+    for (u, v) in g.edges() {
+        let mut c = 0;
+        crate::intersect::count_merge(g.neighbors(u), g.neighbors(v), &mut c);
+        t3 += c;
+    }
+    debug_assert_eq!(t3 % 3, 0);
+    t3 / 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+    use crate::graph::classic;
+
+    #[test]
+    fn oracles_agree_on_classics() {
+        for g in [
+            classic::complete(7),
+            classic::cycle(9),
+            classic::karate(),
+            classic::petersen(),
+            classic::wheel(6),
+            classic::barbell_k4(),
+        ] {
+            assert_eq!(triple_count(&g), edge_iterator_count(&g));
+        }
+    }
+
+    #[test]
+    fn karate_is_45_by_both() {
+        let g = classic::karate();
+        assert_eq!(triple_count(&g), 45);
+        assert_eq!(edge_iterator_count(&g), 45);
+    }
+
+    #[test]
+    fn oracles_agree_on_random_graphs() {
+        let mut rng = Rng::seeded(31);
+        for i in 0..10 {
+            let g = crate::gen::erdos_renyi::gnm(60, 200 + 20 * i, &mut rng);
+            assert_eq!(triple_count(&g), edge_iterator_count(&g));
+        }
+    }
+}

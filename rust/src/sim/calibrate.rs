@@ -1,0 +1,64 @@
+//! Calibrate the cost model's `α` (ns per intersection work unit) against
+//! the *real* sequential kernel on this machine, so virtual-time results
+//! are anchored to measured compute throughput rather than guesses.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::gen::rng::Rng;
+use crate::graph::ordering::Oriented;
+use crate::seq::node_iterator;
+use crate::sim::model::CostModel;
+
+/// Measure `α` by timing the Fig-1 kernel on a PA graph and dividing by the
+/// work-unit total. Deterministic workload; a few hundred ms.
+pub fn measure_alpha_ns() -> f64 {
+    let g = crate::gen::pa::preferential_attachment(60_000, 16, &mut Rng::seeded(0xCAFE));
+    let o = Oriented::from_graph(&g);
+    let work: u64 = (0..o.num_nodes() as u32).map(|v| node_iterator::node_work_true(&o, v)).sum();
+    // Warm-up + best-of-3 to shed first-touch noise.
+    let mut best = f64::INFINITY;
+    let mut sink = 0u64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        sink = sink.wrapping_add(node_iterator::count(&o));
+        let dt = t0.elapsed().as_nanos() as f64;
+        if dt < best {
+            best = dt;
+        }
+    }
+    std::hint::black_box(sink);
+    (best / work as f64).max(0.05)
+}
+
+/// The calibrated model, memoized per process. `TRICOUNT_ALPHA_NS`
+/// overrides the measurement (useful for deterministic CI output).
+pub fn calibrated() -> CostModel {
+    static MODEL: OnceLock<CostModel> = OnceLock::new();
+    *MODEL.get_or_init(|| {
+        let alpha = std::env::var("TRICOUNT_ALPHA_NS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(measure_alpha_ns);
+        CostModel::with_alpha(alpha)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_in_sane_range() {
+        // On any modern CPU the merge kernel runs 0.05-50 ns per element.
+        let a = measure_alpha_ns();
+        assert!(a > 0.01 && a < 100.0, "alpha={a}");
+    }
+
+    #[test]
+    fn calibrated_is_memoized() {
+        let a = calibrated();
+        let b = calibrated();
+        assert_eq!(a.alpha_ns, b.alpha_ns);
+    }
+}

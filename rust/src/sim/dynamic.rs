@@ -1,0 +1,286 @@
+//! Event-driven virtual-time simulation of the §V dynamic load balancer —
+//! regenerates Figs 12, 13, 14, 15 and Table IV for arbitrary `P`.
+//!
+//! Workers execute tasks whose *true* cost comes from the same
+//! `node_work` measure the real kernel performs; task *sizing* uses the
+//! cheap `f(v)` the paper allows (`1` or `d_v`) — the gap between sizing
+//! estimate and true cost is exactly what produces idle time, so the
+//! simulation reproduces the paper's Fig 13 mechanism, not just its curve.
+//!
+//! The coordinator is modeled as a FIFO server (service time σ); a task
+//! round trip costs `γ + wait + σ + γ`. A static-partitioning run (PATRIC,
+//! for Table IV / Fig 14 comparisons) is the degenerate case: one initial
+//! task per worker, empty queue.
+
+use std::collections::BinaryHeap;
+
+use crate::algo::tasks::{self, Task};
+use crate::config::CostFn;
+use crate::graph::ordering::Oriented;
+use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::sim::model::{CostModel, RankSim, SimResult};
+
+/// Granularity policy (mirrors [`crate::algo::dynamic_lb::Granularity`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimGranularity {
+    /// Paper Eqn 2 shrinking tasks.
+    Shrinking,
+    /// Equal-cost tasks, `k` of them (Fig 13's "static size" strawman).
+    Fixed(usize),
+    /// No dynamic phase at all: pure static partitioning (PATRIC-style).
+    StaticOnly,
+}
+
+/// Per-worker outcome of a dynamic-LB simulation.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSim {
+    pub busy_ns: f64,
+    pub idle_ns: f64,
+    pub tasks_run: u64,
+}
+
+/// Outcome of the event-driven simulation.
+#[derive(Clone, Debug)]
+pub struct DynamicSim {
+    pub makespan_ns: f64,
+    pub t_seq_ns: f64,
+    pub workers: Vec<WorkerSim>,
+    /// Control messages exchanged with the coordinator.
+    pub control_msgs: u64,
+}
+
+impl DynamicSim {
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_ns == 0.0 {
+            1.0
+        } else {
+            self.t_seq_ns / self.makespan_ns
+        }
+    }
+
+    /// Convert to the common [`SimResult`] shape (coordinator excluded).
+    pub fn to_sim_result(&self) -> SimResult {
+        SimResult {
+            per_rank: self
+                .workers
+                .iter()
+                .map(|w| RankSim {
+                    compute_ns: w.busy_ns,
+                    comm_ns: 0.0,
+                    idle_ns: w.idle_ns,
+                    msgs: w.tasks_run,
+                    bytes: 0,
+                })
+                .collect(),
+            makespan_ns: self.makespan_ns,
+            t_seq_ns: self.t_seq_ns,
+        }
+    }
+}
+
+#[derive(PartialEq)]
+struct Ev {
+    time: f64,
+    worker: usize,
+}
+impl Eq for Ev {}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Min-heap by time (reverse), tie-break by worker for determinism.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap()
+            .then_with(|| other.worker.cmp(&self.worker))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Simulate `p` ranks (1 coordinator + `p−1` workers).
+pub fn simulate(
+    o: &Oriented,
+    p: usize,
+    cost_fn: CostFn,
+    granularity: SimGranularity,
+    model: &CostModel,
+) -> DynamicSim {
+    assert!(p >= 2);
+    let workers = p - 1;
+    let n = o.num_nodes();
+
+    // True per-node work: adaptive kernel cost × execution noise — the
+    // thing no static estimator sees (see CostModel::exec_noise_sigma).
+    let true_prefix = crate::sim::work::node_work_prefix(o, model);
+    let t_seq_ns = model.alpha_ns * true_prefix[n];
+    let task_ns = |t: &Task| {
+        model.alpha_ns * (true_prefix[t.end() as usize] - true_prefix[t.start as usize])
+    };
+
+    // Sizing estimate (what the balancer *thinks* costs are).
+    let est_prefix = prefix_sums(&cost_vector(o, cost_fn));
+
+    // Build initial tasks + dynamic queue.
+    let (initial, queue): (Vec<Task>, Vec<Task>) = match granularity {
+        SimGranularity::StaticOnly => {
+            (tasks::equal_cost_tasks(&est_prefix, 0, n, workers), Vec::new())
+        }
+        SimGranularity::Shrinking => {
+            let tp = tasks::half_point(&est_prefix);
+            (
+                tasks::equal_cost_tasks(&est_prefix, 0, tp, workers),
+                tasks::shrinking_tasks(&est_prefix, tp, workers),
+            )
+        }
+        SimGranularity::Fixed(k) => {
+            let tp = tasks::half_point(&est_prefix);
+            (
+                tasks::equal_cost_tasks(&est_prefix, 0, tp, workers),
+                tasks::fixed_tasks(&est_prefix, tp, k),
+            )
+        }
+    };
+
+    let mut ws = vec![WorkerSim::default(); workers];
+    let mut heap = BinaryHeap::new();
+    // Initial tasks start at t=0 with no coordinator traffic (Eqn 1).
+    for w in 0..workers {
+        let t0 = initial.get(w).map(|t| {
+            ws[w].busy_ns += task_ns(t);
+            ws[w].tasks_run += 1;
+            task_ns(t)
+        });
+        heap.push(Ev { time: t0.unwrap_or(0.0), worker: w });
+    }
+
+    let mut next = 0usize;
+    let mut coord_free = 0.0f64;
+    let mut control_msgs = 0u64;
+    let mut done_at = vec![0.0f64; workers];
+
+    while let Some(Ev { time, worker }) = heap.pop() {
+        // Worker idle → request a task.
+        control_msgs += 1; // request
+        let arrive = time + model.net_latency_ns;
+        let start = arrive.max(coord_free);
+        coord_free = start + model.coord_service_ns;
+        let reply_at = coord_free + model.net_latency_ns;
+        control_msgs += 1; // assign / terminate
+        if next < queue.len() {
+            let task = queue[next];
+            next += 1;
+            let dur = task_ns(&task);
+            ws[worker].idle_ns += reply_at - time;
+            ws[worker].busy_ns += dur;
+            ws[worker].tasks_run += 1;
+            heap.push(Ev { time: reply_at + dur, worker });
+        } else {
+            // Terminate.
+            done_at[worker] = reply_at;
+        }
+    }
+
+    // Initial-assignment phase (§V-B: the Eqn-1 split is computed by the
+    // same parallel partitioning machinery, O(n/P + P log P)).
+    let phase = model.partition_phase_ns(n as u64, p);
+    let makespan = done_at.iter().copied().fold(0.0f64, f64::max) + phase;
+    // Terminal idle: after a worker's own terminate, it waits at the final
+    // barrier until the last worker finishes (paper Fig 11 line 25).
+    for (w, d) in done_at.iter().enumerate() {
+        ws[w].idle_ns += makespan - d;
+    }
+
+    DynamicSim { makespan_ns: makespan, t_seq_ns, workers: ws, control_msgs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+    use crate::graph::ordering::Oriented;
+
+    fn skewed_graph() -> Oriented {
+        let g = crate::gen::pa::preferential_attachment(5000, 14, &mut Rng::seeded(3));
+        Oriented::from_graph(&g)
+    }
+
+    #[test]
+    fn degree_cost_beats_unit_cost() {
+        // Paper Fig 12: f = d_v gives higher speedups than f = 1.
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let du = simulate(&o, 32, CostFn::Unit, SimGranularity::Shrinking, &m);
+        let dd = simulate(&o, 32, CostFn::Degree, SimGranularity::Shrinking, &m);
+        assert!(
+            dd.speedup() >= du.speedup() * 0.98,
+            "degree {} vs unit {}",
+            dd.speedup(),
+            du.speedup()
+        );
+    }
+
+    #[test]
+    fn dynamic_beats_static() {
+        // Paper Table IV / Fig 13: dynamic balancing reduces idle time and
+        // beats static partitioning with the same cheap estimator.
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let stat = simulate(&o, 16, CostFn::Degree, SimGranularity::StaticOnly, &m);
+        let dynm = simulate(&o, 16, CostFn::Degree, SimGranularity::Shrinking, &m);
+        assert!(
+            dynm.makespan_ns < stat.makespan_ns,
+            "dynamic {} !< static {}",
+            dynm.makespan_ns,
+            stat.makespan_ns
+        );
+        let idle_dyn: f64 = dynm.workers.iter().map(|w| w.idle_ns).sum();
+        let idle_stat: f64 = stat.workers.iter().map(|w| w.idle_ns).sum();
+        assert!(idle_dyn < idle_stat, "idle dyn {idle_dyn} !< static {idle_stat}");
+    }
+
+    #[test]
+    fn work_conservation() {
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let d = simulate(&o, 8, CostFn::Degree, SimGranularity::Shrinking, &m);
+        let busy: f64 = d.workers.iter().map(|w| w.busy_ns).sum();
+        assert!(
+            (busy - d.t_seq_ns).abs() / d.t_seq_ns < 1e-9,
+            "busy {} vs seq {}",
+            busy,
+            d.t_seq_ns
+        );
+    }
+
+    #[test]
+    fn speedup_scales() {
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let s8 = simulate(&o, 8, CostFn::Degree, SimGranularity::Shrinking, &m);
+        let s32 = simulate(&o, 32, CostFn::Degree, SimGranularity::Shrinking, &m);
+        assert!(s32.speedup() > s8.speedup());
+        assert!(s8.speedup() > 4.0, "speedup at 7 workers = {}", s8.speedup());
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path() {
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let d = simulate(&o, 16, CostFn::Degree, SimGranularity::Shrinking, &m);
+        let max_busy = d.workers.iter().map(|w| w.busy_ns).fold(0.0f64, f64::max);
+        assert!(d.makespan_ns >= max_busy);
+    }
+
+    #[test]
+    fn deterministic() {
+        let o = skewed_graph();
+        let m = CostModel::default();
+        let a = simulate(&o, 12, CostFn::Degree, SimGranularity::Shrinking, &m);
+        let b = simulate(&o, 12, CostFn::Degree, SimGranularity::Shrinking, &m);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.control_msgs, b.control_msgs);
+    }
+}

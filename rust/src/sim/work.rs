@@ -1,0 +1,79 @@
+//! Shared "true execution work" measure for all simulators: the adaptive
+//! kernel's per-pair cost, scaled by the model's per-node execution noise
+//! (keyed by the node whose list is intersected — so the noise is
+//! heavy-tailed and correlated the way real cache behaviour is).
+
+use crate::graph::ordering::Oriented;
+use crate::intersect::adaptive_cost;
+use crate::sim::model::CostModel;
+use crate::VertexId;
+
+/// Executed work for one pair `(v, u)` with `u ∈ N_v`, in work units.
+/// Noise is keyed by `v` — the node whose counting loop is being executed
+/// and whose cost `f(v)` mispredicts.
+#[inline]
+pub fn pair_work(o: &Oriented, v: VertexId, dv: usize, u: VertexId, model: &CostModel) -> f64 {
+    adaptive_cost(dv, o.effective_degree(u)) as f64 * model.noise(v)
+}
+
+/// Executed work of the whole Fig-1 loop for node `v`.
+pub fn node_work(o: &Oriented, v: VertexId, model: &CostModel) -> f64 {
+    let nv = o.nbrs(v);
+    let dv = nv.len();
+    let base: u64 = nv.iter().map(|&u| adaptive_cost(dv, o.effective_degree(u))).sum();
+    base as f64 * model.noise(v)
+}
+
+/// Prefix sums of [`node_work`] over all nodes (`len n+1`), for O(1) range
+/// queries in the task simulators.
+pub fn node_work_prefix(o: &Oriented, model: &CostModel) -> Vec<f64> {
+    let n = o.num_nodes();
+    let mut p = Vec::with_capacity(n + 1);
+    p.push(0.0);
+    let mut acc = 0.0;
+    for v in 0..n as VertexId {
+        acc += node_work(o, v, model);
+        p.push(acc);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+
+    #[test]
+    fn noiseless_matches_adaptive_measure() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let m = CostModel::noiseless();
+        for v in 0..34u32 {
+            let expect = crate::seq::node_iterator::node_work_true(&o, v) as f64;
+            assert!((node_work(&o, v, &m) - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn noise_is_deterministic_and_mean_preserving() {
+        let m = CostModel::default();
+        assert_eq!(m.noise(42), m.noise(42));
+        // Empirical mean of the normalized lognormal ≈ 1.
+        let mean: f64 = (0..200_000u32).map(|v| m.noise(v)).sum::<f64>() / 200_000.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn prefix_is_monotone_and_total() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let m = CostModel::default();
+        let p = node_work_prefix(&o, &m);
+        assert_eq!(p.len(), 35);
+        for w in p.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        let total: f64 = (0..34u32).map(|v| node_work(&o, v, &m)).sum();
+        assert!((p[34] - total).abs() < 1e-6);
+    }
+}

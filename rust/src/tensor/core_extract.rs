@@ -1,0 +1,171 @@
+//! Dense-core extraction for the hybrid tensor path.
+//!
+//! The paper's theme is networks whose highest-degree nodes dominate cost;
+//! in real social/web graphs those hubs form a dense core. We take the `K`
+//! **`≺`-maximal** nodes (the top-K by the degree ordering). Because `≺`
+//! orients every edge toward higher-ordered nodes, this core is *upward
+//! closed*: if a triangle's `≺`-minimal vertex is in the core, all three
+//! vertices are. That gives an exact split:
+//!
+//! > triangles(G) = dense-count(core) + Σ_{v ∉ core} count_node(v)
+//!
+//! where the first term runs on the XLA/PJRT artifact (MXU-shaped matmul)
+//! and the second on the sparse kernel.
+
+use crate::graph::ordering::Oriented;
+use crate::VertexId;
+
+/// The extracted core: global node ids of the `K` ≺-maximal nodes, ordered
+/// ascending by `≺` (so index order = ≺ order within the core), plus a
+/// membership bitmap.
+#[derive(Clone, Debug)]
+pub struct DenseCore {
+    /// `members[a]` = global id of core node `a`; `a < b ⇒ members[a] ≺ members[b]`.
+    pub members: Vec<VertexId>,
+    /// `in_core[v]` for all global v.
+    pub in_core: Vec<bool>,
+    /// `index_of[v]` = position in `members` (undefined when !in_core).
+    index_of: Vec<u32>,
+}
+
+impl DenseCore {
+    /// Extract the `k` ≺-maximal nodes. O(n log n).
+    pub fn extract(o: &Oriented, k: usize) -> DenseCore {
+        let n = o.num_nodes();
+        let k = k.min(n);
+        let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+        // Sort by ≺ descending: (degree, id) descending.
+        order.sort_unstable_by(|&a, &b| {
+            (o.degree(b), b).cmp(&(o.degree(a), a))
+        });
+        let mut members: Vec<VertexId> = order[..k].to_vec();
+        // Ascending ≺ within the core.
+        members.sort_unstable_by(|&a, &b| (o.degree(a), a).cmp(&(o.degree(b), b)));
+        let mut in_core = vec![false; n];
+        let mut index_of = vec![0u32; n];
+        for (i, &v) in members.iter().enumerate() {
+            in_core[v as usize] = true;
+            index_of[v as usize] = i as u32;
+        }
+        DenseCore { members, in_core, index_of }
+    }
+
+    /// Core size `K`.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True if the core is empty.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Core index of a member node.
+    #[inline]
+    pub fn index(&self, v: VertexId) -> Option<u32> {
+        if self.in_core[v as usize] {
+            Some(self.index_of[v as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Number of core-internal oriented edges (= dense matrix nnz).
+    pub fn internal_edges(&self, o: &Oriented) -> u64 {
+        self.members
+            .iter()
+            .map(|&v| o.nbrs(v).iter().filter(|&&u| self.in_core[u as usize]).count() as u64)
+            .sum()
+    }
+
+    /// Density of the core's induced oriented subgraph (nnz / K²).
+    pub fn density(&self, o: &Oriented) -> f64 {
+        let k = self.len();
+        if k == 0 {
+            return 0.0;
+        }
+        self.internal_edges(o) as f64 / (k * k) as f64
+    }
+}
+
+/// Pick an automatic core size: largest artifact block that the graph can
+/// fill meaningfully (≤ n, and not bigger than the largest artifact).
+pub fn auto_core_size(n_nodes: usize, artifact_sizes: &[usize]) -> usize {
+    artifact_sizes
+        .iter()
+        .copied()
+        .filter(|&s| s <= n_nodes)
+        .max()
+        .or_else(|| artifact_sizes.iter().copied().min())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+
+    #[test]
+    fn core_is_upward_closed_under_precedes() {
+        let g = crate::gen::pa::preferential_attachment(
+            500,
+            8,
+            &mut crate::gen::rng::Rng::seeded(10),
+        );
+        let o = Oriented::from_graph(&g);
+        let core = DenseCore::extract(&o, 64);
+        // Upward closure: for any member v, every u with v ≺ u is a member.
+        for v in 0..500u32 {
+            if core.in_core[v as usize] {
+                for u in 0..500u32 {
+                    if u != v && o.precedes(v, u) {
+                        assert!(
+                            core.in_core[u as usize],
+                            "core not upward closed: {v} ∈ core, {v} ≺ {u} ∉ core"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn members_sorted_by_precedes() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let core = DenseCore::extract(&o, 10);
+        for w in core.members.windows(2) {
+            assert!(o.precedes(w[0], w[1]));
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let g = classic::complete(5);
+        let o = Oriented::from_graph(&g);
+        let core = DenseCore::extract(&o, 100);
+        assert_eq!(core.len(), 5);
+        assert_eq!(core.internal_edges(&o), 10);
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let core = DenseCore::extract(&o, 8);
+        for (i, &v) in core.members.iter().enumerate() {
+            assert_eq!(core.index(v), Some(i as u32));
+        }
+        let non_member = (0..34u32).find(|&v| !core.in_core[v as usize]).unwrap();
+        assert_eq!(core.index(non_member), None);
+    }
+
+    #[test]
+    fn auto_size_picks_largest_fitting() {
+        assert_eq!(auto_core_size(1000, &[128, 256, 512]), 512);
+        assert_eq!(auto_core_size(300, &[128, 256, 512]), 256);
+        assert_eq!(auto_core_size(50, &[128, 256]), 128); // fallback: smallest
+        assert_eq!(auto_core_size(50, &[]), 0);
+    }
+}

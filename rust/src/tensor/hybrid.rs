@@ -1,0 +1,147 @@
+//! Hybrid counter: XLA dense-core + sparse remainder (exact).
+//!
+//! `triangles(G) = dense(core) + Σ_{v∉core} count_node(v)` — the split is
+//! exact because the ≺-top-K core is upward closed (see
+//! [`crate::tensor::core_extract`]). The dense term executes the AOT
+//! Pallas/JAX artifact through PJRT; the sparse term runs the Fig-1 kernel
+//! on every non-core node.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::graph::ordering::Oriented;
+use crate::runtime::artifact;
+use crate::runtime::engine::Engine;
+use crate::seq::node_iterator;
+use crate::tensor::core_extract::{auto_core_size, DenseCore};
+use crate::tensor::pack::{dense_count_reference, pack_core};
+use crate::{TriangleCount, VertexId};
+
+/// Breakdown of a hybrid count.
+#[derive(Clone, Debug)]
+pub struct HybridResult {
+    pub triangles: TriangleCount,
+    pub dense_triangles: TriangleCount,
+    pub sparse_triangles: TriangleCount,
+    /// Core size actually used.
+    pub core_size: usize,
+    /// Artifact block size (0 when the rust reference path was used).
+    pub block: usize,
+    /// Core-internal oriented edges offloaded to the tensor path.
+    pub offloaded_edges: u64,
+}
+
+/// Count with an explicit core size using a loaded engine + artifact dir.
+pub fn count_with_engine<P: AsRef<Path>>(
+    o: &Oriented,
+    engine: &Engine,
+    artifacts_dir: P,
+    core_size: usize,
+) -> Result<HybridResult> {
+    let arts = artifact::discover(&artifacts_dir)?;
+    let sizes: Vec<usize> = arts.iter().map(|a| a.n).collect();
+    let k = if core_size == 0 { auto_core_size(o.num_nodes(), &sizes) } else { core_size };
+    let core = DenseCore::extract(o, k);
+    let art = artifact::pick(&arts, core.len())?;
+    let counter = engine.load_dense_counter(&art.path, art.n)?;
+    let m = pack_core(o, &core, art.n);
+    let dense = counter.count(&m)?;
+    let sparse = sparse_remainder(o, &core);
+    Ok(HybridResult {
+        triangles: dense + sparse,
+        dense_triangles: dense,
+        sparse_triangles: sparse,
+        core_size: core.len(),
+        block: art.n,
+        offloaded_edges: core.internal_edges(o),
+    })
+}
+
+/// Pure-rust fallback (no artifacts / no PJRT): same split, dense term via
+/// [`dense_count_reference`]. Used by tests to validate the split logic
+/// independently of XLA, and by `--dense-core` runs before `make artifacts`.
+pub fn count_reference(o: &Oriented, core_size: usize) -> HybridResult {
+    let core = DenseCore::extract(o, core_size);
+    let n = core.len();
+    let m = pack_core(o, &core, n.max(1));
+    let dense = dense_count_reference(&m, n.max(1));
+    let sparse = sparse_remainder(o, &core);
+    HybridResult {
+        triangles: dense + sparse,
+        dense_triangles: dense,
+        sparse_triangles: sparse,
+        core_size: n,
+        block: 0,
+        offloaded_edges: core.internal_edges(o),
+    }
+}
+
+/// Σ over non-core nodes of the Fig-1 per-node count.
+fn sparse_remainder(o: &Oriented, core: &DenseCore) -> TriangleCount {
+    let mut t = 0;
+    for v in 0..o.num_nodes() as VertexId {
+        if !core.in_core[v as usize] {
+            node_iterator::count_node(o, v, &mut t);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::graph::ordering::Oriented;
+
+    #[test]
+    fn split_is_exact_for_all_core_sizes() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        for k in [0, 1, 5, 10, 20, 34] {
+            let r = count_reference(&o, k);
+            assert_eq!(
+                r.triangles,
+                classic::KARATE_TRIANGLES,
+                "core={k}: dense={} sparse={}",
+                r.dense_triangles,
+                r.sparse_triangles
+            );
+        }
+    }
+
+    #[test]
+    fn full_core_means_all_dense() {
+        let g = classic::complete(9);
+        let o = Oriented::from_graph(&g);
+        let r = count_reference(&o, 9);
+        assert_eq!(r.dense_triangles, 84);
+        assert_eq!(r.sparse_triangles, 0);
+    }
+
+    #[test]
+    fn zero_core_means_all_sparse() {
+        let g = classic::complete(9);
+        let o = Oriented::from_graph(&g);
+        let r = count_reference(&o, 0);
+        assert_eq!(r.dense_triangles, 0);
+        assert_eq!(r.sparse_triangles, 84);
+    }
+
+    #[test]
+    fn prop_split_exact_on_random_graphs() {
+        crate::prop::quickcheck("hybrid split exact", |rng, _| {
+            let g = crate::prop::arb_graph(rng, 50);
+            let o = Oriented::from_graph(&g);
+            let expect = node_iterator::count(&o);
+            let k = rng.below_usize(g.num_nodes() + 1);
+            let r = count_reference(&o, k);
+            if r.triangles != expect {
+                return Err(format!(
+                    "core={k}: {} + {} != {expect}",
+                    r.dense_triangles, r.sparse_triangles
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,110 @@
+//! Cross-algorithm integration: every parallel algorithm, the sequential
+//! kernel, the naive oracles, and the hybrid counter must agree exactly on
+//! a spread of workloads and processor counts — the repo's strongest
+//! end-to-end correctness signal.
+
+use std::sync::Arc;
+
+use tricount::algo::{direct, dynamic_lb, patric, surrogate};
+use tricount::config::CostFn;
+use tricount::gen::rng::Rng;
+use tricount::graph::csr::Csr;
+use tricount::graph::ordering::Oriented;
+use tricount::graph::{classic, io};
+use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::cost::{cost_vector, prefix_sums};
+use tricount::seq::{naive, node_iterator};
+use tricount::tensor::hybrid;
+
+/// Run every counter on the graph and assert exact agreement.
+fn assert_all_agree(g: &Csr, expect: u64, ps: &[usize]) {
+    let o = Arc::new(Oriented::from_graph(g));
+    assert_eq!(node_iterator::count(&o), expect, "sequential");
+    assert_eq!(naive::edge_iterator_count(g), expect, "edge iterator");
+    assert_eq!(hybrid::count_reference(&o, g.num_nodes() / 3).triangles, expect, "hybrid");
+
+    for &p in ps {
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, p);
+        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+        assert_eq!(surrogate::run(&o, &ranges, &owner).unwrap().triangles, expect, "surrogate P={p}");
+        assert_eq!(direct::run(&o, &ranges, &owner).unwrap().triangles, expect, "direct P={p}");
+
+        let patric_prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+        let patric_ranges = balanced_ranges(&patric_prefix, p);
+        assert_eq!(patric::run(&o, &patric_ranges).unwrap().triangles, expect, "patric P={p}");
+
+        if p >= 2 {
+            let r = dynamic_lb::run(&o, p, dynamic_lb::Options::default()).unwrap();
+            assert_eq!(r.triangles, expect, "dynamic P={p}");
+        }
+    }
+}
+
+#[test]
+fn classics_all_algorithms() {
+    assert_all_agree(&classic::karate(), 45, &[1, 2, 5]);
+    assert_all_agree(&classic::complete(20), 1140, &[3, 7]);
+    assert_all_agree(&classic::petersen(), 0, &[2, 4]);
+    assert_all_agree(&classic::wheel(12), 12, &[3]);
+}
+
+#[test]
+fn skewed_pa_graph_all_algorithms() {
+    let g = tricount::gen::pa::preferential_attachment(2_000, 16, &mut Rng::seeded(21));
+    let o = Oriented::from_graph(&g);
+    let expect = node_iterator::count(&o);
+    assert!(expect > 1000, "PA graph should be triangle-rich, got {expect}");
+    assert_all_agree(&g, expect, &[2, 6, 11]);
+}
+
+#[test]
+fn rmat_heavy_tail_all_algorithms() {
+    let g = tricount::gen::rmat::rmat(11, 10, Default::default(), &mut Rng::seeded(31));
+    let o = Oriented::from_graph(&g);
+    let expect = node_iterator::count(&o);
+    assert_all_agree(&g, expect, &[4, 9]);
+}
+
+#[test]
+fn contact_network_all_algorithms() {
+    let g = tricount::gen::geometric::miami_like(3_000, 20, &mut Rng::seeded(41));
+    let o = Oriented::from_graph(&g);
+    let expect = node_iterator::count(&o);
+    assert_all_agree(&g, expect, &[5]);
+}
+
+#[test]
+fn io_roundtrip_preserves_counts() {
+    let g = tricount::gen::erdos_renyi::gnm(500, 3_000, &mut Rng::seeded(51));
+    let dir = std::env::temp_dir().join("tricount_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("g.bin");
+    io::write_binary(&g, &p).unwrap();
+    let g2 = io::read_binary(&p).unwrap();
+    let a = node_iterator::count(&Oriented::from_graph(&g));
+    let b = node_iterator::count(&Oriented::from_graph(&g2));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn more_processors_than_nodes() {
+    // Degenerate but must not crash or miscount.
+    let g = classic::complete(6);
+    assert_all_agree(&g, 20, &[10, 20]);
+}
+
+#[test]
+fn config_driven_run_matches() {
+    // The launcher path: config file → workload → algorithm.
+    let mut cfg = tricount::config::RunConfig::default();
+    cfg.set("workload", "pa:800:6").unwrap();
+    cfg.set("procs", "5").unwrap();
+    let g = cfg.build_graph().unwrap();
+    let o = Arc::new(Oriented::from_graph(&g));
+    let expect = node_iterator::count(&o);
+    let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+    let ranges = balanced_ranges(&prefix, cfg.procs);
+    let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
+    assert_eq!(surrogate::run(&o, &ranges, &owner).unwrap().triangles, expect);
+}

@@ -1,0 +1,229 @@
+//! Property tests over coordinator invariants: partitioning (routing),
+//! task splitting (batching), message-elimination and termination (state) —
+//! using the in-crate `prop` harness (proptest is unavailable offline; see
+//! DESIGN.md §3).
+
+use std::sync::Arc;
+
+use tricount::algo::tasks;
+use tricount::config::CostFn;
+use tricount::graph::ordering::Oriented;
+use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::cost::{cost_vector, prefix_sums};
+use tricount::partition::nonoverlap::partition_sizes;
+use tricount::partition::overlap::overlap_sizes;
+use tricount::prop::{arb_graph, quickcheck};
+use tricount::seq::{naive, node_iterator};
+
+#[test]
+fn prop_ranges_partition_v() {
+    quickcheck("balanced ranges tile V", |rng, _| {
+        let g = arb_graph(rng, 80);
+        let o = Oriented::from_graph(&g);
+        let f = match rng.below(4) {
+            0 => CostFn::Unit,
+            1 => CostFn::Degree,
+            2 => CostFn::PatricBest,
+            _ => CostFn::SurrogateNew,
+        };
+        let p = 1 + rng.below_usize(12);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, f)), p);
+        if ranges.len() != p {
+            return Err(format!("expected {p} ranges, got {}", ranges.len()));
+        }
+        let mut at = 0u32;
+        for r in &ranges {
+            if r.start != at {
+                return Err(format!("gap at {at}: {ranges:?}"));
+            }
+            at = r.end;
+        }
+        if at as usize != g.num_nodes() {
+            return Err(format!("ranges end at {at}, n = {}", g.num_nodes()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_owner_table_consistent_with_ranges() {
+    quickcheck("owner table routing", |rng, _| {
+        let g = arb_graph(rng, 60);
+        let o = Oriented::from_graph(&g);
+        let p = 1 + rng.below_usize(8);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
+        let owner = owner_table(&ranges, g.num_nodes());
+        for v in 0..g.num_nodes() as u32 {
+            let i = owner[v as usize] as usize;
+            if !ranges[i].contains(&v) {
+                return Err(format!("node {v} routed to rank {i} ({:?})", ranges[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonoverlap_edges_tile_e() {
+    quickcheck("non-overlapping partitions tile E", |rng, _| {
+        let g = arb_graph(rng, 70);
+        let o = Oriented::from_graph(&g);
+        let p = 1 + rng.below_usize(10);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), p);
+        let sizes = partition_sizes(&o, &ranges);
+        let total: u64 = sizes.iter().map(|s| s.edges).sum();
+        if total != o.num_edges() {
+            return Err(format!("edges {total} != m {}", o.num_edges()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlap_dominates_nonoverlap_per_range() {
+    quickcheck("overlap ⊇ non-overlap", |rng, _| {
+        let g = arb_graph(rng, 70);
+        let o = Oriented::from_graph(&g);
+        let p = 1 + rng.below_usize(6);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
+        let non = partition_sizes(&o, &ranges);
+        let over = overlap_sizes(&g, &o, &ranges);
+        for (i, (a, b)) in non.iter().zip(&over).enumerate() {
+            if b.edges < a.edges || b.all_nodes < a.all_nodes {
+                return Err(format!("partition {i}: overlap {b:?} < non {a:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_task_queue_covers_and_shrinks() {
+    quickcheck("shrinking task queue invariants", |rng, _| {
+        let n = 1 + rng.below_usize(300);
+        let costs: Vec<u64> = (0..n).map(|_| rng.below(50)).collect();
+        let prefix = prefix_sums(&costs);
+        let workers = 1 + rng.below_usize(10);
+        let tp = tasks::half_point(&prefix);
+        let initial = tasks::equal_cost_tasks(&prefix, 0, tp, workers);
+        let queue = tasks::shrinking_tasks(&prefix, tp, workers);
+        // Initial + queue together tile [0, n).
+        let mut all = initial.clone();
+        all.extend(&queue);
+        if !tasks::tiles(&all, 0, n) {
+            return Err(format!("initial+queue don't tile [0,{n}): {all:?}"));
+        }
+        // Eqn 2 invariant: each task's cost is within one atomic node of its
+        // shrinking target `remaining/(P−1)` — i.e. granularity follows the
+        // geometric schedule, with single indivisible nodes the only excess.
+        let total = prefix[n];
+        let cost = |t: &tasks::Task| prefix[t.end() as usize] - prefix[t.start as usize];
+        let max_node = |t: &tasks::Task| {
+            (t.start..t.end())
+                .map(|v| costs[v as usize])
+                .max()
+                .unwrap_or(0)
+        };
+        let mut remaining = total - prefix[tp];
+        for t in &queue {
+            let target = remaining / workers as u64;
+            let c = cost(t);
+            if c > target + max_node(t) {
+                return Err(format!(
+                    "task {t:?} cost {c} exceeds target {target} + atomic slack"
+                ));
+            }
+            remaining -= c;
+        }
+        if remaining != 0 {
+            return Err(format!("queue left {remaining} cost unassigned"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_surrogate_message_elimination() {
+    // LastProc invariant: data messages ≤ Σ_v (distinct remote partitions
+    // in N_v) — i.e. never a redundant send — and the count is *exactly*
+    // that (the scheme sends once per (v, remote partition)).
+    quickcheck("surrogate sends once per (v, partition)", |rng, _| {
+        let g = arb_graph(rng, 60);
+        let o = Arc::new(Oriented::from_graph(&g));
+        let p = 1 + rng.below_usize(6);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
+        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
+        let r = tricount::algo::surrogate::run(&o, &ranges, &owner)
+            .map_err(|e| e.to_string())?;
+        let mut expect = 0u64;
+        for v in 0..g.num_nodes() as u32 {
+            let mine = owner[v as usize];
+            let mut parts: Vec<u32> = o
+                .nbrs(v)
+                .iter()
+                .map(|&u| owner[u as usize])
+                .filter(|&j| j != mine)
+                .collect();
+            parts.dedup(); // neighbors sorted by id ⇒ partitions consecutive
+            expect += parts.len() as u64;
+        }
+        let got: u64 = r.metrics.per_rank.iter().map(|m| m.messages_sent).sum();
+        if got != expect {
+            return Err(format!("messages {got} != expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_parallel_algorithms_match_oracle() {
+    quickcheck("parallel == naive oracle", |rng, i| {
+        let g = arb_graph(rng, 40);
+        let expect = naive::edge_iterator_count(&g);
+        let o = Arc::new(Oriented::from_graph(&g));
+        if node_iterator::count(&o) != expect {
+            return Err("sequential != oracle".into());
+        }
+        let p = 1 + rng.below_usize(5);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), p);
+        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
+        let s = tricount::algo::surrogate::run(&o, &ranges, &owner)
+            .map_err(|e| e.to_string())?
+            .triangles;
+        if s != expect {
+            return Err(format!("case {i}: surrogate {s} != {expect}"));
+        }
+        // Alternate direct/dynamic to keep runtime bounded.
+        if i % 2 == 0 {
+            let d = tricount::algo::direct::run(&o, &ranges, &owner)
+                .map_err(|e| e.to_string())?
+                .triangles;
+            if d != expect {
+                return Err(format!("case {i}: direct {d} != {expect}"));
+            }
+        } else {
+            let d = tricount::algo::dynamic_lb::run(&o, 2 + rng.below_usize(4), Default::default())
+                .map_err(|e| e.to_string())?
+                .triangles;
+            if d != expect {
+                return Err(format!("case {i}: dynamic {d} != {expect}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_orientation_preserves_triangle_structure() {
+    quickcheck("orientation invariants", |rng, _| {
+        let g = arb_graph(rng, 60);
+        let o = Oriented::from_graph(&g);
+        o.validate(&g).map_err(|e| e)?;
+        // Σ d̂_v = m and each d̂ bounded by degree.
+        let sum: u64 = (0..g.num_nodes() as u32).map(|v| o.effective_degree(v) as u64).sum();
+        if sum != g.num_edges() {
+            return Err(format!("Σd̂ = {sum} != m = {}", g.num_edges()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,110 @@
+//! Integration tests for the XLA/PJRT runtime path: load the AOT artifacts
+//! produced by `make artifacts` and validate counts against the sparse
+//! kernel and closed forms. Skips (with a notice) when artifacts are absent
+//! so `cargo test` works before `make artifacts`; `make test` always builds
+//! artifacts first.
+
+use std::sync::Arc;
+
+use tricount::graph::classic;
+use tricount::graph::ordering::Oriented;
+use tricount::runtime::{artifact, engine::Engine};
+use tricount::seq::node_iterator;
+use tricount::tensor::core_extract::DenseCore;
+use tricount::tensor::{hybrid, pack};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("TRICOUNT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let found = artifact::discover(&dir).unwrap_or_default();
+    if found.is_empty() {
+        eprintln!("[skip] no artifacts in `{dir}` — run `make artifacts`");
+        None
+    } else {
+        Some(dir)
+    }
+}
+
+#[test]
+fn artifact_counts_k128() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let arts = artifact::discover(&dir).unwrap();
+    let art = artifact::pick(&arts, 128).unwrap();
+    let counter = engine.load_dense_counter(&art.path, art.n).unwrap();
+
+    // K_128 packed as a strictly-upper-triangular block.
+    let g = classic::complete(128);
+    let o = Oriented::from_graph(&g);
+    let core = DenseCore::extract(&o, 128);
+    let m = pack::pack_core(&o, &core, art.n);
+    let got = counter.count(&m).unwrap();
+    assert_eq!(got, 128 * 127 * 126 / 6);
+}
+
+#[test]
+fn artifact_matches_sparse_on_random_graphs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let arts = artifact::discover(&dir).unwrap();
+    let art = artifact::pick(&arts, 128).unwrap();
+    let counter = engine.load_dense_counter(&art.path, art.n).unwrap();
+
+    let mut rng = tricount::gen::rng::Rng::seeded(1234);
+    for density in [100usize, 800, 3000] {
+        let g = tricount::gen::erdos_renyi::gnm(120, density, &mut rng);
+        let o = Oriented::from_graph(&g);
+        let core = DenseCore::extract(&o, 120);
+        let m = pack::pack_core(&o, &core, art.n);
+        let dense = counter.count(&m).unwrap();
+        let sparse = node_iterator::count(&o);
+        assert_eq!(dense, sparse, "density {density}");
+    }
+}
+
+#[test]
+fn hybrid_with_engine_is_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let g = tricount::gen::pa::preferential_attachment(
+        5_000,
+        12,
+        &mut tricount::gen::rng::Rng::seeded(9),
+    );
+    let o = Arc::new(Oriented::from_graph(&g));
+    let expect = node_iterator::count(&o);
+    for k in [0usize, 64, 128, 500] {
+        let r = hybrid::count_with_engine(&o, &engine, &dir, k).unwrap();
+        assert_eq!(r.triangles, expect, "core size {k}");
+        if k >= 64 {
+            assert!(r.dense_triangles > 0, "PA dense core should contain triangles");
+        }
+    }
+}
+
+#[test]
+fn all_block_sizes_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let arts = artifact::discover(&dir).unwrap();
+    assert!(arts.len() >= 2, "expect multiple artifact sizes");
+    let g = classic::complete(100);
+    let o = Oriented::from_graph(&g);
+    let core = DenseCore::extract(&o, 100);
+    let expect = 100 * 99 * 98 / 6;
+    for art in &arts {
+        let counter = engine.load_dense_counter(&art.path, art.n).unwrap();
+        let m = pack::pack_core(&o, &core, art.n);
+        assert_eq!(counter.count(&m).unwrap(), expect, "block {}", art.n);
+    }
+}
+
+#[test]
+fn karate_hybrid_through_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::cpu().unwrap();
+    let g = classic::karate();
+    let o = Arc::new(Oriented::from_graph(&g));
+    let r = hybrid::count_with_engine(&o, &engine, &dir, 16).unwrap();
+    assert_eq!(r.triangles, classic::KARATE_TRIANGLES);
+    assert_eq!(r.dense_triangles + r.sparse_triangles, classic::KARATE_TRIANGLES);
+}
