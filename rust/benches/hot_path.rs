@@ -112,6 +112,36 @@ fn main() {
         tricount::partition::balance::balanced_ranges(&prefix, 200).len() as u64
     });
 
+    println!("\n== streaming updates (incremental engine) ==");
+    {
+        use tricount::stream::parallel::{self, StreamOptions};
+        use tricount::stream::workload::{edge_stream, StreamSpec};
+        // Large-degree PA source; half the edges form the snapshot, the
+        // rest arrive as batches. Throughput = updates/s maintained exact.
+        let src = tricount::gen::pa::preferential_attachment(100_000, 16, &mut Rng::seeded(11));
+        let inserts_spec = StreamSpec {
+            base_fraction: 0.5,
+            batch_size: 1_000,
+            batches: 20,
+            delete_fraction: 0.0,
+        };
+        let mixed_spec = StreamSpec { delete_fraction: 0.3, ..inserts_spec };
+        for (tag, spec) in [("inserts", inserts_spec), ("mixed 30% del", mixed_spec)] {
+            let w = edge_stream(&src, &spec, &mut Rng::seeded(12));
+            // Static count of the snapshot stays outside the timed region:
+            // the bench tracks incremental update throughput, not setup.
+            let initial = node_iterator::count(&Oriented::from_graph(&w.base));
+            for p in [1usize, 4, 8] {
+                let name = format!("stream PA(100K,16) {tag} 20×1k P={p}");
+                bench(&name, w.updates as u64, "upd", || {
+                    parallel::run_with_initial(&w.base, &w.batches, p, StreamOptions::default(), initial)
+                        .unwrap()
+                        .final_triangles
+                });
+            }
+        }
+    }
+
     println!("\n== XLA dense-core path (requires `make artifacts`) ==");
     match tricount::runtime::artifact::discover("artifacts") {
         Ok(arts) if !arts.is_empty() => {

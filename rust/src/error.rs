@@ -1,39 +1,65 @@
 //! Crate error types.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the container
+//! build is fully offline and the crate is dependency-free.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the `tricount` public API.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Graph input was structurally invalid (bad endpoint, overflow, …).
-    #[error("invalid graph: {0}")]
     InvalidGraph(String),
 
     /// A file could not be parsed as an edge list / binary graph.
-    #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
 
     /// Underlying I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Invalid run configuration (CLI or TOML).
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// A parallel run failed (worker panic, channel breakage).
-    #[error("cluster execution failed: {0}")]
     Cluster(String),
 
     /// AOT artifact missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT / XLA runtime failure.
-    #[error("xla runtime error: {0}")]
+    /// PJRT / XLA runtime failure (or runtime unavailable in this build).
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            Error::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Cluster(m) => write!(f, "cluster execution failed: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla-runtime")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -42,3 +68,25 @@ impl From<xla::Error> for Error {
 
 /// Convenience alias used across the crate.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_seed_format() {
+        assert_eq!(Error::InvalidGraph("x".into()).to_string(), "invalid graph: x");
+        assert_eq!(
+            Error::Parse { line: 3, msg: "bad".into() }.to_string(),
+            "parse error at line 3: bad"
+        );
+        assert_eq!(Error::Config("k".into()).to_string(), "invalid config: k");
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

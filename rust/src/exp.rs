@@ -94,7 +94,9 @@ fn run_one(e: &Experiment, opts: &Options) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let path = format!("{dir}/{}.csv", e.id);
         report.write_csv(&path)?;
-        println!("[csv written to {path}]");
+        let json = format!("{dir}/{}.json", e.id);
+        report.write_json(&json)?;
+        println!("[written: {path}, {json}]");
     }
     Ok(())
 }

@@ -48,6 +48,40 @@ impl Cell {
             Cell::Secs(s) => format!("{s}"),
         }
     }
+
+    /// JSON value: strings quoted+escaped, numbers bare (non-finite → null).
+    fn json(&self) -> String {
+        match self {
+            Cell::Text(s) => json_string(s),
+            Cell::Int(x) => x.to_string(),
+            Cell::Float(x) | Cell::Secs(x) => {
+                if x.is_finite() {
+                    format!("{x}")
+                } else {
+                    "null".into()
+                }
+            }
+        }
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 impl From<&str> for Cell {
@@ -133,6 +167,50 @@ impl Report {
         }
     }
 
+    /// The shared JSON report schema (`tricount exp` and `tricount stream`
+    /// both emit it): `{"columns": […], "rows": [{col: value…}…],
+    /// "notes": […]}`. Dependency-free serialization.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"columns\": [");
+        out.push_str(
+            &self
+                .columns
+                .iter()
+                .map(|c| json_string(c))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        out.push_str("],\n  \"rows\": [");
+        for (i, row) in self.rows.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            let fields: Vec<String> = self
+                .columns
+                .iter()
+                .zip(row)
+                .map(|(c, cell)| format!("{}: {}", json_string(c), cell.json()))
+                .collect();
+            out.push_str(&format!("    {{{}}}", fields.join(", ")));
+        }
+        out.push_str("\n  ],\n  \"notes\": [");
+        out.push_str(
+            &self
+                .notes
+                .iter()
+                .map(|n| json_string(n))
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Write [`Report::to_json`] to a file.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(self.to_json().as_bytes())?;
+        Ok(())
+    }
+
     /// CSV (comma-separated; notes as trailing comments).
     pub fn write_csv(&self, path: &str) -> Result<()> {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -167,6 +245,27 @@ mod tests {
         assert_eq!(Cell::Secs(0.5).render(), "500.00ms");
         assert_eq!(Cell::Secs(12.0).render(), "12.00s");
         assert_eq!(Cell::Secs(744.0).render(), "12.40m");
+    }
+
+    #[test]
+    fn json_schema_and_escaping() {
+        let mut r = Report::new(["net", "P", "t"]);
+        r.row([Cell::Text("say \"hi\"\n".into()), Cell::Int(4), Cell::Secs(0.25)]);
+        r.note("virtual time");
+        let j = r.to_json();
+        assert!(j.contains("\"columns\": [\"net\", \"P\", \"t\"]"), "{j}");
+        assert!(j.contains("{\"net\": \"say \\\"hi\\\"\\n\", \"P\": 4, \"t\": 0.25}"), "{j}");
+        assert!(j.contains("\"notes\": [\"virtual time\"]"), "{j}");
+        // Empty report is still valid schema.
+        let empty = Report::new(["a"]).to_json();
+        assert!(empty.contains("\"rows\": []"), "{empty}");
+    }
+
+    #[test]
+    fn json_non_finite_floats_are_null() {
+        let mut r = Report::new(["x"]);
+        r.row([Cell::Float(f64::NAN)]);
+        assert!(r.to_json().contains("{\"x\": null}"));
     }
 
     #[test]

@@ -11,15 +11,22 @@ use crate::graph::builder::from_edge_list;
 use crate::graph::csr::Csr;
 use crate::VertexId;
 
-/// Read a SNAP-style edge list: one `u v` pair per line, `#` comments and
-/// blank lines ignored, node ids need not be contiguous — they are compacted
-/// to `0..n` preserving relative order.
+/// Read a SNAP-style edge list: one `u v` pair per line, `#`/`%` comments
+/// and blank lines ignored, node ids need not be contiguous — they are
+/// compacted to `0..n` preserving relative order.
 pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Csr> {
     let f = File::open(path)?;
     parse_edge_list(BufReader::new(f))
 }
 
 /// Parse an edge list from any reader (see [`read_edge_list`]).
+///
+/// Real SNAP dumps contain self-loops and both orientations of the same
+/// undirected edge; both are scrubbed **at parse time** (canonicalize to
+/// `(min, max)`, sort, dedup) rather than deferred to the builder: a node
+/// mentioned only by self-loops does not survive id compaction, and
+/// duplicates collapse before the compacted per-edge vector is built
+/// (the builder's own dedup then sees no duplicates).
 pub fn parse_edge_list<R: BufRead>(r: R) -> Result<Csr> {
     let mut raw: Vec<(u64, u64)> = Vec::new();
     for (i, line) in r.lines().enumerate() {
@@ -36,8 +43,13 @@ pub fn parse_edge_list<R: BufRead>(r: R) -> Result<Csr> {
         };
         let u = parse(it.next())?;
         let v = parse(it.next())?;
-        raw.push((u, v));
+        if u == v {
+            continue; // self loop: never a triangle edge
+        }
+        raw.push(if u < v { (u, v) } else { (v, u) });
     }
+    raw.sort_unstable();
+    raw.dedup();
     // Compact ids.
     let mut ids: Vec<u64> = raw.iter().flat_map(|&(u, v)| [u, v]).collect();
     ids.sort_unstable();
@@ -117,6 +129,44 @@ mod tests {
         let g = parse_edge_list(Cursor::new(txt)).unwrap();
         assert_eq!(g.num_nodes(), 3);
         assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn duplicate_edges_merged_both_orientations() {
+        // `u v` and `v u` (and a verbatim repeat) are one undirected edge.
+        let txt = "1 2\n2 1\n1 2\n2 3\n";
+        let g = parse_edge_list(Cursor::new(txt)).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.degree(1), 2); // compacted id of node "2"
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn self_loops_dropped_at_parse_time() {
+        // Node 9 appears only in a self-loop: it must not survive
+        // compaction; the remaining graph is the single edge 1–2.
+        let txt = "9 9\n1 2\n2 2\n";
+        let g = parse_edge_list(Cursor::new(txt)).unwrap();
+        assert_eq!(g.num_nodes(), 2);
+        assert_eq!(g.num_edges(), 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn percent_comments_and_whitespace_variants() {
+        // Konect-style `%` headers, tabs, leading spaces.
+        let txt = "% sym unweighted\n%more\n\t1\t2\n  2   3\n# snap too\n3 1\n";
+        let g = parse_edge_list(Cursor::new(txt)).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn only_self_loops_yields_empty_graph() {
+        let g = parse_edge_list(Cursor::new("5 5\n7 7\n")).unwrap();
+        assert_eq!(g.num_nodes(), 0);
+        assert_eq!(g.num_edges(), 0);
     }
 
     #[test]

@@ -12,6 +12,13 @@
 //!   PATRIC baseline, the §V dynamic load balancer, and a calibrated
 //!   cluster cost-model simulator that regenerates the paper's scaling
 //!   figures on a single machine.
+//! * **`stream/`** — incremental parallel counting over edge-update
+//!   batches: an [`stream::overlay::AdjDelta`] mutable overlay on the
+//!   immutable CSR, an exact per-batch Δ counter reusing the `intersect`
+//!   kernels, a parallel driver sharding ops by min-`≺`-endpoint ownership
+//!   over `comm::threads`, sliding-window expiry, periodic compaction back
+//!   into a fresh CSR, and a cost-model throughput projector in
+//!   `sim::streaming`. See `DESIGN.md` §6 for the lifecycle.
 //! * **L2/L1 (python/, build-time only)** — a blocked dense triangle-count
 //!   formulated for the MXU (`sum((L@L) ⊙ L)`) as a Pallas kernel inside a
 //!   JAX model, AOT-lowered to HLO text.
@@ -99,7 +106,19 @@ pub mod sim {
     pub mod dynamic;
     pub mod model;
     pub mod space_efficient;
+    pub mod streaming;
     pub mod work;
+}
+
+pub mod stream {
+    pub mod batch;
+    pub mod compact;
+    pub mod delta;
+    pub mod overlay;
+    pub mod parallel;
+    pub mod state;
+    pub mod window;
+    pub mod workload;
 }
 
 pub mod runtime {

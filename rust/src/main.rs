@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `count`    — count triangles on a workload with a chosen algorithm;
+//! * `stream`   — incremental counting over batched edge updates;
 //! * `generate` — write a workload graph to disk (edge list / binary);
 //! * `partition-stats` — per-partition memory accounting (ours vs PATRIC);
 //! * `exp`      — run paper experiments (`--id table2|fig4|…|all`);
@@ -36,6 +37,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     };
     match cmd.as_str() {
         "count" => cmd_count(&args[1..]),
+        "stream" => cmd_stream(&args[1..]),
         "analyze" => cmd_analyze(&args[1..]),
         "generate" => cmd_generate(&args[1..]),
         "partition-stats" => cmd_partition_stats(&args[1..]),
@@ -62,6 +64,10 @@ COMMANDS:
                     --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
                     --procs P --cost-fn F (unit|dv|patric|new) --scale X
                     --dense-core K --artifacts-dir DIR --config FILE
+  stream            incremental counting over batched edge updates
+                    --workload SPEC --procs P --batch-size N --batches B
+                    --window W (0 = no expiry) --delete-frac F --base-frac F
+                    --compact-every C --out DIR --verify on|off
   generate          build a workload and write it
                     --workload SPEC --out PATH [--format edges|bin]
   analyze           triangle-based network analysis (clustering,
@@ -189,6 +195,149 @@ fn cmd_count(args: &[String]) -> Result<()> {
         cfg.procs,
         t0.elapsed()
     );
+    Ok(())
+}
+
+/// `tricount stream` — drive the incremental engine over a generated
+/// update stream and report exact-count maintenance + projected scaling.
+fn cmd_stream(args: &[String]) -> Result<()> {
+    use tricount::stream::{compact::CompactionPolicy, parallel, window, workload};
+
+    let (cfg, extra) = parse_config(args)?;
+    let get = |key: &str| extra.get(key).map(String::as_str);
+    let parse_f64 = |key: &str, default: f64| -> Result<f64> {
+        get(key).map_or(Ok(default), |s| {
+            s.parse().map_err(|e| Error::Config(format!("--{key}: {e}")))
+        })
+    };
+    let parse_usize = |key: &str, default: usize| -> Result<usize> {
+        get(key).map_or(Ok(default), |s| {
+            s.parse().map_err(|e| Error::Config(format!("--{key}: {e}")))
+        })
+    };
+    reject_unknown(
+        &extra,
+        &["batch-size", "batches", "window", "delete-frac", "base-frac", "compact-every", "out", "verify"],
+    )?;
+    let spec = workload::StreamSpec {
+        base_fraction: parse_f64("base-frac", 0.5)?,
+        batch_size: parse_usize("batch-size", 1_000)?,
+        batches: parse_usize("batches", 50)?,
+        delete_fraction: parse_f64("delete-frac", 0.2)?,
+    };
+    let win = parse_usize("window", 0)?;
+    let compact_every = parse_usize("compact-every", 16)?;
+    let verify = match get("verify") {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(other) => {
+            return Err(Error::Config(format!("--verify expects on|off, got `{other}`")))
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let g = cfg.build_graph()?;
+    let mut rng = tricount::gen::rng::Rng::seeded(cfg.seed);
+    let w = workload::edge_stream(&g, &spec, &mut rng);
+    let batches = if win > 0 { window::expand(&w.base, &w.batches, win) } else { w.batches };
+    println!(
+        "workload={} n={} m={} → base m₀={} + {} updates in {} batches{} (prep {:.2?})",
+        cfg.workload,
+        g.num_nodes(),
+        g.num_edges(),
+        w.base.num_edges(),
+        w.updates,
+        batches.len(),
+        if win > 0 { format!(", window={win}") } else { String::new() },
+        t0.elapsed()
+    );
+
+    let opts = parallel::StreamOptions {
+        policy: CompactionPolicy { every_batches: compact_every, overlay_ratio: 0.10 },
+    };
+    let t0 = std::time::Instant::now();
+    let r = parallel::run(&w.base, &batches, cfg.procs, opts)?;
+    let elapsed = t0.elapsed();
+
+    let totals = r.metrics.totals();
+    let mut report = exp::report::Report::new([
+        "P", "batches", "updates", "eff_ins", "eff_del", "T_initial", "T_final",
+        "compactions", "imbalance", "wall", "upd_per_s",
+    ]);
+    let eff_ins: usize = r.per_batch.iter().map(|b| b.inserts).sum();
+    let eff_del: usize = r.per_batch.iter().map(|b| b.deletes).sum();
+    report.row([
+        cfg.procs.into(),
+        r.per_batch.len().into(),
+        w.updates.into(),
+        eff_ins.into(),
+        eff_del.into(),
+        r.initial_triangles.into(),
+        r.final_triangles.into(),
+        r.compactions.into(),
+        r.metrics.imbalance().into(),
+        exp::report::Cell::Secs(elapsed.as_secs_f64()),
+        ((w.updates as f64 / elapsed.as_secs_f64().max(1e-12)).round()).into(),
+    ]);
+    report.note(format!("counting work: {} element steps", totals.work_units));
+    report.print();
+
+    // Calibrated virtual-time projection: measured split at this P, then
+    // an ideal-balance sweep (same CostModel the paper figures use).
+    let model = tricount::sim::calibrate::calibrated();
+    let per_batch_work: Vec<Vec<u64>> = r.per_batch.iter().map(|b| b.work_per_rank.clone()).collect();
+    let measured = tricount::sim::streaming::project_measured(&model, &per_batch_work, w.updates as u64);
+    let mut proj = exp::report::Report::new(["P", "mode", "virt_time", "upd_per_s", "speedup"]);
+    proj.row([
+        cfg.procs.into(),
+        "measured".into(),
+        exp::report::Cell::Secs(measured.makespan_ns * 1e-9),
+        measured.updates_per_sec.round().into(),
+        measured.speedup.into(),
+    ]);
+    let total_work = r.total_work();
+    for p in [1usize, 2, 4, 8, 16, 32, 64] {
+        let s = tricount::sim::streaming::project_ideal(
+            &model,
+            total_work,
+            r.per_batch.len(),
+            w.updates as u64,
+            p,
+        );
+        proj.row([
+            p.into(),
+            "ideal".into(),
+            exp::report::Cell::Secs(s.makespan_ns * 1e-9),
+            s.updates_per_sec.round().into(),
+            s.speedup.into(),
+        ]);
+    }
+    proj.note(format!("α = {:.2} ns/unit (calibrated)", model.alpha_ns));
+    proj.print();
+
+    if let Some(dir) = get("out") {
+        std::fs::create_dir_all(dir)?;
+        report.write_csv(&format!("{dir}/stream.csv"))?;
+        report.write_json(&format!("{dir}/stream.json"))?;
+        proj.write_csv(&format!("{dir}/stream-projection.csv"))?;
+        proj.write_json(&format!("{dir}/stream-projection.json"))?;
+        println!("[written: {dir}/stream.{{csv,json}}, {dir}/stream-projection.{{csv,json}}]");
+    }
+
+    if verify {
+        let o = Oriented::from_graph(&r.final_graph);
+        let recount = node_iterator::count(&o);
+        if recount != r.final_triangles {
+            return Err(Error::Cluster(format!(
+                "VERIFY FAILED: incremental count {} != from-scratch recount {recount}",
+                r.final_triangles
+            )));
+        }
+        println!(
+            "verify: OK — incremental count {} == from-scratch node-iterator recount",
+            r.final_triangles
+        );
+    }
     Ok(())
 }
 
@@ -329,8 +478,10 @@ fn cmd_exp(args: &[String]) -> Result<()> {
 
 fn cmd_info(args: &[String]) -> Result<()> {
     let (cfg, _extra) = parse_config(args)?;
-    let engine = tricount::runtime::engine::Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    match tricount::runtime::engine::Engine::cpu() {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT platform: unavailable ({e})"),
+    }
     let arts = tricount::runtime::artifact::discover(&cfg.artifacts_dir)?;
     if arts.is_empty() {
         println!("artifacts: none in `{}` (run `make artifacts`)", cfg.artifacts_dir);

@@ -96,6 +96,38 @@ pub fn arb_graph(rng: &mut Rng, max_n: usize) -> crate::graph::csr::Csr {
     }
 }
 
+/// Draw a random sequence of edge-update batches over node set `0..n`:
+/// each update is an insert or delete of a uniformly random pair, so
+/// duplicates, self-loops, no-ops and insert/delete churn all occur —
+/// exactly the input the stream normalizer must absorb.
+pub fn arb_update_batches(
+    rng: &mut Rng,
+    n: usize,
+    max_batches: usize,
+    max_batch_len: usize,
+) -> Vec<crate::stream::batch::Batch> {
+    use crate::stream::batch::{Batch, EdgeUpdate};
+    let batches = 1 + rng.below_usize(max_batches.max(1));
+    (0..batches)
+        .map(|_| {
+            let len = rng.below_usize(max_batch_len.max(1) + 1);
+            Batch::new(
+                (0..len)
+                    .map(|_| {
+                        let u = rng.below(n as u64) as u32;
+                        let v = rng.below(n as u64) as u32;
+                        if rng.chance(0.4) {
+                            EdgeUpdate::delete(u, v)
+                        } else {
+                            EdgeUpdate::insert(u, v)
+                        }
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,121 @@
+//! Virtual-time projection of streaming throughput — the same calibrated
+//! [`CostModel`] that regenerates the paper's scaling figures, applied to
+//! the incremental engine's per-batch work profile.
+//!
+//! A streamed batch on `P` ranks costs, in virtual time,
+//!
+//! ```text
+//! T_batch = max_i (α · W_i)  +  2 · T_allreduce(P)
+//! ```
+//!
+//! where `W_i` is rank `i`'s counting work (the `|N_u| + |N_v|` element
+//! steps recorded by [`crate::stream::delta`]) and the two allreduces are
+//! the positive/negative Δ reductions of the parallel driver. Throughput
+//! is effective updates over Σ batches. Two entry points: project the
+//! *measured* per-rank split of a real run, or sweep `P` under ideal
+//! balance to see where reduction latency caps batch rates.
+
+use crate::sim::model::CostModel;
+
+/// A projected streaming run.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamProjection {
+    /// Virtual makespan of the whole stream, ns.
+    pub makespan_ns: f64,
+    /// Virtual time of the same work on one rank (no reductions), ns.
+    pub t_seq_ns: f64,
+    /// Effective updates per virtual second.
+    pub updates_per_sec: f64,
+    /// `t_seq / makespan`.
+    pub speedup: f64,
+}
+
+/// Virtual cost of an `MPI_Allreduce(SUM)` on a u64: recursive doubling,
+/// `⌈log₂ P⌉` rounds of one small message each way.
+pub fn allreduce_ns(model: &CostModel, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let rounds = (p as f64).log2().ceil();
+    rounds * (2.0 * model.net_latency_ns + 2.0 * model.cpu_per_msg_ns + model.msg_endpoint_ns(8))
+}
+
+/// Project from a measured run: `per_batch_work[b][i]` = rank `i`'s work
+/// in batch `b` (see `StreamRunResult::per_batch`).
+pub fn project_measured(
+    model: &CostModel,
+    per_batch_work: &[Vec<u64>],
+    updates: u64,
+) -> StreamProjection {
+    let p = per_batch_work.first().map_or(1, Vec::len);
+    let mut makespan = 0.0f64;
+    let mut total_work = 0u64;
+    for batch in per_batch_work {
+        let max = batch.iter().copied().max().unwrap_or(0);
+        total_work += batch.iter().sum::<u64>();
+        makespan += model.compute_ns(max) + 2.0 * allreduce_ns(model, p);
+    }
+    finish(model, makespan, total_work, updates)
+}
+
+/// Project an idealized run: total counting work split perfectly over `p`
+/// ranks, `batches` reduction rounds. The P-sweep the CLI prints.
+pub fn project_ideal(
+    model: &CostModel,
+    total_work: u64,
+    batches: usize,
+    updates: u64,
+    p: usize,
+) -> StreamProjection {
+    let makespan = model.compute_ns(total_work) / p.max(1) as f64
+        + batches as f64 * 2.0 * allreduce_ns(model, p);
+    finish(model, makespan, total_work, updates)
+}
+
+fn finish(model: &CostModel, makespan_ns: f64, total_work: u64, updates: u64) -> StreamProjection {
+    let t_seq_ns = model.compute_ns(total_work);
+    StreamProjection {
+        makespan_ns,
+        t_seq_ns,
+        updates_per_sec: if makespan_ns > 0.0 {
+            updates as f64 / (makespan_ns * 1e-9)
+        } else {
+            0.0
+        },
+        speedup: if makespan_ns > 0.0 { t_seq_ns / makespan_ns } else { 1.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_grows_with_p_and_is_free_on_one_rank() {
+        let m = CostModel::default();
+        assert_eq!(allreduce_ns(&m, 1), 0.0);
+        assert!(allreduce_ns(&m, 2) > 0.0);
+        assert!(allreduce_ns(&m, 16) > allreduce_ns(&m, 4));
+    }
+
+    #[test]
+    fn measured_projection_uses_the_slowest_rank() {
+        let m = CostModel::noiseless();
+        let balanced = project_measured(&m, &[vec![100, 100]], 10);
+        let skewed = project_measured(&m, &[vec![190, 10]], 10);
+        assert!(skewed.makespan_ns > balanced.makespan_ns);
+        assert_eq!(balanced.t_seq_ns, skewed.t_seq_ns, "same total work");
+    }
+
+    #[test]
+    fn ideal_scaling_saturates_at_reduction_latency() {
+        let m = CostModel::default();
+        let one = project_ideal(&m, 1_000_000, 50, 50_000, 1);
+        let eight = project_ideal(&m, 1_000_000, 50, 50_000, 8);
+        assert!(eight.updates_per_sec > one.updates_per_sec);
+        assert!(eight.speedup > 1.0 && eight.speedup <= 8.0);
+        // With huge P the makespan floors at the reduction term.
+        let huge = project_ideal(&m, 1_000_000, 50, 50_000, 4096);
+        assert!(huge.makespan_ns >= 50.0 * 2.0 * allreduce_ns(&m, 4096));
+    }
+}

@@ -1,0 +1,248 @@
+//! Edge-update batches and their normalization.
+//!
+//! A raw [`Batch`] is what arrives from the outside world: an *ordered*
+//! list of insert/delete operations, possibly containing duplicates,
+//! self-loops, no-ops (inserting a present edge, deleting an absent one)
+//! and insert/delete churn on the same edge. The triangle count after a
+//! batch depends only on the **final** edge set, so normalization reduces
+//! the batch to its net effect against the pre-batch snapshot:
+//!
+//! * `I` — edges absent before the batch and present after (inserts);
+//! * `D` — edges present before and absent after (deletes);
+//! * everything else (self-loops, duplicates, cancelled churn) dropped.
+//!
+//! The surviving *effective ops* are placed in a canonical total order
+//! (deletes before inserts, each sorted by endpoint pair) and indexed —
+//! the exact delta counter in [`crate::stream::delta`] evaluates op `i`
+//! against the graph state with effective ops `< i` applied, which makes
+//! the per-op counts order-defined and therefore shardable across ranks
+//! without coordination.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::stream::overlay::AdjDelta;
+use crate::VertexId;
+
+/// One raw edge update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeUpdate {
+    pub u: VertexId,
+    pub v: VertexId,
+    /// `true` = insert, `false` = delete.
+    pub insert: bool,
+}
+
+impl EdgeUpdate {
+    pub fn insert(u: VertexId, v: VertexId) -> Self {
+        EdgeUpdate { u, v, insert: true }
+    }
+
+    pub fn delete(u: VertexId, v: VertexId) -> Self {
+        EdgeUpdate { u, v, insert: false }
+    }
+}
+
+/// An ordered list of raw edge updates applied atomically.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub updates: Vec<EdgeUpdate>,
+}
+
+impl Batch {
+    pub fn new(updates: Vec<EdgeUpdate>) -> Self {
+        Batch { updates }
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+}
+
+/// One effective (net) op of a normalized batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EffOp {
+    pub u: VertexId,
+    pub v: VertexId,
+    /// `true` = edge is inserted by the batch, `false` = deleted.
+    pub insert: bool,
+}
+
+/// Canonical `u64` key of an undirected edge (`min ∥ max`).
+#[inline]
+pub fn edge_key(u: VertexId, v: VertexId) -> u64 {
+    let (a, b) = if u <= v { (u, v) } else { (v, u) };
+    ((a as u64) << 32) | b as u64
+}
+
+/// A batch reduced to its net effect, in canonical op order (see module
+/// docs). Carries the lookup structures the delta counter needs to adjust
+/// snapshot intersections for mid-batch state.
+#[derive(Clone, Debug, Default)]
+pub struct NormalizedBatch {
+    /// Effective ops; position = op index in the canonical order.
+    pub ops: Vec<EffOp>,
+    /// Effective inserts (`= ops.iter().filter(|o| o.insert).count()`).
+    pub inserts: usize,
+    /// Effective deletes.
+    pub deletes: usize,
+    /// `edge_key → op index` over `ops`.
+    index: HashMap<u64, usize>,
+    /// `endpoint → sorted other-endpoints` over `ops` (both directions).
+    incident: HashMap<VertexId, Vec<VertexId>>,
+}
+
+impl NormalizedBatch {
+    /// Index of the effective op on `{u, v}`, if the batch touches it.
+    #[inline]
+    pub fn op_index(&self, u: VertexId, v: VertexId) -> Option<usize> {
+        self.index.get(&edge_key(u, v)).copied()
+    }
+
+    /// Endpoints `w` such that the batch has an effective op on `{v, w}`.
+    #[inline]
+    pub fn touched(&self, v: VertexId) -> &[VertexId] {
+        self.incident.get(&v).map_or(&[], Vec::as_slice)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Normalize a raw batch against the current snapshot (`base` + `overlay`).
+///
+/// Replays the batch's sequential semantics on a per-edge presence bit
+/// (later ops win), then keeps only edges whose final presence differs
+/// from the pre-batch snapshot. Endpoints must be `< n`; self-loops are
+/// dropped silently (mirroring [`crate::graph::builder`]).
+pub fn normalize(base: &Csr, overlay: &AdjDelta, batch: &Batch) -> Result<NormalizedBatch> {
+    let n = base.num_nodes();
+    // edge key → (initial presence, desired presence after the batch).
+    let mut net: HashMap<u64, (bool, bool)> = HashMap::with_capacity(batch.len());
+    for up in &batch.updates {
+        let (u, v) = (up.u, up.v);
+        if u as usize >= n || v as usize >= n {
+            return Err(Error::InvalidGraph(format!(
+                "update ({u},{v}) out of range for n={n}"
+            )));
+        }
+        if u == v {
+            continue;
+        }
+        let e = net
+            .entry(edge_key(u, v))
+            .or_insert_with(|| {
+                let present = overlay.has_edge(base, u, v);
+                (present, present)
+            });
+        e.1 = up.insert;
+    }
+
+    let mut ops: Vec<EffOp> = net
+        .into_iter()
+        .filter(|&(_, (was, now))| was != now)
+        .map(|(key, (_, now))| EffOp {
+            u: (key >> 32) as VertexId,
+            v: key as VertexId,
+            insert: now,
+        })
+        .collect();
+    // Canonical total order: deletes first, then inserts, each by (u, v).
+    ops.sort_unstable_by_key(|o| (o.insert, o.u, o.v));
+
+    let mut index = HashMap::with_capacity(ops.len());
+    let mut incident: HashMap<VertexId, Vec<VertexId>> = HashMap::new();
+    let mut inserts = 0;
+    for (i, op) in ops.iter().enumerate() {
+        index.insert(edge_key(op.u, op.v), i);
+        incident.entry(op.u).or_default().push(op.v);
+        incident.entry(op.v).or_default().push(op.u);
+        inserts += op.insert as usize;
+    }
+    for list in incident.values_mut() {
+        list.sort_unstable();
+        list.dedup();
+    }
+    let deletes = ops.len() - inserts;
+    Ok(NormalizedBatch { ops, inserts, deletes, index, incident })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+
+    fn setup() -> (Csr, AdjDelta) {
+        // 0-1, 1-2 present.
+        let base = from_edges(5, [(0, 1), (1, 2)]).unwrap();
+        let d = AdjDelta::new(5);
+        (base, d)
+    }
+
+    #[test]
+    fn noops_and_self_loops_dropped() {
+        let (base, d) = setup();
+        let b = Batch::new(vec![
+            EdgeUpdate::insert(0, 1), // already present
+            EdgeUpdate::delete(3, 4), // already absent
+            EdgeUpdate::insert(2, 2), // self loop
+        ]);
+        let nb = normalize(&base, &d, &b).unwrap();
+        assert!(nb.is_empty());
+    }
+
+    #[test]
+    fn churn_cancels_by_final_state() {
+        let (base, d) = setup();
+        let b = Batch::new(vec![
+            EdgeUpdate::insert(3, 4),
+            EdgeUpdate::delete(3, 4), // insert+delete of a new edge: net nothing
+            EdgeUpdate::delete(0, 1),
+            EdgeUpdate::insert(1, 0), // delete+insert of a present edge: net nothing
+        ]);
+        let nb = normalize(&base, &d, &b).unwrap();
+        assert!(nb.is_empty());
+    }
+
+    #[test]
+    fn canonical_order_deletes_first() {
+        let (base, d) = setup();
+        let b = Batch::new(vec![
+            EdgeUpdate::insert(2, 3),
+            EdgeUpdate::delete(1, 2),
+            EdgeUpdate::insert(0, 4),
+        ]);
+        let nb = normalize(&base, &d, &b).unwrap();
+        assert_eq!(nb.deletes, 1);
+        assert_eq!(nb.inserts, 2);
+        assert!(!nb.ops[0].insert);
+        assert_eq!((nb.ops[0].u, nb.ops[0].v), (1, 2));
+        assert_eq!((nb.ops[1].u, nb.ops[1].v), (0, 4));
+        assert_eq!((nb.ops[2].u, nb.ops[2].v), (2, 3));
+        assert_eq!(nb.op_index(4, 0), Some(1), "endpoint order irrelevant");
+        assert_eq!(nb.op_index(0, 3), None);
+        assert_eq!(nb.touched(2), &[1, 3]);
+    }
+
+    #[test]
+    fn normalization_sees_the_overlay() {
+        let (base, mut d) = setup();
+        d.remove(&base, 0, 1);
+        let b = Batch::new(vec![EdgeUpdate::insert(0, 1)]);
+        let nb = normalize(&base, &d, &b).unwrap();
+        assert_eq!(nb.inserts, 1, "edge deleted in overlay ⇒ insert is effective");
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let (base, d) = setup();
+        let b = Batch::new(vec![EdgeUpdate::insert(0, 9)]);
+        assert!(normalize(&base, &d, &b).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! `AdjDelta` — a mutable adjacency overlay on top of the immutable
+//! [`Csr`] snapshot.
+//!
+//! The static algorithms keep their zero-copy CSR; the streaming engine
+//! layers per-node *added* and *removed* neighbor sets on top of it. The
+//! current graph is
+//!
+//! ```text
+//! G_cur = (G_base ∪ added) \ removed        added ∩ base = ∅, removed ⊆ base
+//! ```
+//!
+//! Both delta sets are kept sorted by node id and symmetric (an edge
+//! appears in both endpoints' lists), mirroring the CSR invariants so the
+//! merged view [`AdjDelta::current_nbrs`] is id-sorted and the intersection
+//! kernels in [`crate::intersect`] apply unchanged. Deltas stay small
+//! between compactions ([`crate::stream::compact`] folds them back into a
+//! fresh CSR), so the sorted-`Vec` insert cost is bounded in practice.
+
+use crate::graph::csr::Csr;
+use crate::VertexId;
+
+/// Mutable adjacency delta over a base CSR (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct AdjDelta {
+    /// Per-node sorted lists of neighbors present in `G_cur` but not base.
+    added: Vec<Vec<VertexId>>,
+    /// Per-node sorted lists of base neighbors deleted from `G_cur`.
+    removed: Vec<Vec<VertexId>>,
+    /// Undirected added-edge count.
+    added_edges: u64,
+    /// Undirected removed-edge count.
+    removed_edges: u64,
+}
+
+impl AdjDelta {
+    /// Empty overlay for a graph on `n` nodes.
+    pub fn new(n: usize) -> Self {
+        AdjDelta {
+            added: vec![Vec::new(); n],
+            removed: vec![Vec::new(); n],
+            added_edges: 0,
+            removed_edges: 0,
+        }
+    }
+
+    /// Number of nodes (fixed: streaming updates edges, never nodes).
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.added.len()
+    }
+
+    /// Undirected edges added on top of the base snapshot.
+    #[inline]
+    pub fn added_edges(&self) -> u64 {
+        self.added_edges
+    }
+
+    /// Undirected base edges masked out by deletions.
+    #[inline]
+    pub fn removed_edges(&self) -> u64 {
+        self.removed_edges
+    }
+
+    /// Total overlay entries (the compaction policy's size signal).
+    #[inline]
+    pub fn delta_edges(&self) -> u64 {
+        self.added_edges + self.removed_edges
+    }
+
+    /// `true` iff the overlay holds no deltas (current graph == base).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.delta_edges() == 0
+    }
+
+    /// Bytes held by the overlay lists (edge entries, both directions).
+    pub fn memory_bytes(&self) -> u64 {
+        let entries: usize = self
+            .added
+            .iter()
+            .chain(self.removed.iter())
+            .map(|l| l.len())
+            .sum();
+        (entries * std::mem::size_of::<VertexId>()) as u64
+    }
+
+    /// `true` iff `{u, v}` is an edge of the current graph.
+    pub fn has_edge(&self, base: &Csr, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
+        if contains(&self.removed[u as usize], v) {
+            return false;
+        }
+        contains(&self.added[u as usize], v) || base.has_edge(u, v)
+    }
+
+    /// Degree of `v` in the current graph. O(1).
+    #[inline]
+    pub fn current_degree(&self, base: &Csr, v: VertexId) -> usize {
+        base.degree(v) + self.added[v as usize].len() - self.removed[v as usize].len()
+    }
+
+    /// Undirected edge count of the current graph.
+    #[inline]
+    pub fn current_edge_count(&self, base: &Csr) -> u64 {
+        base.num_edges() + self.added_edges - self.removed_edges
+    }
+
+    /// Insert edge `{u, v}` into the current graph. Returns `false` (and
+    /// changes nothing) when the edge is already present or `u == v`.
+    pub fn insert(&mut self, base: &Csr, u: VertexId, v: VertexId) -> bool {
+        if u == v || self.has_edge(base, u, v) {
+            return false;
+        }
+        if base.has_edge(u, v) {
+            // Present in base but masked: un-delete.
+            remove_sorted(&mut self.removed[u as usize], v);
+            remove_sorted(&mut self.removed[v as usize], u);
+            self.removed_edges -= 1;
+        } else {
+            insert_sorted(&mut self.added[u as usize], v);
+            insert_sorted(&mut self.added[v as usize], u);
+            self.added_edges += 1;
+        }
+        true
+    }
+
+    /// Delete edge `{u, v}` from the current graph. Returns `false` (and
+    /// changes nothing) when the edge is absent or `u == v`.
+    pub fn remove(&mut self, base: &Csr, u: VertexId, v: VertexId) -> bool {
+        if u == v || !self.has_edge(base, u, v) {
+            return false;
+        }
+        if contains(&self.added[u as usize], v) {
+            remove_sorted(&mut self.added[u as usize], v);
+            remove_sorted(&mut self.added[v as usize], u);
+            self.added_edges -= 1;
+        } else {
+            insert_sorted(&mut self.removed[u as usize], v);
+            insert_sorted(&mut self.removed[v as usize], u);
+            self.removed_edges += 1;
+        }
+        true
+    }
+
+    /// Materialize `v`'s current neighbor list into `out` (sorted by id):
+    /// a three-way merge of `base \ removed ∪ added`. O(d_v + |deltas_v|).
+    pub fn current_nbrs(&self, base: &Csr, v: VertexId, out: &mut Vec<VertexId>) {
+        out.clear();
+        let bs = base.neighbors(v);
+        let add = &self.added[v as usize];
+        let del = &self.removed[v as usize];
+        out.reserve(bs.len() + add.len());
+        let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+        while i < bs.len() || j < add.len() {
+            // added ∩ base = ∅, so exactly one side advances per step.
+            let take_base = j >= add.len() || (i < bs.len() && bs[i] < add[j]);
+            if take_base {
+                let w = bs[i];
+                i += 1;
+                // Skip base neighbors masked by `removed` (both sorted).
+                while k < del.len() && del[k] < w {
+                    k += 1;
+                }
+                if k < del.len() && del[k] == w {
+                    k += 1;
+                    continue;
+                }
+                out.push(w);
+            } else {
+                out.push(add[j]);
+                j += 1;
+            }
+        }
+    }
+
+    /// All undirected edges `(u, v)` with `u < v` of the current graph —
+    /// the compaction input. O(n + m + |deltas|).
+    pub fn current_edges(&self, base: &Csr) -> Vec<(VertexId, VertexId)> {
+        let mut edges = Vec::with_capacity(self.current_edge_count(base) as usize);
+        let mut buf = Vec::new();
+        for v in 0..self.num_nodes() as VertexId {
+            self.current_nbrs(base, v, &mut buf);
+            for &u in &buf {
+                if v < u {
+                    edges.push((v, u));
+                }
+            }
+        }
+        edges
+    }
+}
+
+/// Binary-search membership in a sorted list.
+#[inline]
+fn contains(list: &[VertexId], x: VertexId) -> bool {
+    list.binary_search(&x).is_ok()
+}
+
+/// Sorted insert; `x` must be absent.
+#[inline]
+fn insert_sorted(list: &mut Vec<VertexId>, x: VertexId) {
+    let i = list.partition_point(|&y| y < x);
+    debug_assert!(i == list.len() || list[i] != x);
+    list.insert(i, x);
+}
+
+/// Sorted removal; `x` must be present.
+#[inline]
+fn remove_sorted(list: &mut Vec<VertexId>, x: VertexId) {
+    let i = list.binary_search(&x).expect("overlay symmetry violated");
+    list.remove(i);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_edges;
+    use crate::graph::classic;
+
+    fn nbrs(d: &AdjDelta, base: &Csr, v: VertexId) -> Vec<VertexId> {
+        let mut out = Vec::new();
+        d.current_nbrs(base, v, &mut out);
+        out
+    }
+
+    #[test]
+    fn insert_and_remove_roundtrip() {
+        let base = from_edges(4, [(0, 1), (1, 2)]).unwrap();
+        let mut d = AdjDelta::new(4);
+        assert!(d.insert(&base, 2, 3));
+        assert!(!d.insert(&base, 2, 3), "duplicate insert is a no-op");
+        assert!(d.has_edge(&base, 3, 2));
+        assert_eq!(nbrs(&d, &base, 2), vec![1, 3]);
+        assert_eq!(d.current_edge_count(&base), 3);
+
+        assert!(d.remove(&base, 0, 1));
+        assert!(!d.remove(&base, 0, 1), "double delete is a no-op");
+        assert!(!d.has_edge(&base, 0, 1));
+        assert_eq!(nbrs(&d, &base, 1), vec![2]);
+        assert_eq!(d.current_edge_count(&base), 2);
+    }
+
+    #[test]
+    fn undelete_restores_base_edge_without_growth() {
+        let base = from_edges(3, [(0, 1)]).unwrap();
+        let mut d = AdjDelta::new(3);
+        assert!(d.remove(&base, 0, 1));
+        assert_eq!(d.removed_edges(), 1);
+        assert!(d.insert(&base, 0, 1));
+        assert!(d.is_empty(), "delete+insert of a base edge cancels");
+        assert_eq!(nbrs(&d, &base, 0), vec![1]);
+    }
+
+    #[test]
+    fn insert_then_delete_of_new_edge_cancels() {
+        let base = Csr::empty(3);
+        let mut d = AdjDelta::new(3);
+        assert!(d.insert(&base, 0, 2));
+        assert!(d.remove(&base, 2, 0));
+        assert!(d.is_empty());
+        assert_eq!(d.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn self_loops_rejected() {
+        let base = Csr::empty(2);
+        let mut d = AdjDelta::new(2);
+        assert!(!d.insert(&base, 1, 1));
+        assert!(!d.remove(&base, 1, 1));
+        assert!(!d.has_edge(&base, 1, 1));
+    }
+
+    #[test]
+    fn merged_view_stays_sorted_and_degrees_agree() {
+        let base = classic::karate();
+        let n = base.num_nodes();
+        let mut d = AdjDelta::new(n);
+        d.insert(&base, 0, 9);
+        d.remove(&base, 0, 1);
+        d.insert(&base, 30, 2);
+        for v in 0..n as VertexId {
+            let ns = nbrs(&d, &base, v);
+            assert!(ns.windows(2).all(|w| w[0] < w[1]), "N_{v} unsorted: {ns:?}");
+            assert_eq!(ns.len(), d.current_degree(&base, v), "degree of {v}");
+        }
+    }
+
+    #[test]
+    fn current_edges_match_rebuilt_graph() {
+        let base = classic::karate();
+        let mut d = AdjDelta::new(base.num_nodes());
+        d.remove(&base, 0, 1);
+        d.remove(&base, 33, 32);
+        d.insert(&base, 5, 25);
+        let edges = d.current_edges(&base);
+        assert_eq!(edges.len() as u64, d.current_edge_count(&base));
+        let g = from_edges(base.num_nodes(), edges).unwrap();
+        g.validate().unwrap();
+        assert!(!g.has_edge(0, 1));
+        assert!(g.has_edge(5, 25));
+    }
+}

@@ -1,0 +1,308 @@
+//! Parallel streaming driver over the [`crate::comm::threads`] runtime.
+//!
+//! Each of the `P` ranks keeps a full replica of the stream state (base CSR
+//! + overlay), faithful to §V's "every machine stores the whole network"
+//! model; only the *counting* is sharded. Per batch, every rank normalizes
+//! identically (deterministic given the replicated state), then counts the
+//! effective ops it **owns** and the partial Δs meet in an
+//! `MPI_Allreduce(SUM)`.
+//!
+//! Ownership follows the non-overlapping §IV design transplanted to edge
+//! updates: the owner of effective op `{u, v}` is the rank owning the
+//! endpoint that comes *first* in the degree order `≺` (the min-degree
+//! endpoint, degrees taken in the current graph) under the
+//! [`crate::partition::balance::owner_table`] routing — surrogate-style,
+//! every op counted by exactly one rank, no partition overlaps. Counting
+//! from the min-degree side also feeds the adaptive intersection kernel
+//! its cheap skewed case, which matters in the large-degree regime this
+//! paper targets.
+
+use std::sync::Arc;
+
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::{Cluster, Comm};
+use crate::config::CostFn;
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::graph::ordering::{precedes, Oriented};
+use crate::partition::balance::{balanced_ranges, owner_table};
+use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::seq::node_iterator;
+use crate::stream::batch::Batch;
+use crate::stream::compact::CompactionPolicy;
+use crate::stream::delta::{count_op, Scratch};
+use crate::stream::state::StreamState;
+use crate::TriangleCount;
+
+/// Options for a parallel stream run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamOptions {
+    pub policy: CompactionPolicy,
+}
+
+/// Per-batch statistics (rank-0 view of the reduced quantities plus the
+/// per-rank work split for imbalance/sim projection).
+#[derive(Clone, Debug)]
+pub struct BatchStats {
+    /// Reduced signed Δ.
+    pub delta: i64,
+    /// Global count after the batch.
+    pub triangles: TriangleCount,
+    /// Effective inserts / deletes after normalization.
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Counting work each rank performed for this batch.
+    pub work_per_rank: Vec<u64>,
+}
+
+/// Result of streaming a batch sequence through `P` ranks.
+#[derive(Clone, Debug)]
+pub struct StreamRunResult {
+    pub initial_triangles: TriangleCount,
+    pub final_triangles: TriangleCount,
+    pub per_batch: Vec<BatchStats>,
+    /// The current graph after the last batch (rank 0's materialization) —
+    /// what `--verify` recounts from scratch.
+    pub final_graph: Csr,
+    pub metrics: ClusterMetrics,
+    /// Compactions performed (per replica; identical on every rank).
+    pub compactions: u64,
+}
+
+impl StreamRunResult {
+    /// Total effective updates applied.
+    pub fn effective_updates(&self) -> u64 {
+        self.per_batch.iter().map(|b| (b.inserts + b.deletes) as u64).sum()
+    }
+
+    /// Per-rank counting work over the whole stream.
+    pub fn total_work(&self) -> u64 {
+        self.per_batch.iter().flat_map(|b| &b.work_per_rank).sum()
+    }
+}
+
+/// One rank's record of one batch.
+#[derive(Clone, Copy)]
+struct RankBatch {
+    /// Reduced (global) Δ — identical on every rank after the allreduce.
+    delta: i64,
+    /// This rank's counting work.
+    work: u64,
+    /// Effective op counts (identical on every rank).
+    inserts: u32,
+    deletes: u32,
+}
+
+/// What each rank returns to the driver.
+struct RankOutput {
+    per_batch: Vec<RankBatch>,
+    /// Rank 0 materializes the final graph; other ranks skip it.
+    final_graph: Option<Csr>,
+    compactions: u64,
+}
+
+/// Stream `batches` through `p` ranks. The initial count is taken once on
+/// the driver; every rank then maintains a replica in lockstep.
+pub fn run(base: &Csr, batches: &[Batch], p: usize, opts: StreamOptions) -> Result<StreamRunResult> {
+    let initial = node_iterator::count(&Oriented::from_graph(base));
+    run_with_initial(base, batches, p, opts, initial)
+}
+
+/// [`run`] with the snapshot's triangle count already known — lets callers
+/// that replay the same snapshot (benches, repeated experiments) keep the
+/// one-time static count out of the measured region.
+pub fn run_with_initial(
+    base: &Csr,
+    batches: &[Batch],
+    p: usize,
+    opts: StreamOptions,
+    initial: TriangleCount,
+) -> Result<StreamRunResult> {
+    assert!(p >= 1, "need at least one rank");
+    // Balance node ownership by degree (the streaming analogue of §IV-B:
+    // an update's cost is the degree of its endpoints).
+    let o = Oriented::from_graph(base);
+    let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
+    let owner: Arc<Vec<u32>> = Arc::new(owner_table(&ranges, base.num_nodes()));
+    drop(o);
+
+    let base: Arc<Csr> = Arc::new(base.clone());
+    let batches: Arc<Vec<Batch>> = Arc::new(batches.to_vec());
+
+    let results = Cluster::run::<u64, RankOutput, _>(p, |c| {
+        rank_main(c, base.clone(), batches.clone(), owner.clone(), opts, initial)
+    })?;
+
+    let mut metrics = ClusterMetrics::default();
+    let mut outputs = Vec::with_capacity(p);
+    for (out, m) in results {
+        metrics.per_rank.push(m);
+        outputs.push(out);
+    }
+    let final_graph = outputs[0]
+        .final_graph
+        .take()
+        .ok_or_else(|| Error::Cluster("rank 0 produced no final graph".into()))?;
+
+    let mut per_batch = Vec::with_capacity(batches.len());
+    let mut triangles = initial;
+    for bi in 0..batches.len() {
+        let rb = outputs[0].per_batch[bi];
+        for out in &outputs {
+            debug_assert_eq!(out.per_batch[bi].delta, rb.delta, "ranks disagree on batch {bi}");
+        }
+        triangles = (triangles as i64 + rb.delta) as u64;
+        per_batch.push(BatchStats {
+            delta: rb.delta,
+            triangles,
+            inserts: rb.inserts as usize,
+            deletes: rb.deletes as usize,
+            work_per_rank: outputs.iter().map(|o| o.per_batch[bi].work).collect(),
+        });
+    }
+    let final_triangles = triangles;
+
+    Ok(StreamRunResult {
+        initial_triangles: initial,
+        final_triangles,
+        per_batch,
+        final_graph,
+        metrics,
+        compactions: outputs[0].compactions,
+    })
+}
+
+/// The per-rank program: replicate state, count owned ops, allreduce.
+fn rank_main(
+    c: &mut Comm<u64>,
+    base: Arc<Csr>,
+    batches: Arc<Vec<Batch>>,
+    owner: Arc<Vec<u32>>,
+    opts: StreamOptions,
+    initial: TriangleCount,
+) -> RankOutput {
+    let me = c.rank() as u32;
+    let mut state = StreamState::with_initial((*base).clone(), opts.policy, initial);
+    let mut scratch = Scratch::default();
+    let mut per_batch = Vec::with_capacity(batches.len());
+
+    for batch in batches.iter() {
+        let nb = crate::stream::batch::normalize(state.base(), state.overlay(), batch)
+            .expect("batch normalization failed");
+        // Count the ops this rank owns: min-≺ endpoint routing.
+        let (mut plus, mut minus, mut work) = (0u64, 0u64, 0u64);
+        for (i, op) in nb.ops.iter().enumerate() {
+            let du = state.overlay().current_degree(state.base(), op.u) as u32;
+            let dv = state.overlay().current_degree(state.base(), op.v) as u32;
+            let e = if precedes(du, op.u, dv, op.v) { op.u } else { op.v };
+            if owner[e as usize] != me {
+                continue;
+            }
+            let r = count_op(state.base(), state.overlay(), &nb, i, &mut scratch);
+            if r.delta >= 0 {
+                plus += r.delta as u64;
+            } else {
+                minus += (-r.delta) as u64;
+            }
+            work += r.work;
+        }
+        // MPI_Allreduce(SUM) ×2: positive and negative magnitudes.
+        let delta = c.reduce_sum(plus) as i64 - c.reduce_sum(minus) as i64;
+        c.metrics.work_units += work;
+        state
+            .apply_normalized(&nb, delta)
+            .expect("replica diverged while applying normalized batch");
+        state.maybe_compact().expect("compaction failed");
+        per_batch.push(RankBatch {
+            delta,
+            work,
+            inserts: nb.inserts as u32,
+            deletes: nb.deletes as u32,
+        });
+    }
+
+    let final_graph = if c.rank() == 0 {
+        Some(state.snapshot().expect("final materialization failed"))
+    } else {
+        None
+    };
+    RankOutput { per_batch, final_graph, compactions: state.compactions() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+    use crate::graph::classic;
+    use crate::stream::batch::EdgeUpdate;
+
+    fn random_batches(base: &Csr, count: usize, size: usize, seed: u64) -> Vec<Batch> {
+        let n = base.num_nodes() as u64;
+        let mut rng = Rng::seeded(seed);
+        (0..count)
+            .map(|_| {
+                Batch::new(
+                    (0..size)
+                        .map(|_| {
+                            let u = rng.below(n) as u32;
+                            let v = rng.below(n) as u32;
+                            if rng.chance(0.45) {
+                                EdgeUpdate::delete(u, v)
+                            } else {
+                                EdgeUpdate::insert(u, v)
+                            }
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential_and_oracle() {
+        let base = classic::karate();
+        let batches = random_batches(&base, 12, 10, 0xABCD);
+        // Sequential reference through StreamState.
+        let mut seq = StreamState::new(base.clone());
+        for b in &batches {
+            seq.apply_batch(b).unwrap();
+        }
+        let expect = seq.recount().unwrap();
+        assert_eq!(seq.triangles(), expect, "sequential engine must be exact");
+
+        for p in [1, 2, 4, 7] {
+            let r = run(&base, &batches, p, StreamOptions::default()).unwrap();
+            assert_eq!(r.final_triangles, expect, "P={p}");
+            let recount = node_iterator::count(&Oriented::from_graph(&r.final_graph));
+            assert_eq!(r.final_triangles, recount, "P={p} recount");
+        }
+    }
+
+    #[test]
+    fn per_batch_deltas_sum_to_final() {
+        let base = classic::complete(10);
+        let batches = random_batches(&base, 6, 8, 7);
+        let r = run(&base, &batches, 3, StreamOptions::default()).unwrap();
+        let sum: i64 = r.per_batch.iter().map(|b| b.delta).sum();
+        assert_eq!(
+            r.initial_triangles as i64 + sum,
+            r.final_triangles as i64
+        );
+        assert_eq!(r.per_batch.last().unwrap().triangles, r.final_triangles);
+    }
+
+    #[test]
+    fn work_is_sharded_not_replicated() {
+        // With 4 ranks, total work should equal the 1-rank total (each op
+        // counted exactly once), split across ranks.
+        let base = classic::karate();
+        let batches = random_batches(&base, 8, 12, 99);
+        let r1 = run(&base, &batches, 1, StreamOptions::default()).unwrap();
+        let r4 = run(&base, &batches, 4, StreamOptions::default()).unwrap();
+        assert_eq!(r1.total_work(), r4.total_work());
+        let rank_works: Vec<u64> = (0..4)
+            .map(|k| r4.per_batch.iter().map(|b| b.work_per_rank[k]).sum())
+            .collect();
+        assert!(rank_works.iter().filter(|&&w| w > 0).count() >= 2, "{rank_works:?}");
+    }
+}

@@ -1,0 +1,261 @@
+//! `StreamState` — the sequential incremental counting engine.
+//!
+//! Owns the base CSR, the [`AdjDelta`] overlay, the running exact triangle
+//! count and the compaction policy. One [`StreamState::apply_batch`] call
+//! is the full lifecycle: normalize → count Δ → apply to overlay →
+//! maybe compact. The parallel driver in [`crate::stream::parallel`] runs
+//! one replica of this state per rank and shards only the counting.
+
+use crate::error::{Error, Result};
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::seq::node_iterator;
+use crate::stream::batch::{normalize, Batch, NormalizedBatch};
+use crate::stream::compact::{materialize, CompactionPolicy};
+use crate::stream::delta::{count_batch, count_op, Scratch};
+use crate::stream::overlay::AdjDelta;
+use crate::TriangleCount;
+
+/// Per-batch outcome returned by [`StreamState::apply_batch`].
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Signed triangle-count change.
+    pub delta: i64,
+    /// Triangle count after the batch.
+    pub triangles: TriangleCount,
+    /// Effective inserts / deletes after normalization.
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Element steps spent counting (see [`crate::stream::delta`]).
+    pub work: u64,
+    /// Whether this batch triggered a compaction.
+    pub compacted: bool,
+    /// The normalized batch (the window driver records effective inserts).
+    pub normalized: NormalizedBatch,
+}
+
+/// Sequential incremental triangle counter (see module docs).
+pub struct StreamState {
+    base: Csr,
+    overlay: AdjDelta,
+    triangles: TriangleCount,
+    policy: CompactionPolicy,
+    batches_since_compact: usize,
+    batches_applied: u64,
+    compactions: u64,
+    scratch: Scratch,
+}
+
+impl StreamState {
+    /// Start from a snapshot, paying one static count (Fig 1 kernel).
+    pub fn new(base: Csr) -> Self {
+        StreamState::with_policy(base, CompactionPolicy::default())
+    }
+
+    /// Start with an explicit compaction policy.
+    pub fn with_policy(base: Csr, policy: CompactionPolicy) -> Self {
+        let triangles = node_iterator::count(&Oriented::from_graph(&base));
+        StreamState::with_initial(base, policy, triangles)
+    }
+
+    /// Start from a snapshot whose triangle count is already known — the
+    /// parallel driver counts once and hands the value to every replica.
+    pub fn with_initial(base: Csr, policy: CompactionPolicy, triangles: TriangleCount) -> Self {
+        let overlay = AdjDelta::new(base.num_nodes());
+        StreamState {
+            base,
+            overlay,
+            triangles,
+            policy,
+            batches_since_compact: 0,
+            batches_applied: 0,
+            compactions: 0,
+            scratch: Scratch::default(),
+        }
+    }
+
+    /// Current exact triangle count.
+    #[inline]
+    pub fn triangles(&self) -> TriangleCount {
+        self.triangles
+    }
+
+    /// Base snapshot (changes identity on compaction).
+    pub fn base(&self) -> &Csr {
+        &self.base
+    }
+
+    /// The overlay (empty right after a compaction).
+    pub fn overlay(&self) -> &AdjDelta {
+        &self.overlay
+    }
+
+    /// Undirected edges in the current graph.
+    pub fn current_edges(&self) -> u64 {
+        self.overlay.current_edge_count(&self.base)
+    }
+
+    /// Batches applied over the stream's lifetime.
+    pub fn batches_applied(&self) -> u64 {
+        self.batches_applied
+    }
+
+    /// Compactions performed over the stream's lifetime.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    /// Normalize, count, apply and maybe compact one batch.
+    pub fn apply_batch(&mut self, batch: &Batch) -> Result<BatchOutcome> {
+        let nb = normalize(&self.base, &self.overlay, batch)?;
+        let mut delta = 0i64;
+        let mut work = 0u64;
+        for i in 0..nb.ops.len() {
+            let r = count_op(&self.base, &self.overlay, &nb, i, &mut self.scratch);
+            delta += r.delta;
+            work += r.work;
+        }
+        self.apply_normalized(&nb, delta)?;
+        let compacted = self.maybe_compact()?;
+        Ok(BatchOutcome {
+            delta,
+            triangles: self.triangles,
+            inserts: nb.inserts,
+            deletes: nb.deletes,
+            work,
+            compacted,
+            normalized: nb,
+        })
+    }
+
+    /// Apply an already-normalized batch whose Δ was computed elsewhere
+    /// (the parallel driver: every rank counted its shard, the reduced Δ
+    /// comes in here so replicas stay in lockstep).
+    pub fn apply_normalized(&mut self, nb: &NormalizedBatch, delta: i64) -> Result<()> {
+        for op in &nb.ops {
+            let changed = if op.insert {
+                self.overlay.insert(&self.base, op.u, op.v)
+            } else {
+                self.overlay.remove(&self.base, op.u, op.v)
+            };
+            if !changed {
+                return Err(Error::InvalidGraph(format!(
+                    "normalized op on ({}, {}) was not effective — batch not normalized \
+                     against this state",
+                    op.u, op.v
+                )));
+            }
+        }
+        let t = self.triangles as i64 + delta;
+        if t < 0 {
+            return Err(Error::InvalidGraph(format!(
+                "triangle count went negative ({t}) — corrupted delta"
+            )));
+        }
+        self.triangles = t as u64;
+        self.batches_since_compact += 1;
+        self.batches_applied += 1;
+        Ok(())
+    }
+
+    /// Count a batch without applying it (the parallel ranks' shard path
+    /// uses [`count_op`] directly; this is the whole-batch variant).
+    pub fn peek_batch(&self, nb: &NormalizedBatch) -> (i64, u64) {
+        count_batch(&self.base, &self.overlay, nb)
+    }
+
+    /// Fold the overlay into a fresh CSR when the policy says so.
+    pub fn maybe_compact(&mut self) -> Result<bool> {
+        if !self
+            .policy
+            .should_compact(self.batches_since_compact, &self.base, &self.overlay)
+        {
+            return Ok(false);
+        }
+        self.compact()?;
+        Ok(true)
+    }
+
+    /// Unconditional compaction.
+    pub fn compact(&mut self) -> Result<()> {
+        self.base = materialize(&self.base, &self.overlay)?;
+        self.overlay = AdjDelta::new(self.base.num_nodes());
+        self.batches_since_compact = 0;
+        self.compactions += 1;
+        Ok(())
+    }
+
+    /// Materialize the current graph (verification, hand-off to the static
+    /// algorithms).
+    pub fn snapshot(&self) -> Result<Csr> {
+        materialize(&self.base, &self.overlay)
+    }
+
+    /// From-scratch recount of the current graph — the oracle every test
+    /// and the CLI `--verify` path compare against.
+    pub fn recount(&self) -> Result<TriangleCount> {
+        Ok(node_iterator::count(&Oriented::from_graph(&self.snapshot()?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::stream::batch::EdgeUpdate;
+
+    #[test]
+    fn maintains_exact_count_over_batches() {
+        let mut s = StreamState::new(classic::karate());
+        assert_eq!(s.triangles(), classic::KARATE_TRIANGLES);
+        let batches = [
+            Batch::new(vec![EdgeUpdate::delete(0, 1), EdgeUpdate::insert(9, 10)]),
+            Batch::new(vec![EdgeUpdate::insert(0, 1), EdgeUpdate::delete(33, 32)]),
+            Batch::new(vec![EdgeUpdate::delete(0, 2), EdgeUpdate::delete(1, 2)]),
+        ];
+        for b in &batches {
+            let out = s.apply_batch(b).unwrap();
+            assert_eq!(out.triangles, s.recount().unwrap(), "after {b:?}");
+        }
+        assert_eq!(s.batches_applied(), 3);
+    }
+
+    #[test]
+    fn compaction_preserves_count_and_graph() {
+        let mut s = StreamState::with_policy(
+            classic::karate(),
+            CompactionPolicy { every_batches: 2, overlay_ratio: 0.0 },
+        );
+        let b1 = Batch::new(vec![EdgeUpdate::delete(0, 1)]);
+        let b2 = Batch::new(vec![EdgeUpdate::insert(9, 12)]);
+        let out1 = s.apply_batch(&b1).unwrap();
+        assert!(!out1.compacted);
+        let before = s.triangles();
+        let out2 = s.apply_batch(&b2).unwrap();
+        assert!(out2.compacted, "every_batches=2 must compact");
+        assert!(s.overlay().is_empty());
+        assert_eq!(s.triangles(), out2.triangles);
+        assert_eq!(s.triangles(), s.recount().unwrap());
+        assert_eq!(s.compactions(), 1);
+        assert_eq!(out2.triangles as i64 - before as i64, out2.delta);
+    }
+
+    #[test]
+    fn rejects_stale_normalized_batch() {
+        let mut s = StreamState::new(classic::karate());
+        let b = Batch::new(vec![EdgeUpdate::delete(0, 1)]);
+        let nb = normalize(s.base(), s.overlay(), &b).unwrap();
+        s.apply_normalized(&nb, 0).unwrap();
+        // Re-applying the same normalized batch must fail loudly: the edge
+        // is already gone.
+        assert!(s.apply_normalized(&nb, 0).is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut s = StreamState::new(classic::complete(5));
+        let out = s.apply_batch(&Batch::default()).unwrap();
+        assert_eq!(out.delta, 0);
+        assert_eq!(out.triangles, 10);
+    }
+}

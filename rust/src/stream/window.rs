@@ -1,0 +1,228 @@
+//! Sliding-window streaming: edges expire `W` batches after insertion.
+//!
+//! Social-graph traffic is recency-weighted — an interaction edge matters
+//! for `W` ticks and then ages out. The window mode turns every insert
+//! batch into a mixed workload automatically: when batch `t` arrives, the
+//! edges batch `t − W` *effectively* inserted are prepended as deletions.
+//! Expiry deletes may still be no-ops by then (the edge was deleted
+//! mid-window) — normalization absorbs that. The TTL rule stays simple:
+//! an edge's age runs from the batch that effectively inserted it, and
+//! re-inserting a live edge refreshes nothing.
+//!
+//! Two forms:
+//! * [`expand`] — offline: transform a whole insert-batch sequence into a
+//!   windowed mixed sequence, runnable through the parallel driver;
+//! * [`SlidingWindow`] — online: wrap a [`StreamState`] and push one batch
+//!   at a time.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::error::Result;
+use crate::graph::csr::Csr;
+use crate::stream::batch::{edge_key, Batch, EdgeUpdate};
+use crate::stream::compact::CompactionPolicy;
+use crate::stream::state::{BatchOutcome, StreamState};
+use crate::VertexId;
+
+/// Offline transform: batch `t` gains, as leading deletions, the edges
+/// batch `t − window` **effectively** inserted. Effectiveness is decided
+/// by replaying presence against `base` (an insert of an already-present
+/// edge owns nothing and must not schedule an expiry — same rule as
+/// [`SlidingWindow`], so offline and online runs produce the same graph).
+pub fn expand(base: &Csr, batches: &[Batch], window: usize) -> Vec<Batch> {
+    assert!(window > 0, "window of 0 batches would expire edges instantly");
+    // Edges whose current presence differs from `base` (exact replay).
+    let mut toggled: HashSet<u64> = HashSet::new();
+    let present = |toggled: &HashSet<u64>, u: VertexId, v: VertexId| {
+        base.has_edge(u, v) ^ toggled.contains(&edge_key(u, v))
+    };
+    let mut live: VecDeque<Vec<(VertexId, VertexId)>> = VecDeque::with_capacity(window);
+    let mut out = Vec::with_capacity(batches.len());
+    for b in batches {
+        let mut updates: Vec<EdgeUpdate> = Vec::with_capacity(b.len() * 2);
+        if live.len() == window {
+            updates.extend(
+                live.pop_front()
+                    .expect("window queue non-empty")
+                    .into_iter()
+                    .map(|(u, v)| EdgeUpdate::delete(u, v)),
+            );
+        }
+        updates.extend_from_slice(&b.updates);
+        // Net effect per edge (later ops win), mirroring batch::normalize.
+        let mut net: HashMap<u64, (bool, bool)> = HashMap::with_capacity(updates.len());
+        for up in &updates {
+            if up.u == up.v {
+                continue;
+            }
+            let e = net.entry(edge_key(up.u, up.v)).or_insert_with(|| {
+                let p = present(&toggled, up.u, up.v);
+                (p, p)
+            });
+            e.1 = up.insert;
+        }
+        let mut eff_inserts: Vec<(VertexId, VertexId)> = Vec::new();
+        for (key, (was, now)) in net {
+            if was != now {
+                if !toggled.remove(&key) {
+                    toggled.insert(key);
+                }
+                if now {
+                    eff_inserts.push(((key >> 32) as VertexId, key as VertexId));
+                }
+            }
+        }
+        eff_inserts.sort_unstable();
+        live.push_back(eff_inserts);
+        out.push(Batch::new(updates));
+    }
+    out
+}
+
+/// Online sliding-window engine (see module docs).
+pub struct SlidingWindow {
+    state: StreamState,
+    window: usize,
+    /// Effective inserts of the last `window` batches, oldest first.
+    live: VecDeque<Vec<(VertexId, VertexId)>>,
+}
+
+impl SlidingWindow {
+    pub fn new(base: Csr, window: usize, policy: CompactionPolicy) -> Self {
+        assert!(window > 0);
+        SlidingWindow {
+            state: StreamState::with_policy(base, policy),
+            window,
+            live: VecDeque::with_capacity(window),
+        }
+    }
+
+    /// The wrapped engine (count, recount, snapshot…).
+    pub fn state(&self) -> &StreamState {
+        &self.state
+    }
+
+    /// Apply one batch; edges effectively inserted `window` pushes ago are
+    /// expired first (within the same atomic batch).
+    pub fn push(&mut self, batch: &Batch) -> Result<BatchOutcome> {
+        let mut updates: Vec<EdgeUpdate> = Vec::with_capacity(batch.len() * 2);
+        if self.live.len() == self.window {
+            updates.extend(
+                self.live
+                    .pop_front()
+                    .expect("window queue non-empty")
+                    .into_iter()
+                    .map(|(u, v)| EdgeUpdate::delete(u, v)),
+            );
+        }
+        updates.extend_from_slice(&batch.updates);
+        let out = self.state.apply_batch(&Batch::new(updates))?;
+        // Track what this batch *effectively* inserted — those are the
+        // edges that will expire.
+        self.live.push_back(
+            out.normalized
+                .ops
+                .iter()
+                .filter(|o| o.insert)
+                .map(|o| (o.u, o.v))
+                .collect(),
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+
+    fn insert_batch(edges: &[(u32, u32)]) -> Batch {
+        Batch::new(edges.iter().map(|&(u, v)| EdgeUpdate::insert(u, v)).collect())
+    }
+
+    #[test]
+    fn edges_expire_after_window() {
+        // Empty base; stream the three edges of a triangle in separate
+        // batches with W=2: the first edge expires before the third
+        // arrives, so the triangle never closes.
+        let base = Csr::empty(3);
+        let mut w = SlidingWindow::new(base, 2, CompactionPolicy::never());
+        w.push(&insert_batch(&[(0, 1)])).unwrap();
+        w.push(&insert_batch(&[(1, 2)])).unwrap();
+        let out = w.push(&insert_batch(&[(0, 2)])).unwrap();
+        assert_eq!(out.triangles, 0, "edge 0–1 must have expired");
+        assert_eq!(w.state().current_edges(), 2);
+        assert_eq!(w.state().recount().unwrap(), 0);
+    }
+
+    #[test]
+    fn window_large_enough_closes_triangles() {
+        let base = Csr::empty(3);
+        let mut w = SlidingWindow::new(base, 3, CompactionPolicy::never());
+        w.push(&insert_batch(&[(0, 1)])).unwrap();
+        w.push(&insert_batch(&[(1, 2)])).unwrap();
+        let out = w.push(&insert_batch(&[(0, 2)])).unwrap();
+        assert_eq!(out.triangles, 1);
+        // Next push expires 0–1: the triangle opens again.
+        let out = w.push(&Batch::default()).unwrap();
+        assert_eq!(out.triangles, 0);
+        assert_eq!(out.deletes, 1);
+    }
+
+    #[test]
+    fn expand_matches_online_engine() {
+        let base = classic::karate();
+        let batches = vec![
+            insert_batch(&[(9, 10), (14, 16)]),
+            insert_batch(&[(9, 11)]),
+            insert_batch(&[(9, 12), (20, 24)]),
+            insert_batch(&[(10, 11)]),
+            insert_batch(&[(9, 13)]),
+        ];
+        let expanded = expand(&base, &batches, 2);
+        let mut offline = StreamState::with_policy(base.clone(), CompactionPolicy::never());
+        for b in &expanded {
+            offline.apply_batch(b).unwrap();
+        }
+        let mut online = SlidingWindow::new(base, 2, CompactionPolicy::never());
+        let mut last = 0;
+        for b in &batches {
+            last = online.push(b).unwrap().triangles;
+        }
+        assert_eq!(offline.triangles(), last);
+        assert_eq!(offline.triangles(), offline.recount().unwrap());
+    }
+
+    #[test]
+    fn expand_never_expires_base_edges_on_noop_inserts() {
+        // Inserting an edge the base already has must not schedule an
+        // expiry delete for it (regression: raw-insert expiry would tear
+        // edge 0–1 out of the base graph).
+        let base = crate::graph::builder::from_edges(3, [(0, 1)]).unwrap();
+        let batches = vec![insert_batch(&[(0, 1)]), Batch::default(), Batch::default()];
+        let expanded = expand(&base, &batches, 1);
+        assert!(
+            expanded.iter().flat_map(|b| &b.updates).all(|u| u.insert),
+            "no deletes may be emitted: {expanded:?}"
+        );
+        // And the online engine agrees: the base edge survives.
+        let mut sw = SlidingWindow::new(base, 1, CompactionPolicy::never());
+        for b in &batches {
+            sw.push(b).unwrap();
+        }
+        assert_eq!(sw.state().current_edges(), 1);
+    }
+
+    #[test]
+    fn mid_window_delete_makes_expiry_a_noop() {
+        let base = Csr::empty(4);
+        let mut w = SlidingWindow::new(base, 3, CompactionPolicy::never());
+        w.push(&insert_batch(&[(0, 1)])).unwrap();
+        // Delete it explicitly before it expires.
+        w.push(&Batch::new(vec![EdgeUpdate::delete(0, 1)])).unwrap();
+        w.push(&Batch::default()).unwrap();
+        let out = w.push(&Batch::default()).unwrap(); // expiry tick: no-op
+        assert_eq!(out.deletes, 0);
+        assert_eq!(w.state().current_edges(), 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Deterministic edge-update stream generation.
+//!
+//! Turns any static workload graph (PA, R-MAT, contact, file…) into a
+//! reproducible update stream: a fraction of the edges form the initial
+//! CSR snapshot, the rest arrive as batched inserts interleaved with
+//! deletions of currently-live streamed edges. This is what `tricount
+//! stream`, the streaming benches and the acceptance tests all drive, so a
+//! seed fully determines the run.
+
+use crate::gen::rng::Rng;
+use crate::graph::builder::from_edge_list;
+use crate::graph::csr::Csr;
+use crate::stream::batch::{Batch, EdgeUpdate};
+use crate::VertexId;
+
+/// Stream-shape parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamSpec {
+    /// Fraction of the source graph's edges in the initial snapshot.
+    pub base_fraction: f64,
+    /// Updates per batch.
+    pub batch_size: usize,
+    /// Number of batches.
+    pub batches: usize,
+    /// Probability an update is a deletion of a live streamed edge (the
+    /// rest are fresh inserts from the source graph's remaining edges).
+    pub delete_fraction: f64,
+}
+
+impl Default for StreamSpec {
+    fn default() -> Self {
+        StreamSpec {
+            base_fraction: 0.5,
+            batch_size: 1_000,
+            batches: 50,
+            delete_fraction: 0.2,
+        }
+    }
+}
+
+/// A generated stream: initial snapshot + batch sequence.
+pub struct StreamWorkload {
+    pub base: Csr,
+    pub batches: Vec<Batch>,
+    /// Updates actually emitted (≤ `batch_size · batches` when the source
+    /// graph runs out of fresh edges and no live edge remains to delete).
+    pub updates: usize,
+}
+
+/// Build a stream from a source graph (see module docs). Deterministic in
+/// `(g, spec, rng seed)`.
+pub fn edge_stream(g: &Csr, spec: &StreamSpec, rng: &mut Rng) -> StreamWorkload {
+    let mut edges: Vec<(VertexId, VertexId)> = g.edges().collect();
+    rng.shuffle(&mut edges);
+    let split = ((edges.len() as f64) * spec.base_fraction.clamp(0.0, 1.0)).round() as usize;
+    let base = from_edge_list(g.num_nodes(), edges[..split].to_vec())
+        .expect("source edges are valid");
+    let mut pending = edges.split_off(split);
+    pending.reverse(); // pop() consumes in shuffled order
+
+    // Streamed edges currently live (inserted, not yet deleted) — indexable
+    // for O(1) random victim selection via swap_remove.
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut batches = Vec::with_capacity(spec.batches);
+    let mut updates = 0usize;
+    for _ in 0..spec.batches {
+        let mut b = Vec::with_capacity(spec.batch_size);
+        for _ in 0..spec.batch_size {
+            let want_delete = !live.is_empty() && rng.chance(spec.delete_fraction);
+            if want_delete {
+                let (u, v) = live.swap_remove(rng.below_usize(live.len()));
+                b.push(EdgeUpdate::delete(u, v));
+            } else if let Some((u, v)) = pending.pop() {
+                live.push((u, v));
+                b.push(EdgeUpdate::insert(u, v));
+            } else if spec.delete_fraction > 0.0 && !live.is_empty() {
+                // Fresh edges exhausted in a mixed stream: drain live ones.
+                let (u, v) = live.swap_remove(rng.below_usize(live.len()));
+                b.push(EdgeUpdate::delete(u, v));
+            } else {
+                break; // stream exhausted
+            }
+        }
+        updates += b.len();
+        batches.push(Batch::new(b));
+    }
+    StreamWorkload { base, batches, updates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::ordering::Oriented;
+    use crate::seq::node_iterator;
+    use crate::stream::parallel::{self, StreamOptions};
+
+    #[test]
+    fn stream_is_deterministic_per_seed() {
+        let g = gen::pa::preferential_attachment(500, 6, &mut Rng::seeded(3));
+        let spec = StreamSpec { batch_size: 40, batches: 8, ..Default::default() };
+        let a = edge_stream(&g, &spec, &mut Rng::seeded(11));
+        let b = edge_stream(&g, &spec, &mut Rng::seeded(11));
+        assert_eq!(a.base, b.base);
+        assert_eq!(a.updates, b.updates);
+        for (x, y) in a.batches.iter().zip(&b.batches) {
+            assert_eq!(x.updates, y.updates);
+        }
+    }
+
+    #[test]
+    fn deletes_target_live_edges_only() {
+        let g = gen::erdos_renyi::gnm(200, 800, &mut Rng::seeded(5));
+        let spec = StreamSpec {
+            base_fraction: 0.3,
+            batch_size: 50,
+            batches: 10,
+            delete_fraction: 0.4,
+        };
+        let w = edge_stream(&g, &spec, &mut Rng::seeded(17));
+        // Replaying insert/delete multiset per edge: a delete must always
+        // follow a live insert of the same edge.
+        let mut live = std::collections::HashSet::new();
+        for b in &w.batches {
+            for up in &b.updates {
+                let key = crate::stream::batch::edge_key(up.u, up.v);
+                if up.insert {
+                    assert!(live.insert(key), "double-insert of a live edge");
+                } else {
+                    assert!(live.remove(&key), "delete of a non-live edge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_everything_reaches_the_source_graph() {
+        // base 40% + streaming the rest with no deletes ⇒ final graph = g.
+        let g = gen::pa::preferential_attachment(300, 8, &mut Rng::seeded(9));
+        let m = g.num_edges() as usize;
+        let spec = StreamSpec {
+            base_fraction: 0.4,
+            batch_size: m / 10 + 1,
+            batches: 12,
+            delete_fraction: 0.0,
+        };
+        let w = edge_stream(&g, &spec, &mut Rng::seeded(21));
+        let r = parallel::run(&w.base, &w.batches, 2, StreamOptions::default()).unwrap();
+        let expect = node_iterator::count(&Oriented::from_graph(&g));
+        assert_eq!(r.final_triangles, expect);
+        assert_eq!(r.final_graph.num_edges(), g.num_edges());
+    }
+}

@@ -7,13 +7,17 @@ use std::sync::Arc;
 
 use tricount::algo::tasks;
 use tricount::config::CostFn;
+use tricount::gen::rng::Rng;
 use tricount::graph::ordering::Oriented;
 use tricount::partition::balance::{balanced_ranges, owner_table};
 use tricount::partition::cost::{cost_vector, prefix_sums};
 use tricount::partition::nonoverlap::partition_sizes;
 use tricount::partition::overlap::overlap_sizes;
-use tricount::prop::{arb_graph, quickcheck};
+use tricount::prop::{arb_graph, arb_update_batches, quickcheck};
 use tricount::seq::{naive, node_iterator};
+use tricount::stream::compact::CompactionPolicy;
+use tricount::stream::state::StreamState;
+use tricount::stream::{parallel, window};
 
 #[test]
 fn prop_ranges_partition_v() {
@@ -208,6 +212,96 @@ fn prop_all_parallel_algorithms_match_oracle() {
             if d != expect {
                 return Err(format!("case {i}: dynamic {d} != {expect}"));
             }
+        }
+        Ok(())
+    });
+}
+
+/// A random base graph drawn per-case from one of the three generator
+/// families the paper evaluates: PA, R-MAT and Erdős–Rényi.
+fn arb_stream_base(rng: &mut Rng, case: u32) -> tricount::graph::csr::Csr {
+    match case % 3 {
+        0 => {
+            let n = 10 + rng.below_usize(60);
+            tricount::gen::pa::preferential_attachment(n, 4, rng)
+        }
+        1 => tricount::gen::rmat::rmat(5 + rng.below(2) as u32, 4, Default::default(), rng),
+        _ => {
+            let n = 8 + rng.below_usize(50);
+            let m = rng.below_usize(2 * n + 1);
+            tricount::gen::erdos_renyi::gnm(n, m, rng)
+        }
+    }
+}
+
+#[test]
+fn prop_stream_matches_rebuild_across_generators() {
+    // After ANY random insert/delete batch sequence, the incremental count
+    // equals a from-scratch Fig-1 recount of the rebuilt graph — with
+    // aggressive compaction in half the cases to exercise the fold.
+    quickcheck("stream == from-scratch rebuild (PA/R-MAT/ER)", |rng, case| {
+        let g = arb_stream_base(rng, case);
+        let batches = arb_update_batches(rng, g.num_nodes(), 6, 30);
+        let policy = if case % 2 == 0 {
+            CompactionPolicy { every_batches: 2, overlay_ratio: 0.0 }
+        } else {
+            CompactionPolicy::never()
+        };
+        let mut s = StreamState::with_policy(g, policy);
+        for b in &batches {
+            s.apply_batch(b).map_err(|e| e.to_string())?;
+        }
+        let rebuilt = s.recount().map_err(|e| e.to_string())?;
+        if s.triangles() != rebuilt {
+            return Err(format!(
+                "case {case}: incremental {} != rebuilt {rebuilt} after {} batches",
+                s.triangles(),
+                batches.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_stream_agrees_with_sequential_at_any_p() {
+    quickcheck("parallel stream == sequential stream", |rng, case| {
+        let g = arb_stream_base(rng, case);
+        let batches = arb_update_batches(rng, g.num_nodes(), 4, 20);
+        let mut s = StreamState::with_policy(g.clone(), CompactionPolicy::default());
+        for b in &batches {
+            s.apply_batch(b).map_err(|e| e.to_string())?;
+        }
+        let p = 1 + rng.below_usize(6);
+        let r = parallel::run(&g, &batches, p, parallel::StreamOptions::default())
+            .map_err(|e| e.to_string())?;
+        if r.final_triangles != s.triangles() {
+            return Err(format!(
+                "case {case}: P={p} parallel {} != sequential {}",
+                r.final_triangles,
+                s.triangles()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_windowed_stream_matches_rebuild() {
+    // The sliding window exercises the deletion path hard: every batch
+    // past W carries expiries. Exactness must survive.
+    quickcheck("windowed stream == rebuild", |rng, case| {
+        let g = arb_stream_base(rng, case);
+        let batches = arb_update_batches(rng, g.num_nodes(), 6, 15);
+        let w = 1 + rng.below_usize(3);
+        let mut sw = window::SlidingWindow::new(g, w, CompactionPolicy::default());
+        let mut last = sw.state().triangles();
+        for b in &batches {
+            last = sw.push(b).map_err(|e| e.to_string())?.triangles;
+        }
+        let rebuilt = sw.state().recount().map_err(|e| e.to_string())?;
+        if last != rebuilt {
+            return Err(format!("case {case}: W={w} windowed {last} != rebuilt {rebuilt}"));
         }
         Ok(())
     });

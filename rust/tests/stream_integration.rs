@@ -1,0 +1,95 @@
+//! Acceptance tests for the `stream/` subsystem (ISSUE 1): a PA(100k, 16)
+//! workload streamed as ≥ 50 batches of 1k mixed inserts/deletes must end
+//! with the incremental count exactly matching a from-scratch Fig-1
+//! recount — at 1 rank and at 8 ranks.
+
+use tricount::gen::rng::Rng;
+use tricount::graph::ordering::Oriented;
+use tricount::seq::node_iterator;
+use tricount::stream::compact::CompactionPolicy;
+use tricount::stream::parallel::{self, StreamOptions};
+use tricount::stream::window;
+use tricount::stream::workload::{edge_stream, StreamSpec};
+
+#[test]
+fn pa100k_50_batches_exact_at_1_and_8_ranks() {
+    let g = tricount::gen::pa::preferential_attachment(100_000, 16, &mut Rng::seeded(42));
+    let spec = StreamSpec {
+        base_fraction: 0.5,
+        batch_size: 1_000,
+        batches: 50,
+        delete_fraction: 0.25,
+    };
+    let w = edge_stream(&g, &spec, &mut Rng::seeded(7));
+    assert_eq!(w.batches.len(), 50);
+    assert_eq!(w.updates, 50_000, "PA(100k,16) has plenty of edges to stream");
+
+    let mut counts = Vec::new();
+    for p in [1usize, 8] {
+        let r = parallel::run(&w.base, &w.batches, p, StreamOptions::default()).unwrap();
+        let recount = node_iterator::count(&Oriented::from_graph(&r.final_graph));
+        assert_eq!(
+            r.final_triangles, recount,
+            "P={p}: incremental count must match from-scratch node-iterator recount"
+        );
+        assert!(r.compactions > 0, "default policy must compact over 50 batches");
+        let eff: u64 = r.effective_updates();
+        assert!(eff > 0 && eff <= 50_000);
+        counts.push(r.final_triangles);
+    }
+    assert_eq!(counts[0], counts[1], "rank count must not affect the result");
+}
+
+#[test]
+fn windowed_pa_stream_exercises_deletions_at_scale() {
+    // Smaller PA graph, window of 5 batches: past batch 5 every batch
+    // carries ~batch_size expiries, so deletions dominate.
+    let g = tricount::gen::pa::preferential_attachment(20_000, 16, &mut Rng::seeded(1));
+    let spec = StreamSpec {
+        base_fraction: 0.4,
+        batch_size: 500,
+        batches: 25,
+        delete_fraction: 0.0, // all raw updates are inserts; the window deletes
+    };
+    let w = edge_stream(&g, &spec, &mut Rng::seeded(2));
+    let expanded = window::expand(&w.base, &w.batches, 5);
+    let deletes_emitted: usize = expanded
+        .iter()
+        .flat_map(|b| &b.updates)
+        .filter(|u| !u.insert)
+        .count();
+    assert!(deletes_emitted >= 9_000, "window must generate mass deletions");
+
+    for p in [1usize, 4] {
+        let r = parallel::run(&w.base, &expanded, p, StreamOptions::default()).unwrap();
+        let recount = node_iterator::count(&Oriented::from_graph(&r.final_graph));
+        assert_eq!(r.final_triangles, recount, "P={p}");
+        // The window retains ≤ 5 batches of streamed edges.
+        assert!(
+            r.final_graph.num_edges() <= w.base.num_edges() + 5 * 500,
+            "window bound violated"
+        );
+    }
+}
+
+#[test]
+fn compaction_cadence_does_not_change_results() {
+    let g = tricount::gen::pa::preferential_attachment(5_000, 12, &mut Rng::seeded(3));
+    let spec = StreamSpec {
+        base_fraction: 0.6,
+        batch_size: 200,
+        batches: 20,
+        delete_fraction: 0.3,
+    };
+    let w = edge_stream(&g, &spec, &mut Rng::seeded(4));
+    let run_with = |policy: CompactionPolicy| {
+        parallel::run(&w.base, &w.batches, 3, StreamOptions { policy })
+            .unwrap()
+            .final_triangles
+    };
+    let never = run_with(CompactionPolicy::never());
+    let eager = run_with(CompactionPolicy { every_batches: 1, overlay_ratio: 0.0 });
+    let sized = run_with(CompactionPolicy { every_batches: 0, overlay_ratio: 0.01 });
+    assert_eq!(never, eager);
+    assert_eq!(never, sized);
+}
