@@ -1,0 +1,243 @@
+//! `hub_kernels` — proof that the `adj/` hybrid hub-bitmap kernels beat
+//! the merge kernel in the large-degree regime (same self-contained
+//! harness as `hot_path.rs`; criterion is unavailable offline). Run with
+//! `cargo bench --offline hub_kernels`.
+//!
+//! Three sections:
+//! 1. micro: list×bitmap probe and bitmap×bitmap word-AND vs merge/gallop
+//!    on synthetic hub rows;
+//! 2. a PA(100K, 64) hub workload: the actual oriented pairs that involve
+//!    a hub row, merge-only vs hybrid dispatch;
+//! 3. end-to-end `node_iterator::count` on PA(100K, 64), `off` vs `auto`,
+//!    with the kernel-path mix.
+
+use std::time::Instant;
+
+use tricount::adj::bitmap::BitmapRow;
+use tricount::adj::{self, HubThreshold, NeighborView};
+use tricount::gen::rng::Rng;
+use tricount::graph::ordering::Oriented;
+use tricount::intersect;
+use tricount::seq::node_iterator;
+use tricount::VertexId;
+
+fn bench<F: FnMut() -> u64>(name: &str, units: u64, unit_name: &str, mut f: F) -> f64 {
+    // Warmup.
+    let mut sink = 0u64;
+    sink = sink.wrapping_add(f());
+    // Timed reps.
+    let mut samples = Vec::new();
+    let reps = 5;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        sink = sink.wrapping_add(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[reps / 2];
+    println!(
+        "{name:<46} {:>10.3} ms   {:>10.1} M{unit_name}/s",
+        med * 1e3,
+        units as f64 / med / 1e6
+    );
+    std::hint::black_box(sink);
+    med
+}
+
+fn sorted_list(rng: &mut Rng, len: usize, universe: u32) -> Vec<VertexId> {
+    let mut v: Vec<VertexId> = (0..len).map(|_| rng.next_u32() % universe).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn main() {
+    let mut rng = Rng::seeded(1);
+
+    println!("== micro: hub kernels vs merge ==");
+    // A hub row (d̂ = 4096) intersected with small lists (d̂ = 64) — the
+    // dominant pair shape in the large-degree regime.
+    let hub = sorted_list(&mut rng, 4096, 100_000);
+    let hub_row = BitmapRow::from_sorted(&hub);
+    let smalls: Vec<Vec<VertexId>> =
+        (0..256).map(|_| sorted_list(&mut rng, 64, 100_000)).collect();
+    let units: u64 = smalls.iter().map(|s| (s.len() + hub.len()) as u64).sum::<u64>() * 20;
+    let t_merge = bench("merge       hub(4096)×small(64) ×256×20", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..20 {
+            for s in &smalls {
+                intersect::count_merge(s, &hub, &mut c);
+            }
+        }
+        c
+    });
+    bench("gallop      hub(4096)×small(64) ×256×20", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..20 {
+            for s in &smalls {
+                intersect::count_galloping(s, &hub, &mut c);
+            }
+        }
+        c
+    });
+    let t_probe = bench("list×bitmap hub(4096)×small(64) ×256×20", units, "elem", || {
+        let mut c = 0;
+        let hv = NeighborView::hybrid(&hub, Some(&hub_row));
+        for _ in 0..20 {
+            for s in &smalls {
+                adj::intersect_count(hv, NeighborView::sorted(s), &mut c);
+            }
+        }
+        c
+    });
+    println!("  -> list×bitmap vs merge: {:.1}x", t_merge / t_probe);
+    assert!(t_probe < t_merge, "probe must beat merge on hub×small");
+
+    // Dense hub×hub (two 4096-rows in a 64K universe): word-AND territory.
+    let ha = sorted_list(&mut rng, 4096, 65_536);
+    let hb = sorted_list(&mut rng, 4096, 65_536);
+    let (ra, rb) = (BitmapRow::from_sorted(&ha), BitmapRow::from_sorted(&hb));
+    let units = (ha.len() + hb.len()) as u64 * 2000;
+    let t_merge2 = bench("merge         hub(4096)×hub(4096) ×2000", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..2000 {
+            intersect::count_merge(&ha, &hb, &mut c);
+        }
+        c
+    });
+    let t_bb = bench("bitmap×bitmap hub(4096)×hub(4096) ×2000", units, "elem", || {
+        let mut c = 0;
+        let (va, vb) = (NeighborView::hybrid(&ha, Some(&ra)), NeighborView::hybrid(&hb, Some(&rb)));
+        for _ in 0..2000 {
+            adj::intersect_count(va, vb, &mut c);
+        }
+        c
+    });
+    println!("  -> bitmap×bitmap vs merge: {:.1}x", t_merge2 / t_bb);
+    assert!(t_bb < t_merge2, "word-AND must beat merge on dense hub×hub");
+
+    println!("\n== PA(100K, 64) hub workload ==");
+    let g = tricount::gen::pa::preferential_attachment(100_000, 64, &mut Rng::seeded(2));
+    let mut o = Oriented::from_graph_with(&g, HubThreshold::Auto);
+    if o.hub_stats().hubs == 0 {
+        // Degenerate draw (auto found nothing): pin the cutoff to the
+        // p99.9 of d̂ so the hub-workload section still measures something.
+        let mut ds: Vec<usize> =
+            (0..o.num_nodes() as u32).map(|v| o.effective_degree(v)).collect();
+        ds.sort_unstable_by(|a, b| b.cmp(a));
+        let t = ds[o.num_nodes() / 1000].max(1);
+        println!("(auto selected no hubs; falling back to fixed d̂ ≥ {t})");
+        o = Oriented::from_graph_with(&g, HubThreshold::Fixed(t));
+    }
+    let stats = o.hub_stats();
+    println!(
+        "n={} m={} effective threshold={} hubs={} bitmap_kb={}",
+        g.num_nodes(),
+        g.num_edges(),
+        stats.threshold.unwrap_or(0),
+        stats.hubs,
+        stats.bitmap_bytes / 1024
+    );
+    // The oriented pairs (v, u∈N_v) where either row is a hub — exactly the
+    // pairs the dispatch upgrades.
+    let mut pairs: Vec<(VertexId, VertexId)> = Vec::new();
+    for v in 0..o.num_nodes() as VertexId {
+        let v_hub = o.hub_row(v).is_some();
+        for &u in o.nbrs(v) {
+            if v_hub || o.hub_row(u).is_some() {
+                pairs.push((v, u));
+            }
+        }
+    }
+    let units: u64 = pairs
+        .iter()
+        .map(|&(v, u)| (o.effective_degree(v) + o.effective_degree(u)) as u64)
+        .sum();
+    println!("hub pairs: {} ({} Melem of merge work)", pairs.len(), units / 1_000_000);
+    let t_merge3 = bench("merge kernel   over oriented hub pairs", units, "elem", || {
+        let mut c = 0;
+        for &(v, u) in &pairs {
+            intersect::count_merge(o.nbrs(v), o.nbrs(u), &mut c);
+        }
+        c
+    });
+    let t_hyb = bench("hybrid dispatch over oriented hub pairs", units, "elem", || {
+        let mut c = 0;
+        for &(v, u) in &pairs {
+            adj::intersect_count(o.view(v), o.view(u), &mut c);
+        }
+        c
+    });
+    println!("  -> hybrid vs merge on oriented hub pairs: {:.2}x", t_merge3 / t_hyb);
+
+    // The *unoriented* rows are where PA hubs really live (degree in the
+    // thousands) — the shape the streaming Δ counter and the edge-iterator
+    // oracle intersect. Bitmap the 16 heaviest full rows and intersect each
+    // with all of its neighbors' rows: list×bitmap probe vs merge.
+    let mut by_degree: Vec<VertexId> = (0..g.num_nodes() as VertexId).collect();
+    by_degree.sort_unstable_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    let top: Vec<VertexId> = by_degree[..16].to_vec();
+    let rows: Vec<BitmapRow> =
+        top.iter().map(|&h| BitmapRow::from_sorted(g.neighbors(h))).collect();
+    let units: u64 = top
+        .iter()
+        .map(|&h| {
+            g.neighbors(h)
+                .iter()
+                .map(|&u| (g.degree(u) + g.degree(h)) as u64)
+                .sum::<u64>()
+        })
+        .sum();
+    println!(
+        "unoriented hubs: top-16 degrees {}..{}",
+        g.degree(top[15]),
+        g.degree(top[0])
+    );
+    let t_merge4 = bench("merge       hub full rows × nbr rows", units, "elem", || {
+        let mut c = 0;
+        for &h in &top {
+            let nh = g.neighbors(h);
+            for &u in nh {
+                intersect::count_merge(g.neighbors(u), nh, &mut c);
+            }
+        }
+        c
+    });
+    let t_probe4 = bench("list×bitmap hub full rows × nbr rows", units, "elem", || {
+        let mut c = 0;
+        for (i, &h) in top.iter().enumerate() {
+            let hv = NeighborView::hybrid(g.neighbors(h), Some(&rows[i]));
+            for &u in g.neighbors(h) {
+                adj::intersect_count(NeighborView::sorted(g.neighbors(u)), hv, &mut c);
+            }
+        }
+        c
+    });
+    println!("  -> list×bitmap vs merge on unoriented hub rows: {:.1}x", t_merge4 / t_probe4);
+    assert!(
+        t_probe4 < t_merge4,
+        "list×bitmap must beat merge on the PA(100K,64) hub rows"
+    );
+
+    println!("\n== end-to-end: node_iterator::count on PA(100K, 64) ==");
+    let o_off = Oriented::from_graph_with(&g, HubThreshold::Off);
+    let work: u64 = (0..o.num_nodes() as u32).map(|v| node_iterator::node_work(&o_off, v)).sum();
+    let t_off = bench("count, hub-threshold=off ", work, "workunit", || {
+        node_iterator::count(&o_off)
+    });
+    tricount::adj::stats::reset();
+    let t_auto = bench("count, hub-threshold=auto", work, "workunit", || {
+        node_iterator::count(&o)
+    });
+    let k = tricount::adj::stats::snapshot();
+    println!(
+        "  kernels (auto): list×list={} list×bitmap={} bitmap×bitmap={}",
+        k.list_list, k.list_bitmap, k.bitmap_bitmap
+    );
+    println!("  -> end-to-end auto vs off: {:.2}x", t_off / t_auto);
+    assert_eq!(
+        node_iterator::count(&o),
+        node_iterator::count(&o_off),
+        "hybrid and sorted counts must agree"
+    );
+}

@@ -1,0 +1,177 @@
+//! Packed bitmap rows for high-degree ("hub") adjacency lists.
+//!
+//! A [`BitmapRow`] stores a sorted neighbor list as one bit per node id,
+//! trimmed to the span `[first/64, last/64]` of 64-bit words that actually
+//! contain neighbors. Membership tests are O(1) and two rows intersect by
+//! word-AND + popcount over the overlap of their spans — the dense-row
+//! technique that Sanders & Uhl (2023) and Tom & Karypis (2019) identify as
+//! the decisive single-node optimization in the large-degree regime this
+//! paper targets. The sorted list is always kept alongside the bitmap (see
+//! [`crate::adj::view`]), so the dispatch can pick whichever kernel is
+//! cheaper per pair.
+
+use crate::VertexId;
+
+/// A trimmed, packed bitmap over node ids (see module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BitmapRow {
+    /// Index of the first 64-bit word of the trimmed span.
+    lo_word: usize,
+    /// Packed bits for ids in `[lo_word·64, (lo_word + words.len())·64)`.
+    words: Vec<u64>,
+    /// Number of set bits (= neighbor count).
+    ones: u32,
+}
+
+impl BitmapRow {
+    /// Build from a strictly id-sorted neighbor list. O(d + span/64).
+    pub fn from_sorted(list: &[VertexId]) -> Self {
+        let (Some(&first), Some(&last)) = (list.first(), list.last()) else {
+            return BitmapRow::default();
+        };
+        let lo_word = first as usize / 64;
+        let hi_word = last as usize / 64;
+        let mut words = vec![0u64; hi_word - lo_word + 1];
+        for &x in list {
+            words[x as usize / 64 - lo_word] |= 1u64 << (x % 64);
+        }
+        BitmapRow { lo_word, words, ones: list.len() as u32 }
+    }
+
+    /// O(1) membership test.
+    #[inline]
+    pub fn contains(&self, x: VertexId) -> bool {
+        let w = x as usize / 64;
+        w >= self.lo_word
+            && w < self.lo_word + self.words.len()
+            && (self.words[w - self.lo_word] >> (x % 64)) & 1 == 1
+    }
+
+    /// `|self ∩ other|` by word-AND + popcount over the span overlap.
+    pub fn and_popcount(&self, other: &BitmapRow) -> u64 {
+        let lo = self.lo_word.max(other.lo_word);
+        let hi = (self.lo_word + self.words.len()).min(other.lo_word + other.words.len());
+        let mut c = 0u64;
+        for w in lo..hi {
+            c += (self.words[w - self.lo_word] & other.words[w - other.lo_word]).count_ones() as u64;
+        }
+        c
+    }
+
+    /// Materialize `self ∩ other` into `out` in ascending id order, by
+    /// word-AND + bit iteration over the span overlap.
+    pub fn and_collect(&self, other: &BitmapRow, out: &mut Vec<VertexId>) {
+        let lo = self.lo_word.max(other.lo_word);
+        let hi = (self.lo_word + self.words.len()).min(other.lo_word + other.words.len());
+        for w in lo..hi {
+            let mut bits = self.words[w - self.lo_word] & other.words[w - other.lo_word];
+            while bits != 0 {
+                out.push((w as u64 * 64 + bits.trailing_zeros() as u64) as VertexId);
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    /// Words the AND kernel would touch for `self ∩ other` — the
+    /// bitmap×bitmap term of the hybrid cost model, and the quantity the
+    /// dispatch compares against the merge cost before choosing word-AND.
+    #[inline]
+    pub fn overlap_words(&self, other: &BitmapRow) -> usize {
+        let lo = self.lo_word.max(other.lo_word);
+        let hi = (self.lo_word + self.words.len()).min(other.lo_word + other.words.len());
+        hi.saturating_sub(lo)
+    }
+
+    /// Set bits (the neighbor count the row encodes).
+    #[inline]
+    pub fn ones(&self) -> usize {
+        self.ones as usize
+    }
+
+    /// Words in the trimmed span.
+    #[inline]
+    pub fn span_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Heap bytes held by the packed words.
+    #[inline]
+    pub fn bytes(&self) -> u64 {
+        (self.words.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_row() {
+        let r = BitmapRow::from_sorted(&[]);
+        assert_eq!(r.ones(), 0);
+        assert_eq!(r.span_words(), 0);
+        assert_eq!(r.bytes(), 0);
+        assert!(!r.contains(0));
+        assert_eq!(r.and_popcount(&r), 0);
+    }
+
+    #[test]
+    fn contains_matches_list() {
+        let list = [3, 64, 65, 200, 1023];
+        let r = BitmapRow::from_sorted(&list);
+        assert_eq!(r.ones(), 5);
+        for x in 0..1100u32 {
+            assert_eq!(r.contains(x), list.contains(&x), "id {x}");
+        }
+    }
+
+    #[test]
+    fn span_is_trimmed() {
+        // Ids 640..704 live in exactly one word despite the large universe.
+        let list: Vec<VertexId> = (640..704).collect();
+        let r = BitmapRow::from_sorted(&list);
+        assert_eq!(r.span_words(), 1);
+        assert_eq!(r.bytes(), 8);
+    }
+
+    #[test]
+    fn and_popcount_matches_merge() {
+        use crate::gen::rng::Rng;
+        use crate::intersect::count_merge;
+        let mut rng = Rng::seeded(7);
+        for _ in 0..100 {
+            let mk = |rng: &mut Rng, len: usize| {
+                let mut v: Vec<VertexId> = (0..len).map(|_| rng.next_u32() % 5000).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let a = mk(&mut rng, rng.below_usize(300));
+            let b = mk(&mut rng, rng.below_usize(300));
+            let (ra, rb) = (BitmapRow::from_sorted(&a), BitmapRow::from_sorted(&b));
+            let mut expect = 0u64;
+            count_merge(&a, &b, &mut expect);
+            assert_eq!(ra.and_popcount(&rb), expect);
+            assert_eq!(rb.and_popcount(&ra), expect);
+        }
+    }
+
+    #[test]
+    fn and_collect_matches_intersect_vec() {
+        use crate::intersect::intersect_vec;
+        let a: Vec<VertexId> = (0..500).step_by(3).collect();
+        let b: Vec<VertexId> = (0..500).step_by(5).collect();
+        let (ra, rb) = (BitmapRow::from_sorted(&a), BitmapRow::from_sorted(&b));
+        let mut got = Vec::new();
+        ra.and_collect(&rb, &mut got);
+        assert_eq!(got, intersect_vec(&a, &b));
+    }
+
+    #[test]
+    fn disjoint_spans_cost_nothing() {
+        let a = BitmapRow::from_sorted(&[1, 2, 3]);
+        let b = BitmapRow::from_sorted(&[1000, 1001]);
+        assert_eq!(a.overlap_words(&b), 0);
+        assert_eq!(a.and_popcount(&b), 0);
+    }
+}

@@ -1,0 +1,347 @@
+//! Hub selection policy and the per-graph index of bitmap rows.
+//!
+//! A **hub** row gets a packed [`BitmapRow`] *in addition to* its sorted
+//! slice, so every consumer can keep iterating lists while the
+//! intersection dispatch upgrades hub pairs to probe / word-AND kernels.
+//!
+//! Threshold policy (CLI `--hub-threshold <n|auto|off>`):
+//! * `off` — no bitmaps, the seed's pure sorted-slice behavior;
+//! * `<n>` — fixed out-degree cutoff, every row with `d̂_v ≥ n` (explicit
+//!   user choice: no memory budget, exact cutoff);
+//! * `auto` — density rule: rows with `d̂_v ≥ `[`AUTO_FLOOR`] are taken
+//!   **heaviest first** until their trimmed-span bytes reach the budget
+//!   [`AUTO_BUDGET_BYTES_PER_EDGE`]`·m` (the size of the `targets` array —
+//!   bitmaps at most double adjacency memory). Degree ordering tames the
+//!   oriented tail (on PA(100K, 64) the maximum `d̂` is ≈ 50 against an
+//!   average of 32), so the rule is *relative*: it bitmaps whatever rows
+//!   are heaviest in this graph rather than demanding an absolute hub
+//!   size no oriented row would ever reach.
+//!
+//! The streaming Δ counter caches bitmaps over *unoriented* merged rows
+//! (true power-law hubs, degrees in the thousands); its per-batch rule is
+//! [`HubThreshold::resolve`] — a plain cutoff, since the cache only ever
+//! builds rows for endpoints the batch actually touches.
+
+use crate::adj::bitmap::BitmapRow;
+use crate::error::Error;
+use crate::VertexId;
+
+/// Minimum out-degree for a bitmap row — below this, merge is cheap enough
+/// that the bitmap build/memory overhead cannot pay off.
+pub const AUTO_FLOOR: usize = 32;
+
+/// `auto` spends at most this many bitmap bytes per oriented edge (4 ⇒
+/// the budget equals the size of the `targets` array itself).
+pub const AUTO_BUDGET_BYTES_PER_EDGE: u64 = 4;
+
+/// Streaming `auto` marks merged rows at least this multiple of the
+/// average row length (see [`HubThreshold::resolve`]).
+pub const AUTO_DENSITY_FACTOR: usize = 2;
+
+/// Hub-bitmap threshold policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HubThreshold {
+    /// No bitmap rows at all.
+    Off,
+    /// Density rule with memory budget (see module docs).
+    #[default]
+    Auto,
+    /// Fixed out-degree cutoff, unbudgeted.
+    Fixed(usize),
+}
+
+impl HubThreshold {
+    /// Resolve to a plain cutoff for rows holding `row_entries` total
+    /// entries across `n` nodes; `None` = disabled. This is the policy the
+    /// streaming Δ counter's per-batch cache uses (`auto` ⇒
+    /// `max(`[`AUTO_FLOOR`]`, `[`AUTO_DENSITY_FACTOR`]`·⌈entries/n⌉)`);
+    /// the static [`HubIndex::build`] additionally applies the `auto`
+    /// memory budget.
+    pub fn resolve(self, n: usize, row_entries: u64) -> Option<usize> {
+        match self {
+            HubThreshold::Off => None,
+            HubThreshold::Fixed(t) => Some(t),
+            HubThreshold::Auto => {
+                let avg = if n == 0 { 0 } else { (row_entries as usize).div_ceil(n) };
+                Some(AUTO_FLOOR.max(AUTO_DENSITY_FACTOR * avg))
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for HubThreshold {
+    type Err = Error;
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "off" | "none" => Ok(HubThreshold::Off),
+            "auto" => Ok(HubThreshold::Auto),
+            other => other
+                .parse::<usize>()
+                .map(HubThreshold::Fixed)
+                .map_err(|_| Error::Config(format!("hub threshold `{other}` is not n|auto|off"))),
+        }
+    }
+}
+
+impl std::fmt::Display for HubThreshold {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HubThreshold::Off => write!(f, "off"),
+            HubThreshold::Auto => write!(f, "auto"),
+            HubThreshold::Fixed(t) => write!(f, "{t}"),
+        }
+    }
+}
+
+/// Representation statistics for reports (`tricount count` JSON schema).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HubStats {
+    /// Effective cutoff: the smallest `d̂` that got a bitmap (`Fixed` ⇒ the
+    /// fixed value; `None` when bitmaps are disabled).
+    pub threshold: Option<usize>,
+    /// Rows that got a bitmap.
+    pub hubs: usize,
+    /// Heap bytes of all bitmap words plus the row index.
+    pub bitmap_bytes: u64,
+}
+
+/// Per-graph index: which rows have bitmaps, and the rows themselves.
+#[derive(Clone, Debug, Default)]
+pub struct HubIndex {
+    /// `row_of[v]` = index into `rows`, or `u32::MAX`. Empty ⇔ no hubs.
+    row_of: Vec<u32>,
+    rows: Vec<BitmapRow>,
+    /// Effective cutoff (see [`HubStats::threshold`]).
+    threshold: Option<usize>,
+    /// `true` ⇒ the cutoff is exact (`Fixed`: bitmap ⇔ `d̂ ≥ t`); `false`
+    /// for `Auto`, whose budget may stop inside a degree plateau.
+    exact: bool,
+}
+
+impl HubIndex {
+    /// Index with bitmaps disabled (also the `Default`).
+    pub fn disabled() -> Self {
+        HubIndex::default()
+    }
+
+    /// Build over CSR-shaped rows: row `v` is
+    /// `targets[offsets[v]..offsets[v+1]]`.
+    pub fn build(offsets: &[u64], targets: &[VertexId], policy: HubThreshold) -> Self {
+        let row = |v: usize| &targets[offsets[v] as usize..offsets[v + 1] as usize];
+        let n = offsets.len() - 1;
+        let selected: Vec<usize> = match policy {
+            HubThreshold::Off => return HubIndex::disabled(),
+            HubThreshold::Fixed(t) => (0..n).filter(|&v| row(v).len() >= t).collect(),
+            HubThreshold::Auto => {
+                // Heaviest rows first, within the span-byte budget.
+                let budget = AUTO_BUDGET_BYTES_PER_EDGE * targets.len() as u64;
+                let mut cand: Vec<usize> = (0..n).filter(|&v| row(v).len() >= AUTO_FLOOR).collect();
+                cand.sort_unstable_by_key(|&v| (std::cmp::Reverse(row(v).len()), v));
+                let mut spent = 0u64;
+                let mut sel = Vec::new();
+                for v in cand {
+                    let r = row(v);
+                    // Trimmed span bytes, computable without building. Skip
+                    // (don't stop at) rows that overflow the budget: one
+                    // smeared-span row must not starve the denser rows
+                    // behind it.
+                    let bytes =
+                        8 * (r[r.len() - 1] as u64 / 64 - r[0] as u64 / 64 + 1);
+                    if spent + bytes > budget {
+                        continue;
+                    }
+                    spent += bytes;
+                    sel.push(v);
+                }
+                sel
+            }
+        };
+        let threshold = match policy {
+            HubThreshold::Fixed(t) => Some(t),
+            // Effective auto cutoff: the lightest selected row (floor when
+            // nothing qualified).
+            _ => Some(selected.iter().map(|&v| row(v).len()).min().unwrap_or(AUTO_FLOOR)),
+        };
+        if selected.is_empty() {
+            // Nothing qualified: drop the index so `get` is a length check.
+            return HubIndex {
+                row_of: Vec::new(),
+                rows: Vec::new(),
+                threshold,
+                exact: matches!(policy, HubThreshold::Fixed(_)),
+            };
+        }
+        let mut row_of = vec![u32::MAX; n];
+        let mut rows = Vec::with_capacity(selected.len());
+        for v in selected {
+            row_of[v] = rows.len() as u32;
+            rows.push(BitmapRow::from_sorted(row(v)));
+        }
+        HubIndex { row_of, rows, threshold, exact: matches!(policy, HubThreshold::Fixed(_)) }
+    }
+
+    /// The bitmap row of `v`, if `v` is a hub.
+    #[inline]
+    pub fn get(&self, v: VertexId) -> Option<&BitmapRow> {
+        match self.row_of.get(v as usize) {
+            Some(&i) if i != u32::MAX => Some(&self.rows[i as usize]),
+            _ => None,
+        }
+    }
+
+    /// Effective cutoff (`None` = disabled).
+    #[inline]
+    pub fn threshold(&self) -> Option<usize> {
+        self.threshold
+    }
+
+    /// Representation stats for reports.
+    pub fn stats(&self) -> HubStats {
+        HubStats {
+            threshold: self.threshold,
+            hubs: self.rows.len(),
+            bitmap_bytes: self.bytes(),
+        }
+    }
+
+    /// Heap bytes of the rows plus the per-node index.
+    pub fn bytes(&self) -> u64 {
+        self.rows.iter().map(BitmapRow::bytes).sum::<u64>() + (self.row_of.len() * 4) as u64
+    }
+
+    /// Check index invariants against the rows it was built over: every
+    /// bitmap encodes exactly its list and sits at/above the cutoff; with
+    /// an exact cutoff, every qualifying row has a bitmap.
+    pub fn validate(&self, offsets: &[u64], targets: &[VertexId]) -> Result<(), String> {
+        for v in 0..offsets.len() - 1 {
+            let list = &targets[offsets[v] as usize..offsets[v + 1] as usize];
+            match (self.get(v as VertexId), self.threshold) {
+                (Some(row), Some(t)) => {
+                    if list.len() < t {
+                        return Err(format!("node {v}: bitmap below cutoff {t}"));
+                    }
+                    if row.ones() != list.len() || !list.iter().all(|&u| row.contains(u)) {
+                        return Err(format!("node {v}: bitmap disagrees with its list"));
+                    }
+                }
+                (None, Some(t)) => {
+                    if self.exact && list.len() >= t {
+                        return Err(format!("node {v} (d̂={}) missing bitmap", list.len()));
+                    }
+                }
+                (Some(_), None) => return Err(format!("node {v}: bitmap while disabled")),
+                (None, None) => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for (s, t) in [
+            ("off", HubThreshold::Off),
+            ("auto", HubThreshold::Auto),
+            ("128", HubThreshold::Fixed(128)),
+            ("0", HubThreshold::Fixed(0)),
+        ] {
+            assert_eq!(s.parse::<HubThreshold>().unwrap(), t);
+            assert_eq!(t.to_string(), s);
+        }
+        assert_eq!("none".parse::<HubThreshold>().unwrap(), HubThreshold::Off);
+        assert!("fast".parse::<HubThreshold>().is_err());
+        assert!("-1".parse::<HubThreshold>().is_err());
+    }
+
+    #[test]
+    fn resolve_rules() {
+        assert_eq!(HubThreshold::Off.resolve(100, 1000), None);
+        assert_eq!(HubThreshold::Fixed(7).resolve(100, 1000), Some(7));
+        // Sparse: floor wins.
+        assert_eq!(HubThreshold::Auto.resolve(1000, 2000), Some(AUTO_FLOOR));
+        // Dense: 2× average row length (⌈10⁵/10³⌉ = 100 → 200).
+        assert_eq!(HubThreshold::Auto.resolve(1000, 100_000), Some(200));
+        assert_eq!(HubThreshold::Auto.resolve(0, 0), Some(AUTO_FLOOR));
+    }
+
+    #[test]
+    fn fixed_marks_exactly_threshold_rows() {
+        // Rows: [0..5], [5..5] (empty), [5..8].
+        let offsets = [0u64, 5, 5, 8];
+        let targets = [1u32, 2, 3, 4, 9, 0, 1, 2];
+        let idx = HubIndex::build(&offsets, &targets, HubThreshold::Fixed(3));
+        assert!(idx.get(0).is_some());
+        assert!(idx.get(1).is_none());
+        assert!(idx.get(2).is_some());
+        assert_eq!(idx.stats().hubs, 2);
+        assert!(idx.bytes() > 0);
+        idx.validate(&offsets, &targets).unwrap();
+
+        let idx0 = HubIndex::build(&offsets, &targets, HubThreshold::Fixed(0));
+        assert_eq!(idx0.stats().hubs, 3, "threshold 0 bitmaps every row");
+        assert!(idx0.get(1).is_some(), "even the empty row");
+        idx0.validate(&offsets, &targets).unwrap();
+
+        let off = HubIndex::build(&offsets, &targets, HubThreshold::Off);
+        assert_eq!(off.stats().hubs, 0);
+        assert!(off.get(0).is_none());
+        assert_eq!(off.bytes(), 0);
+        off.validate(&offsets, &targets).unwrap();
+    }
+
+    #[test]
+    fn auto_takes_heaviest_rows_within_budget() {
+        // Three rows ≥ AUTO_FLOOR with different lengths; tiny budget would
+        // be exceeded by all three, so the heaviest win.
+        let n = 3usize;
+        let lens = [AUTO_FLOOR + 2, AUTO_FLOOR, AUTO_FLOOR + 1];
+        let mut offsets = vec![0u64];
+        let mut targets: Vec<VertexId> = Vec::new();
+        for l in lens {
+            targets.extend(0..l as VertexId);
+            offsets.push(targets.len() as u64);
+        }
+        let idx = HubIndex::build(&offsets, &targets, HubThreshold::Auto);
+        // Budget 4·m bytes is plenty here (spans are one word each): all in.
+        assert_eq!(idx.stats().hubs, n);
+        assert_eq!(idx.threshold(), Some(AUTO_FLOOR), "lightest selected row");
+        idx.validate(&offsets, &targets).unwrap();
+    }
+
+    #[test]
+    fn auto_budget_prefers_heaviest_but_backfills() {
+        // Rows with huge trimmed spans: ids spread to multiples of 64 so
+        // each row costs `8·len` span bytes against a `4·Σlen` budget.
+        // Heaviest-first: row 3 (44·8=352) fits; rows 1 (320) and 2 (288)
+        // would overflow the 608-byte budget and are skipped; row 0 (256)
+        // still fits — over-budget rows must not starve later ones.
+        let lens = [AUTO_FLOOR, AUTO_FLOOR + 8, AUTO_FLOOR + 4, AUTO_FLOOR + 12];
+        let mut offsets = vec![0u64];
+        let mut targets: Vec<VertexId> = Vec::new();
+        for l in lens {
+            targets.extend((0..l as VertexId).map(|x| x * 64));
+            offsets.push(targets.len() as u64);
+        }
+        let idx = HubIndex::build(&offsets, &targets, HubThreshold::Auto);
+        assert_eq!(idx.stats().hubs, 2, "budget must bite");
+        assert!(idx.get(3).is_some(), "heaviest row selected first");
+        assert!(idx.get(0).is_some(), "light row backfills the budget");
+        assert!(idx.get(1).is_none() && idx.get(2).is_none());
+        idx.validate(&offsets, &targets).unwrap();
+    }
+
+    #[test]
+    fn below_floor_never_bitmapped_by_auto() {
+        let offsets = [0u64, 3, 6];
+        let targets = [1u32, 2, 3, 0, 2, 3];
+        let idx = HubIndex::build(&offsets, &targets, HubThreshold::Auto);
+        assert_eq!(idx.stats().hubs, 0);
+        assert_eq!(idx.bytes(), 0, "index freed when nothing qualifies");
+        assert_eq!(idx.threshold(), Some(AUTO_FLOOR));
+        idx.validate(&offsets, &targets).unwrap();
+    }
+}

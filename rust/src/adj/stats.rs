@@ -1,0 +1,98 @@
+//! Kernel-path hit counters for the hybrid dispatch.
+//!
+//! Every [`crate::adj::view::intersect_count`] / [`intersect_into`]
+//! call records which kernel actually ran, so runs can report the
+//! representation mix (`tricount count`: `k_list_list`, `k_list_bitmap`,
+//! `k_bitmap_bitmap` in the JSON schema). Counters are process-global
+//! relaxed atomics — a single uncontended add next to an intersection that
+//! walks whole lists — and are aggregated across rank threads, matching how
+//! the rest of the metrics layer reports cluster-wide totals.
+//!
+//! [`intersect_into`]: crate::adj::view::intersect_into
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One counter per cache line so rank threads bumping different paths
+/// don't false-share (they still share a line when hitting the *same*
+/// path — acceptable on the target container, which is single-core).
+#[repr(align(64))]
+struct PaddedCounter(AtomicU64);
+
+static LIST_LIST: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+static LIST_BITMAP: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+static BITMAP_BITMAP: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+/// Which kernel the dispatch chose for one intersection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Sorted×sorted: the adaptive merge/gallop kernel.
+    ListList,
+    /// One side has a bitmap: probe the other side's list into it.
+    ListBitmap,
+    /// Both sides have bitmaps: word-AND + popcount.
+    BitmapBitmap,
+}
+
+/// Record one dispatch decision.
+#[inline]
+pub fn record(path: KernelPath) {
+    let c = match path {
+        KernelPath::ListList => &LIST_LIST,
+        KernelPath::ListBitmap => &LIST_BITMAP,
+        KernelPath::BitmapBitmap => &BITMAP_BITMAP,
+    };
+    c.0.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot of the process-wide counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    pub list_list: u64,
+    pub list_bitmap: u64,
+    pub bitmap_bitmap: u64,
+}
+
+impl KernelStats {
+    /// Total intersections dispatched.
+    pub fn total(&self) -> u64 {
+        self.list_list + self.list_bitmap + self.bitmap_bitmap
+    }
+
+    /// Intersections that used a bitmap kernel.
+    pub fn bitmap_hits(&self) -> u64 {
+        self.list_bitmap + self.bitmap_bitmap
+    }
+}
+
+/// Read the counters.
+pub fn snapshot() -> KernelStats {
+    KernelStats {
+        list_list: LIST_LIST.0.load(Ordering::Relaxed),
+        list_bitmap: LIST_BITMAP.0.load(Ordering::Relaxed),
+        bitmap_bitmap: BITMAP_BITMAP.0.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero the counters (drivers call this before the phase they report on).
+pub fn reset() {
+    LIST_LIST.0.store(0, Ordering::Relaxed);
+    LIST_BITMAP.0.store(0, Ordering::Relaxed);
+    BITMAP_BITMAP.0.store(0, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates() {
+        // Counters are process-global and tests run concurrently, so assert
+        // on deltas of the path we touch being at least what we added.
+        let before = snapshot();
+        record(KernelPath::BitmapBitmap);
+        record(KernelPath::BitmapBitmap);
+        let after = snapshot();
+        assert!(after.bitmap_bitmap >= before.bitmap_bitmap + 2);
+        assert!(after.total() >= before.total() + 2);
+    }
+}

@@ -1,0 +1,295 @@
+//! `NeighborView` — the unified neighbor representation every counting
+//! path intersects through — and the hybrid kernel dispatch.
+//!
+//! A view is a sorted slice plus, for hub rows, a packed [`BitmapRow`]
+//! (the slice is *always* present; the bitmap is an accelerator, not a
+//! replacement). [`intersect_count`] dispatches each pair to the cheapest
+//! kernel:
+//!
+//! | a \ b        | sorted                       | bitmap                  |
+//! |--------------|------------------------------|-------------------------|
+//! | **sorted**   | adaptive merge/gallop        | probe a's list into b\* |
+//! | **bitmap**   | probe b's list into a\*      | word-AND + popcount,    |
+//! |              |                              | else probe shorter list |
+//!
+//! Every choice is cost-guarded so the hybrid layer is never slower (in
+//! element steps) than the adaptive kernel it replaced:
+//! * mixed pairs probe only when the probing list is no longer than
+//!   [`intersect::adaptive_cost`] — a short bitmap row against a long
+//!   plain list (a wire payload, say) still wins by *galloping*, not by
+//!   probing the long list (\*);
+//! * bitmap×bitmap word-ANDs only when the span overlap is within the
+//!   shorter list's length (hub neighbors smeared across a huge id range
+//!   fall back to probing the shorter list, which costs `min` — at most
+//!   the gallop cost).
+//!
+//! The executed kernel (not the available representations) is what
+//! [`crate::adj::stats`] records and [`intersect_cost`] charges.
+
+use crate::adj::bitmap::BitmapRow;
+use crate::adj::stats::{self, KernelPath};
+use crate::intersect;
+use crate::VertexId;
+
+/// A neighbor list as the kernels see it: sorted slice + optional bitmap.
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborView<'a> {
+    list: &'a [VertexId],
+    bits: Option<&'a BitmapRow>,
+}
+
+impl<'a> NeighborView<'a> {
+    /// Plain sorted-slice view (remote lists, overlay merges, oracles).
+    #[inline]
+    pub fn sorted(list: &'a [VertexId]) -> Self {
+        NeighborView { list, bits: None }
+    }
+
+    /// View with an optional bitmap row (hub rows pass `Some`).
+    #[inline]
+    pub fn hybrid(list: &'a [VertexId], bits: Option<&'a BitmapRow>) -> Self {
+        debug_assert!(match bits {
+            Some(b) => b.ones() == list.len(),
+            None => true,
+        });
+        NeighborView { list, bits }
+    }
+
+    /// The sorted id list.
+    #[inline]
+    pub fn list(&self) -> &'a [VertexId] {
+        self.list
+    }
+
+    /// The bitmap row, when this is a hub.
+    #[inline]
+    pub fn bits(&self) -> Option<&'a BitmapRow> {
+        self.bits
+    }
+
+    /// Neighbor count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.list.len()
+    }
+
+    /// `true` iff the list is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.list.is_empty()
+    }
+
+    /// `true` iff this row carries a bitmap.
+    #[inline]
+    pub fn is_hub(&self) -> bool {
+        self.bits.is_some()
+    }
+}
+
+/// The kernel chosen for one pair (shared by count / materialize / cost so
+/// all three always agree).
+enum Plan<'a> {
+    /// Adaptive merge/gallop on the two lists.
+    Merge,
+    /// Probe `list` into `bits`.
+    Probe { list: &'a [VertexId], bits: &'a BitmapRow, path: KernelPath },
+    /// Word-AND the two bitmap spans.
+    Words { a: &'a BitmapRow, b: &'a BitmapRow },
+}
+
+/// Mixed pair: probe `list` into `bits` only when that beats the adaptive
+/// list×list cost (galloping a short hub row through a long plain list is
+/// cheaper than probing the long list element-by-element).
+#[inline]
+fn probe_or_merge<'a>(list: &'a [VertexId], bits: &'a BitmapRow, other_len: usize) -> Plan<'a> {
+    if list.len() as u64 <= intersect::adaptive_cost(other_len, list.len()) {
+        Plan::Probe { list, bits, path: KernelPath::ListBitmap }
+    } else {
+        Plan::Merge
+    }
+}
+
+#[inline]
+fn plan<'a>(a: NeighborView<'a>, b: NeighborView<'a>) -> Plan<'a> {
+    match (a.bits, b.bits) {
+        (Some(ba), Some(bb)) => {
+            let min_len = a.len().min(b.len());
+            if ba.overlap_words(bb) <= min_len {
+                Plan::Words { a: ba, b: bb }
+            } else {
+                // Sparse spans: word-AND would scan more words than the
+                // shorter list holds — probe the shorter list instead
+                // (cost `min`, never above the gallop cost).
+                let (list, bits) = if a.len() <= b.len() { (a.list, bb) } else { (b.list, ba) };
+                Plan::Probe { list, bits, path: KernelPath::ListBitmap }
+            }
+        }
+        (Some(ba), None) => probe_or_merge(b.list, ba, a.len()),
+        (None, Some(bb)) => probe_or_merge(a.list, bb, b.len()),
+        (None, None) => Plan::Merge,
+    }
+}
+
+/// `|a ∩ b|`, added to `out_count` — the unified intersection kernel every
+/// counting driver goes through (replaces direct `intersect::count_*`
+/// calls on raw slices).
+#[inline]
+pub fn intersect_count(a: NeighborView, b: NeighborView, out_count: &mut u64) {
+    match plan(a, b) {
+        Plan::Merge => {
+            stats::record(KernelPath::ListList);
+            intersect::count_adaptive(a.list, b.list, out_count);
+        }
+        Plan::Probe { list, bits, path } => {
+            stats::record(path);
+            let mut c = 0u64;
+            for &x in list {
+                c += bits.contains(x) as u64;
+            }
+            *out_count += c;
+        }
+        Plan::Words { a, b } => {
+            stats::record(KernelPath::BitmapBitmap);
+            *out_count += a.and_popcount(b);
+        }
+    }
+}
+
+/// Materializing dispatch: `a ∩ b` appended to `out` in ascending id
+/// order (the hybrid replacement for [`intersect::intersect_vec`]).
+pub fn intersect_into(a: NeighborView, b: NeighborView, out: &mut Vec<VertexId>) {
+    match plan(a, b) {
+        Plan::Merge => {
+            stats::record(KernelPath::ListList);
+            intersect::merge_into(a.list, b.list, out);
+        }
+        Plan::Probe { list, bits, path } => {
+            stats::record(path);
+            out.extend(list.iter().copied().filter(|&x| bits.contains(x)));
+        }
+        Plan::Words { a, b } => {
+            stats::record(KernelPath::BitmapBitmap);
+            a.and_collect(b, out);
+        }
+    }
+}
+
+/// What [`intersect_count`] charges for this pair, in the element-step
+/// units of [`intersect::adaptive_cost`] (one 64-bit word-AND ≙ one step).
+/// This is the *true* execution cost the simulators and the hybrid-aware
+/// estimator charge; the paper's estimators still model the merge cost
+/// `d̂_v + d̂_u`, and the widened estimate-vs-reality gap is exactly what
+/// §V's dynamic load balancing is there to absorb.
+#[inline]
+pub fn intersect_cost(a: NeighborView, b: NeighborView) -> u64 {
+    match plan(a, b) {
+        Plan::Merge => intersect::adaptive_cost(a.len(), b.len()),
+        Plan::Probe { list, .. } => list.len().max(1) as u64,
+        Plan::Words { a, b } => a.overlap_words(b).max(1) as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+
+    fn sorted_list(rng: &mut Rng, len: usize, universe: u32) -> Vec<VertexId> {
+        let mut v: Vec<VertexId> = (0..len).map(|_| rng.next_u32() % universe).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// All four representation combinations must agree with the merge
+    /// oracle for both counting and materializing dispatch.
+    #[test]
+    fn all_dispatch_paths_agree_with_merge() {
+        let mut rng = Rng::seeded(0xD15);
+        for case in 0..200 {
+            // Mix dense (small universe) and sparse (large universe) so
+            // both the word-AND and the probe fallback branches run.
+            let universe = if case % 2 == 0 { 400 } else { 1 << 20 };
+            let a = sorted_list(&mut rng, rng.below_usize(200), universe);
+            let b = sorted_list(&mut rng, rng.below_usize(200), universe);
+            let (ra, rb) = (BitmapRow::from_sorted(&a), BitmapRow::from_sorted(&b));
+            let expect = crate::intersect::intersect_vec(&a, &b);
+
+            let views = |wa: bool, wb: bool| {
+                (
+                    NeighborView::hybrid(&a, wa.then_some(&ra)),
+                    NeighborView::hybrid(&b, wb.then_some(&rb)),
+                )
+            };
+            for (wa, wb) in [(false, false), (true, false), (false, true), (true, true)] {
+                let (va, vb) = views(wa, wb);
+                let mut c = 0u64;
+                intersect_count(va, vb, &mut c);
+                assert_eq!(c, expect.len() as u64, "count case {case} ({wa},{wb})");
+                let mut got = Vec::new();
+                intersect_into(va, vb, &mut got);
+                assert_eq!(got, expect, "into case {case} ({wa},{wb})");
+                assert!(intersect_cost(va, vb) >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn probe_cost_is_probing_list_length() {
+        let hub: Vec<VertexId> = (0..1000).collect();
+        let small = vec![5, 500, 999];
+        let row = BitmapRow::from_sorted(&hub);
+        let vh = NeighborView::hybrid(&hub, Some(&row));
+        let vs = NeighborView::sorted(&small);
+        assert_eq!(intersect_cost(vh, vs), 3);
+        assert_eq!(intersect_cost(vs, vh), 3);
+        // Merge would charge |a| + |b|.
+        assert_eq!(
+            intersect_cost(NeighborView::sorted(&hub), vs),
+            crate::intersect::adaptive_cost(1000, 3)
+        );
+    }
+
+    #[test]
+    fn dense_pair_uses_word_and_and_charges_words() {
+        let a: Vec<VertexId> = (0..640).collect();
+        let b: Vec<VertexId> = (320..960).collect();
+        let (ra, rb) = (BitmapRow::from_sorted(&a), BitmapRow::from_sorted(&b));
+        let va = NeighborView::hybrid(&a, Some(&ra));
+        let vb = NeighborView::hybrid(&b, Some(&rb));
+        let mut c = 0u64;
+        intersect_count(va, vb, &mut c);
+        assert_eq!(c, 320);
+        // Overlap span: words 5..10 → 5 words, far below the 1280 merge.
+        assert_eq!(intersect_cost(va, vb), 5);
+    }
+
+    #[test]
+    fn sparse_hub_pair_falls_back_to_probe() {
+        // Two 4-element "hubs" smeared over 2^22 ids: word-AND would scan
+        // thousands of words; the plan must probe instead.
+        let a: Vec<VertexId> = vec![0, 1 << 20, 2 << 20, 3 << 20];
+        let b: Vec<VertexId> = vec![1, 1 << 20, 5 << 20, 6 << 20];
+        let (ra, rb) = (BitmapRow::from_sorted(&a), BitmapRow::from_sorted(&b));
+        let va = NeighborView::hybrid(&a, Some(&ra));
+        let vb = NeighborView::hybrid(&b, Some(&rb));
+        let mut c = 0u64;
+        intersect_count(va, vb, &mut c);
+        assert_eq!(c, 1);
+        assert_eq!(intersect_cost(va, vb), 4, "probe charges the shorter list");
+    }
+
+    #[test]
+    fn empty_views() {
+        let empty = NeighborView::sorted(&[]);
+        let row = BitmapRow::from_sorted(&[]);
+        let ve = NeighborView::hybrid(&[], Some(&row));
+        let full: Vec<VertexId> = (0..100).collect();
+        let vf = NeighborView::sorted(&full);
+        for (x, y) in [(empty, vf), (vf, ve), (ve, ve)] {
+            let mut c = 0u64;
+            intersect_count(x, y, &mut c);
+            assert_eq!(c, 0);
+        }
+    }
+}

@@ -8,12 +8,12 @@
 
 use std::sync::Arc;
 
+use crate::adj::{self, NeighborView};
 use crate::algo::surrogate::RunResult;
 use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::{Cluster, Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::intersect::count_adaptive;
 use crate::partition::nonoverlap::PartitionView;
 use crate::{TriangleCount, VertexId};
 
@@ -73,9 +73,12 @@ fn handle(c: &mut Comm<Msg>, view: &PartitionView, src: usize, msg: Msg, st: &mu
             c.send(src, Msg::Response { v, nu }).expect("send response");
         }
         Msg::Response { v, nu } => {
-            let nv = view.nbrs(v);
-            count_adaptive(nv, &nu, &mut st.t);
-            st.work += (nv.len() + nu.len()) as u64;
+            // Remote N_u is a wire payload (plain sorted view); the local
+            // N_v goes through the hybrid dispatch.
+            let vv = view.view(v);
+            let nuv = NeighborView::sorted(&nu);
+            adj::intersect_count(vv, nuv, &mut st.t);
+            st.work += adj::intersect_cost(vv, nuv);
             st.pending -= 1;
         }
         Msg::Completion => st.completions += 1,
@@ -93,14 +96,14 @@ fn rank_main(
     let mut st = RankState { t: 0, work: 0, completions: 0, pending: 0 };
 
     for v in range.clone() {
-        let nv = view.nbrs(v);
-        let dv = nv.len();
+        let vv = view.view(v);
+        let nv = vv.list();
         for &u in nv {
             let j = owner[u as usize];
             if j == me {
-                let nu = view.nbrs(u);
-                count_adaptive(nv, nu, &mut st.t);
-                st.work += (dv + nu.len()) as u64;
+                let vu = view.view(u);
+                adj::intersect_count(vv, vu, &mut st.t);
+                st.work += adj::intersect_cost(vv, vu);
             } else {
                 // One request per remote oriented edge — redundancy included.
                 c.send(j as usize, Msg::Request { u, v }).expect("send request");

@@ -10,12 +10,12 @@
 
 use std::sync::Arc;
 
+use crate::adj;
 use crate::algo::tasks::{self, Task};
 use crate::comm::threads::{Cluster, Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::intersect::intersect_vec;
 use crate::partition::cost::{cost_vector, prefix_sums};
 
 enum Msg {
@@ -102,10 +102,13 @@ fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usiz
 }
 
 fn run_task(o: &Oriented, task: Task, tv: &mut [u64]) {
+    let mut ws = Vec::new();
     for v in task.range() {
-        let nv = o.nbrs(v);
-        for &u in nv {
-            for w in intersect_vec(nv, o.nbrs(u)) {
+        let vv = o.view(v);
+        for &u in vv.list() {
+            ws.clear();
+            adj::intersect_into(vv, o.view(u), &mut ws);
+            for &w in &ws {
                 tv[v as usize] += 1;
                 tv[u as usize] += 1;
                 tv[w as usize] += 1;

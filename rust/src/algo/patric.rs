@@ -12,12 +12,12 @@
 
 use std::sync::Arc;
 
+use crate::adj;
 use crate::algo::surrogate::RunResult;
 use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::Cluster;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::intersect::count_adaptive;
 use crate::TriangleCount;
 
 /// Run PATRIC over consecutive core ranges (balanced with its own best
@@ -32,13 +32,13 @@ pub fn run(graph: &Arc<Oriented>, ranges: &[std::ops::Range<u32>]) -> Result<Run
         let mut t: TriangleCount = 0;
         let mut work = 0u64;
         for v in range {
-            let nv = o.nbrs(v);
-            for &u in nv {
+            let vv = o.view(v);
+            for &u in vv.list() {
                 // u's list is in the overlap portion — local on a real
                 // PATRIC rank, shared read-only here.
-                let nu = o.nbrs(u);
-                count_adaptive(nv, nu, &mut t);
-                work += (nv.len() + nu.len()) as u64;
+                let vu = o.view(u);
+                adj::intersect_count(vv, vu, &mut t);
+                work += adj::intersect_cost(vv, vu);
             }
         }
         c.metrics.work_units = work;

@@ -12,11 +12,11 @@
 
 use std::sync::Arc;
 
+use crate::adj::{self, NeighborView};
 use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::{Cluster, Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::intersect::count_adaptive;
 use crate::partition::nonoverlap::PartitionView;
 use crate::{TriangleCount, VertexId};
 
@@ -55,15 +55,18 @@ pub struct RunResult {
 /// `SURROGATECOUNT(X, i)` (paper Fig 2): count `|N_u ∩ X|` for every
 /// `u ∈ X` owned by this rank. `X` is id-sorted, the owned range is an
 /// id-interval, so the owned members form one contiguous slice of `X`.
+/// `X` arrived over the wire, so it is a plain sorted view; the local
+/// `N_u` goes through the hybrid dispatch, upgrading hub rows to probes.
 #[inline]
 fn surrogate_count(view: &PartitionView, x: &[VertexId], t: &mut TriangleCount, work: &mut u64) {
     let r = view.range();
     let lo = x.partition_point(|&u| u < r.start);
     let hi = x.partition_point(|&u| u < r.end);
+    let xv = NeighborView::sorted(x);
     for &u in &x[lo..hi] {
-        let nu = view.nbrs(u);
-        count_adaptive(nu, x, t);
-        *work += (nu.len() + x.len()) as u64;
+        let vu = view.view(u);
+        adj::intersect_count(vu, xv, t);
+        *work += adj::intersect_cost(vu, xv);
     }
 }
 
@@ -110,16 +113,16 @@ fn rank_main(
 
     // Lines 2-12: local counting + sends + opportunistic receive.
     for v in range.clone() {
-        let nv = view.nbrs(v);
-        let dv = nv.len();
+        let vv = view.view(v);
+        let nv = vv.list();
         let mut last_proc: i64 = -1; // paper §IV-C: reset per node v
         let mut payload: Option<Arc<[VertexId]>> = None; // materialized lazily, shared across sends
         for &u in nv {
             let j = owner[u as usize];
             if j == me {
-                let nu = view.nbrs(u);
-                count_adaptive(nv, nu, &mut t);
-                work += (dv + nu.len()) as u64;
+                let vu = view.view(u);
+                adj::intersect_count(vv, vu, &mut t);
+                work += adj::intersect_cost(vv, vu);
             } else if last_proc != j as i64 {
                 // First u of this destination partition: push N_v once.
                 let data = payload.get_or_insert_with(|| Arc::from(nv)).clone();

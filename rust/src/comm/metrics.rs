@@ -14,17 +14,26 @@ pub struct CommMetrics {
     pub messages_sent: u64,
     /// Payload bytes sent (sum of declared message sizes).
     pub bytes_sent: u64,
-    /// Messages received and processed.
+    /// Data messages received and processed.
     pub messages_received: u64,
     /// Broadcast/control messages sent (completion notifiers, task protocol).
     pub control_sent: u64,
+    /// Control messages received — accounted apart from data so per-rank
+    /// message totals stay symmetric with the send side (Σ messages_sent =
+    /// Σ messages_received and Σ control_sent = Σ control_received once a
+    /// run drains).
+    pub control_received: u64,
     /// Wall time spent blocked waiting to receive (the measured component of
     /// idle time on the threads backend).
     pub recv_wait: Duration,
     /// Wall time of the rank's whole run.
     pub total: Duration,
-    /// Work units executed (paper cost measure Σ(d̂_v + d̂_u)); filled by the
-    /// algorithms, used for load-imbalance reporting and sim calibration.
+    /// Work units executed, in the element steps the hybrid dispatch
+    /// actually ran (merge/gallop per [`crate::intersect::adaptive_cost`],
+    /// bitmap probe, or word-AND — [`crate::adj::intersect_cost`]); filled
+    /// by the algorithms, used for load-imbalance reporting. The paper's
+    /// merge-model measure Σ(d̂_v + d̂_u) lives on as the estimators in
+    /// [`crate::partition::cost`].
     pub work_units: u64,
 }
 
@@ -35,6 +44,7 @@ impl CommMetrics {
         self.bytes_sent += other.bytes_sent;
         self.messages_received += other.messages_received;
         self.control_sent += other.control_sent;
+        self.control_received += other.control_received;
         self.recv_wait += other.recv_wait;
         self.total = self.total.max(other.total);
         self.work_units += other.work_units;
@@ -79,11 +89,18 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = CommMetrics { messages_sent: 2, bytes_sent: 10, ..Default::default() };
-        let b = CommMetrics { messages_sent: 3, bytes_sent: 5, work_units: 7, ..Default::default() };
+        let b = CommMetrics {
+            messages_sent: 3,
+            bytes_sent: 5,
+            work_units: 7,
+            control_received: 4,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.messages_sent, 5);
         assert_eq!(a.bytes_sent, 15);
         assert_eq!(a.work_units, 7);
+        assert_eq!(a.control_received, 4);
     }
 
     #[test]

@@ -13,14 +13,44 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::comm::metrics::CommMetrics;
 use crate::error::{Error, Result};
 
-/// Default guard against protocol deadlocks in tests/CI.
+/// Default guard against protocol deadlocks in tests/CI. Override with the
+/// `TRICOUNT_RECV_GUARD_SECS` env var (whole seconds, > 0) for large-graph
+/// CI and local stress runs that legitimately block longer than 30s.
 pub const RECV_DEADLOCK_GUARD: Duration = Duration::from_secs(30);
+
+/// The effective guard: `TRICOUNT_RECV_GUARD_SECS` if set and valid, else
+/// [`RECV_DEADLOCK_GUARD`]. Read once and cached for the process.
+pub fn recv_guard() -> Duration {
+    static GUARD: OnceLock<Duration> = OnceLock::new();
+    *GUARD.get_or_init(|| {
+        guard_from(std::env::var("TRICOUNT_RECV_GUARD_SECS").ok().as_deref())
+    })
+}
+
+/// Parse an override value; invalid / missing / zero falls back to the
+/// default (factored out of [`recv_guard`] so the policy is testable
+/// without racing on process-global env state).
+fn guard_from(val: Option<&str>) -> Duration {
+    match val.and_then(|s| s.trim().parse::<u64>().ok()) {
+        Some(secs) if secs > 0 => Duration::from_secs(secs),
+        _ => RECV_DEADLOCK_GUARD,
+    }
+}
+
+/// Internal channel envelope: sender rank, control-plane flag, payload.
+/// The flag lets the receive side account control traffic apart from data
+/// (the send side already does), keeping [`CommMetrics`] symmetric.
+struct Envelope<M> {
+    src: usize,
+    control: bool,
+    msg: M,
+}
 
 /// Messages must declare their wire size so the metrics layer can account
 /// bytes the way the paper reasons about them (neighbor-list words).
@@ -39,8 +69,8 @@ struct Shared {
 pub struct Comm<M: Payload> {
     rank: usize,
     size: usize,
-    senders: Vec<Sender<(usize, M)>>,
-    receiver: Receiver<(usize, M)>,
+    senders: Vec<Sender<Envelope<M>>>,
+    receiver: Receiver<Envelope<M>>,
     shared: Arc<Shared>,
     /// Per-rank counters, returned to the driver by [`Cluster::run`].
     pub metrics: CommMetrics,
@@ -65,16 +95,16 @@ impl<M: Payload> Comm<M> {
         self.metrics.messages_sent += 1;
         self.metrics.bytes_sent += msg.size_bytes();
         self.senders[dst]
-            .send((self.rank, msg))
+            .send(Envelope { src: self.rank, control: false, msg })
             .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
     }
 
     /// Control-plane send (completion notifiers, task protocol): accounted
-    /// separately from data messages.
+    /// separately from data messages, on both endpoints.
     pub fn send_control(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.control_sent += 1;
         self.senders[dst]
-            .send((self.rank, msg))
+            .send(Envelope { src: self.rank, control: true, msg })
             .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
     }
 
@@ -88,29 +118,35 @@ impl<M: Payload> Comm<M> {
         Ok(())
     }
 
+    /// Account one delivered envelope and unwrap it.
+    #[inline]
+    fn accept(&mut self, env: Envelope<M>) -> (usize, M) {
+        if env.control {
+            self.metrics.control_received += 1;
+        } else {
+            self.metrics.messages_received += 1;
+        }
+        (env.src, env.msg)
+    }
+
     /// Non-blocking receive.
     pub fn try_recv(&mut self) -> Option<(usize, M)> {
         match self.receiver.try_recv() {
-            Ok(x) => {
-                self.metrics.messages_received += 1;
-                Some(x)
-            }
+            Ok(env) => Some(self.accept(env)),
             Err(_) => None,
         }
     }
 
     /// Blocking receive with the deadlock guard; records wait time as idle.
     pub fn recv(&mut self) -> Result<(usize, M)> {
+        let guard = recv_guard();
         let start = Instant::now();
-        let r = self.receiver.recv_timeout(RECV_DEADLOCK_GUARD);
+        let r = self.receiver.recv_timeout(guard);
         self.metrics.recv_wait += start.elapsed();
         match r {
-            Ok(x) => {
-                self.metrics.messages_received += 1;
-                Ok(x)
-            }
+            Ok(env) => Ok(self.accept(env)),
             Err(RecvTimeoutError::Timeout) => Err(Error::Cluster(format!(
-                "rank {} recv timed out after {RECV_DEADLOCK_GUARD:?} (protocol deadlock?)",
+                "rank {} recv timed out after {guard:?} (protocol deadlock?)",
                 self.rank
             ))),
             Err(RecvTimeoutError::Disconnected) => {
@@ -270,6 +306,58 @@ mod tests {
         assert_eq!(res[0].1.messages_sent, 1);
         assert_eq!(res[0].1.bytes_sent, 12);
         assert_eq!(res[1].1.messages_received, 1);
+    }
+
+    #[test]
+    fn control_receives_accounted_apart_from_data() {
+        let res = Cluster::run::<u64, (), _>(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 11).unwrap();
+                c.send_control(1, 22).unwrap();
+                c.send_control(1, 33).unwrap();
+            } else {
+                for _ in 0..3 {
+                    c.recv().unwrap();
+                }
+            }
+        })
+        .unwrap();
+        let (sender, receiver) = (&res[0].1, &res[1].1);
+        assert_eq!(sender.messages_sent, 1);
+        assert_eq!(sender.control_sent, 2);
+        // Receive-side split mirrors the send side — the asymmetry this
+        // regression test exists for.
+        assert_eq!(receiver.messages_received, 1);
+        assert_eq!(receiver.control_received, 2);
+    }
+
+    #[test]
+    fn bcast_control_received_as_control_everywhere() {
+        let res = Cluster::run::<u64, (), _>(3, |c| {
+            if c.rank() == 0 {
+                c.bcast_control(|| 7).unwrap();
+            } else {
+                c.recv().unwrap();
+            }
+        })
+        .unwrap();
+        assert_eq!(res[0].1.control_sent, 2);
+        for (_, m) in &res[1..] {
+            assert_eq!(m.control_received, 1);
+            assert_eq!(m.messages_received, 0);
+        }
+    }
+
+    #[test]
+    fn recv_guard_override_parsing() {
+        assert_eq!(guard_from(None), RECV_DEADLOCK_GUARD);
+        assert_eq!(guard_from(Some("120")), Duration::from_secs(120));
+        assert_eq!(guard_from(Some(" 45 ")), Duration::from_secs(45));
+        assert_eq!(guard_from(Some("0")), RECV_DEADLOCK_GUARD, "zero is invalid");
+        assert_eq!(guard_from(Some("ten")), RECV_DEADLOCK_GUARD);
+        assert_eq!(guard_from(Some("")), RECV_DEADLOCK_GUARD);
+        // The cached process-wide value resolves to *some* positive guard.
+        assert!(recv_guard() >= Duration::from_secs(1));
     }
 
     #[test]

@@ -53,6 +53,11 @@ pub enum CostFn {
     PatricBest,
     /// This paper's §IV-F estimator: `f(v) = Σ_{u∈𝒩_v−N_v}(d̂_v + d̂_u)`.
     SurrogateNew,
+    /// Representation-aware: `f(v) = Σ_{u∈N_v} hybrid_cost(v, u)`, charging
+    /// the `adj/` dispatch's actual kernel (probe / word-AND on hub rows)
+    /// instead of the merge model — the estimator to use once bitmaps make
+    /// hub work cheaper than any degree-based `f(v)` predicts.
+    Hybrid,
 }
 
 impl std::str::FromStr for CostFn {
@@ -63,6 +68,7 @@ impl std::str::FromStr for CostFn {
             "degree" | "dv" => CostFn::Degree,
             "patric" | "patric-best" => CostFn::PatricBest,
             "new" | "surrogate-new" => CostFn::SurrogateNew,
+            "hybrid" | "hybrid-aware" => CostFn::Hybrid,
             other => return Err(Error::Config(format!("unknown cost fn `{other}`"))),
         })
     }
@@ -88,6 +94,9 @@ pub struct RunConfig {
     pub dense_core: usize,
     /// Directory of AOT artifacts.
     pub artifacts_dir: String,
+    /// Hub-bitmap threshold policy for the oriented adjacency
+    /// (`--hub-threshold <n|auto|off>`).
+    pub hub_threshold: crate::adj::HubThreshold,
 }
 
 impl Default for RunConfig {
@@ -101,6 +110,7 @@ impl Default for RunConfig {
             seed: 42,
             dense_core: 0,
             artifacts_dir: "artifacts".into(),
+            hub_threshold: crate::adj::HubThreshold::Auto,
         }
     }
 }
@@ -133,6 +143,7 @@ impl RunConfig {
                     .map_err(|e| Error::Config(format!("dense_core: {e}")))?
             }
             "artifacts_dir" | "artifacts-dir" => self.artifacts_dir = value.to_string(),
+            "hub_threshold" | "hub-threshold" => self.hub_threshold = value.parse()?,
             other => return Err(Error::Config(format!("unknown key `{other}`"))),
         }
         if key == "procs" && self.procs == 0 {
@@ -224,6 +235,13 @@ mod tests {
         assert_eq!(c.procs, 16);
         assert_eq!(c.algorithm, Algorithm::DynamicLb);
         assert_eq!(c.cost_fn, CostFn::Degree);
+        assert_eq!(c.hub_threshold, crate::adj::HubThreshold::Auto);
+        c.set("hub-threshold", "off").unwrap();
+        assert_eq!(c.hub_threshold, crate::adj::HubThreshold::Off);
+        c.set("hub_threshold", "256").unwrap();
+        assert_eq!(c.hub_threshold, crate::adj::HubThreshold::Fixed(256));
+        c.set("cost_fn", "hybrid").unwrap();
+        assert_eq!(c.cost_fn, CostFn::Hybrid);
     }
 
     #[test]
@@ -233,6 +251,7 @@ mod tests {
         assert!(c.set("procs", "0").is_err());
         assert!(c.set("algorithm", "quantum").is_err());
         assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("hub_threshold", "sometimes").is_err());
     }
 
     #[test]

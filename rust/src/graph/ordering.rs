@@ -11,7 +11,17 @@
 //! intersection kernels need a common sort key, and the surrogate
 //! algorithm's `LastProc` trick (§IV-C) needs nodes belonging to the same
 //! consecutive-id partition to sit consecutively inside `N_v`.
+//!
+//! Rows whose oriented out-degree reaches the hub threshold additionally
+//! get a packed [`BitmapRow`] (built here, at construction), so every
+//! consumer that intersects through [`Oriented::view`] +
+//! [`crate::adj::intersect_count`] gets the probe / word-AND kernels on
+//! hub pairs for free. `from_graph` uses the `auto` density rule; see
+//! [`HubThreshold`].
 
+use crate::adj::bitmap::BitmapRow;
+use crate::adj::hub::{HubIndex, HubStats, HubThreshold};
+use crate::adj::view::NeighborView;
 use crate::graph::csr::Csr;
 use crate::VertexId;
 
@@ -29,11 +39,18 @@ pub struct Oriented {
     offsets: Vec<u64>,
     targets: Vec<VertexId>,
     degree: Vec<u32>,
+    hubs: HubIndex,
 }
 
 impl Oriented {
-    /// Orient a CSR graph by `≺`. O(m).
+    /// Orient a CSR graph by `≺` with the default (`auto`) hub threshold.
+    /// O(m).
     pub fn from_graph(g: &Csr) -> Self {
+        Self::from_graph_with(g, HubThreshold::default())
+    }
+
+    /// Orient with an explicit hub-bitmap threshold policy.
+    pub fn from_graph_with(g: &Csr, hub_threshold: HubThreshold) -> Self {
         let n = g.num_nodes();
         let degree: Vec<u32> = (0..n as VertexId).map(|v| g.degree(v) as u32).collect();
         let mut offsets = vec![0u64; n + 1];
@@ -59,7 +76,8 @@ impl Oriented {
             }
             debug_assert_eq!(w as u64, offsets[v as usize + 1]);
         }
-        Oriented { offsets, targets, degree }
+        let hubs = HubIndex::build(&offsets, &targets, hub_threshold);
+        Oriented { offsets, targets, degree, hubs }
     }
 
     /// Number of nodes.
@@ -80,6 +98,33 @@ impl Oriented {
         let s = self.offsets[v as usize] as usize;
         let e = self.offsets[v as usize + 1] as usize;
         &self.targets[s..e]
+    }
+
+    /// `N_v` as a [`NeighborView`]: the sorted slice plus, for hub rows,
+    /// the bitmap — what every counting path hands to
+    /// [`crate::adj::intersect_count`].
+    #[inline]
+    pub fn view(&self, v: VertexId) -> NeighborView<'_> {
+        NeighborView::hybrid(self.nbrs(v), self.hubs.get(v))
+    }
+
+    /// The bitmap row of `v`, when `v` is a hub.
+    #[inline]
+    pub fn hub_row(&self, v: VertexId) -> Option<&BitmapRow> {
+        self.hubs.get(v)
+    }
+
+    /// What the hybrid dispatch charges for `N_v ∩ N_u`, in element steps —
+    /// the true-execution cost measure shared by `node_work_true`, the
+    /// simulators and the `hybrid` cost estimator.
+    #[inline]
+    pub fn intersect_cost(&self, v: VertexId, u: VertexId) -> u64 {
+        crate::adj::intersect_cost(self.view(v), self.view(u))
+    }
+
+    /// Representation statistics (resolved threshold, hub rows, bytes).
+    pub fn hub_stats(&self) -> HubStats {
+        self.hubs.stats()
     }
 
     /// Effective degree `d̂_v = |N_v|`.
@@ -115,9 +160,11 @@ impl Oriented {
         &self.degree
     }
 
-    /// Bytes held by this structure (offsets + targets + degrees).
+    /// Bytes held by this structure (offsets + targets + degrees + hub
+    /// bitmaps).
     pub fn memory_bytes(&self) -> u64 {
         (self.offsets.len() * 8 + self.targets.len() * 4 + self.degree.len() * 4) as u64
+            + self.hubs.bytes()
     }
 
     /// Check orientation invariants (tests only; O(m log m)).
@@ -148,6 +195,9 @@ impl Oriented {
                 }
             }
         }
+        // Hub-index invariants: every bitmap encodes exactly its row and
+        // respects the cutoff.
+        self.hubs.validate(&self.offsets, &self.targets)?;
         Ok(())
     }
 }
@@ -196,6 +246,50 @@ mod tests {
         for v in 0..6u32 {
             assert_eq!(o.effective_degree(v), 5 - v as usize);
         }
+    }
+
+    #[test]
+    fn hub_rows_respect_threshold_and_count_identically() {
+        let g = classic::karate();
+        let seq = crate::seq::node_iterator::count(&Oriented::from_graph(&g));
+        for t in [HubThreshold::Off, HubThreshold::Auto, HubThreshold::Fixed(0), HubThreshold::Fixed(1), HubThreshold::Fixed(5)] {
+            let o = Oriented::from_graph_with(&g, t);
+            o.validate(&g).unwrap();
+            assert_eq!(crate::seq::node_iterator::count(&o), seq, "{t}");
+        }
+        // Threshold 0 bitmaps every row; off bitmaps none.
+        let all = Oriented::from_graph_with(&g, HubThreshold::Fixed(0));
+        assert_eq!(all.hub_stats().hubs, g.num_nodes());
+        let off = Oriented::from_graph_with(&g, HubThreshold::Off);
+        assert_eq!(off.hub_stats().hubs, 0);
+        assert_eq!(off.hub_stats().threshold, None);
+        assert!(all.memory_bytes() > off.memory_bytes());
+    }
+
+    #[test]
+    fn view_exposes_bitmap_exactly_for_hubs() {
+        let g = classic::complete(8); // d̂_v = 7 - v
+        let o = Oriented::from_graph_with(&g, HubThreshold::Fixed(4));
+        for v in 0..8u32 {
+            assert_eq!(o.view(v).is_hub(), o.effective_degree(v) >= 4, "node {v}");
+            assert_eq!(o.view(v).list(), o.nbrs(v));
+            assert_eq!(o.hub_row(v).is_some(), o.view(v).is_hub());
+        }
+    }
+
+    #[test]
+    fn intersect_cost_reflects_kernel_choice() {
+        // K_8 with threshold 4: pair (0, 1) is hub×hub (d̂ 7 and 6) and the
+        // dense span makes word-AND cheapest; a list×list pair charges the
+        // adaptive cost.
+        let g = classic::complete(8);
+        let o = Oriented::from_graph_with(&g, HubThreshold::Fixed(4));
+        assert_eq!(o.intersect_cost(0, 1), 1, "one shared word");
+        let off = Oriented::from_graph_with(&g, HubThreshold::Off);
+        assert_eq!(
+            off.intersect_cost(0, 1),
+            crate::intersect::adaptive_cost(7, 6)
+        );
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!   exactly the "large degrees" regime this paper targets.
 //! * [`count_adaptive`] — picks between them by length ratio; the threshold
 //!   was tuned by `benches/hot_path.rs` (see EXPERIMENTS.md §Perf).
+//!
+//! These are the **list×list** kernels. Counting drivers no longer call
+//! them on raw slices: they intersect through the hybrid dispatch in
+//! [`crate::adj::view`], which falls back to [`count_adaptive`] when
+//! neither side is a hub bitmap row.
 
 use crate::VertexId;
 
@@ -86,10 +91,12 @@ pub fn count_adaptive(a: &[VertexId], b: &[VertexId], out_count: &mut u64) {
 
 /// Model of what [`count_adaptive`] actually costs, in "element steps":
 /// `min + max` for the merge path, `min·(1 + log₂(max/min))` for galloping.
-/// This is the *true* execution cost the simulators charge; the paper's
-/// estimators model the merge cost `d̂_v + d̂_u`, and the gap between the two
-/// is precisely the estimate-vs-reality error that §V's dynamic load
-/// balancing exists to absorb.
+/// This is the list×list term of the hybrid cost model — pairs involving
+/// hub bitmap rows are charged by [`crate::adj::intersect_cost`] instead
+/// (probe length or word-AND span), which is what the simulators and the
+/// `hybrid` estimator use. The paper's estimators model the merge cost
+/// `d̂_v + d̂_u`, and the gap between estimate and executed cost is
+/// precisely the error that §V's dynamic load balancing exists to absorb.
 #[inline]
 pub fn adaptive_cost(la: usize, lb: usize) -> u64 {
     let (s, l) = if la <= lb { (la, lb) } else { (lb, la) };
@@ -104,9 +111,10 @@ pub fn adaptive_cost(la: usize, lb: usize) -> u64 {
     }
 }
 
-/// Materializing intersection (tests, per-node triangle listings).
-pub fn intersect_vec(a: &[VertexId], b: &[VertexId]) -> Vec<VertexId> {
-    let mut out = Vec::new();
+/// Materializing merge intersection into a caller-owned buffer (appends,
+/// ascending id order) — shared by [`intersect_vec`] and the list×list arm
+/// of [`crate::adj::intersect_into`].
+pub fn merge_into(a: &[VertexId], b: &[VertexId], out: &mut Vec<VertexId>) {
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
         if a[i] == b[j] {
@@ -119,6 +127,12 @@ pub fn intersect_vec(a: &[VertexId], b: &[VertexId]) -> Vec<VertexId> {
             j += 1;
         }
     }
+}
+
+/// Materializing intersection (tests, per-node triangle listings).
+pub fn intersect_vec(a: &[VertexId], b: &[VertexId]) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    merge_into(a, b, &mut out);
     out
 }
 

@@ -12,10 +12,17 @@
 //!   PATRIC baseline, the §V dynamic load balancer, and a calibrated
 //!   cluster cost-model simulator that regenerates the paper's scaling
 //!   figures on a single machine.
+//! * **`adj/`** — the hybrid hub-bitmap adjacency layer: hub rows (oriented
+//!   out-degree ≥ an auto-tuned threshold) carry a packed bitmap
+//!   ([`adj::bitmap::BitmapRow`]) beside their sorted slice, and every
+//!   counting path intersects through the [`adj::view::NeighborView`] dispatch
+//!   (list×list merge/gallop, list×bitmap probe, bitmap×bitmap word-AND) —
+//!   see DESIGN.md §7 for the representation rule and kernel matrix.
 //! * **`stream/`** — incremental parallel counting over edge-update
 //!   batches: an [`stream::overlay::AdjDelta`] mutable overlay on the
-//!   immutable CSR, an exact per-batch Δ counter reusing the `intersect`
-//!   kernels, a parallel driver sharding ops by min-`≺`-endpoint ownership
+//!   immutable CSR, an exact per-batch Δ counter going through the `adj/`
+//!   dispatch (with per-batch hub bitmap caching),
+//!   a parallel driver sharding ops by min-`≺`-endpoint ownership
 //!   over `comm::threads`, sliding-window expiry, periodic compaction back
 //!   into a fresh CSR, and a cost-model throughput projector in
 //!   `sim::streaming`. See `DESIGN.md` §6 for the lifecycle.
@@ -65,6 +72,15 @@ pub mod gen {
 }
 
 pub mod intersect;
+
+pub mod adj {
+    pub mod bitmap;
+    pub mod hub;
+    pub mod stats;
+    pub mod view;
+    pub use hub::{HubStats, HubThreshold};
+    pub use view::{intersect_cost, intersect_count, intersect_into, NeighborView};
+}
 
 pub mod approx;
 

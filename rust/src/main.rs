@@ -62,12 +62,16 @@ COMMANDS:
                     --workload SPEC  (karate | preset | pa:N:D | rmat:S:EF |
                                       contact:N:D | file:PATH | bin:PATH)
                     --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
-                    --procs P --cost-fn F (unit|dv|patric|new) --scale X
+                    --procs P --cost-fn F (unit|dv|patric|new|hybrid) --scale X
+                    --hub-threshold T (n|auto|off: bitmap rows for d̂ ≥ T)
                     --dense-core K --artifacts-dir DIR --config FILE
+                    --out DIR (write count.{{csv,json}} incl. representation
+                    stats: hub count, bitmap bytes, kernel-path hits)
   stream            incremental counting over batched edge updates
                     --workload SPEC --procs P --batch-size N --batches B
                     --window W (0 = no expiry) --delete-frac F --base-frac F
-                    --compact-every C --out DIR --verify on|off
+                    --compact-every C --hub-threshold T --out DIR
+                    --verify on|off
   generate          build a workload and write it
                     --workload SPEC --out PATH [--format edges|bin]
   analyze           triangle-based network analysis (clustering,
@@ -114,13 +118,14 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
 
 fn cmd_count(args: &[String]) -> Result<()> {
     let (cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &[])?;
+    reject_unknown(&extra, &["out"])?;
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
     let gen_time = t0.elapsed();
     let t0 = std::time::Instant::now();
-    let o = Arc::new(Oriented::from_graph(&g));
+    let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
     let orient_time = t0.elapsed();
+    let hubs = o.hub_stats();
     println!(
         "workload={} n={} m={} d̄={:.1} (gen {:.2?}, orient {:.2?})",
         cfg.workload,
@@ -130,7 +135,15 @@ fn cmd_count(args: &[String]) -> Result<()> {
         gen_time,
         orient_time
     );
+    println!(
+        "adjacency: hub-threshold={} (resolved {}) hubs={} bitmap_bytes={}",
+        cfg.hub_threshold,
+        hubs.threshold.map_or("off".into(), |t| t.to_string()),
+        hubs.hubs,
+        hubs.bitmap_bytes
+    );
 
+    tricount::adj::stats::reset();
     let t0 = std::time::Instant::now();
     let (triangles, detail) = match cfg.algorithm {
         Algorithm::Sequential => (node_iterator::count(&o), String::new()),
@@ -188,13 +201,43 @@ fn cmd_count(args: &[String]) -> Result<()> {
             )
         }
     };
+    let elapsed = t0.elapsed();
+    let kernels = tricount::adj::stats::snapshot();
     println!(
         "triangles={} algorithm={:?} procs={} time={:.3?} {detail}",
-        triangles,
-        cfg.algorithm,
-        cfg.procs,
-        t0.elapsed()
+        triangles, cfg.algorithm, cfg.procs, elapsed
     );
+    println!(
+        "kernels: list×list={} list×bitmap={} bitmap×bitmap={}",
+        kernels.list_list, kernels.list_bitmap, kernels.bitmap_bitmap
+    );
+
+    if let Some(dir) = extra.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let mut report = exp::report::Report::new([
+            "workload", "algorithm", "procs", "n", "m", "triangles", "time_s",
+            "hub_threshold", "hubs", "bitmap_bytes", "k_list_list", "k_list_bitmap",
+            "k_bitmap_bitmap",
+        ]);
+        report.row([
+            cfg.workload.clone().into(),
+            format!("{:?}", cfg.algorithm).into(),
+            cfg.procs.into(),
+            g.num_nodes().into(),
+            g.num_edges().into(),
+            triangles.into(),
+            exp::report::Cell::Secs(elapsed.as_secs_f64()),
+            hubs.threshold.map_or("off".into(), |t| t.to_string()).into(),
+            hubs.hubs.into(),
+            hubs.bitmap_bytes.into(),
+            kernels.list_list.into(),
+            kernels.list_bitmap.into(),
+            kernels.bitmap_bitmap.into(),
+        ]);
+        report.write_csv(&format!("{dir}/count.csv"))?;
+        report.write_json(&format!("{dir}/count.json"))?;
+        println!("[written: {dir}/count.{{csv,json}}]");
+    }
     Ok(())
 }
 
@@ -254,10 +297,16 @@ fn cmd_stream(args: &[String]) -> Result<()> {
 
     let opts = parallel::StreamOptions {
         policy: CompactionPolicy { every_batches: compact_every, overlay_ratio: 0.10 },
+        hub_threshold: cfg.hub_threshold,
     };
+    // Pay the one-time static count before resetting the kernel counters,
+    // so the reported path mix describes the *streaming* Δ counter.
+    let initial = node_iterator::count(&Oriented::from_graph(&w.base));
+    tricount::adj::stats::reset();
     let t0 = std::time::Instant::now();
-    let r = parallel::run(&w.base, &batches, cfg.procs, opts)?;
+    let r = parallel::run_with_initial(&w.base, &batches, cfg.procs, opts, initial)?;
     let elapsed = t0.elapsed();
+    let kernels = tricount::adj::stats::snapshot();
 
     let totals = r.metrics.totals();
     let mut report = exp::report::Report::new([
@@ -280,6 +329,10 @@ fn cmd_stream(args: &[String]) -> Result<()> {
         ((w.updates as f64 / elapsed.as_secs_f64().max(1e-12)).round()).into(),
     ]);
     report.note(format!("counting work: {} element steps", totals.work_units));
+    report.note(format!(
+        "kernel paths: list×list={} list×bitmap={} bitmap×bitmap={}",
+        kernels.list_list, kernels.list_bitmap, kernels.bitmap_bitmap
+    ));
     report.print();
 
     // Calibrated virtual-time projection: measured split at this P, then
@@ -345,7 +398,7 @@ fn cmd_analyze(args: &[String]) -> Result<()> {
     let (cfg, extra) = parse_config(args)?;
     reject_unknown(&extra, &[])?;
     let g = cfg.build_graph()?;
-    let o = Arc::new(Oriented::from_graph(&g));
+    let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
     let stats = tricount::graph::stats::degree_stats(&g);
     println!("{stats}");
 
@@ -420,7 +473,7 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
     let (cfg, extra) = parse_config(args)?;
     reject_unknown(&extra, &[])?;
     let g = cfg.build_graph()?;
-    let o = Oriented::from_graph(&g);
+    let o = Oriented::from_graph_with(&g, cfg.hub_threshold);
     let ours = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), cfg.procs);
     let patric = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::PatricBest)), cfg.procs);
     let non = tricount::partition::nonoverlap::partition_sizes(&o, &ours);

@@ -8,7 +8,11 @@
 //!   estimator [21], which models the cost of the *local* loop;
 //! * `f(v) = Σ_{u∈𝒩_v−N_v}(d̂_v + d̂_u)` — this paper's §IV-F estimator,
 //!   which attributes to `v` the cost of every intersection *executed on
-//!   v's owner* under the surrogate scheme (case analysis in §IV-F).
+//!   v's owner* under the surrogate scheme (case analysis in §IV-F);
+//! * `f(v) = Σ_{u∈N_v} hybrid_cost(v, u)` — the representation-aware
+//!   estimator: same attribution as PATRIC's, but charging the `adj/`
+//!   dispatch's actual kernel per pair ([`Oriented::intersect_cost`]), so
+//!   partitions stay balanced after hub bitmaps make hub work cheap.
 
 use crate::config::CostFn;
 use crate::graph::ordering::Oriented;
@@ -43,6 +47,9 @@ pub fn cost_vector(o: &Oriented, f: CostFn) -> Vec<u64> {
             }
             c
         }
+        CostFn::Hybrid => (0..n as VertexId)
+            .map(|v| o.nbrs(v).iter().map(|&u| o.intersect_cost(v, u)).sum())
+            .collect(),
     }
 }
 
@@ -105,6 +112,26 @@ mod tests {
         let p = cost_vector(&o, CostFn::PatricBest);
         assert_eq!(p[0], 0);
         assert!(p[1..].iter().all(|&x| x > 0), "{p:?}");
+    }
+
+    #[test]
+    fn hybrid_estimator_charges_the_dispatch_not_the_merge() {
+        use crate::adj::HubThreshold;
+        let g = classic::complete(12);
+        let o = Oriented::from_graph_with(&g, HubThreshold::Fixed(4));
+        let hybrid = cost_vector(&o, CostFn::Hybrid);
+        // Per node it is exactly the true hybrid work measure...
+        for v in 0..12u32 {
+            assert_eq!(
+                hybrid[v as usize],
+                crate::seq::node_iterator::node_work_true(&o, v),
+                "node {v}"
+            );
+        }
+        // ...and on a hub-heavy graph strictly below the merge-model
+        // estimator (word-AND collapses K₁₂ hub pairs to ~1 step each).
+        let patric: u64 = cost_vector(&o, CostFn::PatricBest).iter().sum();
+        assert!(hybrid.iter().sum::<u64>() < patric);
     }
 
     #[test]

@@ -111,6 +111,18 @@ impl PartitionView {
         self.graph.nbrs(v)
     }
 
+    /// Hybrid [`crate::adj::NeighborView`] of an **owned** node — list plus
+    /// hub bitmap; same ownership discipline as [`PartitionView::nbrs`].
+    #[inline]
+    pub fn view(&self, v: VertexId) -> crate::adj::NeighborView<'_> {
+        assert!(
+            self.range.contains(&v),
+            "rank owning {:?} accessed N_{v} (remote data)",
+            self.range
+        );
+        self.graph.view(v)
+    }
+
     /// Effective degree of an owned node.
     #[inline]
     pub fn effective_degree(&self, v: VertexId) -> usize {

@@ -3,9 +3,9 @@
 //! reason triangle counting matters is that these quantities are computed
 //! from it.
 
+use crate::adj;
 use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
-use crate::intersect::intersect_vec;
 use crate::VertexId;
 
 /// Per-node triangle counts: `T_v` = number of triangles containing `v`.
@@ -14,10 +14,13 @@ use crate::VertexId;
 pub fn per_node_counts(o: &Oriented) -> Vec<u64> {
     let n = o.num_nodes();
     let mut t = vec![0u64; n];
+    let mut ws = Vec::new();
     for v in 0..n as VertexId {
-        let nv = o.nbrs(v);
-        for &u in nv {
-            for w in intersect_vec(nv, o.nbrs(u)) {
+        let vv = o.view(v);
+        for &u in vv.list() {
+            ws.clear();
+            adj::intersect_into(vv, o.view(u), &mut ws);
+            for &w in &ws {
                 t[v as usize] += 1;
                 t[u as usize] += 1;
                 t[w as usize] += 1;

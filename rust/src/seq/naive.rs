@@ -28,13 +28,19 @@ pub fn triple_count(g: &Csr) -> TriangleCount {
 
 /// Edge-iterator algorithm: for each edge `(u, v)` count common neighbors in
 /// the *full* (unoriented) adjacency; each triangle is seen at its 3 edges,
-/// so divide by 3. `O(Σ_{(u,v)∈E} (d_u + d_v))`.
+/// so divide by 3. `O(Σ_{(u,v)∈E} (d_u + d_v))`. Goes through the
+/// [`crate::adj`] dispatch like every other driver, but on plain sorted
+/// views (the CSR has no hub bitmaps), so the counting *strategy* stays
+/// independent of the oriented Fig-1 kernel.
 pub fn edge_iterator_count(g: &Csr) -> TriangleCount {
+    use crate::adj::{self, NeighborView};
     let mut t3 = 0u64;
     for (u, v) in g.edges() {
-        let mut c = 0;
-        crate::intersect::count_merge(g.neighbors(u), g.neighbors(v), &mut c);
-        t3 += c;
+        adj::intersect_count(
+            NeighborView::sorted(g.neighbors(u)),
+            NeighborView::sorted(g.neighbors(v)),
+            &mut t3,
+        );
     }
     debug_assert_eq!(t3 % 3, 0);
     t3 / 3

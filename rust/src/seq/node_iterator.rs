@@ -5,8 +5,8 @@
 //! both the sequential baseline (denominator of every speedup figure) and
 //! the per-node work kernel the parallel algorithms and the simulator share.
 
+use crate::adj;
 use crate::graph::ordering::Oriented;
-use crate::intersect::count_adaptive;
 use crate::{TriangleCount, VertexId};
 
 /// Count all triangles. `O(Σ_v Σ_{u∈N_v} (d̂_v + d̂_u))`.
@@ -23,9 +23,9 @@ pub fn count(o: &Oriented) -> TriangleCount {
 /// vertex is `v`. Summing over all `v` counts each triangle exactly once.
 #[inline]
 pub fn count_node(o: &Oriented, v: VertexId, t: &mut TriangleCount) {
-    let nv = o.nbrs(v);
-    for &u in nv {
-        count_adaptive(nv, o.nbrs(u), t);
+    let vv = o.view(v);
+    for &u in vv.list() {
+        adj::intersect_count(vv, o.view(u), t);
     }
 }
 
@@ -45,17 +45,14 @@ pub fn node_work(o: &Oriented, v: VertexId) -> u64 {
     nv.iter().map(|&u| dv + o.effective_degree(u) as u64).sum()
 }
 
-/// The work [`count_node`] *actually* performs with the adaptive
-/// intersection kernel (merge or galloping per pair) — what the simulators
+/// The work [`count_node`] *actually* performs with the hybrid dispatch
+/// (merge/gallop, bitmap probe or word-AND per pair) — what the simulators
 /// charge as execution time. The gap between this and [`node_work`] is the
 /// real estimation error that static balancing suffers and §V's dynamic
-/// scheme absorbs.
+/// scheme absorbs; hub bitmaps *widen* that gap, because the estimators
+/// still model merges where the dispatch runs much cheaper kernels.
 pub fn node_work_true(o: &Oriented, v: VertexId) -> u64 {
-    let nv = o.nbrs(v);
-    let dv = nv.len();
-    nv.iter()
-        .map(|&u| crate::intersect::adaptive_cost(dv, o.effective_degree(u)))
-        .sum()
+    o.nbrs(v).iter().map(|&u| o.intersect_cost(v, u)).sum()
 }
 
 #[cfg(test)]

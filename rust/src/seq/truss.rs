@@ -9,9 +9,9 @@
 
 use std::collections::HashMap;
 
+use crate::adj::NeighborView;
 use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
-use crate::intersect::intersect_vec;
 use crate::VertexId;
 
 /// Per-edge support (triangle count through each edge), keyed by `(u, v)`
@@ -26,10 +26,13 @@ pub fn edge_support(g: &Csr) -> HashMap<(VertexId, VertexId), u32> {
         let key = if a < b { (a, b) } else { (b, a) };
         *sup.get_mut(&key).expect("triangle edge must exist") += 1;
     };
+    let mut ws = Vec::new();
     for v in 0..g.num_nodes() as VertexId {
-        let nv = o.nbrs(v);
-        for &u in nv {
-            for w in intersect_vec(nv, o.nbrs(u)) {
+        let vv = o.view(v);
+        for &u in vv.list() {
+            ws.clear();
+            crate::adj::intersect_into(vv, o.view(u), &mut ws);
+            for &w in &ws {
                 bump(v, u);
                 bump(v, w);
                 bump(u, w);
@@ -91,7 +94,9 @@ pub fn truss_decomposition(g: &Csr) -> HashMap<(VertexId, VertexId), u32> {
         let common: Vec<VertexId> = {
             let la = live.get(&a).cloned().unwrap_or_default();
             let lb = live.get(&b).cloned().unwrap_or_default();
-            intersect_vec(&la, &lb)
+            let mut c = Vec::new();
+            crate::adj::intersect_into(NeighborView::sorted(&la), NeighborView::sorted(&lb), &mut c);
+            c
         };
         for w in common {
             for other in [(a, w), (b, w)] {

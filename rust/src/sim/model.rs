@@ -7,10 +7,12 @@
 //! is deliberately simple — the paper's own complexity analysis (§IV-G)
 //! uses the same three terms:
 //!
-//! * **compute**: `α` ns per work unit, where a work unit is one element of
-//!   the paper's cost measure `Σ (d̂_v + d̂_u)`; `α` is *measured* on this
-//!   machine by [`crate::sim::calibrate`], so virtual seconds ≈ real
-//!   seconds of the real kernel;
+//! * **compute**: `α` ns per work unit, where a work unit is one element
+//!   step of the hybrid dispatch ([`crate::adj::intersect_cost`]: merge
+//!   element, bitmap probe, or 64-bit word-AND — see
+//!   [`crate::sim::work`]); `α` is *measured* on this machine by
+//!   [`crate::sim::calibrate`] against the same hybrid kernel, so virtual
+//!   seconds ≈ real seconds of the real kernel;
 //! * **bandwidth**: `1/β` ns per payload byte;
 //! * **per-message overhead**: `γ_cpu` ns of sender/receiver CPU, plus
 //!   `γ_net` ns propagation (hidden by overlap except on the request/reply

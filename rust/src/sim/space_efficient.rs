@@ -54,7 +54,7 @@ pub fn simulate(
                         let j = owner[u as usize] as usize;
                         if j == i {
                             // Local intersection on rank i.
-                            let w = crate::sim::work::pair_work(o, v, dv as usize, u, model);
+                            let w = crate::sim::work::pair_work(o, v, u, model);
                             ranks[i].compute_ns += model.alpha_ns * w;
                         } else if last_proc != j as i64 {
                             // One data message N_v → rank j; j does the
@@ -71,7 +71,9 @@ pub fn simulate(
                             let hi = nv.partition_point(|&x| x < rj.end);
                             let mut w = 0.0f64;
                             for &u2 in &nv[lo..hi] {
-                                w += crate::sim::work::pair_work(o, v, dv as usize, u2, model);
+                                // Rank j intersects its local N_u2 against
+                                // the wire copy of N_v (plain sorted view).
+                                w += crate::sim::work::pair_work_remote(o, u2, v, v, model);
                             }
                             ranks[j].compute_ns += model.alpha_ns * w;
                         }
@@ -81,10 +83,13 @@ pub fn simulate(
                     for &u in nv {
                         let j = owner[u as usize] as usize;
                         let du = o.effective_degree(u) as u64;
-                        let w = crate::sim::work::pair_work(o, v, dv as usize, u, model);
                         if j == i {
+                            let w = crate::sim::work::pair_work(o, v, u, model);
                             ranks[i].compute_ns += model.alpha_ns * w;
                         } else {
+                            // Rank i intersects local N_v against the wire
+                            // copy of N_u (plain sorted view).
+                            let w = crate::sim::work::pair_work_remote(o, v, u, v, model);
                             // Request (16 B) i→j, response N_u j→i, then
                             // rank i intersects. Redundant re-fetches of the
                             // same N_u are *included* — that is the scheme's

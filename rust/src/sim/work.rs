@@ -1,26 +1,47 @@
-//! Shared "true execution work" measure for all simulators: the adaptive
-//! kernel's per-pair cost, scaled by the model's per-node execution noise
-//! (keyed by the node whose list is intersected — so the noise is
-//! heavy-tailed and correlated the way real cache behaviour is).
+//! Shared "true execution work" measure for all simulators: the hybrid
+//! dispatch's per-pair cost ([`Oriented::intersect_cost`] — merge/gallop,
+//! bitmap probe or word-AND, whichever the kernel would actually run),
+//! scaled by the model's per-node execution noise (keyed by the node whose
+//! list is intersected — so the noise is heavy-tailed and correlated the
+//! way real cache behaviour is). Charging the bitmap cost model here is
+//! load-bearing for §V: hub tasks get *cheaper* than any degree-based
+//! `f(v)` predicts, so the dynamic balancer's task sizing reshuffles.
 
 use crate::graph::ordering::Oriented;
-use crate::intersect::adaptive_cost;
 use crate::sim::model::CostModel;
 use crate::VertexId;
 
-/// Executed work for one pair `(v, u)` with `u ∈ N_v`, in work units.
-/// Noise is keyed by `v` — the node whose counting loop is being executed
-/// and whose cost `f(v)` mispredicts.
+/// Executed work for one pair `(v, u)` with `u ∈ N_v`, both lists local
+/// (hub bitmaps on both sides), in work units. Noise is keyed by `v` — the
+/// node whose counting loop is being executed and whose cost `f(v)`
+/// mispredicts.
 #[inline]
-pub fn pair_work(o: &Oriented, v: VertexId, dv: usize, u: VertexId, model: &CostModel) -> f64 {
-    adaptive_cost(dv, o.effective_degree(u)) as f64 * model.noise(v)
+pub fn pair_work(o: &Oriented, v: VertexId, u: VertexId, model: &CostModel) -> f64 {
+    o.intersect_cost(v, u) as f64 * model.noise(v)
+}
+
+/// Executed work when `remote`'s list arrived over the wire: the real
+/// drivers wrap wire payloads in a plain sorted view (no bitmap travels),
+/// so only `local`'s hub bitmap can accelerate the pair — charging
+/// [`pair_work`] here would undercount remote hub work.
+#[inline]
+pub fn pair_work_remote(
+    o: &Oriented,
+    local: VertexId,
+    remote: VertexId,
+    noise_key: VertexId,
+    model: &CostModel,
+) -> f64 {
+    let cost = crate::adj::intersect_cost(
+        o.view(local),
+        crate::adj::NeighborView::sorted(o.nbrs(remote)),
+    );
+    cost as f64 * model.noise(noise_key)
 }
 
 /// Executed work of the whole Fig-1 loop for node `v`.
 pub fn node_work(o: &Oriented, v: VertexId, model: &CostModel) -> f64 {
-    let nv = o.nbrs(v);
-    let dv = nv.len();
-    let base: u64 = nv.iter().map(|&u| adaptive_cost(dv, o.effective_degree(u))).sum();
+    let base: u64 = o.nbrs(v).iter().map(|&u| o.intersect_cost(v, u)).sum();
     base as f64 * model.noise(v)
 }
 

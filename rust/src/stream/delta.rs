@@ -20,17 +20,46 @@
 //! `O(d_u + d_v + b_{u,v} log b)` — independent of the op's position, which
 //! is what makes the batch shardable across ranks with no coordination.
 
+use std::collections::HashMap;
+
+use crate::adj::bitmap::BitmapRow;
+use crate::adj::hub::HubThreshold;
+use crate::adj::{self, NeighborView};
 use crate::graph::csr::Csr;
-use crate::intersect::count_adaptive;
 use crate::stream::batch::NormalizedBatch;
 use crate::stream::overlay::AdjDelta;
 use crate::VertexId;
 
-/// Reusable buffers for the merged neighbor views.
+/// Reusable buffers for the merged neighbor views, plus a per-batch cache
+/// of hub bitmap rows.
+///
+/// All ops of a batch intersect the *same* pre-batch snapshot
+/// (`base` ∪ overlay; corrections handle intra-batch effects), so a hub
+/// endpoint touched by many ops pays the bitmap build once and every
+/// later op on it gets the probe/word-AND kernels. [`Scratch::begin_batch`]
+/// clears the cache and re-resolves the threshold; callers that never arm
+/// it (`threshold = None`, the default) get pure sorted-merge behavior.
 #[derive(Default)]
 pub struct Scratch {
     nu: Vec<VertexId>,
     nv: Vec<VertexId>,
+    /// Snapshot hub rows keyed by vertex, valid for the current batch only.
+    rows: HashMap<VertexId, BitmapRow>,
+    /// Resolved hub cutoff for the current batch (`None` = bitmaps off).
+    threshold: Option<usize>,
+}
+
+impl Scratch {
+    /// Arm the hub-bitmap cache for a new batch against the pre-batch
+    /// snapshot `(base, overlay)`: drop stale rows, re-resolve `policy`
+    /// against the *current* density (merged rows hold both edge
+    /// directions, hence `2m`). `HubThreshold::Off` disables the cache for
+    /// the batch (the seed's pure sorted-merge behavior).
+    pub fn begin_batch(&mut self, base: &Csr, overlay: &AdjDelta, policy: HubThreshold) {
+        self.rows.clear();
+        self.threshold =
+            policy.resolve(base.num_nodes(), 2 * overlay.current_edge_count(base));
+    }
 }
 
 /// Outcome of counting one effective op.
@@ -38,8 +67,9 @@ pub struct Scratch {
 pub struct OpDelta {
     /// Signed triangle-count change contributed by this op.
     pub delta: i64,
-    /// Element steps charged (the paper's `|N_u| + |N_v|` cost measure) —
-    /// feeds rank metrics and the streaming simulator.
+    /// Element steps charged by the hybrid dispatch
+    /// ([`adj::intersect_cost`]: merge `|N_u| + |N_v|`, probe `min`, or
+    /// word-AND span) — feeds rank metrics and the streaming simulator.
     pub work: u64,
 }
 
@@ -53,13 +83,25 @@ pub fn count_op(
 ) -> OpDelta {
     let op = nb.ops[i];
     let (u, v) = (op.u, op.v);
-    overlay.current_nbrs(base, u, &mut scratch.nu);
-    overlay.current_nbrs(base, v, &mut scratch.nv);
-    let (nu, nv) = (&scratch.nu, &scratch.nv);
+    let Scratch { nu, nv, rows, threshold } = scratch;
+    overlay.current_nbrs(base, u, nu);
+    overlay.current_nbrs(base, v, nv);
+    if let Some(t) = *threshold {
+        // Hub endpoints: build (or reuse) snapshot bitmap rows.
+        if nu.len() >= t {
+            rows.entry(u).or_insert_with(|| BitmapRow::from_sorted(nu));
+        }
+        if nv.len() >= t {
+            rows.entry(v).or_insert_with(|| BitmapRow::from_sorted(nv));
+        }
+    }
+    let vu = NeighborView::hybrid(nu, rows.get(&u));
+    let vv = NeighborView::hybrid(nv, rows.get(&v));
 
-    // |N₀(u) ∩ N₀(v)| on the snapshot.
+    // |N₀(u) ∩ N₀(v)| on the snapshot, through the hybrid dispatch.
     let mut snapshot = 0u64;
-    count_adaptive(nu, nv, &mut snapshot);
+    adj::intersect_count(vu, vv, &mut snapshot);
+    let work = adj::intersect_cost(vu, vv);
     let mut count = snapshot as i64;
 
     // Correct to state i: only endpoints the batch touches at u or v can
@@ -97,13 +139,16 @@ pub fn count_op(
     }
 
     let sign = if op.insert { 1 } else { -1 };
-    OpDelta { delta: sign * count, work: (nu.len() + nv.len()) as u64 }
+    OpDelta { delta: sign * count, work }
 }
 
-/// Sum [`count_op`] over every effective op — the sequential batch kernel.
+/// Sum [`count_op`] over every effective op — the sequential batch kernel
+/// (hub cache armed with the default `auto` policy; drivers that expose
+/// `--hub-threshold` arm their own [`Scratch`]).
 /// Returns `(Δ triangles, work units)`.
 pub fn count_batch(base: &Csr, overlay: &AdjDelta, nb: &NormalizedBatch) -> (i64, u64) {
     let mut scratch = Scratch::default();
+    scratch.begin_batch(base, overlay, HubThreshold::Auto);
     let mut delta = 0i64;
     let mut work = 0u64;
     for i in 0..nb.ops.len() {

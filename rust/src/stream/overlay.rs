@@ -11,10 +11,13 @@
 //!
 //! Both delta sets are kept sorted by node id and symmetric (an edge
 //! appears in both endpoints' lists), mirroring the CSR invariants so the
-//! merged view [`AdjDelta::current_nbrs`] is id-sorted and the intersection
-//! kernels in [`crate::intersect`] apply unchanged. Deltas stay small
-//! between compactions ([`crate::stream::compact`] folds them back into a
-//! fresh CSR), so the sorted-`Vec` insert cost is bounded in practice.
+//! merged view [`AdjDelta::current_nbrs`] is id-sorted and feeds straight
+//! into the hybrid [`crate::adj`] dispatch: the Δ counter's scratch
+//! ([`crate::stream::delta::Scratch`]) builds hub bitmap rows over merged
+//! views that cross the density threshold, one per batch per hub endpoint.
+//! Deltas stay small between compactions
+//! ([`crate::stream::compact`] folds them back into a fresh CSR), so the
+//! sorted-`Vec` insert cost is bounded in practice.
 
 use crate::graph::csr::Csr;
 use crate::VertexId;

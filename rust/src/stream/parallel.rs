@@ -38,6 +38,10 @@ use crate::TriangleCount;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamOptions {
     pub policy: CompactionPolicy,
+    /// Hub-bitmap policy for the Δ counter's per-batch cache
+    /// (`--hub-threshold`; default `auto`, `off` reproduces the seed's
+    /// pure sorted-merge streaming).
+    pub hub_threshold: crate::adj::HubThreshold,
 }
 
 /// Per-batch statistics (rank-0 view of the reduced quantities plus the
@@ -120,8 +124,9 @@ pub fn run_with_initial(
 ) -> Result<StreamRunResult> {
     assert!(p >= 1, "need at least one rank");
     // Balance node ownership by degree (the streaming analogue of §IV-B:
-    // an update's cost is the degree of its endpoints).
-    let o = Oriented::from_graph(base);
+    // an update's cost is the degree of its endpoints). Only degrees are
+    // read, so skip building hub bitmaps for this throwaway orientation.
+    let o = Oriented::from_graph_with(base, crate::adj::HubThreshold::Off);
     let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
     let owner: Arc<Vec<u32>> = Arc::new(owner_table(&ranges, base.num_nodes()));
     drop(o);
@@ -189,6 +194,10 @@ fn rank_main(
     for batch in batches.iter() {
         let nb = crate::stream::batch::normalize(state.base(), state.overlay(), batch)
             .expect("batch normalization failed");
+        // Arm the hub-bitmap cache against this batch's snapshot (identical
+        // on every rank — replicas are in lockstep, so the resolved
+        // threshold and therefore the per-op work charge are deterministic).
+        scratch.begin_batch(state.base(), state.overlay(), opts.hub_threshold);
         // Count the ops this rank owns: min-≺ endpoint routing.
         let (mut plus, mut minus, mut work) = (0u64, 0u64, 0u64);
         for (i, op) in nb.ops.iter().enumerate() {

@@ -44,6 +44,7 @@ pub struct StreamState {
     batches_applied: u64,
     compactions: u64,
     scratch: Scratch,
+    hub_threshold: crate::adj::HubThreshold,
 }
 
 impl StreamState {
@@ -71,7 +72,14 @@ impl StreamState {
             batches_applied: 0,
             compactions: 0,
             scratch: Scratch::default(),
+            hub_threshold: crate::adj::HubThreshold::Auto,
         }
+    }
+
+    /// Set the hub-bitmap policy for the Δ counter's per-batch cache
+    /// (`Off` reproduces the seed's pure sorted-merge streaming).
+    pub fn set_hub_threshold(&mut self, t: crate::adj::HubThreshold) {
+        self.hub_threshold = t;
     }
 
     /// Current exact triangle count.
@@ -108,6 +116,7 @@ impl StreamState {
     /// Normalize, count, apply and maybe compact one batch.
     pub fn apply_batch(&mut self, batch: &Batch) -> Result<BatchOutcome> {
         let nb = normalize(&self.base, &self.overlay, batch)?;
+        self.scratch.begin_batch(&self.base, &self.overlay, self.hub_threshold);
         let mut delta = 0i64;
         let mut work = 0u64;
         for i in 0..nb.ops.len() {

@@ -308,6 +308,115 @@ fn prop_windowed_stream_matches_rebuild() {
 }
 
 #[test]
+fn prop_hybrid_counts_equal_pure_sorted_across_drivers() {
+    // The adj/ hub-bitmap layer is an accelerator, never a semantic change:
+    // for every generator family (PA / R-MAT / ER via `arb_stream_base`'s
+    // distribution) and every threshold — including the 0, 1 and `off` edge
+    // cases, which force all-bitmap and no-bitmap extremes — the seq,
+    // dynamic-LB and surrogate drivers must produce the pure-sorted count.
+    use tricount::adj::HubThreshold;
+    quickcheck("hybrid == sorted for all drivers/thresholds", |rng, case| {
+        let g = arb_stream_base(rng, case);
+        let pure = Oriented::from_graph_with(&g, HubThreshold::Off);
+        let expect = node_iterator::count(&pure);
+        for t in [
+            HubThreshold::Fixed(0),
+            HubThreshold::Fixed(1),
+            HubThreshold::Fixed(1 + rng.below_usize(8)),
+            HubThreshold::Auto,
+            HubThreshold::Off,
+        ] {
+            let o = Arc::new(Oriented::from_graph_with(&g, t));
+            o.validate(&g).map_err(|e| format!("{t}: {e}"))?;
+            let s = node_iterator::count(&o);
+            if s != expect {
+                return Err(format!("case {case} {t}: seq {s} != {expect}"));
+            }
+            // Rotate the parallel drivers to keep runtime bounded
+            // (rng-drawn, so driver choice decorrelates from the
+            // case-keyed generator family).
+            let got = match rng.below(3) {
+                0 => {
+                    let p = 1 + rng.below_usize(4);
+                    let ranges =
+                        balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Hybrid)), p);
+                    let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
+                    tricount::algo::surrogate::run(&o, &ranges, &owner)
+                        .map_err(|e| e.to_string())?
+                        .triangles
+                }
+                1 => {
+                    tricount::algo::dynamic_lb::run(&o, 2 + rng.below_usize(3), Default::default())
+                        .map_err(|e| e.to_string())?
+                        .triangles
+                }
+                _ => {
+                    let p = 1 + rng.below_usize(4);
+                    let ranges =
+                        balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
+                    tricount::algo::patric::run(&o, &ranges)
+                        .map_err(|e| e.to_string())?
+                        .triangles
+                }
+            };
+            if got != expect {
+                return Err(format!("case {case} {t}: parallel {got} != {expect}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stream_hub_bitmaps_preserve_exactness() {
+    // The streaming Δ counter's per-batch hub-bitmap cache must never
+    // change a count. A star base makes node 0 a true hub (degree ≫ the
+    // 2×-average auto cutoff) and the batches are biased to touch it, so
+    // the cache's probe/word-AND paths actually execute.
+    use tricount::stream::batch::{Batch, EdgeUpdate};
+    quickcheck("stream hub cache == rebuild", |rng, case| {
+        let n = 80 + rng.below_usize(60);
+        let g = tricount::graph::classic::star(n - 1);
+        let batches: Vec<Batch> = (0..4)
+            .map(|_| {
+                Batch::new(
+                    (0..20)
+                        .map(|_| {
+                            // Half the ops pin an endpoint on the hub.
+                            let u = if rng.chance(0.5) { 0 } else { rng.below(n as u64) as u32 };
+                            let v = rng.below(n as u64) as u32;
+                            if rng.chance(0.3) {
+                                EdgeUpdate::delete(u, v)
+                            } else {
+                                EdgeUpdate::insert(u, v)
+                            }
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        let mut s = StreamState::with_policy(g.clone(), CompactionPolicy::never());
+        for b in &batches {
+            s.apply_batch(b).map_err(|e| e.to_string())?;
+        }
+        let rebuilt = s.recount().map_err(|e| e.to_string())?;
+        if s.triangles() != rebuilt {
+            return Err(format!(
+                "case {case}: incremental {} != rebuilt {rebuilt}",
+                s.triangles()
+            ));
+        }
+        let p = 1 + rng.below_usize(4);
+        let r = parallel::run(&g, &batches, p, parallel::StreamOptions::default())
+            .map_err(|e| e.to_string())?;
+        if r.final_triangles != rebuilt {
+            return Err(format!("case {case}: P={p} {} != {rebuilt}", r.final_triangles));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_orientation_preserves_triangle_structure() {
     quickcheck("orientation invariants", |rng, _| {
         let g = arb_graph(rng, 60);
