@@ -96,11 +96,37 @@ fn main() {
         });
     }
 
+    println!("\n== CSR build: radix vs comparison sort ==");
+    {
+        use tricount::graph::builder::{from_edge_list_sort_baseline, from_edge_list_threads};
+        let g = tricount::gen::pa::preferential_attachment(200_000, 32, &mut Rng::seeded(21));
+        let edges: Vec<(u32, u32)> = g.edges().collect();
+        let (n, m) = (g.num_nodes(), edges.len() as u64);
+        // The clone is inside the timed region for every variant, so the
+        // comparison stays apples-to-apples.
+        bench("build sort-baseline PA(200K,32)", m, "edge", || {
+            from_edge_list_sort_baseline(n, edges.clone()).unwrap().num_edges()
+        });
+        bench("build radix T=1    PA(200K,32)", m, "edge", || {
+            from_edge_list_threads(n, edges.clone(), 1).unwrap().num_edges()
+        });
+        let auto = tricount::par::BuildThreads::Auto.resolve();
+        bench(&format!("build radix T={auto} PA(200K,32)"), m, "edge", || {
+            from_edge_list_threads(n, edges.clone(), auto).unwrap().num_edges()
+        });
+    }
+
     println!("\n== orientation + partitioning ==");
     let g = tricount::gen::pa::preferential_attachment(500_000, 20, &mut Rng::seeded(5));
-    bench("orient PA(500K,20)", g.num_edges() * 2, "edge", || {
+    bench("orient PA(500K,20) T=1", g.num_edges() * 2, "edge", || {
         Oriented::from_graph(&g).num_edges()
     });
+    {
+        let auto = tricount::par::BuildThreads::Auto.resolve();
+        bench(&format!("orient PA(500K,20) T={auto}"), g.num_edges() * 2, "edge", || {
+            Oriented::from_graph_threads(&g, Default::default(), auto).num_edges()
+        });
+    }
     let o = Oriented::from_graph(&g);
     bench("cost vector (new estimator)", o.num_edges(), "edge", || {
         tricount::partition::cost::cost_vector(&o, tricount::config::CostFn::SurrogateNew)

@@ -38,6 +38,10 @@ pub const AUTO_BUDGET_BYTES_PER_EDGE: u64 = 4;
 /// average row length (see [`HubThreshold::resolve`]).
 pub const AUTO_DENSITY_FACTOR: usize = 2;
 
+/// Below this many selected hub rows per thread, bitmap packing stays
+/// serial (rows are word-sized copies; spawning costs more than packing).
+const MIN_HUB_ROWS_PER_THREAD: usize = 64;
+
 /// Hub-bitmap threshold policy.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum HubThreshold {
@@ -127,6 +131,19 @@ impl HubIndex {
     /// Build over CSR-shaped rows: row `v` is
     /// `targets[offsets[v]..offsets[v+1]]`.
     pub fn build(offsets: &[u64], targets: &[VertexId], policy: HubThreshold) -> Self {
+        Self::build_threads(offsets, targets, policy, 1)
+    }
+
+    /// [`HubIndex::build`] with the bitmap-row packing fanned out over
+    /// scoped threads. Selection stays serial — it is O(n) plus a sort of
+    /// the candidates and fully determines row order — so the index is
+    /// bit-identical at every thread count.
+    pub fn build_threads(
+        offsets: &[u64],
+        targets: &[VertexId],
+        policy: HubThreshold,
+        threads: usize,
+    ) -> Self {
         let row = |v: usize| &targets[offsets[v] as usize..offsets[v + 1] as usize];
         let n = offsets.len() - 1;
         let selected: Vec<usize> = match policy {
@@ -172,11 +189,21 @@ impl HubIndex {
             };
         }
         let mut row_of = vec![u32::MAX; n];
-        let mut rows = Vec::with_capacity(selected.len());
-        for v in selected {
-            row_of[v] = rows.len() as u32;
-            rows.push(BitmapRow::from_sorted(row(v)));
+        for (i, &v) in selected.iter().enumerate() {
+            row_of[v] = i as u32;
         }
+        // Packing is embarrassingly parallel per selected row; results are
+        // concatenated in selection order.
+        let t = crate::par::clamp_threads(threads, selected.len(), MIN_HUB_ROWS_PER_THREAD);
+        let rows: Vec<BitmapRow> = crate::par::for_ranges(selected.len(), t, |_, r| {
+            selected[r]
+                .iter()
+                .map(|&v| BitmapRow::from_sorted(row(v)))
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
         HubIndex { row_of, rows, threshold, exact: matches!(policy, HubThreshold::Fixed(_)) }
     }
 

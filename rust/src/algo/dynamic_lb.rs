@@ -69,9 +69,14 @@ impl Default for Options {
     }
 }
 
-/// Run with `p` ranks (1 coordinator + `p−1` workers; `p ≥ 2`).
+/// Run with `p` ranks (1 coordinator + `p−1` workers; `p ≥ 2` or the run
+/// is rejected as an invalid configuration).
 pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> {
-    assert!(p >= 2, "dynamic LB needs a coordinator and at least one worker");
+    if p < 2 {
+        return Err(crate::error::Error::Config(format!(
+            "dynamic-lb needs P >= 2 (a coordinator and at least one worker), got P={p}"
+        )));
+    }
     let costs = cost_vector(graph, opts.cost_fn);
     let prefix = Arc::new(prefix_sums(&costs));
     let workers = p - 1;
@@ -215,6 +220,21 @@ mod tests {
     #[test]
     fn minimum_cluster_is_two() {
         assert_eq!(run_on(&classic::complete(6), 2, Options::default()).triangles, 20);
+    }
+
+    #[test]
+    fn p_below_two_is_a_config_error_not_a_panic() {
+        let o = Arc::new(Oriented::from_graph(&classic::karate()));
+        for p in [0, 1] {
+            match run(&o, p, Options::default()) {
+                Err(crate::error::Error::Config(msg)) => {
+                    assert!(msg.contains("P >= 2"), "unexpected message: {msg}");
+                    assert!(msg.contains(&format!("P={p}")), "unexpected message: {msg}");
+                }
+                Err(other) => panic!("P={p}: expected Config error, got {other}"),
+                Ok(_) => panic!("P={p}: expected an error"),
+            }
+        }
     }
 
     #[test]

@@ -78,7 +78,8 @@ impl std::str::FromStr for CostFn {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     /// Workload: a preset name (`livejournal-like`), `pa:<n>:<d>`,
-    /// `rmat:<scale>:<ef>`, `file:<path>` or `karate`.
+    /// `rmat:<scale>:<ef>`, `er:<n>:<d̄>`, `contact:<n>:<d>`,
+    /// `file:<path>`, `bin:<path>` or `karate`.
     pub workload: String,
     /// Number of processors (ranks) P.
     pub procs: usize,
@@ -97,6 +98,13 @@ pub struct RunConfig {
     /// Hub-bitmap threshold policy for the oriented adjacency
     /// (`--hub-threshold <n|auto|off>`).
     pub hub_threshold: crate::adj::HubThreshold,
+    /// Preprocessing thread count (`--build-threads <n|auto>`): CSR build,
+    /// degree ordering, relabel, orientation and hub-index packing all fan
+    /// out over this many scoped threads, with bit-identical output at
+    /// every setting. The CLI installs the resolved value as
+    /// [`crate::par::set_default_threads`], so per-batch stream
+    /// compaction inherits it too.
+    pub build_threads: crate::par::BuildThreads,
 }
 
 impl Default for RunConfig {
@@ -111,6 +119,7 @@ impl Default for RunConfig {
             dense_core: 0,
             artifacts_dir: "artifacts".into(),
             hub_threshold: crate::adj::HubThreshold::Auto,
+            build_threads: crate::par::BuildThreads::Auto,
         }
     }
 }
@@ -144,6 +153,7 @@ impl RunConfig {
             }
             "artifacts_dir" | "artifacts-dir" => self.artifacts_dir = value.to_string(),
             "hub_threshold" | "hub-threshold" => self.hub_threshold = value.parse()?,
+            "build_threads" | "build-threads" => self.build_threads = value.parse()?,
             other => return Err(Error::Config(format!("unknown key `{other}`"))),
         }
         if key == "procs" && self.procs == 0 {
@@ -210,6 +220,15 @@ pub fn build_workload(spec: &str, scale: f64, seed: u64) -> Result<crate::graph:
             let ef: usize = ef.parse().map_err(|e| Error::Config(format!("rmat ef: {e}")))?;
             Ok(crate::gen::rmat::rmat(s, ef, Default::default(), &mut Rng::seeded(seed)))
         }
+        ["er", n, d] => {
+            // Erdős–Rényi G(n, m) at average degree d̄ — the "no structure"
+            // control of the bench-pipeline presets.
+            let n: usize = n.parse().map_err(|e| Error::Config(format!("er n: {e}")))?;
+            let d: usize = d.parse().map_err(|e| Error::Config(format!("er d̄: {e}")))?;
+            let n = ((n as f64 * scale).round() as usize).max(4);
+            let m = (n * d / 2).min(n * (n - 1) / 2);
+            Ok(crate::gen::erdos_renyi::gnm(n, m, &mut Rng::seeded(seed)))
+        }
         ["contact", n, d] => {
             let n: usize = n.parse().map_err(|e| Error::Config(format!("contact n: {e}")))?;
             let d: usize = d.parse().map_err(|e| Error::Config(format!("contact d: {e}")))?;
@@ -242,6 +261,13 @@ mod tests {
         assert_eq!(c.hub_threshold, crate::adj::HubThreshold::Fixed(256));
         c.set("cost_fn", "hybrid").unwrap();
         assert_eq!(c.cost_fn, CostFn::Hybrid);
+        assert_eq!(c.build_threads, crate::par::BuildThreads::Auto);
+        c.set("build-threads", "8").unwrap();
+        assert_eq!(c.build_threads, crate::par::BuildThreads::Fixed(8));
+        c.set("build_threads", "auto").unwrap();
+        assert_eq!(c.build_threads, crate::par::BuildThreads::Auto);
+        assert!(c.set("build_threads", "0").is_err());
+        assert!(c.set("build_threads", "some").is_err());
     }
 
     #[test]
@@ -268,6 +294,9 @@ mod tests {
         assert_eq!(g.num_nodes(), 1000);
         let g = build_workload("contact:2000:10", 1.0, 1).unwrap();
         assert_eq!(g.num_nodes(), 2000);
+        let g = build_workload("er:1000:8", 1.0, 1).unwrap();
+        assert_eq!(g.num_nodes(), 1000);
+        assert_eq!(g.num_edges(), 4000);
         assert!(build_workload("wat:1", 1.0, 1).is_err());
     }
 

@@ -1,11 +1,24 @@
-//! Edge-list → CSR construction.
+//! Edge-list → CSR construction via an O(m) two-pass counting/radix build.
 //!
-//! Deduplicates parallel edges, drops self loops, symmetrizes, and sorts
-//! adjacency lists — producing a [`Csr`] that satisfies all its invariants.
+//! The seed comparison-sorted the edge list (O(m log m), single-threaded)
+//! and then re-sorted every adjacency row. This builder never compares:
+//! arcs are counting-scattered **by target, then by source** — a stable
+//! two-pass radix on (source, target) — so rows come out globally sorted,
+//! duplicates land adjacent, and dedup is a per-row linear sweep. Every
+//! phase parallelizes over `--build-threads` scoped threads with disjoint
+//! per-`(thread, bucket)` scatter regions, and the output is **bit-identical
+//! at every thread count** (the final CSR is a pure function of the edge
+//! *set*; see DESIGN.md §8 for the determinism argument).
 
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
+use crate::par::{self, UnsafeSlice};
 use crate::VertexId;
+
+/// Below this many input edges per thread a multi-thread request degrades
+/// toward serial: spawn + histogram-merge overhead beats the win on small
+/// inputs (e.g. per-batch stream compactions).
+pub const MIN_EDGES_PER_THREAD: usize = 8192;
 
 /// Incremental builder for undirected graphs.
 ///
@@ -57,9 +70,290 @@ impl GraphBuilder {
 }
 
 /// Build a CSR from an edge list. Self loops are dropped, duplicates merged.
-/// Endpoints must be `< n`.
-pub fn from_edge_list(n: usize, mut edges: Vec<(VertexId, VertexId)>) -> Result<Csr> {
-    // Normalize: (min, max), drop self loops, validate range.
+/// Endpoints must be `< n`. Runs on [`par::default_threads`] threads (1
+/// unless the CLI raised it via `--build-threads`); output is identical at
+/// every thread count.
+pub fn from_edge_list(n: usize, edges: Vec<(VertexId, VertexId)>) -> Result<Csr> {
+    from_edge_list_threads(n, edges, par::default_threads())
+}
+
+/// [`from_edge_list`] with an explicit thread count.
+pub fn from_edge_list_threads(
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    threads: usize,
+) -> Result<Csr> {
+    build(n, edges, threads, false)
+}
+
+/// Fast path for callers that already oriented every edge `(u < v)`,
+/// dropped self loops and guaranteed endpoints `< n` — the byte-level
+/// parser ([`crate::graph::io::parse_edge_list`]) compacts ids itself, so
+/// the builder's normalize pass would only re-derive what the caller
+/// proved. Invariants are `debug_assert`ed.
+pub(crate) fn from_normalized_edge_list(
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    threads: usize,
+) -> Result<Csr> {
+    build(n, edges, threads, true)
+}
+
+/// Clamp a requested thread count by the input shape. Two floors: enough
+/// edges per thread to amortize spawn + histogram-merge overhead
+/// ([`MIN_EDGES_PER_THREAD`]), and enough edges per *node-width table*
+/// that the O(t·n) per-thread histograms/cursors cannot dominate — each
+/// extra thread costs O(n) scratch, so a thread must own at least n edges
+/// to pay for it (a huge-n, tiny-m compaction degrades to the serial
+/// O(n)-scratch path instead of allocating t n-wide tables).
+fn effective_threads(requested: usize, num_edges: usize, n: usize) -> usize {
+    par::clamp_threads(requested, num_edges, MIN_EDGES_PER_THREAD)
+        .min(par::clamp_threads(requested, num_edges, n))
+}
+
+/// Per-chunk result of the normalize pass.
+struct NormChunk {
+    /// Normalized edges kept (compacted to the chunk front).
+    kept: usize,
+    /// `hist[v]` = arcs targeting `v` from this chunk (= this chunk's
+    /// contribution to `deg(v)`).
+    hist: Vec<u32>,
+    /// First invalid-edge message, if any.
+    err: Option<String>,
+}
+
+fn build(
+    n: usize,
+    mut edges: Vec<(VertexId, VertexId)>,
+    threads: usize,
+    pre_normalized: bool,
+) -> Result<Csr> {
+    // All counters below are u32 (halves histogram memory); bound the
+    // input so 2·m arcs can never overflow one.
+    if edges.len() > (u32::MAX / 2) as usize {
+        return Err(Error::InvalidGraph(format!(
+            "edge list of {} entries exceeds the 2^31 counting-build bound",
+            edges.len()
+        )));
+    }
+    let t = effective_threads(threads, edges.len(), n);
+    let chunk_ranges = par::ranges(edges.len(), t);
+
+    // Phase 0 — normalize each chunk in place ((min,max) orientation, self
+    // loops dropped, endpoints validated, survivors compacted to the chunk
+    // front) while counting arc targets.
+    let norms: Vec<NormChunk> = par::for_chunks_mut(&mut edges, t, |_, _, chunk| {
+        let mut hist = vec![0u32; n];
+        if pre_normalized {
+            for &(u, v) in chunk.iter() {
+                debug_assert!(u < v, "pre-normalized edge ({u},{v}) must have u < v");
+                debug_assert!((v as usize) < n, "pre-normalized edge ({u},{v}) out of range");
+                hist[u as usize] += 1;
+                hist[v as usize] += 1;
+            }
+            return NormChunk { kept: chunk.len(), hist, err: None };
+        }
+        let mut w = 0usize;
+        for i in 0..chunk.len() {
+            let (u, v) = chunk[i];
+            if u as usize >= n || v as usize >= n {
+                return NormChunk {
+                    kept: w,
+                    hist,
+                    err: Some(format!("edge ({u},{v}) out of range for n={n}")),
+                };
+            }
+            if u == v {
+                continue;
+            }
+            let e = if u < v { (u, v) } else { (v, u) };
+            hist[e.0 as usize] += 1;
+            hist[e.1 as usize] += 1;
+            chunk[w] = e;
+            w += 1;
+        }
+        NormChunk { kept: w, hist, err: None }
+    });
+    // Chunks are in input order, so the first erroring chunk's first bad
+    // edge is the same edge the serial scan would have reported.
+    for nc in &norms {
+        if let Some(msg) = &nc.err {
+            return Err(Error::InvalidGraph(msg.clone()));
+        }
+    }
+
+    // Merge per-thread histograms into degrees, then prefix into offsets.
+    let mut offsets = vec![0u64; n + 1];
+    par::for_chunks_mut(&mut offsets[1..], t, |_, start, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let v = start + i;
+            *o = norms.iter().map(|nc| nc.hist[v] as u64).sum();
+        }
+    });
+    for v in 0..n {
+        offsets[v + 1] += offsets[v];
+    }
+    let total_arcs = *offsets.last().unwrap() as usize;
+
+    // Disjoint per-(thread, bucket) scatter regions: thread `ti`'s slice of
+    // bucket `v` starts after every earlier thread's share of `v`. Flat
+    // layout `cursors[ti·n + v]`; each thread later owns row `ti` mutably.
+    let mut cursors = vec![0u64; t * n];
+    {
+        let cur = UnsafeSlice::new(&mut cursors);
+        par::for_ranges(n, t, |_, r| {
+            for v in r {
+                let mut at = offsets[v];
+                for (ti, nc) in norms.iter().enumerate() {
+                    // Disjoint: each v-range writes its own columns.
+                    unsafe { cur.write(ti * n + v, at) };
+                    at += nc.hist[v] as u64;
+                }
+            }
+        });
+    }
+
+    // Pass 1 — scatter every arc by *target*: bucket `v` collects the
+    // sources of all arcs into `v`, i.e. exactly `v`'s neighbor multiset
+    // (in chunk order, which pass 2 makes irrelevant).
+    let mut by_dst = vec![0 as VertexId; total_arcs];
+    {
+        let out = UnsafeSlice::new(&mut by_dst);
+        par::for_chunks_mut(&mut cursors, t, |ti, _, cur| {
+            let r = &chunk_ranges[ti];
+            let chunk = &edges[r.start..r.start + norms[ti].kept];
+            for &(u, v) in chunk {
+                // Arc u→v lands in bucket v; arc v→u in bucket u. Regions
+                // are disjoint per (thread, bucket) by construction.
+                unsafe { out.write(cur[v as usize] as usize, u) };
+                cur[v as usize] += 1;
+                unsafe { out.write(cur[u as usize] as usize, v) };
+                cur[u as usize] += 1;
+            }
+        });
+    }
+    drop(edges);
+
+    // Pass 2a — per-thread source histograms over contiguous target ranges
+    // (each thread owns a bucket range of `by_dst`, so entries are already
+    // grouped; the arcs with source `s` total `deg(s)`, hence pass 2
+    // reuses `offsets` as its bucket starts).
+    let vranges = par::ranges(n, t);
+    let hist2: Vec<Vec<u32>> = par::for_ranges(n, t, |_, r| {
+        let mut h = vec![0u32; n];
+        let s = offsets[r.start] as usize;
+        let e = offsets[r.end] as usize;
+        for &src in &by_dst[s..e] {
+            h[src as usize] += 1;
+        }
+        h
+    });
+    {
+        let cur = UnsafeSlice::new(&mut cursors);
+        par::for_ranges(n, t, |_, r| {
+            for v in r {
+                let mut at = offsets[v];
+                for (ti, h) in hist2.iter().enumerate() {
+                    unsafe { cur.write(ti * n + v, at) };
+                    at += h[v] as u64;
+                }
+            }
+        });
+    }
+
+    // Pass 2b — scatter by *source*, scanning targets in ascending bucket
+    // order: row `s` receives its targets smallest-first, so every row is
+    // sorted with duplicates adjacent.
+    let mut rows = vec![0 as VertexId; total_arcs];
+    {
+        let out = UnsafeSlice::new(&mut rows);
+        par::for_chunks_mut(&mut cursors, t, |ti, _, cur| {
+            for v in vranges[ti].clone() {
+                let s = offsets[v] as usize;
+                let e = offsets[v + 1] as usize;
+                for &src in &by_dst[s..e] {
+                    unsafe { out.write(cur[src as usize] as usize, v as VertexId) };
+                    cur[src as usize] += 1;
+                }
+            }
+        });
+    }
+    drop(by_dst);
+    drop(cursors);
+
+    // Pass 3 — per-row linear-sweep dedup in place. Each thread owns the
+    // contiguous row span of its node range (`split_at_mut`-safe), and its
+    // slice of the unique-count array.
+    let row_bounds: Vec<usize> = vranges
+        .iter()
+        .map(|r| offsets[r.start] as usize)
+        .chain([total_arcs])
+        .collect();
+    let mut uniq = vec![0u64; n + 1];
+    {
+        let uq = UnsafeSlice::new(&mut uniq);
+        par::for_uneven_chunks_mut(&mut rows, &row_bounds, |ti, start, chunk| {
+            for v in vranges[ti].clone() {
+                let s = offsets[v] as usize - start;
+                let e = offsets[v + 1] as usize - start;
+                let mut w = s;
+                for i in s..e {
+                    let x = chunk[i];
+                    if w == s || chunk[w - 1] != x {
+                        chunk[w] = x;
+                        w += 1;
+                    }
+                }
+                // Disjoint: node v belongs to exactly one range.
+                unsafe { uq.write(v + 1, (w - s) as u64) };
+            }
+        });
+    }
+    for v in 0..n {
+        uniq[v + 1] += uniq[v];
+    }
+    let total_unique = uniq[n] as usize;
+    if total_unique == total_arcs {
+        // No duplicates anywhere (generators and the pre-normalized parse
+        // path): the scattered rows are final.
+        return Ok(Csr::from_parts(offsets, rows));
+    }
+
+    // Pass 4 — compact the unique prefixes into the final targets array;
+    // each thread copies into the disjoint output span of its node range.
+    let out_bounds: Vec<usize> = vranges
+        .iter()
+        .map(|r| uniq[r.start] as usize)
+        .chain([total_unique])
+        .collect();
+    let mut targets = vec![0 as VertexId; total_unique];
+    par::for_uneven_chunks_mut(&mut targets, &out_bounds, |ti, _, out| {
+        let mut w = 0usize;
+        for v in vranges[ti].clone() {
+            let s = offsets[v] as usize;
+            let cnt = (uniq[v + 1] - uniq[v]) as usize;
+            out[w..w + cnt].copy_from_slice(&rows[s..s + cnt]);
+            w += cnt;
+        }
+        debug_assert_eq!(w, out.len());
+    });
+    Ok(Csr::from_parts(uniq, targets))
+}
+
+/// Build directly from an iterator of edges without an intermediate builder.
+pub fn from_edges<I: IntoIterator<Item = (VertexId, VertexId)>>(n: usize, it: I) -> Result<Csr> {
+    from_edge_list(n, it.into_iter().collect())
+}
+
+/// The seed's comparison-sort build — O(m log m) `sort_unstable` + per-row
+/// re-sort, kept verbatim (including its extra `offsets.clone()` cursor
+/// allocation) as the reference implementation for the radix build's
+/// property tests and the `bench-pipeline` baseline column.
+#[doc(hidden)]
+pub fn from_edge_list_sort_baseline(
+    n: usize,
+    mut edges: Vec<(VertexId, VertexId)>,
+) -> Result<Csr> {
     let mut w = 0;
     for i in 0..edges.len() {
         let (u, v) = edges[i];
@@ -78,7 +372,6 @@ pub fn from_edge_list(n: usize, mut edges: Vec<(VertexId, VertexId)>) -> Result<
     edges.sort_unstable();
     edges.dedup();
 
-    // Counting sort into CSR, both directions.
     let mut deg = vec![0u64; n + 1];
     for &(u, v) in &edges {
         deg[u as usize + 1] += 1;
@@ -96,9 +389,6 @@ pub fn from_edge_list(n: usize, mut edges: Vec<(VertexId, VertexId)>) -> Result<
         targets[cursor[v as usize] as usize] = u;
         cursor[v as usize] += 1;
     }
-    // Edge list was sorted by (u, v); the second insertion (v → u) is not
-    // globally sorted, so sort each list. Lists are typically short; the
-    // u-side entries are already in order.
     for v in 0..n {
         let s = offsets[v] as usize;
         let e = offsets[v + 1] as usize;
@@ -107,14 +397,10 @@ pub fn from_edge_list(n: usize, mut edges: Vec<(VertexId, VertexId)>) -> Result<
     Ok(Csr::from_parts(offsets, targets))
 }
 
-/// Build directly from an iterator of edges without an intermediate builder.
-pub fn from_edges<I: IntoIterator<Item = (VertexId, VertexId)>>(n: usize, it: I) -> Result<Csr> {
-    from_edge_list(n, it.into_iter().collect())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gen::rng::Rng;
 
     #[test]
     fn dedup_and_self_loops() {
@@ -127,6 +413,20 @@ mod tests {
     #[test]
     fn out_of_range_rejected() {
         assert!(from_edges(2, [(0, 2)]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_message_matches_serial_at_any_thread_count() {
+        // The bad edge sits in a late chunk; every thread count must report
+        // the same first-in-input-order offender.
+        let mut edges: Vec<(VertexId, VertexId)> = (0..50_000u32).map(|i| (i % 97, i % 89 + 97)).collect();
+        edges.push((5, 999_999));
+        edges.push((1_000_000, 3));
+        let expect = from_edge_list_sort_baseline(200, edges.clone()).unwrap_err().to_string();
+        for t in [1, 2, 8] {
+            let got = from_edge_list_threads(200, edges.clone(), t).unwrap_err().to_string();
+            assert_eq!(got, expect, "threads={t}");
+        }
     }
 
     #[test]
@@ -159,5 +459,95 @@ mod tests {
         let g = from_edges(10, [(0, 9)]).unwrap();
         assert_eq!(g.num_nodes(), 10);
         assert_eq!(g.degree(5), 0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        for t in [1, 4] {
+            let g = from_edge_list_threads(0, vec![], t).unwrap();
+            assert_eq!(g.num_nodes(), 0);
+            let g = from_edge_list_threads(7, vec![], t).unwrap();
+            assert_eq!(g.num_nodes(), 7);
+            assert_eq!(g.num_edges(), 0);
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn radix_matches_sort_baseline_on_messy_input() {
+        // Duplicates, both orientations, self loops, skew — the whole
+        // normalize surface — at several thread counts.
+        crate::prop::quickcheck("radix build == sort build", |rng, _| {
+            let n = 2 + rng.below_usize(120);
+            let m = rng.below_usize(6 * n + 1);
+            let mut edges: Vec<(VertexId, VertexId)> = (0..m)
+                .map(|_| (rng.below(n as u64) as VertexId, rng.below(n as u64) as VertexId))
+                .collect();
+            // Duplicate a random prefix reversed, to force cross-chunk dups.
+            let k = rng.below_usize(edges.len().min(20) + 1);
+            let dup: Vec<_> = edges[..k].iter().map(|&(u, v)| (v, u)).collect();
+            edges.extend(dup);
+            let reference = from_edge_list_sort_baseline(n, edges.clone()).map_err(|e| e.to_string())?;
+            for t in [1, 2, 8] {
+                let got = from_edge_list_threads(n, edges.clone(), t).map_err(|e| e.to_string())?;
+                if got != reference {
+                    return Err(format!("radix(threads={t}) diverged on n={n} m={}", edges.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_path_exercised_above_chunk_floor() {
+        // Enough edges that effective_threads(8, m) really is > 1.
+        let mut rng = Rng::seeded(99);
+        let n = 3_000usize;
+        let edges: Vec<(VertexId, VertexId)> = (0..4 * MIN_EDGES_PER_THREAD)
+            .map(|_| (rng.below(n as u64) as VertexId, rng.below(n as u64) as VertexId))
+            .collect();
+        assert!(effective_threads(8, edges.len(), n) > 1);
+        let reference = from_edge_list_sort_baseline(n, edges.clone()).unwrap();
+        for t in [2, 3, 8] {
+            let got = from_edge_list_threads(n, edges.clone(), t).unwrap();
+            assert_eq!(got, reference, "threads={t}");
+        }
+        reference.validate().unwrap();
+    }
+
+    #[test]
+    fn pre_normalized_path_matches_general_path() {
+        let mut rng = Rng::seeded(7);
+        let n = 500usize;
+        let mut edges: Vec<(VertexId, VertexId)> = (0..5_000)
+            .map(|_| {
+                let u = rng.below(n as u64) as VertexId;
+                let v = rng.below(n as u64 - 1) as VertexId;
+                let v = if v >= u { v + 1 } else { v };
+                if u < v { (u, v) } else { (v, u) }
+            })
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        let general = from_edge_list(n, edges.clone()).unwrap();
+        for t in [1, 4] {
+            let fast = from_normalized_edge_list(n, edges.clone(), t).unwrap();
+            assert_eq!(fast, general, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn effective_threads_floors_small_inputs() {
+        assert_eq!(effective_threads(8, 100, 50), 1);
+        assert_eq!(effective_threads(8, MIN_EDGES_PER_THREAD * 3, 100), 3);
+        assert_eq!(effective_threads(2, MIN_EDGES_PER_THREAD * 100, 100), 2);
+        assert_eq!(effective_threads(0, 100, 50), 1);
+        // Table-width floor: n so large that per-thread O(n) scratch would
+        // dominate the edge work forces the serial path.
+        assert_eq!(effective_threads(8, MIN_EDGES_PER_THREAD * 16, 10_000_000), 1);
+        // …and scales in proportion when edges outnumber nodes.
+        assert_eq!(effective_threads(8, 64 * 10_000, 10_000), 8);
+        assert_eq!(effective_threads(8, 4 * 10_000, 10_000), 4);
+        assert_eq!(effective_threads(8, 0, 0), 1);
     }
 }

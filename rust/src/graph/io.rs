@@ -7,7 +7,6 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::graph::builder::from_edge_list;
 use crate::graph::csr::Csr;
 use crate::VertexId;
 
@@ -21,42 +20,101 @@ pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Csr> {
 
 /// Parse an edge list from any reader (see [`read_edge_list`]).
 ///
-/// Real SNAP dumps contain self-loops and both orientations of the same
-/// undirected edge; both are scrubbed **at parse time** (canonicalize to
-/// `(min, max)`, sort, dedup) rather than deferred to the builder: a node
-/// mentioned only by self-loops does not survive id compaction, and
-/// duplicates collapse before the compacted per-edge vector is built
-/// (the builder's own dedup then sees no duplicates).
-pub fn parse_edge_list<R: BufRead>(r: R) -> Result<Csr> {
-    let mut raw: Vec<(u64, u64)> = Vec::new();
-    for (i, line) in r.lines().enumerate() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
+/// Byte-level scanner with hand-rolled integer parsing: the seed's UTF-8
+/// line iterator allocated a `String` and re-validated UTF-8 per line,
+/// which dominated load time on multi-million-edge dumps. SNAP/Konect
+/// files are plain ASCII, so the scanner walks the raw bytes once,
+/// folding the normalize pass into parsing — `(min, max)` orientation and
+/// self-loop dropping happen as each pair is decoded. Memory tradeoff:
+/// the whole input is slurped (`read_to_end`), so the text (~13 B/edge)
+/// and the pair vector (16 B/edge) are briefly live together — fine for
+/// the generated workloads this repo parses; a chunked `fill_buf` scan
+/// carrying partial lines would reclaim that for multi-GB dumps. Both
+/// orientations
+/// of an undirected edge and verbatim repeats are still scrubbed here
+/// (canonicalize, sort, dedup) rather than deferred: a node mentioned
+/// only by self-loops must not survive id compaction. The builder then
+/// receives pre-normalized edges and skips its own normalize pass.
+pub fn parse_edge_list<R: BufRead>(mut r: R) -> Result<Csr> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    let b = &buf[..];
+    let mut raw: Vec<(u64, u64)> = Vec::with_capacity(b.len() / 12 + 1);
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        // Skip horizontal whitespace (spaces, tabs, CR of CRLF endings).
+        while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\r') {
+            i += 1;
         }
-        let mut it = t.split_whitespace();
-        let parse = |s: Option<&str>| -> Result<u64> {
-            s.ok_or_else(|| Error::Parse { line: i + 1, msg: "missing endpoint".into() })?
-                .parse()
-                .map_err(|e| Error::Parse { line: i + 1, msg: format!("{e}") })
-        };
-        let u = parse(it.next())?;
-        let v = parse(it.next())?;
-        if u == v {
-            continue; // self loop: never a triangle edge
+        if i >= b.len() {
+            break;
         }
-        raw.push(if u < v { (u, v) } else { (v, u) });
+        match b[i] {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b'#' | b'%' => {
+                // Comment line: skip to (not past) the newline.
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            _ => {
+                let u = parse_u64(b, &mut i, line)?;
+                while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\r') {
+                    i += 1;
+                }
+                if i >= b.len() || b[i] == b'\n' {
+                    return Err(Error::Parse { line, msg: "missing endpoint".into() });
+                }
+                let v = parse_u64(b, &mut i, line)?;
+                // Ignore the rest of the line (weights, timestamps).
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                if u != v {
+                    // Normalize inline: self loop dropped, (min, max) kept.
+                    raw.push(if u < v { (u, v) } else { (v, u) });
+                }
+            }
+        }
     }
     raw.sort_unstable();
     raw.dedup();
-    // Compact ids.
+    // Compact ids. The map is monotone, so mapped edges stay (min, max).
     let mut ids: Vec<u64> = raw.iter().flat_map(|&(u, v)| [u, v]).collect();
     ids.sort_unstable();
     ids.dedup();
     let lookup = |x: u64| ids.binary_search(&x).unwrap() as VertexId;
     let edges: Vec<(VertexId, VertexId)> = raw.iter().map(|&(u, v)| (lookup(u), lookup(v))).collect();
-    from_edge_list(ids.len(), edges)
+    crate::graph::builder::from_normalized_edge_list(ids.len(), edges, crate::par::default_threads())
+}
+
+/// Decode one base-10 `u64` at `*i`, advancing past it. A token must be
+/// digits terminated by whitespace or end-of-line — `12x` is malformed,
+/// not an integer followed by junk (matching `str::parse`'s rejection).
+fn parse_u64(b: &[u8], i: &mut usize, line: usize) -> Result<u64> {
+    let start = *i;
+    let mut x: u64 = 0;
+    while *i < b.len() && b[*i].is_ascii_digit() {
+        x = x
+            .checked_mul(10)
+            .and_then(|x| x.checked_add((b[*i] - b'0') as u64))
+            .ok_or_else(|| Error::Parse { line, msg: "integer overflows u64".into() })?;
+        *i += 1;
+    }
+    if *i == start {
+        return Err(Error::Parse {
+            line,
+            msg: format!("expected an integer, found byte `{}`", b[*i].escape_ascii()),
+        });
+    }
+    if *i < b.len() && !matches!(b[*i], b' ' | b'\t' | b'\r' | b'\n') {
+        return Err(Error::Parse { line, msg: "malformed integer token".into() });
+    }
+    Ok(x)
 }
 
 /// Write a graph as an edge list (`u v` per line, each undirected edge once).
@@ -181,6 +239,34 @@ mod tests {
     #[test]
     fn missing_endpoint_rejected() {
         assert!(parse_edge_list(Cursor::new("7\n")).is_err());
+        assert!(parse_edge_list(Cursor::new("7")).is_err(), "EOF after one token");
+    }
+
+    #[test]
+    fn trailing_tokens_ignored_like_split_whitespace() {
+        // SNAP dumps with weights/timestamps: only the first two tokens count.
+        let g = parse_edge_list(Cursor::new("1 2 0.5 1234\n2 3 9\n")).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn crlf_and_no_trailing_newline() {
+        let g = parse_edge_list(Cursor::new("1 2\r\n2 3\r\n3 1")).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 3);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn malformed_and_overflow_tokens_rejected_with_line() {
+        for (txt, want_line) in [("1 2\n3 4x\n", 2), ("99999999999999999999999 1\n", 1)] {
+            match parse_edge_list(Cursor::new(txt)).unwrap_err() {
+                Error::Parse { line, .. } => assert_eq!(line, want_line, "{txt:?}"),
+                other => panic!("expected parse error for {txt:?}, got {other}"),
+            }
+        }
     }
 
     #[test]

@@ -42,41 +42,81 @@ pub struct Oriented {
     hubs: HubIndex,
 }
 
+/// Below this many rows a multi-thread orientation request degrades toward
+/// serial (spawn overhead beats the per-row work).
+const MIN_ROWS_PER_THREAD: usize = 4096;
+
 impl Oriented {
     /// Orient a CSR graph by `≺` with the default (`auto`) hub threshold.
-    /// O(m).
+    /// O(m); runs on [`crate::par::default_threads`] threads.
     pub fn from_graph(g: &Csr) -> Self {
         Self::from_graph_with(g, HubThreshold::default())
     }
 
     /// Orient with an explicit hub-bitmap threshold policy.
     pub fn from_graph_with(g: &Csr, hub_threshold: HubThreshold) -> Self {
+        Self::from_graph_threads(g, hub_threshold, crate::par::default_threads())
+    }
+
+    /// [`Oriented::from_graph_with`] at an explicit thread count. Every
+    /// phase is a pure per-row function of the input CSR (count, filter,
+    /// bitmap-pack), parallelized over contiguous node ranges whose target
+    /// spans are disjoint `split_at_mut` chunks — so the result is
+    /// bit-identical at every thread count.
+    pub fn from_graph_threads(g: &Csr, hub_threshold: HubThreshold, threads: usize) -> Self {
         let n = g.num_nodes();
-        let degree: Vec<u32> = (0..n as VertexId).map(|v| g.degree(v) as u32).collect();
+        let t = crate::par::clamp_threads(threads, n, MIN_ROWS_PER_THREAD);
+
+        // Degrees, per row.
+        let mut degree = vec![0u32; n];
+        crate::par::for_chunks_mut(&mut degree, t, |_, start, chunk| {
+            for (i, d) in chunk.iter_mut().enumerate() {
+                *d = g.degree((start + i) as VertexId) as u32;
+            }
+        });
+
+        // Oriented out-degrees, then a serial prefix into offsets.
         let mut offsets = vec![0u64; n + 1];
-        for v in 0..n as VertexId {
-            let dv = degree[v as usize];
-            let cnt = g
-                .neighbors(v)
-                .iter()
-                .filter(|&&u| precedes(dv, v, degree[u as usize], u))
-                .count() as u64;
-            offsets[v as usize + 1] = offsets[v as usize] + cnt;
+        crate::par::for_chunks_mut(&mut offsets[1..], t, |_, start, chunk| {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                let v = (start + i) as VertexId;
+                let dv = degree[v as usize];
+                *o = g
+                    .neighbors(v)
+                    .iter()
+                    .filter(|&&u| precedes(dv, v, degree[u as usize], u))
+                    .count() as u64;
+            }
+        });
+        for v in 0..n {
+            offsets[v + 1] += offsets[v];
         }
-        let mut targets = vec![0 as VertexId; *offsets.last().unwrap() as usize];
-        for v in 0..n as VertexId {
-            let dv = degree[v as usize];
-            let mut w = offsets[v as usize] as usize;
-            // Source list is id-sorted; the filtered list stays id-sorted.
-            for &u in g.neighbors(v) {
-                if precedes(dv, v, degree[u as usize], u) {
-                    targets[w] = u;
-                    w += 1;
+
+        // Fill N_v rows; each part owns the contiguous target span of its
+        // node range. Source lists are id-sorted; filtering keeps order.
+        let vranges = crate::par::ranges(n, t);
+        let total = *offsets.last().unwrap() as usize;
+        let bounds: Vec<usize> = vranges
+            .iter()
+            .map(|r| offsets[r.start] as usize)
+            .chain([total])
+            .collect();
+        let mut targets = vec![0 as VertexId; total];
+        crate::par::for_uneven_chunks_mut(&mut targets, &bounds, |ti, _, out| {
+            let mut w = 0usize;
+            for v in vranges[ti].clone() {
+                let v32 = v as VertexId;
+                let dv = degree[v];
+                for &u in g.neighbors(v32) {
+                    if precedes(dv, v32, degree[u as usize], u) {
+                        out[w] = u;
+                        w += 1;
+                    }
                 }
             }
-            debug_assert_eq!(w as u64, offsets[v as usize + 1]);
-        }
-        let hubs = HubIndex::build(&offsets, &targets, hub_threshold);
+            debug_assert_eq!(w, out.len());
+        });
+        let hubs = HubIndex::build_threads(&offsets, &targets, hub_threshold, t);
         Oriented { offsets, targets, degree, hubs }
     }
 
@@ -290,6 +330,28 @@ mod tests {
             off.intersect_cost(0, 1),
             crate::intersect::adaptive_cost(7, 6)
         );
+    }
+
+    #[test]
+    fn threaded_orientation_bit_identical_to_serial() {
+        // n well past MIN_ROWS_PER_THREAD so the clamp leaves real
+        // parallelism in play.
+        let g = crate::gen::pa::preferential_attachment(
+            20_000,
+            8,
+            &mut crate::gen::rng::Rng::seeded(17),
+        );
+        for policy in [HubThreshold::Auto, HubThreshold::Off, HubThreshold::Fixed(4)] {
+            let serial = Oriented::from_graph_threads(&g, policy, 1);
+            for t in [2, 8] {
+                let par = Oriented::from_graph_threads(&g, policy, t);
+                assert_eq!(par.offsets(), serial.offsets(), "{policy} T={t}");
+                assert_eq!(par.targets(), serial.targets(), "{policy} T={t}");
+                assert_eq!(par.degrees(), serial.degrees(), "{policy} T={t}");
+                assert_eq!(par.hub_stats(), serial.hub_stats(), "{policy} T={t}");
+                par.validate(&g).unwrap();
+            }
+        }
     }
 
     #[test]

@@ -12,18 +12,35 @@ use crate::graph::csr::Csr;
 use crate::VertexId;
 
 /// The permutation (old id → new id) sorting nodes by `(degree, id)`.
+///
+/// Counting sort over degrees: histogram → bucket starts → an
+/// id-ascending scatter, which is stable by id within each degree — the
+/// same order the seed's `sort_unstable_by_key` produced, in
+/// O(n + d_max) with no materialized `order` vector (the preprocessing
+/// clone-pattern audit: this and the builder's cursor were the two extra
+/// O(n) allocations; `ordering.rs` already filled rows cursor-free).
 pub fn degree_order_permutation(g: &Csr) -> Vec<VertexId> {
     let n = g.num_nodes();
-    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
-    order.sort_unstable_by_key(|&v| (g.degree(v), v));
+    let dmax = g.max_degree();
+    let mut start = vec![0usize; dmax + 2];
+    for v in 0..n as VertexId {
+        start[g.degree(v) + 1] += 1;
+    }
+    for d in 0..=dmax {
+        start[d + 1] += start[d];
+    }
     let mut perm = vec![0 as VertexId; n];
-    for (new_id, &old_id) in order.iter().enumerate() {
-        perm[old_id as usize] = new_id as VertexId;
+    for v in 0..n as VertexId {
+        let d = g.degree(v);
+        perm[v as usize] = start[d] as VertexId;
+        start[d] += 1;
     }
     perm
 }
 
-/// Apply a permutation (old id → new id) to a graph.
+/// Apply a permutation (old id → new id) to a graph. The rebuild goes
+/// through the O(m) radix builder (and its `--build-threads` parallelism),
+/// which re-sorts every row under the new ids.
 pub fn relabel(g: &Csr, perm: &[VertexId]) -> Csr {
     assert_eq!(perm.len(), g.num_nodes());
     let edges: Vec<(VertexId, VertexId)> = g
@@ -51,6 +68,24 @@ mod tests {
         let mut p = degree_order_permutation(&g);
         p.sort_unstable();
         assert_eq!(p, (0..34).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn counting_permutation_matches_comparison_sort() {
+        crate::prop::quickcheck("counting perm == (degree,id) sort", |rng, _| {
+            let g = crate::prop::arb_graph(rng, 80);
+            let n = g.num_nodes();
+            let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+            order.sort_unstable_by_key(|&v| (g.degree(v), v));
+            let mut expect = vec![0 as VertexId; n];
+            for (new_id, &old) in order.iter().enumerate() {
+                expect[old as usize] = new_id as VertexId;
+            }
+            if degree_order_permutation(&g) != expect {
+                return Err(format!("permutation diverged on n={n}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

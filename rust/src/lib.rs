@@ -26,6 +26,16 @@
 //!   over `comm::threads`, sliding-window expiry, periodic compaction back
 //!   into a fresh CSR, and a cost-model throughput projector in
 //!   `sim::streaming`. See `DESIGN.md` §6 for the lifecycle.
+//! * **`par/` + the radix build** — the multithreaded preprocessing
+//!   pipeline: [`graph::builder`] constructs the CSR with an O(m)
+//!   two-pass counting/radix scatter (no comparison sort, no per-row
+//!   re-sort), and the whole parse → build → relabel → orient → hub-index
+//!   chain fans out over `--build-threads` scoped threads
+//!   ([`par::BuildThreads`]) with **bit-identical output at every thread
+//!   count** (disjoint per-`(thread, bucket)` scatter regions; DESIGN.md
+//!   §8). [`pipeline`] (`tricount bench-pipeline`) times the stages
+//!   against the retained comparison-sort baseline and writes
+//!   `BENCH_pipeline.json`, the repo's recorded perf baseline.
 //! * **L2/L1 (python/, build-time only)** — a blocked dense triangle-count
 //!   formulated for the MXU (`sum((L@L) ⊙ L)`) as a Pallas kernel inside a
 //!   JAX model, AOT-lowered to HLO text.
@@ -51,6 +61,7 @@
 
 pub mod config;
 pub mod error;
+pub mod par;
 
 pub mod graph {
     pub mod builder;
@@ -149,6 +160,8 @@ pub mod tensor {
 }
 
 pub mod exp;
+
+pub mod pipeline;
 
 pub mod prop;
 

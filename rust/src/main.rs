@@ -41,6 +41,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args[1..]),
         "generate" => cmd_generate(&args[1..]),
         "partition-stats" => cmd_partition_stats(&args[1..]),
+        "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
         "exp" => cmd_exp(&args[1..]),
         "info" => cmd_info(&args[1..]),
         "help" | "--help" | "-h" => {
@@ -60,10 +61,13 @@ USAGE: tricount <command> [--key value]...
 COMMANDS:
   count             count triangles
                     --workload SPEC  (karate | preset | pa:N:D | rmat:S:EF |
-                                      contact:N:D | file:PATH | bin:PATH)
+                                      er:N:D | contact:N:D | file:PATH | bin:PATH)
                     --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
                     --procs P --cost-fn F (unit|dv|patric|new|hybrid) --scale X
                     --hub-threshold T (n|auto|off: bitmap rows for d̂ ≥ T)
+                    --build-threads T (n|auto: preprocessing threads — CSR
+                    build, relabel, orientation, hub packing; output is
+                    bit-identical at every T)
                     --dense-core K --artifacts-dir DIR --config FILE
                     --out DIR (write count.{{csv,json}} incl. representation
                     stats: hub count, bitmap bytes, kernel-path hits)
@@ -79,6 +83,13 @@ COMMANDS:
                     baselines) --workload SPEC --procs P
   partition-stats   memory accounting for both partition schemes
                     --workload SPEC --procs P
+  bench-pipeline    time the preprocessing pipeline (parse → radix CSR
+                    build → degree relabel → orientation + hub index)
+                    serially and at each thread count, verifying the
+                    parallel output is bit-identical to serial
+                    --workloads S1,S2,…  --threads T1,T2,… (n|auto)
+                    --reps N --seed S --hub-threshold T
+                    --out PATH (default BENCH_pipeline.json)
   exp               paper experiments
                     --id ID|all [--list] [--quick] [--scale X] [--out DIR]
   info              PJRT platform + discovered artifacts"
@@ -113,6 +124,10 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
         }
         i += 2;
     }
+    // Install the preprocessing thread count process-wide: every
+    // `from_edge_list` / `Oriented::from_graph_with` call this command
+    // makes — including per-batch stream compaction — inherits it.
+    tricount::par::set_default_threads(cfg.build_threads.resolve());
     Ok((cfg, extra))
 }
 
@@ -486,6 +501,44 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
     println!("non-overlapping (ours): largest {max_non:.2} MB, total edges stored {sum_non}");
     println!("overlapping (PATRIC):   largest {max_over:.2} MB, total edges stored {sum_over}");
     println!("ratio (largest): {:.2}x", max_over / max_non.max(1e-12));
+    Ok(())
+}
+
+/// `tricount bench-pipeline` — record the preprocessing perf baseline
+/// (and enforce the parallel-==-serial determinism guarantee; CI runs
+/// this on a small preset every push).
+fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &["workloads", "threads", "reps", "out"])?;
+    let mut opts = tricount::pipeline::Options {
+        seed: cfg.seed,
+        hub_threshold: cfg.hub_threshold,
+        ..Default::default()
+    };
+    if let Some(w) = extra.get("workloads") {
+        opts.workloads = w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        if opts.workloads.is_empty() {
+            return Err(Error::Config("--workloads needs at least one spec".into()));
+        }
+    }
+    if let Some(t) = extra.get("threads") {
+        opts.threads = t
+            .split(',')
+            .map(|s| s.trim().parse::<tricount::par::BuildThreads>().map(|b| b.resolve()))
+            .collect::<Result<Vec<usize>>>()?;
+    }
+    if let Some(r) = extra.get("reps") {
+        opts.reps = r.parse().map_err(|e| Error::Config(format!("--reps: {e}")))?;
+        if opts.reps == 0 {
+            return Err(Error::Config("--reps must be >= 1".into()));
+        }
+    }
+    let out = extra.get("out").map(String::as_str).unwrap_or("BENCH_pipeline.json");
+
+    let report = tricount::pipeline::run(&opts)?;
+    report.print();
+    report.write_json(out)?;
+    println!("[written: {out}]");
     Ok(())
 }
 

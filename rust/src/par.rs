@@ -1,0 +1,332 @@
+//! Deterministic scoped-thread helpers for the preprocessing pipeline.
+//!
+//! Everything here backs the `--build-threads` knob: the O(m) radix CSR
+//! build ([`crate::graph::builder`]), the parallel orientation
+//! ([`crate::graph::ordering::Oriented::from_graph_threads`]) and the hub
+//! bitmap packing ([`crate::adj::hub::HubIndex::build_threads`]). The
+//! contract every consumer upholds is **bit-identical output at every
+//! thread count**: work is split into contiguous index ranges, each part
+//! writes only to regions it owns (either a `split_at_mut` chunk or a
+//! cursor region proven disjoint by construction), and anything
+//! order-sensitive — prefix sums, hub selection — stays serial. See
+//! DESIGN.md §8 for the determinism argument.
+//!
+//! This is deliberately *not* built on [`crate::comm::threads`]: that layer
+//! models an MPI cluster (ranks, messages, metrics); this one is plain
+//! fork-join over slices with zero protocol.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::error::Error;
+
+/// `--build-threads <n|auto>` policy for the preprocessing pipeline
+/// (CSR build, degree ordering, relabel, orientation, hub index).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BuildThreads {
+    /// One thread per available core (`std::thread::available_parallelism`).
+    #[default]
+    Auto,
+    /// Exactly `n` threads (`n ≥ 1`).
+    Fixed(usize),
+}
+
+impl BuildThreads {
+    /// Resolve the policy to a concrete thread count (`≥ 1`).
+    pub fn resolve(self) -> usize {
+        match self {
+            BuildThreads::Fixed(t) => t.max(1),
+            BuildThreads::Auto => std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+impl std::str::FromStr for BuildThreads {
+    type Err = Error;
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        match s {
+            "auto" => Ok(BuildThreads::Auto),
+            other => match other.parse::<usize>() {
+                Ok(t) if t >= 1 => Ok(BuildThreads::Fixed(t)),
+                _ => Err(Error::Config(format!(
+                    "build threads `{other}` is not n≥1|auto"
+                ))),
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for BuildThreads {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BuildThreads::Auto => write!(f, "auto"),
+            BuildThreads::Fixed(t) => write!(f, "{t}"),
+        }
+    }
+}
+
+/// Process-wide default consulted by [`crate::graph::builder::from_edge_list`]
+/// and [`crate::graph::ordering::Oriented::from_graph_with`] — the paths
+/// whose signatures predate the knob. Starts at 1 (serial, the seed's
+/// behavior); the CLI sets it from `--build-threads`. Because every
+/// consumer is bit-identical at any thread count, changing this is a pure
+/// performance decision — callers wanting explicit control use the
+/// `*_threads` variants.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the process-wide default build-thread count (clamped to ≥ 1).
+pub fn set_default_threads(t: usize) {
+    DEFAULT_THREADS.store(t.max(1), Ordering::Relaxed);
+}
+
+/// Current process-wide default build-thread count.
+pub fn default_threads() -> usize {
+    DEFAULT_THREADS.load(Ordering::Relaxed)
+}
+
+/// Degrade a requested thread count toward serial when there are fewer
+/// than `floor` work items per thread — spawn plus per-thread-table merge
+/// overhead beats the win on small inputs. Shared by the builder
+/// (edges-per-thread and table-width floors), the orientation
+/// (rows-per-thread) and the hub packer (rows-per-thread), so the
+/// "degrade toward serial" rule lives in one place.
+pub fn clamp_threads(requested: usize, work_items: usize, floor: usize) -> usize {
+    requested.clamp(1, (work_items / floor.max(1)).max(1))
+}
+
+/// Split `0..len` into exactly `parts` contiguous near-equal ranges (the
+/// first `len % parts` ranges are one longer; trailing ranges may be empty
+/// when `parts > len`). The boundaries are a pure function of `(len,
+/// parts)` — every pipeline phase that must agree on ownership calls this
+/// with the same arguments.
+pub fn ranges(len: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for i in 0..parts {
+        let size = base + usize::from(i < rem);
+        out.push(at..at + size);
+        at += size;
+    }
+    debug_assert_eq!(at, len);
+    out
+}
+
+/// Run `f(part, range)` over the [`ranges`] of `0..len`, on scoped threads
+/// when `parts > 1` (inline otherwise). Results are returned in part
+/// order. `f` must only write to locations its part owns.
+pub fn for_ranges<R, F>(len: usize, parts: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    let rs = ranges(len, parts);
+    if rs.len() == 1 {
+        return vec![f(0, 0..len)];
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = rs
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| s.spawn(move || fr(i, r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par worker panicked"))
+            .collect()
+    })
+}
+
+/// Split `data` at `bounds` (ascending; `bounds[0] == 0`, last ==
+/// `data.len()`) into `bounds.len() - 1` chunks and run `f(part,
+/// bounds[part], chunk)` on scoped threads. For phases whose per-part
+/// extents are data-dependent (CSR row spans): the chunks are disjoint
+/// `&mut` slices, so the scatter is safe Rust.
+pub fn for_uneven_chunks_mut<T, R, F>(data: &mut [T], bounds: &[usize], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &mut [T]) -> R + Sync,
+{
+    let parts = bounds.len() - 1;
+    debug_assert!(parts >= 1);
+    debug_assert_eq!(bounds[0], 0);
+    debug_assert_eq!(bounds[parts], data.len());
+    if parts == 1 {
+        return vec![f(0, 0, data)];
+    }
+    let mut chunks = Vec::with_capacity(parts);
+    let mut rest = data;
+    for p in 0..parts {
+        // `mem::take` moves the slice out so the split borrows for the full
+        // original lifetime (a plain `rest.split_at_mut(..)` reborrow could
+        // not be pushed into `chunks` and reassigned).
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(bounds[p + 1] - bounds[p]);
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|s| {
+        let fr = &f;
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(p, chunk)| s.spawn(move || fr(p, bounds[p], chunk)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par worker panicked"))
+            .collect()
+    })
+}
+
+/// [`for_uneven_chunks_mut`] with the near-equal [`ranges`] boundaries:
+/// `f(part, chunk_start_index, chunk)`.
+pub fn for_chunks_mut<T, R, F>(data: &mut [T], parts: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, usize, &mut [T]) -> R + Sync,
+{
+    let rs = ranges(data.len(), parts);
+    let mut bounds: Vec<usize> = rs.iter().map(|r| r.start).collect();
+    bounds.push(data.len());
+    for_uneven_chunks_mut(data, &bounds, f)
+}
+
+/// Shared mutable view over a slice for scatter phases whose write
+/// positions interleave across owners (per-`(thread, bucket)` cursor
+/// regions) and therefore cannot be expressed as `split_at_mut` chunks.
+/// Callers prove disjointness by construction: every index is written by
+/// exactly one part.
+pub struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _lt: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    /// Wrap a slice; the borrow keeps the underlying storage alive and
+    /// exclusive for `'a`.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        UnsafeSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _lt: std::marker::PhantomData }
+    }
+
+    /// Write `value` at `i`.
+    ///
+    /// # Safety
+    ///
+    /// `i < len`, and no other thread reads or writes index `i` while the
+    /// wrapper is live (disjoint cursor regions guarantee this at every
+    /// call site).
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = value;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for (s, t) in [("auto", BuildThreads::Auto), ("1", BuildThreads::Fixed(1)), ("16", BuildThreads::Fixed(16))] {
+            assert_eq!(s.parse::<BuildThreads>().unwrap(), t);
+            assert_eq!(t.to_string(), s);
+        }
+        assert!("0".parse::<BuildThreads>().is_err());
+        assert!("-3".parse::<BuildThreads>().is_err());
+        assert!("many".parse::<BuildThreads>().is_err());
+        assert!(BuildThreads::Auto.resolve() >= 1);
+        assert_eq!(BuildThreads::Fixed(0).resolve(), 1);
+    }
+
+    #[test]
+    fn ranges_tile_exactly() {
+        for (len, parts) in [(10, 3), (0, 4), (7, 1), (3, 8), (100, 7)] {
+            let rs = ranges(len, parts);
+            assert_eq!(rs.len(), parts.max(1));
+            let mut at = 0;
+            for r in &rs {
+                assert_eq!(r.start, at);
+                at = r.end;
+            }
+            assert_eq!(at, len);
+            // Near-equal: sizes differ by at most one.
+            let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn for_ranges_returns_in_part_order() {
+        let got = for_ranges(100, 4, |i, r| (i, r.start, r.end));
+        assert_eq!(got, vec![(0, 0, 25), (1, 25, 50), (2, 50, 75), (3, 75, 100)]);
+        assert_eq!(for_ranges(5, 1, |i, r| (i, r.len())), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn chunks_mut_cover_disjointly() {
+        let mut data = vec![0u32; 103];
+        for parts in [1, 2, 5, 8] {
+            for_chunks_mut(&mut data, parts, |_p, start, chunk| {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x += (start + i) as u32;
+                }
+            });
+        }
+        // Four passes each added the index once.
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, 4 * i as u32);
+        }
+    }
+
+    #[test]
+    fn uneven_chunks_respect_bounds() {
+        let mut data: Vec<usize> = vec![0; 10];
+        let bounds = [0usize, 1, 1, 7, 10];
+        let lens = for_uneven_chunks_mut(&mut data, &bounds, |p, start, chunk| {
+            for x in chunk.iter_mut() {
+                *x = p;
+            }
+            (start, chunk.len())
+        });
+        assert_eq!(lens, vec![(0, 1), (1, 0), (1, 6), (7, 3)]);
+        assert_eq!(data, vec![0, 2, 2, 2, 2, 2, 2, 3, 3, 3]);
+    }
+
+    #[test]
+    fn unsafe_slice_disjoint_scatter() {
+        let mut data = vec![0u64; 64];
+        {
+            let out = UnsafeSlice::new(&mut data);
+            for_ranges(64, 4, |_, r| {
+                for i in r {
+                    // Each part owns its range: disjoint by construction.
+                    unsafe { out.write(i, i as u64 * 3) };
+                }
+            });
+        }
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn default_threads_clamps() {
+        let prev = default_threads();
+        set_default_threads(0);
+        assert_eq!(default_threads(), 1);
+        set_default_threads(prev.max(1));
+    }
+}

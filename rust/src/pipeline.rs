@@ -1,0 +1,254 @@
+//! Preprocessing-pipeline benchmark (`tricount bench-pipeline`).
+//!
+//! The paper's counting phase assumes the graph is already resident and
+//! ordered; this module measures everything that happens *before* a single
+//! triangle is counted — parse → CSR build → degree relabel → orientation
+//! + hub index — serially and at each requested `--build-threads` count,
+//! and records the result as the repo's perf baseline
+//! (`BENCH_pipeline.json`, the shared [`crate::exp::report`] JSON schema).
+//!
+//! Every timed run is also a correctness check: the radix build at every
+//! thread count is compared bit-for-bit against the seed's comparison-sort
+//! builder (kept as [`crate::graph::builder::from_edge_list_sort_baseline`]),
+//! and the parallel orientation against the serial one. Divergence is an
+//! error — the CI smoke step runs a small preset through here so the
+//! determinism guarantee is enforced on every push.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::adj::HubThreshold;
+use crate::config::build_workload;
+use crate::error::{Error, Result};
+use crate::exp::report::{Cell, Report};
+use crate::graph::builder::{from_edge_list_sort_baseline, from_edge_list_threads};
+use crate::graph::csr::Csr;
+use crate::graph::io::parse_edge_list;
+use crate::graph::ordering::Oriented;
+use crate::graph::relabel::degree_order_permutation;
+use crate::par;
+use crate::VertexId;
+
+/// What to measure.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Workload specs (`pa:<n>:<d>` etc.; see [`build_workload`]).
+    pub workloads: Vec<String>,
+    /// Thread counts to sweep. 1 is always measured first (it is the
+    /// speedup reference).
+    pub threads: Vec<usize>,
+    /// Timed repetitions per stage; the median is reported.
+    pub reps: usize,
+    /// Generator seed.
+    pub seed: u64,
+    /// Hub policy for the orientation stage.
+    pub hub_threshold: HubThreshold,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            workloads: vec![
+                "pa:100000:64".into(),
+                "rmat:16:16".into(),
+                "er:200000:16".into(),
+            ],
+            threads: vec![1, 2, 4, 8],
+            reps: 3,
+            seed: 42,
+            hub_threshold: HubThreshold::Auto,
+        }
+    }
+}
+
+/// Median-of-`reps` wall time for `f`, plus `f`'s last result.
+fn timed<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
+    let reps = reps.max(1);
+    let mut samples = Vec::with_capacity(reps);
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        out = Some(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[reps / 2], out.unwrap())
+}
+
+/// One thread count's stage timings over one workload.
+struct StageTimes {
+    parse_s: f64,
+    build_s: f64,
+    relabel_s: f64,
+    orient_s: f64,
+}
+
+impl StageTimes {
+    fn total(&self) -> f64 {
+        self.parse_s + self.build_s + self.relabel_s + self.orient_s
+    }
+}
+
+fn divergence(workload: &str, threads: usize, stage: &str) -> Error {
+    Error::InvalidGraph(format!(
+        "bench-pipeline: {stage} at build-threads={threads} diverged from the \
+         serial reference on `{workload}` — the deterministic-build guarantee is broken"
+    ))
+}
+
+/// Run the sweep; returns the report (also the `BENCH_pipeline.json`
+/// payload). Errors if any parallel stage output differs from serial.
+pub fn run(opts: &Options) -> Result<Report> {
+    let mut threads = opts.threads.clone();
+    threads.retain(|&t| t >= 1);
+    if !threads.contains(&1) {
+        threads.push(1);
+    }
+    threads.sort_unstable();
+    threads.dedup();
+
+    let mut report = Report::new([
+        "workload",
+        "n",
+        "m",
+        "threads",
+        "parse_s",
+        "build_radix_s",
+        "build_sort_s",
+        "relabel_s",
+        "orient_hub_s",
+        "total_s",
+        "speedup_vs_serial",
+    ]);
+
+    for spec in &opts.workloads {
+        let g = build_workload(spec, 1.0, opts.seed)?;
+        let n = g.num_nodes();
+        let edges: Vec<(VertexId, VertexId)> = g.edges().collect();
+        let m = edges.len();
+
+        // Serialize once: the parse stage reads this in-memory edge list,
+        // so parse timings measure the byte scanner, not disk.
+        let mut text: Vec<u8> = Vec::with_capacity(m * 14 + 64);
+        writeln!(text, "# bench-pipeline {spec} n={n} m={m}")?;
+        for &(u, v) in &edges {
+            writeln!(text, "{u} {v}")?;
+        }
+
+        // Serial references — the sort baseline doubles as the timing
+        // baseline the radix build must beat.
+        let (sort_s, csr_ref) = timed(opts.reps, || from_edge_list_sort_baseline(n, edges.clone()));
+        let csr_ref = csr_ref?;
+        let mut parse_ref: Option<Csr> = None;
+        let mut serial_total = 0.0f64;
+        let mut serial_oriented: Option<Oriented> = None;
+
+        for &t in &threads {
+            // Parse goes through the module-level default (its signature
+            // predates the knob); restore afterwards.
+            let prev = par::default_threads();
+            par::set_default_threads(t);
+            let (parse_s, parsed) = timed(opts.reps, || {
+                parse_edge_list(std::io::Cursor::new(&text[..])).expect("bench parse")
+            });
+            par::set_default_threads(prev);
+            match &parse_ref {
+                None => parse_ref = Some(parsed),
+                Some(r) => {
+                    if *r != parsed {
+                        return Err(divergence(spec, t, "parse"));
+                    }
+                }
+            }
+
+            let (build_s, built) =
+                timed(opts.reps, || from_edge_list_threads(n, edges.clone(), t));
+            let built = built?;
+            if built != csr_ref {
+                return Err(divergence(spec, t, "radix CSR build"));
+            }
+
+            let (relabel_s, relabeled) = timed(opts.reps, || {
+                let perm = degree_order_permutation(&built);
+                let mapped: Vec<(VertexId, VertexId)> = built
+                    .edges()
+                    .map(|(u, v)| (perm[u as usize], perm[v as usize]))
+                    .collect();
+                from_edge_list_threads(n, mapped, t).expect("relabel rebuild")
+            });
+
+            let (orient_s, oriented) = timed(opts.reps, || {
+                Oriented::from_graph_threads(&relabeled, opts.hub_threshold, t)
+            });
+            match &serial_oriented {
+                None => serial_oriented = Some(oriented),
+                Some(r) => {
+                    let same = r.offsets() == oriented.offsets()
+                        && r.targets() == oriented.targets()
+                        && r.degrees() == oriented.degrees()
+                        && r.hub_stats() == oriented.hub_stats();
+                    if !same {
+                        return Err(divergence(spec, t, "orientation + hub index"));
+                    }
+                }
+            }
+
+            let st = StageTimes { parse_s, build_s, relabel_s, orient_s };
+            if t == 1 {
+                serial_total = st.total();
+            }
+            let speedup = if st.total() > 0.0 { serial_total / st.total() } else { 0.0 };
+            report.row([
+                spec.clone().into(),
+                n.into(),
+                m.into(),
+                t.into(),
+                Cell::Secs(st.parse_s),
+                Cell::Secs(st.build_s),
+                Cell::Secs(sort_s),
+                Cell::Secs(st.relabel_s),
+                Cell::Secs(st.orient_s),
+                Cell::Secs(st.total()),
+                speedup.into(),
+            ]);
+        }
+    }
+    report.note(format!(
+        "determinism verified: radix CSR == comparison-sort CSR and parallel \
+         orientation == serial at every thread count above (cores on this host: {})",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    ));
+    report.note(
+        "build_sort_s = the seed's serial comparison-sort builder \
+         (from_edge_list_sort_baseline), the timing baseline the radix build replaces"
+            .to_string(),
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_runs_and_verifies() {
+        let opts = Options {
+            workloads: vec!["pa:3000:8".into()],
+            threads: vec![2], // 1 is inserted automatically
+            reps: 1,
+            seed: 7,
+            hub_threshold: HubThreshold::Auto,
+        };
+        let r = run(&opts).unwrap();
+        assert_eq!(r.rows.len(), 2, "one row per thread count (1 and 2)");
+        assert_eq!(r.columns.len(), 11);
+        // JSON emission stays schema-valid.
+        assert!(r.to_json().contains("\"build_radix_s\""));
+    }
+
+    #[test]
+    fn bad_workload_is_an_error() {
+        let opts = Options { workloads: vec!["wat:1".into()], ..Options::default() };
+        assert!(run(&opts).is_err());
+    }
+}

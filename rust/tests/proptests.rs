@@ -430,3 +430,137 @@ fn prop_orientation_preserves_triangle_structure() {
         Ok(())
     });
 }
+
+/// A random base graph from any of the four generator families (PA, R-MAT,
+/// Erdős–Rényi, geometric contact) — the build-determinism satellite's
+/// required coverage.
+fn arb_build_base(rng: &mut Rng, case: u32) -> tricount::graph::csr::Csr {
+    match case % 4 {
+        0 => {
+            let n = 20 + rng.below_usize(400);
+            tricount::gen::pa::preferential_attachment(n, 6, rng)
+        }
+        1 => tricount::gen::rmat::rmat(6 + rng.below(3) as u32, 6, Default::default(), rng),
+        2 => {
+            let n = 16 + rng.below_usize(300);
+            let m = rng.below_usize(4 * n + 1);
+            tricount::gen::erdos_renyi::gnm(n, m, rng)
+        }
+        _ => {
+            let n = 64 + rng.below_usize(300);
+            tricount::gen::geometric::miami_like(n, 8, rng)
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_build_bit_identical_across_generators() {
+    // The tentpole's determinism guarantee: at build-threads 1/2/8 the
+    // radix builder emits bit-identical offsets/targets to the seed's
+    // comparison-sort builder — across PA/R-MAT/ER/geometric inputs
+    // salted with duplicates, reversed orientations and self loops.
+    quickcheck("parallel radix build == serial sort build", |rng, case| {
+        // Every eighth case is big enough (m ≫ MIN_EDGES_PER_THREAD) that
+        // T=8 really runs eight scatter chunks instead of clamping serial.
+        let g = if case % 8 == 0 {
+            tricount::gen::pa::preferential_attachment(20_000, 8, rng)
+        } else {
+            arb_build_base(rng, case)
+        };
+        let n = g.num_nodes();
+        let mut edges: Vec<(u32, u32)> = g.edges().collect();
+        let extra = rng.below_usize(edges.len().min(40) + 1);
+        for _ in 0..extra {
+            let &(u, v) = &edges[rng.below_usize(edges.len())];
+            edges.push((v, u)); // duplicate, reversed
+        }
+        edges.push((0, 0)); // self loop
+        let reference = tricount::graph::builder::from_edge_list_sort_baseline(n, edges.clone())
+            .map_err(|e| e.to_string())?;
+        for t in [1usize, 2, 8] {
+            let built = tricount::graph::builder::from_edge_list_threads(n, edges.clone(), t)
+                .map_err(|e| e.to_string())?;
+            if built != reference {
+                return Err(format!("case {case}: radix build diverged at T={t} (n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_orientation_identical_and_hub_stats_stable() {
+    // Orientation + hub index built at T=1/2/8 must agree bit-for-bit
+    // (offsets/targets/degrees) and report identical hub-row stats.
+    quickcheck("parallel orientation == serial", |rng, case| {
+        let g = arb_build_base(rng, case);
+        let policy = match case % 3 {
+            0 => tricount::adj::HubThreshold::Auto,
+            1 => tricount::adj::HubThreshold::Off,
+            _ => tricount::adj::HubThreshold::Fixed(1 + rng.below_usize(8)),
+        };
+        let serial = Oriented::from_graph_threads(&g, policy, 1);
+        for t in [2usize, 8] {
+            let par = Oriented::from_graph_threads(&g, policy, t);
+            if par.offsets() != serial.offsets()
+                || par.targets() != serial.targets()
+                || par.degrees() != serial.degrees()
+            {
+                return Err(format!("case {case}: orientation diverged at T={t}"));
+            }
+            if par.hub_stats() != serial.hub_stats() {
+                return Err(format!("case {case}: hub stats diverged at T={t}"));
+            }
+        }
+        serial.validate(&g).map_err(|e| format!("case {case}: {e}"))
+    });
+}
+
+#[test]
+fn prop_stream_compaction_equivalent_through_parallel_builder() {
+    // stream::compact calls graph::builder per batch; with the process
+    // default raised to 8 build threads the maintained count and the final
+    // compacted graph must be unchanged (the builder is bit-identical at
+    // any thread count).
+    quickcheck("stream compaction via parallel builder == serial", |rng, case| {
+        // Every fourth case uses a base big enough to clear the builder's
+        // MIN_EDGES_PER_THREAD floor, so compaction really runs multi-chunk;
+        // the rest cover the tiny edge cases (which clamp back to serial).
+        let g = if case % 4 == 0 {
+            tricount::gen::pa::preferential_attachment(5_000, 8, rng)
+        } else {
+            arb_stream_base(rng, case)
+        };
+        let batches = arb_update_batches(rng, g.num_nodes(), 4, 25);
+        let policy = CompactionPolicy { every_batches: 1, overlay_ratio: 0.0 };
+        let run_with = |threads: usize| -> Result<StreamState, String> {
+            let prev = tricount::par::default_threads();
+            tricount::par::set_default_threads(threads);
+            let mut s = StreamState::with_policy(g.clone(), policy);
+            let mut result = Ok(());
+            for b in &batches {
+                if let Err(e) = s.apply_batch(b) {
+                    result = Err(e.to_string());
+                    break;
+                }
+            }
+            tricount::par::set_default_threads(prev);
+            result.map(|_| s)
+        };
+        let serial = run_with(1)?;
+        let par = run_with(8)?;
+        if par.triangles() != serial.triangles() {
+            return Err(format!(
+                "case {case}: count {} != {} through 8-thread compaction",
+                par.triangles(),
+                serial.triangles()
+            ));
+        }
+        let gs = serial.snapshot().map_err(|e| e.to_string())?;
+        let gp = par.snapshot().map_err(|e| e.to_string())?;
+        if gs != gp {
+            return Err(format!("case {case}: compacted graphs diverged"));
+        }
+        Ok(())
+    });
+}
