@@ -14,11 +14,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use tricount::adj::HubThreshold;
 use tricount::algo::{dynamic_lb, surrogate};
 use tricount::config::CostFn;
 use tricount::gen::rng::Rng;
 use tricount::graph::ordering::Oriented;
-use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::balance::balanced_ranges;
 use tricount::partition::cost::{cost_vector, prefix_sums};
 use tricount::partition::{nonoverlap, overlap};
 use tricount::runtime::engine::Engine;
@@ -54,21 +55,24 @@ fn main() -> anyhow::Result<()> {
     let p = 8usize;
     let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
     let ranges = balanced_ranges(&prefix, p);
-    let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
     let non_mb = nonoverlap::partition_sizes(&o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
     let over_mb = overlap::overlap_sizes(&g, &o, &ranges).iter().map(|s| s.mb()).fold(0.0f64, f64::max);
     println!("[4] largest partition @P={p}: non-overlap {non_mb:.1}MB vs PATRIC-overlap {over_mb:.1}MB ({:.1}x)", over_mb / non_mb);
 
     // ---- 5. §IV surrogate algorithm on the real message-passing runtime ---
+    //        (ranks hold materialized partitions; residency is measured and
+    //        must equal the Table-II prediction exactly)
     let t0 = Instant::now();
-    let s = surrogate::run(&o, &ranges, &owner)?;
+    let s = surrogate::run(&o, &ranges, HubThreshold::Auto)?;
     let st = s.metrics.totals();
+    assert_eq!(s.metrics.partition_accounting_divergence(), None, "mem accounting diverged");
     println!(
-        "[5] surrogate (threads, P={p}): {} triangles, {} msgs, {:.1}MB moved, imbalance {:.2}  [{:.1?}]",
+        "[5] surrogate (threads, P={p}): {} triangles, {} msgs, {:.1}MB moved, imbalance {:.2}, largest rank {:.1}MB of G (== prediction)  [{:.1?}]",
         s.triangles,
         st.messages_sent,
         st.bytes_sent as f64 / 1e6,
         s.metrics.imbalance(),
+        s.metrics.max_partition_bytes() as f64 / 1e6,
         t0.elapsed()
     );
 

@@ -7,12 +7,11 @@
 //!
 //! Run: `cargo run --release --example skewed_degrees`
 
-use std::sync::Arc;
-
+use tricount::adj::HubThreshold;
 use tricount::algo::{direct, surrogate};
 use tricount::gen::rng::Rng;
 use tricount::graph::ordering::Oriented;
-use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::balance::balanced_ranges;
 use tricount::partition::cost::prefix_sums;
 use tricount::partition::nonoverlap::partition_sizes;
 use tricount::partition::overlap::overlap_sizes;
@@ -54,14 +53,13 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== message economics: surrogate vs direct (PA(30K, 40), P = 8) ==");
     let g = tricount::gen::pa::preferential_attachment(30_000, 40, &mut Rng::seeded(13));
-    let o = Arc::new(Oriented::from_graph(&g));
+    let o = Oriented::from_graph(&g);
     let prefix = prefix_sums(
         &tricount::partition::cost::cost_vector(&o, tricount::config::CostFn::SurrogateNew),
     );
     let ranges = balanced_ranges(&prefix, 8);
-    let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-    let s = surrogate::run(&o, &ranges, &owner)?;
-    let d = direct::run(&o, &ranges, &owner)?;
+    let s = surrogate::run(&o, &ranges, HubThreshold::Auto)?;
+    let d = direct::run(&o, &ranges, HubThreshold::Auto)?;
     assert_eq!(s.triangles, d.triangles);
     let (st, dt) = (s.metrics.totals(), d.metrics.totals());
     println!(

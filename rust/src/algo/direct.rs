@@ -5,16 +5,18 @@
 //! if `u` appears in many of rank `i`'s lists, `N_u` crosses the wire once
 //! *per occurrence* — the high communication overhead the paper measures in
 //! Fig 4 / Table III and the surrogate scheme exists to eliminate.
+//!
+//! Ranks hold the same materialized [`OwnedPartition`]s as the surrogate
+//! scheme; only the communication protocol differs.
 
-use std::sync::Arc;
-
+use crate::adj::hub::HubThreshold;
 use crate::adj::{self, NeighborView};
-use crate::algo::surrogate::RunResult;
-use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::algo::driver::{self, RunResult};
+use crate::comm::threads::{Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::partition::nonoverlap::PartitionView;
+use crate::partition::nonoverlap::partition_sizes;
+use crate::partition::owned::{self, OwnedPartition};
 use crate::{TriangleCount, VertexId};
 
 /// Wire messages of the direct scheme.
@@ -40,22 +42,13 @@ impl Payload for Msg {
 /// Run the direct-approach algorithm over the same non-overlapping
 /// partitions as [`crate::algo::surrogate::run`].
 pub fn run(
-    graph: &Arc<Oriented>,
+    graph: &Oriented,
     ranges: &[std::ops::Range<u32>],
-    owner: &Arc<Vec<u32>>,
+    hub: HubThreshold,
 ) -> Result<RunResult> {
-    let p = ranges.len();
-    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
-    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
-        rank_main(c, graph.clone(), ranges[c.rank()].clone(), owner.clone())
-    })?;
-    let mut metrics = ClusterMetrics::default();
-    let mut triangles = 0;
-    for (t, m) in results {
-        triangles += t;
-        metrics.per_rank.push(m);
-    }
-    Ok(RunResult { triangles, metrics })
+    let parts = owned::extract_nonoverlapping(graph, ranges, hub);
+    let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
+    driver::run_owned::<Msg, _>(parts, predicted, rank_main)
 }
 
 struct RankState {
@@ -65,17 +58,23 @@ struct RankState {
     pending: u64,
 }
 
-fn handle(c: &mut Comm<Msg>, view: &PartitionView, src: usize, msg: Msg, st: &mut RankState) {
+fn handle(
+    c: &mut Comm<Msg>,
+    part: &OwnedPartition,
+    src: usize,
+    msg: Msg,
+    st: &mut RankState,
+) -> Result<()> {
     match msg {
         Msg::Request { u, v } => {
             // We own u; ship N_u back, tagged with the requester's v.
-            let nu = view.nbrs(u).to_vec();
-            c.send(src, Msg::Response { v, nu }).expect("send response");
+            let nu = part.nbrs(u).to_vec();
+            c.send(src, Msg::Response { v, nu })?;
         }
         Msg::Response { v, nu } => {
             // Remote N_u is a wire payload (plain sorted view); the local
             // N_v goes through the hybrid dispatch.
-            let vv = view.view(v);
+            let vv = part.view(v);
             let nuv = NeighborView::sorted(&nu);
             adj::intersect_count(vv, nuv, &mut st.t);
             st.work += adj::intersect_cost(vv, nuv);
@@ -83,55 +82,53 @@ fn handle(c: &mut Comm<Msg>, view: &PartitionView, src: usize, msg: Msg, st: &mu
         }
         Msg::Completion => st.completions += 1,
     }
+    Ok(())
 }
 
-fn rank_main(
-    c: &mut Comm<Msg>,
-    graph: Arc<Oriented>,
-    range: std::ops::Range<u32>,
-    owner: Arc<Vec<u32>>,
-) -> TriangleCount {
+fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> {
     let me = c.rank() as u32;
-    let view = PartitionView::new(graph, range.clone());
     let mut st = RankState { t: 0, work: 0, completions: 0, pending: 0 };
 
-    for v in range.clone() {
-        let vv = view.view(v);
+    for v in part.range() {
+        let vv = part.view(v);
         let nv = vv.list();
-        for &u in nv {
-            let j = owner[u as usize];
+        for (j, run) in part.owners().runs(nv) {
             if j == me {
-                let vu = view.view(u);
-                adj::intersect_count(vv, vu, &mut st.t);
-                st.work += adj::intersect_cost(vv, vu);
+                for &u in &nv[run] {
+                    let vu = part.view(u);
+                    adj::intersect_count(vv, vu, &mut st.t);
+                    st.work += adj::intersect_cost(vv, vu);
+                }
             } else {
                 // One request per remote oriented edge — redundancy included.
-                c.send(j as usize, Msg::Request { u, v }).expect("send request");
-                st.pending += 1;
+                for &u in &nv[run] {
+                    c.send(j as usize, Msg::Request { u, v })?;
+                    st.pending += 1;
+                }
             }
         }
         while let Some((src, msg)) = c.try_recv() {
-            handle(c, &view, src, msg, &mut st);
+            handle(c, part, src, msg, &mut st)?;
         }
     }
 
     // Drain until all our responses arrived (serving peers' requests too,
     // otherwise two ranks could wait on each other forever).
     while st.pending > 0 {
-        let (src, msg) = c.recv().expect("recv");
-        handle(c, &view, src, msg, &mut st);
+        let (src, msg) = c.recv()?;
+        handle(c, part, src, msg, &mut st)?;
     }
 
-    c.bcast_control(|| Msg::Completion).expect("bcast");
+    c.bcast_control(|| Msg::Completion)?;
 
     while st.completions < c.size() - 1 {
-        let (src, msg) = c.recv().expect("recv");
-        handle(c, &view, src, msg, &mut st);
+        let (src, msg) = c.recv()?;
+        handle(c, part, src, msg, &mut st)?;
     }
 
     c.metrics.work_units = st.work;
     c.reduce_sum(st.t);
-    st.t
+    Ok(st.t)
 }
 
 #[cfg(test)]
@@ -139,15 +136,14 @@ mod tests {
     use super::*;
     use crate::config::CostFn;
     use crate::graph::classic;
-    use crate::partition::balance::{balanced_ranges, owner_table};
+    use crate::partition::balance::balanced_ranges;
     use crate::partition::cost::{cost_vector, prefix_sums};
 
     fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
-        let o = Arc::new(Oriented::from_graph(g));
+        let o = Oriented::from_graph(g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, p);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        run(&o, &ranges, &owner).unwrap()
+        run(&o, &ranges, HubThreshold::Auto).unwrap()
     }
 
     #[test]
@@ -175,12 +171,11 @@ mod tests {
             10,
             &mut crate::gen::rng::Rng::seeded(88),
         );
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, 6);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        let d = run(&o, &ranges, &owner).unwrap();
-        let s = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap();
+        let d = run(&o, &ranges, HubThreshold::Auto).unwrap();
+        let s = crate::algo::surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
         assert_eq!(d.triangles, s.triangles);
         let dm = d.metrics.totals();
         let sm = s.metrics.totals();
@@ -190,5 +185,8 @@ mod tests {
             dm.messages_sent,
             sm.messages_sent
         );
+        // Both schemes hold identical non-overlapping partitions.
+        assert_eq!(dm.partition_bytes, sm.partition_bytes);
+        assert_eq!(d.metrics.partition_accounting_divergence(), None);
     }
 }

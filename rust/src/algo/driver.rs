@@ -1,0 +1,67 @@
+//! Shared driver harness for the §IV partitioned algorithms.
+//!
+//! `surrogate::run`, `direct::run` and `patric::run` used to each repeat
+//! the same boilerplate: clone ranges into an `Arc`, launch the cluster,
+//! fold per-rank `(triangles, metrics)` into a [`RunResult`]. The harness
+//! owns that once — and, more importantly, it owns the *memory discipline*:
+//! every rank program receives `&OwnedPartition` (a fully materialized
+//! per-rank subgraph) and nothing else, so no §IV counting rank closure
+//! can capture the shared `Arc<Oriented>`. The harness records each rank's
+//! **measured** partition residency next to the scheme's arithmetic
+//! prediction; `tricount count` gates on their exact equality.
+
+use crate::comm::metrics::{ClusterMetrics, CommMetrics};
+use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::error::Result;
+use crate::partition::owned::OwnedPartition;
+use crate::TriangleCount;
+
+/// Result of a parallel run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub triangles: TriangleCount,
+    pub metrics: ClusterMetrics,
+}
+
+/// Fold per-rank results into a [`RunResult`] (shared by the owned-partition
+/// harness below and the §V dynamic-LB driver, which keeps the whole graph
+/// per machine and therefore has no partitions to account).
+pub(crate) fn fold(results: Vec<(TriangleCount, CommMetrics)>) -> RunResult {
+    let mut metrics = ClusterMetrics::default();
+    let mut triangles = 0;
+    for (t, m) in results {
+        triangles += t;
+        metrics.per_rank.push(m);
+    }
+    RunResult { triangles, metrics }
+}
+
+/// Run a fallible per-rank program over owned partitions, one rank per
+/// partition. `predicted[i]` is the scheme's byte prediction for partition
+/// `i` ([`crate::partition::nonoverlap::PartitionSize::bytes`] or
+/// [`crate::partition::overlap::OverlapSize::bytes`]); the measured
+/// residency is taken from the partition each rank actually held.
+pub(crate) fn run_owned<M, F>(
+    parts: Vec<OwnedPartition>,
+    predicted: Vec<u64>,
+    rank_main: F,
+) -> Result<RunResult>
+where
+    M: Payload,
+    F: Fn(&mut Comm<M>, &OwnedPartition) -> Result<TriangleCount> + Sync,
+{
+    let p = parts.len();
+    debug_assert_eq!(p, predicted.len());
+    let parts = &parts;
+    let results = Cluster::try_run::<M, TriangleCount, _>(p, |c| {
+        let part = &parts[c.rank()];
+        c.metrics.partition_bytes = part.resident_bytes();
+        c.metrics.accel_bytes = part.accel_bytes();
+        rank_main(c, part)
+    })?;
+    let mut run = fold(results);
+    for (m, pred) in run.metrics.per_rank.iter_mut().zip(predicted) {
+        m.partition_bytes_pred = pred;
+    }
+    Ok(run)
+}

@@ -2,8 +2,9 @@
 //! (paper Fig 11).
 //!
 //! Assumes every machine stores the whole network (shared read-only `Arc`
-//! here, faithful to that assumption). Rank 0 is the dedicated
-//! **coordinator**; ranks `1..P` are **workers**.
+//! here, faithful to that assumption — unlike the §IV drivers, whose ranks
+//! hold only their [`crate::partition::owned::OwnedPartition`]). Rank 0 is
+//! the dedicated **coordinator**; ranks `1..P` are **workers**.
 //!
 //! * Initial assignment (Eqn 1): half the total cost is split into `P−1`
 //!   equal tasks, picked up deterministically without coordinator traffic.
@@ -15,9 +16,8 @@
 
 use std::sync::Arc;
 
-use crate::algo::surrogate::RunResult;
+use crate::algo::driver::{self, RunResult};
 use crate::algo::tasks::{self, Task};
-use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::{Cluster, Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
@@ -90,7 +90,7 @@ pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> 
         Granularity::Fixed(k) => tasks::fixed_tasks(&prefix, tp, k),
     });
 
-    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
+    let results = Cluster::try_run::<Msg, TriangleCount, _>(p, |c| {
         if c.rank() == 0 {
             coordinator(c, &queue)
         } else {
@@ -98,30 +98,25 @@ pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> 
         }
     })?;
 
-    let mut metrics = ClusterMetrics::default();
-    let mut triangles = 0;
-    for (t, m) in results {
-        triangles += t;
-        metrics.per_rank.push(m);
-    }
-    Ok(RunResult { triangles, metrics })
+    Ok(driver::fold(results))
 }
 
-/// Coordinator (paper Fig 11 lines 4-12).
-fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> TriangleCount {
+/// Coordinator (paper Fig 11 lines 4-12). Comm failures propagate as
+/// `Err` through [`Cluster::try_run`] instead of poisoning the cluster.
+fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<TriangleCount> {
     let mut next = 0usize;
     let mut terminated = 0usize;
     let workers = c.size() - 1;
     while terminated < workers {
-        let (src, msg) = c.recv().expect("coordinator recv");
+        let (src, msg) = c.recv()?;
         match msg {
             Msg::Request => {
                 if next < queue.len() {
                     let t = queue[next];
                     next += 1;
-                    c.send_control(src, Msg::Assign(t)).expect("assign");
+                    c.send_control(src, Msg::Assign(t))?;
                 } else {
-                    c.send_control(src, Msg::Terminate).expect("terminate");
+                    c.send_control(src, Msg::Terminate)?;
                     terminated += 1;
                 }
             }
@@ -129,7 +124,7 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> TriangleCount {
         }
     }
     c.reduce_sum(0);
-    0
+    Ok(0)
 }
 
 /// Worker (paper Fig 11 lines 14-23).
@@ -138,7 +133,7 @@ fn worker(
     graph: Arc<Oriented>,
     initial: &Arc<Vec<Task>>,
     _prefix: &Arc<Vec<u64>>,
-) -> TriangleCount {
+) -> Result<TriangleCount> {
     let wid = c.rank() - 1; // worker index 0..P-1
     let mut t: TriangleCount = 0;
     let mut work = 0u64;
@@ -150,8 +145,8 @@ fn worker(
 
     // Dynamic phase: request → assign/terminate loop.
     loop {
-        c.send_control(0, Msg::Request).expect("request");
-        let (_src, msg) = c.recv().expect("worker recv");
+        c.send_control(0, Msg::Request)?;
+        let (_src, msg) = c.recv()?;
         match msg {
             Msg::Assign(task) => run_task(&graph, task, &mut t, &mut work),
             Msg::Terminate => break,
@@ -161,7 +156,7 @@ fn worker(
 
     c.metrics.work_units = work;
     c.reduce_sum(t);
-    t
+    Ok(t)
 }
 
 /// `COUNTTRIANGLES⟨v,t⟩` (paper Fig 10) + work accounting (the executed

@@ -43,10 +43,10 @@ pub fn per_node_counts(graph: &Arc<Oriented>, p: usize) -> Result<Vec<u64>> {
     let initial = Arc::new(tasks::equal_cost_tasks(&prefix, 0, tp, workers));
     let queue = Arc::new(tasks::shrinking_tasks(&prefix, tp, workers));
 
-    let results = Cluster::run::<Msg, Vec<u64>, _>(p, |c| {
+    let results = Cluster::try_run::<Msg, Vec<u64>, _>(p, |c| {
         if c.rank() == 0 {
-            coordinator(c, &queue);
-            Vec::new()
+            coordinator(c, &queue)?;
+            Ok(Vec::new())
         } else {
             worker(c, graph.clone(), &initial, n)
         }
@@ -61,19 +61,19 @@ pub fn per_node_counts(graph: &Arc<Oriented>, p: usize) -> Result<Vec<u64>> {
     Ok(out)
 }
 
-fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) {
+fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
     let mut next = 0usize;
     let mut terminated = 0usize;
     while terminated < c.size() - 1 {
-        let (src, msg) = c.recv().expect("coordinator recv");
+        let (src, msg) = c.recv()?;
         match msg {
             Msg::Request => {
                 if next < queue.len() {
                     let t = queue[next];
                     next += 1;
-                    c.send_control(src, Msg::Assign(t)).expect("assign");
+                    c.send_control(src, Msg::Assign(t))?;
                 } else {
-                    c.send_control(src, Msg::Terminate).expect("terminate");
+                    c.send_control(src, Msg::Terminate)?;
                     terminated += 1;
                 }
             }
@@ -81,24 +81,25 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) {
         }
     }
     c.barrier();
+    Ok(())
 }
 
-fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usize) -> Vec<u64> {
+fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usize) -> Result<Vec<u64>> {
     let wid = c.rank() - 1;
     let mut tv = vec![0u64; n];
     if let Some(task) = initial.get(wid) {
         run_task(&o, *task, &mut tv);
     }
     loop {
-        c.send_control(0, Msg::Request).expect("request");
-        match c.recv().expect("worker recv").1 {
+        c.send_control(0, Msg::Request)?;
+        match c.recv()?.1 {
             Msg::Assign(task) => run_task(&o, task, &mut tv),
             Msg::Terminate => break,
             Msg::Request => unreachable!(),
         }
     }
     c.barrier();
-    tv
+    Ok(tv)
 }
 
 fn run_task(o: &Oriented, task: Task, tv: &mut [u64]) {

@@ -1,57 +1,61 @@
 //! PATRIC [21] — the overlapping-partition baseline.
 //!
 //! Each rank's partition contains `N_u` for its core nodes **and** for
-//! every node referenced by a core list, so counting needs no communication
-//! at all: rank `i` runs the Fig-1 loop over its core range and the only
-//! messages are the final reduction. Its cost is paid in *memory*
-//! (overlap blow-up, Table II / Fig 7) and in *static* load balance.
+//! every node referenced by a core neighborhood, so counting needs no
+//! communication at all: rank `i` runs the Fig-1 loop over its core range
+//! and the only messages are the final reduction. Its cost is paid in
+//! *memory* (overlap blow-up, Table II / Fig 7) and in *static* load
+//! balance.
 //!
-//! In-process, the overlap partition's content is a subset of the shared
-//! `Oriented`, so ranks read it directly; the memory a real PATRIC rank
-//! would allocate is accounted by [`crate::partition::overlap`].
-
-use std::sync::Arc;
+//! The rank now physically holds that blow-up: its
+//! [`crate::partition::owned::OwnedPartition`] materializes core *and*
+//! ghost rows behind a sorted member table, so the bytes
+//! [`crate::partition::overlap::overlap_sizes`] predicts are bytes the
+//! rank actually allocated — measured and gated, like the non-overlapping
+//! scheme's.
 
 use crate::adj;
-use crate::algo::surrogate::RunResult;
-use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::Cluster;
+use crate::adj::hub::HubThreshold;
+use crate::algo::driver::{self, RunResult};
+use crate::comm::threads::Comm;
 use crate::error::Result;
+use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
+use crate::partition::overlap::overlap_sizes;
+use crate::partition::owned::{self, OwnedPartition};
 use crate::TriangleCount;
 
 /// Run PATRIC over consecutive core ranges (balanced with its own best
 /// estimator `f(v) = Σ_{u∈N_v}(d̂_v + d̂_u)` by the callers that reproduce
-/// the paper's comparisons).
-pub fn run(graph: &Arc<Oriented>, ranges: &[std::ops::Range<u32>]) -> Result<RunResult> {
-    let p = ranges.len();
-    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
-    let results = Cluster::run::<u64, TriangleCount, _>(p, |c| {
-        let range = ranges[c.rank()].clone();
-        let o = graph.clone();
-        let mut t: TriangleCount = 0;
-        let mut work = 0u64;
-        for v in range {
-            let vv = o.view(v);
-            for &u in vv.list() {
-                // u's list is in the overlap portion — local on a real
-                // PATRIC rank, shared read-only here.
-                let vu = o.view(u);
-                adj::intersect_count(vv, vu, &mut t);
-                work += adj::intersect_cost(vv, vu);
-            }
+/// the paper's comparisons). Takes the unoriented graph too: overlap
+/// membership is defined by *full* neighborhoods (PATRIC loads complete
+/// neighborhoods and orients inside the partition).
+pub fn run(
+    g: &Csr,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+) -> Result<RunResult> {
+    let parts = owned::extract_overlapping(g, graph, ranges, hub);
+    let predicted = overlap_sizes(g, graph, ranges).iter().map(|s| s.bytes()).collect();
+    driver::run_owned::<u64, _>(parts, predicted, rank_main)
+}
+
+fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> {
+    let mut t: TriangleCount = 0;
+    let mut work = 0u64;
+    for v in part.range() {
+        let vv = part.view(v);
+        for &u in vv.list() {
+            // u's list is in the overlap portion — local, by construction.
+            let vu = part.view(u);
+            adj::intersect_count(vv, vu, &mut t);
+            work += adj::intersect_cost(vv, vu);
         }
-        c.metrics.work_units = work;
-        c.reduce_sum(t);
-        t
-    })?;
-    let mut metrics = ClusterMetrics::default();
-    let mut triangles = 0;
-    for (t, m) in results {
-        triangles += t;
-        metrics.per_rank.push(m);
     }
-    Ok(RunResult { triangles, metrics })
+    c.metrics.work_units = work;
+    c.reduce_sum(t);
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -63,10 +67,10 @@ mod tests {
     use crate::partition::cost::{cost_vector, prefix_sums};
 
     fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
-        let o = Arc::new(Oriented::from_graph(g));
+        let o = Oriented::from_graph(g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
         let ranges = balanced_ranges(&prefix, p);
-        run(&o, &ranges).unwrap()
+        run(g, &o, &ranges, HubThreshold::Auto).unwrap()
     }
 
     #[test]
@@ -85,15 +89,33 @@ mod tests {
     }
 
     #[test]
+    fn overlap_residency_measured_and_exact() {
+        // A clique makes every partition hold (nearly) the whole graph —
+        // the §III blow-up, now visible as measured resident bytes that
+        // dwarf the non-overlapping scheme's.
+        let g = classic::complete(60);
+        let o = Oriented::from_graph(&g);
+        let ranges = vec![0..20u32, 20..40u32, 40..60u32];
+        let r = run(&g, &o, &ranges, HubThreshold::Off).unwrap();
+        assert_eq!(r.triangles, 34_220);
+        assert_eq!(r.metrics.partition_accounting_divergence(), None);
+        let s = crate::algo::surrogate::run(&o, &ranges, HubThreshold::Off).unwrap();
+        assert!(
+            r.metrics.max_partition_bytes() > 2 * s.metrics.max_partition_bytes(),
+            "overlap {} must dwarf non-overlap {}",
+            r.metrics.max_partition_bytes(),
+            s.metrics.max_partition_bytes()
+        );
+    }
+
+    #[test]
     fn agrees_with_surrogate() {
-        use crate::partition::balance::owner_table;
         let g = crate::gen::rmat::rmat(9, 6, Default::default(), &mut crate::gen::rng::Rng::seeded(5));
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
         let ranges = balanced_ranges(&prefix, 5);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        let a = run(&o, &ranges).unwrap().triangles;
-        let b = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap().triangles;
+        let a = run(&g, &o, &ranges, HubThreshold::Auto).unwrap().triangles;
+        let b = crate::algo::surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap().triangles;
         assert_eq!(a, b);
     }
 }

@@ -1,23 +1,29 @@
 //! §IV — the space-efficient parallel algorithm with the **surrogate**
 //! communication scheme (paper Fig 3).
 //!
-//! Each rank owns a non-overlapping partition (consecutive node range
-//! `V_i`, oriented lists `N_v` for `v ∈ V_i`). For an oriented edge
+//! Each rank owns a non-overlapping partition — a physically materialized
+//! [`OwnedPartition`] holding the oriented lists `N_v` for `v ∈ V_i` and
+//! nothing else (the rank closure does not capture the shared graph, so
+//! remote data is unreachable except by message). For an oriented edge
 //! `(v, u)` with `u ∈ V_j, j ≠ i`, rank `i` sends `N_v` to `j` **once per
-//! destination partition** (the `LastProc` trick, sound because `N_v` is
-//! id-sorted and partitions are id-intervals), and `j` — the *surrogate* —
-//! counts `|N_u ∩ N_v|` for every `u ∈ N_v ∩ V_j` on `i`'s behalf
-//! (`SURROGATECOUNT`, paper Fig 2). Completion notifiers implement the
-//! §IV-D termination protocol; `MPI_Reduce` aggregates the counts.
+//! destination partition** (the `LastProc` trick, realized here by walking
+//! the id-sorted `N_v` as per-owner runs — sound because partitions are
+//! id-intervals), and `j` — the *surrogate* — counts `|N_u ∩ N_v|` for
+//! every `u ∈ N_v ∩ V_j` on `i`'s behalf (`SURROGATECOUNT`, paper Fig 2).
+//! Completion notifiers implement the §IV-D termination protocol;
+//! `MPI_Reduce` aggregates the counts. Comm failures propagate as
+//! [`crate::error::Error`] through [`crate::comm::threads::Cluster::try_run`].
 
 use std::sync::Arc;
 
+use crate::adj::hub::HubThreshold;
 use crate::adj::{self, NeighborView};
-use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::algo::driver::{self, RunResult};
+use crate::comm::threads::{Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
-use crate::partition::nonoverlap::PartitionView;
+use crate::partition::nonoverlap::partition_sizes;
+use crate::partition::owned::{self, OwnedPartition};
 use crate::{TriangleCount, VertexId};
 
 /// Wire messages of the space-efficient algorithm (§IV-A: `⟨t, X⟩`).
@@ -45,110 +51,90 @@ impl Payload for Msg {
     }
 }
 
-/// Result of a parallel run.
-#[derive(Debug)]
-pub struct RunResult {
-    pub triangles: TriangleCount,
-    pub metrics: ClusterMetrics,
-}
-
 /// `SURROGATECOUNT(X, i)` (paper Fig 2): count `|N_u ∩ X|` for every
 /// `u ∈ X` owned by this rank. `X` is id-sorted, the owned range is an
 /// id-interval, so the owned members form one contiguous slice of `X`.
 /// `X` arrived over the wire, so it is a plain sorted view; the local
 /// `N_u` goes through the hybrid dispatch, upgrading hub rows to probes.
 #[inline]
-fn surrogate_count(view: &PartitionView, x: &[VertexId], t: &mut TriangleCount, work: &mut u64) {
-    let r = view.range();
+fn surrogate_count(part: &OwnedPartition, x: &[VertexId], t: &mut TriangleCount, work: &mut u64) {
+    let r = part.range();
     let lo = x.partition_point(|&u| u < r.start);
     let hi = x.partition_point(|&u| u < r.end);
     let xv = NeighborView::sorted(x);
     for &u in &x[lo..hi] {
-        let vu = view.view(u);
+        let vu = part.view(u);
         adj::intersect_count(vu, xv, t);
         *work += adj::intersect_cost(vu, xv);
     }
 }
 
-fn handle(view: &PartitionView, msg: Msg, t: &mut TriangleCount, work: &mut u64, completions: &mut usize) {
+fn handle(part: &OwnedPartition, msg: Msg, t: &mut TriangleCount, work: &mut u64, completions: &mut usize) {
     match msg {
-        Msg::Data(x) => surrogate_count(view, &x, t, work),
+        Msg::Data(x) => surrogate_count(part, &x, t, work),
         Msg::Completion => *completions += 1,
     }
 }
 
-/// Run the surrogate algorithm on `p` ranks over pre-computed consecutive
-/// ranges (from [`crate::partition::balance::balanced_ranges`]).
+/// Run the surrogate algorithm over pre-computed consecutive ranges (from
+/// [`crate::partition::balance::balanced_ranges`]), one rank per range.
+/// Each rank's partition is materialized up front ([`owned`]); `hub` sets
+/// the per-partition hub-bitmap policy.
 pub fn run(
-    graph: &Arc<Oriented>,
+    graph: &Oriented,
     ranges: &[std::ops::Range<u32>],
-    owner: &Arc<Vec<u32>>,
+    hub: HubThreshold,
 ) -> Result<RunResult> {
-    let p = ranges.len();
-    let ranges: Arc<Vec<std::ops::Range<u32>>> = Arc::new(ranges.to_vec());
-    let results = Cluster::run::<Msg, TriangleCount, _>(p, |c| {
-        rank_main(c, graph.clone(), ranges[c.rank()].clone(), owner.clone())
-    })?;
-    let mut metrics = ClusterMetrics::default();
-    let mut triangles = 0;
-    for (t, m) in results {
-        triangles += t;
-        metrics.per_rank.push(m);
-    }
-    Ok(RunResult { triangles, metrics })
+    let parts = owned::extract_nonoverlapping(graph, ranges, hub);
+    let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
+    driver::run_owned::<Msg, _>(parts, predicted, rank_main)
 }
 
 /// The per-rank program (paper Fig 3 lines 1-22 + reduce).
-fn rank_main(
-    c: &mut Comm<Msg>,
-    graph: Arc<Oriented>,
-    range: std::ops::Range<u32>,
-    owner: Arc<Vec<u32>>,
-) -> TriangleCount {
+fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> {
     let me = c.rank() as u32;
-    let view = PartitionView::new(graph, range.clone());
     let mut t: TriangleCount = 0;
     let mut work = 0u64;
     let mut completions = 0usize;
 
-    // Lines 2-12: local counting + sends + opportunistic receive.
-    for v in range.clone() {
-        let vv = view.view(v);
+    // Lines 2-12: local counting + sends + opportunistic receive. N_v is
+    // walked as per-owner runs (§IV-C `LastProc`): one contiguous run per
+    // destination partition ⇒ exactly one send per (v, remote partition).
+    for v in part.range() {
+        let vv = part.view(v);
         let nv = vv.list();
-        let mut last_proc: i64 = -1; // paper §IV-C: reset per node v
         let mut payload: Option<Arc<[VertexId]>> = None; // materialized lazily, shared across sends
-        for &u in nv {
-            let j = owner[u as usize];
+        for (j, run) in part.owners().runs(nv) {
             if j == me {
-                let vu = view.view(u);
-                adj::intersect_count(vv, vu, &mut t);
-                work += adj::intersect_cost(vv, vu);
-            } else if last_proc != j as i64 {
-                // First u of this destination partition: push N_v once.
+                for &u in &nv[run] {
+                    let vu = part.view(u);
+                    adj::intersect_count(vv, vu, &mut t);
+                    work += adj::intersect_cost(vv, vu);
+                }
+            } else {
                 let data = payload.get_or_insert_with(|| Arc::from(nv)).clone();
-                c.send(j as usize, Msg::Data(data)).expect("send");
-                last_proc = j as i64;
+                c.send(j as usize, Msg::Data(data))?;
             }
         }
         // Line 10-14: check for incoming messages.
         while let Some((_src, msg)) = c.try_recv() {
-            handle(&view, msg, &mut t, &mut work, &mut completions);
+            handle(part, msg, &mut t, &mut work, &mut completions);
         }
     }
 
     // Line 16: broadcast completion notifier.
-    c.bcast_control(|| Msg::Completion).expect("bcast");
+    c.bcast_control(|| Msg::Completion)?;
 
     // Lines 17-22: serve data until all peers completed.
     while completions < c.size() - 1 {
-        let (_src, msg) = c.recv().expect("recv");
-        handle(&view, msg, &mut t, &mut work, &mut completions);
+        let (_src, msg) = c.recv()?;
+        handle(part, msg, &mut t, &mut work, &mut completions);
     }
 
     c.metrics.work_units = work;
     // Lines 24-25: barrier + reduce.
     c.reduce_sum(t);
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -156,15 +142,14 @@ mod tests {
     use super::*;
     use crate::config::CostFn;
     use crate::graph::classic;
-    use crate::partition::balance::{balanced_ranges, owner_table};
+    use crate::partition::balance::balanced_ranges;
     use crate::partition::cost::{cost_vector, prefix_sums};
 
     fn run_on(g: &crate::graph::csr::Csr, p: usize) -> RunResult {
-        let o = Arc::new(Oriented::from_graph(g));
+        let o = Oriented::from_graph(g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, p);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        run(&o, &ranges, &owner).unwrap()
+        run(&o, &ranges, HubThreshold::Auto).unwrap()
     }
 
     #[test]
@@ -206,16 +191,17 @@ mod tests {
     fn no_redundant_messages_vs_direct_bound() {
         // Surrogate sends at most one data message per (node, partition)
         // pair — far fewer than one per remote oriented edge.
+        use crate::partition::balance::owner_table;
         let g = crate::gen::pa::preferential_attachment(
             500,
             8,
             &mut crate::gen::rng::Rng::seeded(66),
         );
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, 4);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        let r = run(&o, &ranges, &owner).unwrap();
+        let owner = owner_table(&ranges, o.num_nodes());
+        let r = run(&o, &ranges, HubThreshold::Auto).unwrap();
         let msgs: u64 = r.metrics.per_rank.iter().map(|m| m.messages_sent).sum();
         // Upper bound: Σ_v (#partitions ≤ P−1) but also ≤ remote oriented edges.
         let remote_edges: u64 = (0..o.num_nodes() as u32)
@@ -231,6 +217,22 @@ mod tests {
         assert_eq!(
             r.triangles,
             crate::seq::node_iterator::count(&o)
+        );
+    }
+
+    #[test]
+    fn measured_partition_bytes_equal_prediction() {
+        let g = crate::gen::pa::preferential_attachment(
+            800,
+            10,
+            &mut crate::gen::rng::Rng::seeded(7),
+        );
+        let r = run_on(&g, 6);
+        assert_eq!(r.metrics.partition_accounting_divergence(), None);
+        assert!(r.metrics.max_partition_bytes() > 0);
+        assert_eq!(
+            r.metrics.max_partition_bytes(),
+            r.metrics.max_partition_bytes_pred()
         );
     }
 

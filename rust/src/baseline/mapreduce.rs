@@ -125,15 +125,13 @@ mod tests {
     #[test]
     fn mr_shuffle_exceeds_mpi_messages() {
         // The motivating comparison: MR shuffle bytes ≫ surrogate bytes.
-        use crate::partition::balance::{balanced_ranges, owner_table};
+        use crate::partition::balance::balanced_ranges;
         use crate::partition::cost::{cost_vector, prefix_sums};
-        use std::sync::Arc;
         let g = crate::gen::pa::preferential_attachment(2000, 30, &mut Rng::seeded(12));
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let prefix = prefix_sums(&cost_vector(&o, crate::config::CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, 8);
-        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
-        let r = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap();
+        let r = crate::algo::surrogate::run(&o, &ranges, crate::adj::HubThreshold::Auto).unwrap();
         let mpi_bytes = r.metrics.totals().bytes_sent;
         let mr_bytes = shuffle_stats(&g).shuffle_bytes();
         assert!(

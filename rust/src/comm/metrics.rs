@@ -35,6 +35,21 @@ pub struct CommMetrics {
     /// merge-model measure Σ(d̂_v + d̂_u) lives on as the estimators in
     /// [`crate::partition::cost`].
     pub work_units: u64,
+    /// **Measured** resident bytes of this rank's owned partition
+    /// ([`crate::partition::owned::OwnedPartition::resident_bytes`]:
+    /// offsets + targets + overlap row table). 0 for drivers that hold the
+    /// whole graph instead of a partition (dynamic-LB, streaming).
+    pub partition_bytes: u64,
+    /// The scheme's arithmetic *prediction* for the same quantity
+    /// ([`crate::partition::nonoverlap::PartitionSize::bytes`] /
+    /// [`crate::partition::overlap::OverlapSize::bytes`]). `tricount
+    /// count` and the CI smoke step gate on exact per-rank equality with
+    /// [`CommMetrics::partition_bytes`].
+    pub partition_bytes_pred: u64,
+    /// Hub-bitmap accelerator bytes riding on the partition — budgeted
+    /// opt-in state, reported apart from the CSR bytes the §IV
+    /// space-efficiency claim is about.
+    pub accel_bytes: u64,
 }
 
 impl CommMetrics {
@@ -48,6 +63,9 @@ impl CommMetrics {
         self.recv_wait += other.recv_wait;
         self.total = self.total.max(other.total);
         self.work_units += other.work_units;
+        self.partition_bytes += other.partition_bytes;
+        self.partition_bytes_pred += other.partition_bytes_pred;
+        self.accel_bytes += other.accel_bytes;
     }
 }
 
@@ -64,6 +82,32 @@ impl ClusterMetrics {
             t.merge(m);
         }
         t
+    }
+
+    /// Largest measured per-rank partition residency — the quantity the
+    /// paper's Table II / Fig 7 bound (a cluster is sized by its most
+    /// loaded rank).
+    pub fn max_partition_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.partition_bytes).max().unwrap_or(0)
+    }
+
+    /// Largest predicted per-rank partition size.
+    pub fn max_partition_bytes_pred(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.partition_bytes_pred).max().unwrap_or(0)
+    }
+
+    /// Largest per-rank hub-accelerator residency.
+    pub fn max_accel_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|m| m.accel_bytes).max().unwrap_or(0)
+    }
+
+    /// `Some(rank)` of the first rank whose measured partition bytes
+    /// diverge from the prediction; `None` when the accounting is exact
+    /// everywhere (the invariant `tricount count` gates on).
+    pub fn partition_accounting_divergence(&self) -> Option<usize> {
+        self.per_rank
+            .iter()
+            .position(|m| m.partition_bytes != m.partition_bytes_pred)
     }
 
     /// Load imbalance: max work / mean work (1.0 = perfectly balanced).
@@ -94,6 +138,9 @@ mod tests {
             bytes_sent: 5,
             work_units: 7,
             control_received: 4,
+            partition_bytes: 100,
+            partition_bytes_pred: 100,
+            accel_bytes: 16,
             ..Default::default()
         };
         a.merge(&b);
@@ -101,6 +148,26 @@ mod tests {
         assert_eq!(a.bytes_sent, 15);
         assert_eq!(a.work_units, 7);
         assert_eq!(a.control_received, 4);
+        assert_eq!(a.partition_bytes, 100);
+        assert_eq!(a.partition_bytes_pred, 100);
+        assert_eq!(a.accel_bytes, 16);
+    }
+
+    #[test]
+    fn partition_accounting_helpers() {
+        let mut cm = ClusterMetrics {
+            per_rank: vec![
+                CommMetrics { partition_bytes: 40, partition_bytes_pred: 40, accel_bytes: 8, ..Default::default() },
+                CommMetrics { partition_bytes: 72, partition_bytes_pred: 72, ..Default::default() },
+            ],
+        };
+        assert_eq!(cm.max_partition_bytes(), 72);
+        assert_eq!(cm.max_partition_bytes_pred(), 72);
+        assert_eq!(cm.max_accel_bytes(), 8);
+        assert_eq!(cm.partition_accounting_divergence(), None);
+        cm.per_rank[1].partition_bytes = 68;
+        assert_eq!(cm.partition_accounting_divergence(), Some(1));
+        assert_eq!(ClusterMetrics::default().max_partition_bytes(), 0);
     }
 
     #[test]

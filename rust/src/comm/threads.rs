@@ -190,6 +190,21 @@ impl Cluster {
         R: Send,
         F: Fn(&mut Comm<M>) -> R + Sync,
     {
+        Self::try_run(p, |c| Ok(f(c)))
+    }
+
+    /// [`Cluster::run`] for fallible rank programs: a rank returning `Err`
+    /// surfaces as that [`Error`] from the whole run (lowest rank wins when
+    /// several fail) instead of poisoning the cluster with a panic. All
+    /// ranks are still joined before returning; a peer blocked on a rank
+    /// that bailed out is bounded by the [`recv_guard`] timeout and then
+    /// fails with its own `Err`.
+    pub fn try_run<M, R, F>(p: usize, f: F) -> Result<Vec<(R, CommMetrics)>>
+    where
+        M: Payload,
+        R: Send,
+        F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+    {
         assert!(p >= 1, "cluster needs at least one rank");
         let mut senders = Vec::with_capacity(p);
         let mut receivers = Vec::with_capacity(p);
@@ -219,25 +234,27 @@ impl Cluster {
         drop(senders);
 
         let f = &f;
-        let results: Vec<std::thread::Result<(R, CommMetrics)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = comms
-                .drain(..)
-                .map(|mut comm| {
-                    s.spawn(move || {
-                        let start = Instant::now();
-                        let r = f(&mut comm);
-                        comm.metrics.total = start.elapsed();
-                        (r, comm.metrics)
+        let results: Vec<std::thread::Result<(Result<R>, CommMetrics)>> =
+            std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .drain(..)
+                    .map(|mut comm| {
+                        s.spawn(move || {
+                            let start = Instant::now();
+                            let r = f(&mut comm);
+                            comm.metrics.total = start.elapsed();
+                            (r, comm.metrics)
+                        })
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join()).collect()
-        });
+                    .collect();
+                handles.into_iter().map(|h| h.join()).collect()
+            });
 
         let mut out = Vec::with_capacity(p);
         for (rank, r) in results.into_iter().enumerate() {
             match r {
-                Ok(x) => out.push(x),
+                Ok((Ok(x), m)) => out.push((x, m)),
+                Ok((Err(e), _)) => return Err(e),
                 Err(e) => {
                     let msg = e
                         .downcast_ref::<String>()
@@ -390,6 +407,38 @@ mod tests {
         match r {
             Err(Error::Cluster(msg)) => assert!(msg.contains("injected fault"), "{msg}"),
             other => panic!("expected cluster error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rank_error_propagates_without_poisoning() {
+        // A rank returning Err must surface as that error — not a panic,
+        // not a poisoned cluster. Rank 0 exits cleanly on its own.
+        let r = Cluster::try_run::<u64, u64, _>(2, |c| {
+            if c.rank() == 1 {
+                Err(Error::Cluster("injected comm failure".into()))
+            } else {
+                Ok(7)
+            }
+        });
+        match r {
+            Err(Error::Cluster(msg)) => assert!(msg.contains("injected comm failure"), "{msg}"),
+            other => panic!("expected the rank's error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lowest_failing_rank_wins() {
+        let r = Cluster::try_run::<u64, (), _>(3, |c| {
+            if c.rank() > 0 {
+                Err(Error::Cluster(format!("rank {} failed", c.rank())))
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            Err(Error::Cluster(msg)) => assert!(msg.contains("rank 1"), "{msg}"),
+            other => panic!("expected rank 1's error, got {other:?}"),
         }
     }
 

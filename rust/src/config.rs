@@ -105,6 +105,12 @@ pub struct RunConfig {
     /// [`crate::par::set_default_threads`], so per-batch stream
     /// compaction inherits it too.
     pub build_threads: crate::par::BuildThreads,
+    /// `--mem-budget <bytes>` (suffixes `kb`/`mb`/`gb` accepted, binary
+    /// units): when set on a partitioned §IV run, `procs` is overridden by
+    /// the smallest `P` whose largest predicted partition fits the budget
+    /// ([`crate::partition::nonoverlap::min_procs_for_budget`]) — the
+    /// paper's Table II sizing question, answered by the tool.
+    pub mem_budget: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -120,8 +126,30 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             hub_threshold: crate::adj::HubThreshold::Auto,
             build_threads: crate::par::BuildThreads::Auto,
+            mem_budget: None,
         }
     }
+}
+
+/// Parse a byte size: a plain integer, optionally suffixed `k`/`kb`,
+/// `m`/`mb` or `g`/`gb` (case-insensitive, binary units).
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = if let Some(d) = t.strip_suffix("kb").or_else(|| t.strip_suffix('k')) {
+        (d, 1u64 << 10)
+    } else if let Some(d) = t.strip_suffix("mb").or_else(|| t.strip_suffix('m')) {
+        (d, 1u64 << 20)
+    } else if let Some(d) = t.strip_suffix("gb").or_else(|| t.strip_suffix('g')) {
+        (d, 1u64 << 30)
+    } else {
+        (t.as_str(), 1u64)
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("`{s}` is not a byte size (N, Nkb, Nmb, Ngb)")))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| Error::Config(format!("byte size `{s}` overflows u64")))
 }
 
 impl RunConfig {
@@ -154,6 +182,13 @@ impl RunConfig {
             "artifacts_dir" | "artifacts-dir" => self.artifacts_dir = value.to_string(),
             "hub_threshold" | "hub-threshold" => self.hub_threshold = value.parse()?,
             "build_threads" | "build-threads" => self.build_threads = value.parse()?,
+            "mem_budget" | "mem-budget" => {
+                let b = parse_bytes(value)?;
+                if b == 0 {
+                    return Err(Error::Config("mem-budget must be > 0 bytes".into()));
+                }
+                self.mem_budget = Some(b);
+            }
             other => return Err(Error::Config(format!("unknown key `{other}`"))),
         }
         if key == "procs" && self.procs == 0 {
@@ -268,6 +303,32 @@ mod tests {
         assert_eq!(c.build_threads, crate::par::BuildThreads::Auto);
         assert!(c.set("build_threads", "0").is_err());
         assert!(c.set("build_threads", "some").is_err());
+    }
+
+    #[test]
+    fn parse_bytes_suffixes() {
+        assert_eq!(parse_bytes("1024").unwrap(), 1024);
+        assert_eq!(parse_bytes("64kb").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("3MB").unwrap(), 3 << 20);
+        assert_eq!(parse_bytes("2g").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes(" 8 mb ").unwrap(), 8 << 20);
+        assert!(parse_bytes("fast").is_err());
+        assert!(parse_bytes("12tb").is_err());
+        assert!(parse_bytes("-1").is_err());
+        assert!(parse_bytes("99999999999999999999g").is_err());
+    }
+
+    #[test]
+    fn mem_budget_key() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.mem_budget, None);
+        c.set("mem-budget", "256kb").unwrap();
+        assert_eq!(c.mem_budget, Some(256 << 10));
+        c.set("mem_budget", "1000").unwrap();
+        assert_eq!(c.mem_budget, Some(1000));
+        assert!(c.set("mem-budget", "0").is_err());
+        assert!(c.set("mem-budget", "lots").is_err());
     }
 
     #[test]

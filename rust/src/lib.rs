@@ -12,6 +12,15 @@
 //!   PATRIC baseline, the §V dynamic load balancer, and a calibrated
 //!   cluster cost-model simulator that regenerates the paper's scaling
 //!   figures on a single machine.
+//! * **`partition/owned`** — every §IV counting rank holds a fully
+//!   materialized [`partition::owned::OwnedPartition`] (its own
+//!   offsets/targets slice, per-partition hub index, O(P)
+//!   [`partition::balance::OwnerTable`]) instead of a view into the shared
+//!   graph — the rank closures cannot capture `Arc<Oriented>`, so the
+//!   space-efficiency claim is a type-level invariant. Measured per-rank
+//!   resident bytes are gated equal to the `PartitionSize`/`OverlapSize`
+//!   predictions, and `tricount count --mem-budget` sizes the smallest P
+//!   that fits a byte budget (DESIGN.md §9).
 //! * **`adj/`** — the hybrid hub-bitmap adjacency layer: hub rows (oriented
 //!   out-degree ≥ an auto-tuned threshold) carry a packed bitmap
 //!   ([`adj::bitmap::BitmapRow`]) beside their sorted slice, and every
@@ -117,15 +126,18 @@ pub mod partition {
     pub mod cost;
     pub mod nonoverlap;
     pub mod overlap;
+    pub mod owned;
 }
 
 pub mod algo {
     pub mod direct;
+    pub mod driver;
     pub mod dynamic_lb;
     pub mod local_counts;
     pub mod patric;
     pub mod surrogate;
     pub mod tasks;
+    pub use driver::RunResult;
 }
 
 pub mod sim {

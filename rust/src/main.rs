@@ -18,7 +18,7 @@ use tricount::config::{Algorithm, CostFn, RunConfig};
 use tricount::error::{Error, Result};
 use tricount::exp;
 use tricount::graph::ordering::Oriented;
-use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::balance::balanced_ranges;
 use tricount::partition::cost::{cost_vector, prefix_sums};
 use tricount::seq::node_iterator;
 
@@ -64,6 +64,11 @@ COMMANDS:
                                       er:N:D | contact:N:D | file:PATH | bin:PATH)
                     --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
                     --procs P --cost-fn F (unit|dv|patric|new|hybrid) --scale X
+                    --mem-budget B   (bytes, kb/mb/gb suffixes; surrogate|direct:
+                    overrides --procs with the smallest P whose largest
+                    partition fits B — partitioned runs report measured
+                    per-rank partition bytes and fail on any divergence
+                    from the PartitionSize prediction)
                     --hub-threshold T (n|auto|off: bitmap rows for d̂ ≥ T)
                     --build-threads T (n|auto: preprocessing threads — CSR
                     build, relabel, orientation, hub packing; output is
@@ -132,7 +137,7 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
 }
 
 fn cmd_count(args: &[String]) -> Result<()> {
-    let (cfg, extra) = parse_config(args)?;
+    let (mut cfg, extra) = parse_config(args)?;
     reject_unknown(&extra, &["out"])?;
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
@@ -141,6 +146,30 @@ fn cmd_count(args: &[String]) -> Result<()> {
     let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
     let orient_time = t0.elapsed();
     let hubs = o.hub_stats();
+
+    // `--mem-budget`: the Table II sizing question — pick the smallest P
+    // whose largest (predicted == enforced) partition fits the budget.
+    // The prefix sums are reused by the counting arm below.
+    let mut balance_prefix: Option<Vec<u64>> = None;
+    if let Some(budget) = cfg.mem_budget {
+        if !matches!(cfg.algorithm, Algorithm::Surrogate | Algorithm::Direct) {
+            return Err(Error::Config(
+                "--mem-budget needs a non-overlapping partitioned algorithm (surrogate|direct)"
+                    .into(),
+            ));
+        }
+        let prefix = prefix_sums(&cost_vector(&o, cfg.cost_fn));
+        let max_p = o.num_nodes().max(1);
+        let p = tricount::partition::nonoverlap::min_procs_for_budget(&o, &prefix, budget, max_p)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "mem-budget {budget} B unsatisfiable: a single node's partition exceeds it even at P={max_p}"
+                ))
+            })?;
+        println!("mem-budget: {budget} B → P={p} (smallest P whose largest partition fits)");
+        cfg.procs = p;
+        balance_prefix = Some(prefix);
+    }
     println!(
         "workload={} n={} m={} d̄={:.1} (gen {:.2?}, orient {:.2?})",
         cfg.workload,
@@ -160,33 +189,37 @@ fn cmd_count(args: &[String]) -> Result<()> {
 
     tricount::adj::stats::reset();
     let t0 = std::time::Instant::now();
+    // Partitioned (§IV) runs leave their metrics here so the partition-
+    // memory report and the measured==predicted gate below apply uniformly.
+    let mut partitioned: Option<tricount::comm::metrics::ClusterMetrics> = None;
     let (triangles, detail) = match cfg.algorithm {
         Algorithm::Sequential => (node_iterator::count(&o), String::new()),
         Algorithm::Surrogate | Algorithm::Direct => {
-            let prefix = prefix_sums(&cost_vector(&o, cfg.cost_fn));
+            let prefix = balance_prefix
+                .unwrap_or_else(|| prefix_sums(&cost_vector(&o, cfg.cost_fn)));
             let ranges = balanced_ranges(&prefix, cfg.procs);
-            let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
             let r = if cfg.algorithm == Algorithm::Surrogate {
-                surrogate::run(&o, &ranges, &owner)?
+                surrogate::run(&o, &ranges, cfg.hub_threshold)?
             } else {
-                direct::run(&o, &ranges, &owner)?
+                direct::run(&o, &ranges, cfg.hub_threshold)?
             };
             let t = r.metrics.totals();
-            (
-                r.triangles,
-                format!(
-                    "msgs={} bytes={} imbalance={:.3}",
-                    t.messages_sent,
-                    t.bytes_sent,
-                    r.metrics.imbalance()
-                ),
-            )
+            let detail = format!(
+                "msgs={} bytes={} imbalance={:.3}",
+                t.messages_sent,
+                t.bytes_sent,
+                r.metrics.imbalance()
+            );
+            partitioned = Some(r.metrics);
+            (r.triangles, detail)
         }
         Algorithm::Patric => {
             let prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
             let ranges = balanced_ranges(&prefix, cfg.procs);
-            let r = patric::run(&o, &ranges)?;
-            (r.triangles, format!("imbalance={:.3}", r.metrics.imbalance()))
+            let r = patric::run(&g, &o, &ranges, cfg.hub_threshold)?;
+            let detail = format!("imbalance={:.3}", r.metrics.imbalance());
+            partitioned = Some(r.metrics);
+            (r.triangles, detail)
         }
         Algorithm::DynamicLb => {
             let r = dynamic_lb::run(
@@ -227,12 +260,36 @@ fn cmd_count(args: &[String]) -> Result<()> {
         kernels.list_list, kernels.list_bitmap, kernels.bitmap_bitmap
     );
 
+    // Partitioned runs: per-rank partition residency, measured from the
+    // OwnedPartition each rank actually held, against the scheme's
+    // prediction — any divergence fails the run (CI gates on this).
+    let (mem_max, mem_pred_max, accel_max) = match &partitioned {
+        Some(m) => {
+            println!(
+                "partition memory: measured max={} B (total {} B), predicted max={} B, hub-accel max={} B",
+                m.max_partition_bytes(),
+                m.totals().partition_bytes,
+                m.max_partition_bytes_pred(),
+                m.max_accel_bytes()
+            );
+            if let Some(rank) = m.partition_accounting_divergence() {
+                return Err(Error::Cluster(format!(
+                    "MEM VERIFY FAILED: rank {rank} measured {} B != predicted {} B",
+                    m.per_rank[rank].partition_bytes, m.per_rank[rank].partition_bytes_pred
+                )));
+            }
+            println!("partition memory: measured == predicted on every rank");
+            (m.max_partition_bytes(), m.max_partition_bytes_pred(), m.max_accel_bytes())
+        }
+        None => (0, 0, 0),
+    };
+
     if let Some(dir) = extra.get("out") {
         std::fs::create_dir_all(dir)?;
         let mut report = exp::report::Report::new([
             "workload", "algorithm", "procs", "n", "m", "triangles", "time_s",
             "hub_threshold", "hubs", "bitmap_bytes", "k_list_list", "k_list_bitmap",
-            "k_bitmap_bitmap",
+            "k_bitmap_bitmap", "mem_measured_max", "mem_pred_max", "accel_max",
         ]);
         report.row([
             cfg.workload.clone().into(),
@@ -248,6 +305,9 @@ fn cmd_count(args: &[String]) -> Result<()> {
             kernels.list_list.into(),
             kernels.list_bitmap.into(),
             kernels.bitmap_bitmap.into(),
+            mem_max.into(),
+            mem_pred_max.into(),
+            accel_max.into(),
         ]);
         report.write_csv(&format!("{dir}/count.csv"))?;
         report.write_json(&format!("{dir}/count.json"))?;
@@ -501,6 +561,24 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
     println!("non-overlapping (ours): largest {max_non:.2} MB, total edges stored {sum_non}");
     println!("overlapping (PATRIC):   largest {max_over:.2} MB, total edges stored {sum_over}");
     println!("ratio (largest): {:.2}x", max_over / max_non.max(1e-12));
+    // The predictions above are enforced: materialize both owned layouts
+    // and report what the ranks would physically hold.
+    let own_non = tricount::partition::owned::extract_nonoverlapping(&o, &ours, cfg.hub_threshold);
+    let own_over =
+        tricount::partition::owned::extract_overlapping(&g, &o, &patric, cfg.hub_threshold);
+    let meas_non = own_non.iter().map(|p| p.resident_bytes()).max().unwrap_or(0);
+    let meas_over = own_over.iter().map(|p| p.resident_bytes()).max().unwrap_or(0);
+    let exact = own_non.iter().zip(&non).all(|(p, s)| p.resident_bytes() == s.bytes())
+        && own_over.iter().zip(&over).all(|(p, s)| p.resident_bytes() == s.bytes());
+    println!(
+        "measured (owned partitions): ours largest {:.2} MB, PATRIC largest {:.2} MB — {}",
+        meas_non as f64 / (1024.0 * 1024.0),
+        meas_over as f64 / (1024.0 * 1024.0),
+        if exact { "measured == predicted on every partition" } else { "DIVERGED from prediction" }
+    );
+    if !exact {
+        return Err(Error::Cluster("partition-stats: measured != predicted".into()));
+    }
     Ok(())
 }
 

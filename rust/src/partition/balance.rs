@@ -8,7 +8,9 @@
 //! message-elimination trick requires each partition to be an id-interval.
 
 use crate::partition::cost::range_cost;
+use crate::VertexId;
 use std::ops::Range;
+use std::sync::Arc;
 
 /// Split `[0, n)` into `p` consecutive ranges balancing `prefix` costs:
 /// boundary `k` is the smallest index whose cumulative cost reaches
@@ -62,9 +64,92 @@ pub fn imbalance(prefix: &[u64], ranges: &[Range<u32>]) -> f64 {
     }
 }
 
+/// Compact owner lookup for consecutive ranges: the `P+1` ascending range
+/// bounds. This is the O(P) global metadata a real cluster broadcasts after
+/// the partitioning phase — unlike the O(n) [`owner_table`], a rank can hold
+/// it without holding anything proportional to the graph, which is why the
+/// owned-partition counting paths route through it.
+///
+/// `owner_of` is a binary search over the bounds; [`OwnerTable::runs`]
+/// walks an id-sorted neighbor list as contiguous per-owner runs (sound
+/// because partitions are id-intervals), which is simultaneously the
+/// surrogate scheme's `LastProc` message-elimination trick and an
+/// O(runs · log d) replacement for per-edge owner lookups.
+#[derive(Clone, Debug)]
+pub struct OwnerTable {
+    /// `bounds[j]..bounds[j+1]` = partition `j`'s node range; shared
+    /// read-only across ranks (it is public knowledge, like rank ids).
+    bounds: Arc<Vec<u32>>,
+}
+
+impl OwnerTable {
+    /// Build from consecutive ranges tiling `[0, n)`.
+    pub fn new(ranges: &[Range<u32>]) -> Self {
+        assert!(!ranges.is_empty(), "owner table needs at least one range");
+        debug_assert_eq!(ranges[0].start, 0);
+        debug_assert!(ranges.windows(2).all(|w| w[0].end == w[1].start));
+        let mut bounds = Vec::with_capacity(ranges.len() + 1);
+        bounds.push(ranges[0].start);
+        bounds.extend(ranges.iter().map(|r| r.end));
+        OwnerTable { bounds: Arc::new(bounds) }
+    }
+
+    /// Number of partitions `P`.
+    #[inline]
+    pub fn num_parts(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// The rank owning node `v` (the unique half-open range containing it).
+    #[inline]
+    pub fn owner_of(&self, v: VertexId) -> u32 {
+        debug_assert!(v < *self.bounds.last().unwrap());
+        (self.bounds.partition_point(|&b| b <= v) - 1) as u32
+    }
+
+    /// Partition `j`'s node range.
+    #[inline]
+    pub fn range_of(&self, j: usize) -> Range<u32> {
+        self.bounds[j]..self.bounds[j + 1]
+    }
+
+    /// Iterate an **id-sorted** list as maximal contiguous runs of a single
+    /// owner, in ascending owner order. Each `(owner, index_range)` item
+    /// covers `list[index_range]`; the runs tile the list exactly.
+    pub fn runs<'a>(&'a self, list: &'a [VertexId]) -> OwnerRuns<'a> {
+        debug_assert!(list.windows(2).all(|w| w[0] < w[1]), "list must be id-sorted");
+        OwnerRuns { bounds: &self.bounds, list, at: 0 }
+    }
+}
+
+/// Iterator over the per-owner runs of an id-sorted list (see
+/// [`OwnerTable::runs`]).
+pub struct OwnerRuns<'a> {
+    bounds: &'a [u32],
+    list: &'a [VertexId],
+    at: usize,
+}
+
+impl Iterator for OwnerRuns<'_> {
+    type Item = (u32, Range<usize>);
+
+    fn next(&mut self) -> Option<(u32, Range<usize>)> {
+        if self.at >= self.list.len() {
+            return None;
+        }
+        let j = (self.bounds.partition_point(|&b| b <= self.list[self.at]) - 1) as u32;
+        let end_id = self.bounds[j as usize + 1];
+        let end = self.at + self.list[self.at..].partition_point(|&x| x < end_id);
+        let run = self.at..end;
+        self.at = end;
+        Some((j, run))
+    }
+}
+
 /// Owner lookup for consecutive ranges: `owner[v] = rank holding v`.
-/// O(n) to build, O(1) to query — the surrogate hot loop queries this for
-/// every oriented edge.
+/// O(n) to build, O(1) to query — used by the simulators and the streaming
+/// driver, which legitimately operate on the whole graph; the owned
+/// §IV counting ranks use the O(P) [`OwnerTable`] instead.
 pub fn owner_table(ranges: &[Range<u32>], n: usize) -> Vec<u32> {
     let mut owner = vec![0u32; n];
     for (i, r) in ranges.iter().enumerate() {
@@ -145,5 +230,47 @@ mod tests {
         let prefix = prefix_sums(&[1; 8]);
         let rs = balanced_ranges(&prefix, 4);
         assert!((imbalance(&prefix, &rs) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn owner_table_struct_agrees_with_dense_table() {
+        // Lumpy costs so some ranges are empty — the duplicate-bound case
+        // the binary search must route around.
+        let costs = [0, 100, 0, 0, 1, 1, 100, 0, 0];
+        let prefix = prefix_sums(&costs);
+        for p in [1, 2, 4, 7, 12] {
+            let rs = balanced_ranges(&prefix, p);
+            let dense = owner_table(&rs, costs.len());
+            let t = OwnerTable::new(&rs);
+            assert_eq!(t.num_parts(), p);
+            for v in 0..costs.len() as u32 {
+                assert_eq!(t.owner_of(v), dense[v as usize], "P={p} v={v}");
+                assert!(t.range_of(t.owner_of(v) as usize).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn owner_runs_tile_sorted_lists() {
+        let prefix = prefix_sums(&[1; 20]);
+        let rs = balanced_ranges(&prefix, 6);
+        let t = OwnerTable::new(&rs);
+        let list: Vec<u32> = vec![0, 1, 4, 5, 9, 10, 11, 18, 19];
+        let mut covered = 0usize;
+        let mut last_owner = None;
+        for (j, run) in t.runs(&list) {
+            assert_eq!(run.start, covered, "runs must tile the list");
+            assert!(!run.is_empty());
+            covered = run.end;
+            if let Some(prev) = last_owner {
+                assert!(j > prev, "owners ascend over a sorted list");
+            }
+            last_owner = Some(j);
+            for &u in &list[run] {
+                assert_eq!(t.owner_of(u), j);
+            }
+        }
+        assert_eq!(covered, list.len());
+        assert_eq!(t.runs(&[]).count(), 0);
     }
 }

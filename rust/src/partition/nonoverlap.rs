@@ -9,12 +9,15 @@
 //!
 //! `Σ_i |E_i'| = m`: the partitions tile the edge set, which is exactly why
 //! the scheme stays small where PATRIC's overlapping partitions blow up.
+//!
+//! [`partition_sizes`] is the arithmetic *prediction*;
+//! [`crate::partition::owned::OwnedPartition`] is the matching physical
+//! allocation every §IV counting rank actually holds, and the two are
+//! gated equal byte-for-byte (`tricount count`, CI smoke).
 
 use std::ops::Range;
-use std::sync::Arc;
 
 use crate::graph::ordering::Oriented;
-use crate::VertexId;
 
 /// Size accounting for one non-overlapping partition.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -28,11 +31,15 @@ pub struct PartitionSize {
 }
 
 impl PartitionSize {
-    /// Bytes to store the partition: one 8-byte offset per core node (+1),
-    /// one 4-byte target per edge, 4-byte degree per referenced node —
-    /// mirroring [`Oriented`]'s layout restricted to the partition.
+    /// Bytes to store the partition: one 8-byte offset per core node (+1)
+    /// and one 4-byte target per edge — exactly the arrays
+    /// [`crate::partition::owned::OwnedPartition`] materializes, so
+    /// `tricount count` can gate measured == predicted byte-for-byte.
+    /// Referenced non-core nodes (`V_i' − V_i`) cost nothing beyond their
+    /// occurrences inside `targets`: ids are global and the partition
+    /// stores no per-ghost state.
     pub fn bytes(&self) -> u64 {
-        (self.core_nodes + 1) * 8 + self.edges * 4 + self.all_nodes * 4
+        (self.core_nodes + 1) * 8 + self.edges * 4
     }
 
     /// Megabytes (for Table II / Fig 7 rows).
@@ -71,70 +78,62 @@ pub fn partition_sizes(o: &Oriented, ranges: &[Range<u32>]) -> Vec<PartitionSize
         .collect()
 }
 
-/// A rank's *view* of its non-overlapping partition.
+/// Smallest `P ≤ max_p` whose largest predicted partition fits `budget`
+/// bytes ([`PartitionSize::bytes`]), with ranges balanced on `prefix` —
+/// the paper Table II sizing question ("how many machines do I need so
+/// every rank fits in memory?"), answered by `tricount count --mem-budget`.
 ///
-/// Semantically each rank owns only `N_v` for `v ∈ V_i` (Definition 1). In
-/// this in-process reproduction the underlying arrays are shared read-only
-/// via `Arc` to avoid physically copying the graph per rank; the view
-/// **enforces** the distributed-memory discipline by panicking on any
-/// access outside the owned range (debug) — the algorithms must fetch
-/// remote lists through messages, exactly as on a real cluster. Memory
-/// *accounting* (Table II, Figs 7/8) always uses [`partition_sizes`], i.e.
-/// what a real rank would allocate, not what this process allocates.
-#[derive(Clone)]
-pub struct PartitionView {
-    graph: Arc<Oriented>,
-    range: Range<u32>,
-}
-
-impl PartitionView {
-    /// Create the view for one rank.
-    pub fn new(graph: Arc<Oriented>, range: Range<u32>) -> Self {
-        PartitionView { graph, range }
+/// Doubling then bisection; each probe is an O(n + m) [`partition_sizes`]
+/// pass. Assumes the largest-partition size is non-increasing in `P`
+/// (true up to boundary rounding); the returned `P` is always one that was
+/// directly verified to fit. `None` when even `max_p` partitions cannot
+/// fit (some single row exceeds the budget). Hub-bitmap accelerator bytes
+/// are *not* in the budget — they are opt-in and separately bounded by the
+/// `auto` rule (see `partition/owned.rs`).
+pub fn min_procs_for_budget(
+    o: &Oriented,
+    prefix: &[u64],
+    budget: u64,
+    max_p: usize,
+) -> Option<usize> {
+    use crate::partition::balance::balanced_ranges;
+    let max_p = max_p.max(1);
+    let fits = |p: usize| {
+        partition_sizes(o, &balanced_ranges(prefix, p))
+            .iter()
+            .map(|s| s.bytes())
+            .max()
+            .unwrap_or(0)
+            <= budget
+    };
+    if fits(1) {
+        return Some(1);
     }
-
-    /// Owned node range `V_i`.
-    #[inline]
-    pub fn range(&self) -> Range<u32> {
-        self.range.clone()
+    // Bracket the fit boundary by doubling: lo never fits, hi fits.
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    loop {
+        if hi > max_p {
+            return None;
+        }
+        if fits(hi) {
+            break;
+        }
+        if hi == max_p {
+            return None;
+        }
+        lo = hi;
+        hi = (hi * 2).min(max_p);
     }
-
-    /// `N_v` for an **owned** node (panics otherwise — that data would live
-    /// on another machine).
-    #[inline]
-    pub fn nbrs(&self, v: VertexId) -> &[VertexId] {
-        assert!(
-            self.range.contains(&v),
-            "rank owning {:?} accessed N_{v} (remote data)",
-            self.range
-        );
-        self.graph.nbrs(v)
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
     }
-
-    /// Hybrid [`crate::adj::NeighborView`] of an **owned** node — list plus
-    /// hub bitmap; same ownership discipline as [`PartitionView::nbrs`].
-    #[inline]
-    pub fn view(&self, v: VertexId) -> crate::adj::NeighborView<'_> {
-        assert!(
-            self.range.contains(&v),
-            "rank owning {:?} accessed N_{v} (remote data)",
-            self.range
-        );
-        self.graph.view(v)
-    }
-
-    /// Effective degree of an owned node.
-    #[inline]
-    pub fn effective_degree(&self, v: VertexId) -> usize {
-        assert!(self.range.contains(&v));
-        self.graph.effective_degree(v)
-    }
-
-    /// Total node count (global metadata — ids/ranges are public knowledge).
-    #[inline]
-    pub fn num_nodes(&self) -> usize {
-        self.graph.num_nodes()
-    }
+    Some(hi)
 }
 
 #[cfg(test)]
@@ -145,9 +144,9 @@ mod tests {
     use crate::partition::balance::balanced_ranges;
     use crate::partition::cost::{cost_vector, prefix_sums};
 
-    fn setup(p: usize) -> (Arc<Oriented>, Vec<Range<u32>>) {
+    fn setup(p: usize) -> (Oriented, Vec<Range<u32>>) {
         let g = classic::karate();
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let costs = cost_vector(&o, CostFn::SurrogateNew);
         let ranges = balanced_ranges(&prefix_sums(&costs), p);
         (o, ranges)
@@ -181,16 +180,33 @@ mod tests {
     }
 
     #[test]
-    fn view_allows_owned_and_rejects_remote() {
-        let (o, ranges) = setup(3);
-        let view = PartitionView::new(o, ranges[1].clone());
-        let v = ranges[1].start;
-        let _ = view.nbrs(v); // owned: fine
-        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let remote = ranges[0].start;
-            let _ = view.nbrs(remote);
-        }));
-        assert!(caught.is_err(), "remote access must panic");
+    fn budget_selection_is_minimal_and_verified() {
+        let g = crate::gen::pa::preferential_attachment(
+            3000,
+            12,
+            &mut crate::gen::rng::Rng::seeded(11),
+        );
+        let o = Oriented::from_graph(&g);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let max_bytes = |p: usize| {
+            partition_sizes(&o, &balanced_ranges(&prefix, p))
+                .iter()
+                .map(|s| s.bytes())
+                .max()
+                .unwrap()
+        };
+        // A budget the whole graph fits in: P = 1.
+        assert_eq!(min_procs_for_budget(&o, &prefix, max_bytes(1), 256), Some(1));
+        // A budget between P=1 and the P=256 floor: the result fits and
+        // sits on the fit boundary (the bisection invariant: `P` fits,
+        // `P−1` does not).
+        let budget = max_bytes(6);
+        let p = min_procs_for_budget(&o, &prefix, budget, 256).unwrap();
+        assert!(p > 1);
+        assert!(max_bytes(p) <= budget);
+        assert!(max_bytes(p - 1) > budget, "P−1 must not fit");
+        // Impossible budget: even one node per partition cannot fit 1 byte.
+        assert_eq!(min_procs_for_budget(&o, &prefix, 1, 4096), None);
     }
 
     #[test]
@@ -201,7 +217,7 @@ mod tests {
             10,
             &mut crate::gen::rng::Rng::seeded(8),
         );
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let costs = cost_vector(&o, CostFn::SurrogateNew);
         let prefix = prefix_sums(&costs);
         let max_bytes = |p: usize| {

@@ -13,7 +13,6 @@ use std::ops::Range;
 
 use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
-use crate::partition::nonoverlap::PartitionSize;
 
 /// Size accounting for one PATRIC overlapping partition.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -28,8 +27,12 @@ pub struct OverlapSize {
 }
 
 impl OverlapSize {
-    /// Bytes, same layout accounting as the non-overlapping scheme so that
-    /// Table II compares like with like.
+    /// Bytes: one 8-byte offset per stored row (+1), one 4-byte target per
+    /// edge, plus the 4-byte sorted row table mapping member ids to rows —
+    /// exactly the arrays [`crate::partition::owned::extract_overlapping`]
+    /// materializes, so the PATRIC comparison is measured like-for-like
+    /// with the non-overlapping scheme (whose core rows are an id-interval
+    /// and need no row table).
     pub fn bytes(&self) -> u64 {
         (self.all_nodes + 1) * 8 + self.edges * 4 + self.all_nodes * 4
     }
@@ -37,11 +40,6 @@ impl OverlapSize {
     /// Megabytes.
     pub fn mb(&self) -> f64 {
         self.bytes() as f64 / (1024.0 * 1024.0)
-    }
-
-    /// View as the common [`PartitionSize`] shape (for shared reporting).
-    pub fn as_partition_size(&self) -> PartitionSize {
-        PartitionSize { core_nodes: self.core_nodes, all_nodes: self.all_nodes, edges: self.edges }
     }
 }
 

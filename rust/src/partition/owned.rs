@@ -1,0 +1,365 @@
+//! Fully materialized per-rank partitions — the §IV space-efficiency
+//! claim as an *invariant*, not an accounting convention.
+//!
+//! The seed's `PartitionView` wrapped the full shared `Arc<Oriented>` and
+//! enforced the distributed-memory discipline only by panicking on remote
+//! access; every "space-efficient" rank silently held the whole graph.
+//! [`OwnedPartition`] replaces it with a real per-rank subgraph: its own
+//! offsets/targets arrays sliced out of the orientation, an optional
+//! overlap row table (PATRIC), a per-partition hub-bitmap index, and the
+//! O(P) [`OwnerTable`] — nothing proportional to the rest of the graph.
+//! The §IV rank mains take `&OwnedPartition` and their closures no longer
+//! capture the `Arc`, so a counting rank *cannot* touch remote lists; it
+//! must message for them, exactly as on a real cluster.
+//!
+//! Layouts (and the byte accounting they pin down):
+//!
+//! * **Non-overlapping** (ours, [`extract_nonoverlapping`]): rows are the
+//!   core range `V_i`; `offsets` has `|V_i|+1` 8-byte entries, `targets`
+//!   holds `|E_i'|` 4-byte global ids. Resident bytes =
+//!   [`crate::partition::nonoverlap::PartitionSize::bytes`] **exactly** —
+//!   the equality `tricount count` gates on.
+//! * **Overlapping** (PATRIC, [`extract_overlapping`]): rows are the full
+//!   membership `V_i = V_i^c ∪ ⋃_{v∈V_i^c} 𝒩_v`, addressed through a
+//!   sorted 4-byte row table `members`. Resident bytes =
+//!   [`crate::partition::overlap::OverlapSize::bytes`] exactly — the rank
+//!   physically holds the overlap blow-up the paper measures.
+//!
+//! Hub bitmaps are an *accelerator* riding on top (budgeted by
+//! [`crate::adj::hub::HubThreshold`] per partition); they are reported as
+//! [`OwnedPartition::accel_bytes`], apart from the CSR bytes the paper's
+//! Table II / Fig 7 claim is about.
+//!
+//! Extraction fans out over the [`crate::par`] scoped-thread helpers (one
+//! partition is one work item); each partition is a pure function of
+//! `(graph, range)`, so the result is identical at every thread count.
+
+use std::ops::Range;
+
+use crate::adj::hub::{HubIndex, HubThreshold};
+use crate::adj::view::NeighborView;
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::partition::balance::OwnerTable;
+use crate::VertexId;
+
+/// A rank's fully materialized partition (see module docs for the two
+/// layouts). All node ids in `targets` remain *global*; only row storage
+/// is partition-local.
+pub struct OwnedPartition {
+    /// Core node range `V_i` (id-interval).
+    range: Range<u32>,
+    /// `Some(ids)` ⇒ overlap layout: sorted row table, one entry per
+    /// stored row (superset of `range`). `None` ⇒ rows are exactly `range`.
+    members: Option<Vec<VertexId>>,
+    /// Row `r` is `targets[offsets[r]..offsets[r+1]]`.
+    offsets: Vec<u64>,
+    targets: Vec<VertexId>,
+    /// Per-partition hub-bitmap index, keyed by local row index.
+    hubs: HubIndex,
+    /// Global partition bounds (O(P) shared metadata).
+    owners: OwnerTable,
+}
+
+impl OwnedPartition {
+    /// Owned core range `V_i`.
+    #[inline]
+    pub fn range(&self) -> Range<u32> {
+        self.range.clone()
+    }
+
+    /// The global partition-bounds table.
+    #[inline]
+    pub fn owners(&self) -> &OwnerTable {
+        &self.owners
+    }
+
+    /// Stored rows (core, plus overlap members when present).
+    #[inline]
+    pub fn num_rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Stored oriented edges `|E_i'|`.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.targets.len() as u64
+    }
+
+    /// Local row index of `v`; panics when this partition does not hold
+    /// `N_v` — that data lives on another machine.
+    #[inline]
+    fn row_index(&self, v: VertexId) -> usize {
+        match &self.members {
+            None => {
+                assert!(
+                    self.range.contains(&v),
+                    "rank owning {:?} accessed N_{v} (remote data)",
+                    self.range
+                );
+                (v - self.range.start) as usize
+            }
+            Some(ids) => ids
+                .binary_search(&v)
+                .unwrap_or_else(|_| panic!("partition of {:?} holds no row for node {v}", self.range)),
+        }
+    }
+
+    /// `N_v` for a stored row, sorted ascending by global id.
+    #[inline]
+    pub fn nbrs(&self, v: VertexId) -> &[VertexId] {
+        let r = self.row_index(v);
+        &self.targets[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+    }
+
+    /// Hybrid [`NeighborView`] of a stored row — sorted slice plus the
+    /// partition-local hub bitmap when the row qualified.
+    #[inline]
+    pub fn view(&self, v: VertexId) -> NeighborView<'_> {
+        let r = self.row_index(v);
+        let list = &self.targets[self.offsets[r] as usize..self.offsets[r + 1] as usize];
+        NeighborView::hybrid(list, self.hubs.get(r as VertexId))
+    }
+
+    /// Effective degree `d̂_v` of a stored row.
+    #[inline]
+    pub fn effective_degree(&self, v: VertexId) -> usize {
+        let r = self.row_index(v);
+        (self.offsets[r + 1] - self.offsets[r]) as usize
+    }
+
+    /// Resident bytes of the partition's graph storage: offsets + targets
+    /// (+ the overlap row table). Matches the scheme's size prediction
+    /// *exactly* — [`crate::partition::nonoverlap::PartitionSize::bytes`]
+    /// for the non-overlapping layout,
+    /// [`crate::partition::overlap::OverlapSize::bytes`] for the overlap
+    /// layout — which is what makes the Table II / Fig 7 numbers measured
+    /// facts instead of arithmetic.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.offsets.len() * 8
+            + self.targets.len() * 4
+            + self.members.as_ref().map_or(0, |m| m.len() * 4)) as u64
+    }
+
+    /// Bytes of the hub-bitmap accelerator riding on this partition
+    /// (bounded by the `auto` budget; reported apart from
+    /// [`OwnedPartition::resident_bytes`]).
+    pub fn accel_bytes(&self) -> u64 {
+        self.hubs.bytes()
+    }
+}
+
+/// Materialize the non-overlapping partition of every range (paper
+/// Definition 1): rank `i` gets `N_v` for `v ∈ V_i` and nothing else.
+/// Partitions are extracted on [`crate::par::default_threads`] scoped
+/// threads, one partition per work item.
+pub fn extract_nonoverlapping(
+    o: &Oriented,
+    ranges: &[Range<u32>],
+    hub: HubThreshold,
+) -> Vec<OwnedPartition> {
+    let owners = OwnerTable::new(ranges);
+    let p = ranges.len();
+    let t = crate::par::clamp_threads(crate::par::default_threads(), p, 1);
+    crate::par::for_ranges(p, t, |_, idx| {
+        idx.map(|i| extract_core(o, ranges[i].clone(), hub, owners.clone()))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+fn extract_core(o: &Oriented, range: Range<u32>, hub: HubThreshold, owners: OwnerTable) -> OwnedPartition {
+    let goff = o.offsets();
+    let base = goff[range.start as usize];
+    let offsets: Vec<u64> = goff[range.start as usize..=range.end as usize]
+        .iter()
+        .map(|&x| x - base)
+        .collect();
+    let targets = o.targets()[base as usize..goff[range.end as usize] as usize].to_vec();
+    let hubs = HubIndex::build(&offsets, &targets, hub);
+    OwnedPartition { range, members: None, offsets, targets, hubs, owners }
+}
+
+/// Materialize PATRIC's overlapping partition of every core range: rank
+/// `i` gets `N_u` for every `u ∈ V_i^c ∪ ⋃_{v∈V_i^c} 𝒩_v` (full
+/// neighborhoods define membership — PATRIC loads complete neighborhoods
+/// and orients inside the partition, which is exactly the blow-up
+/// [`crate::partition::overlap::overlap_sizes`] predicts and this
+/// extraction now physically allocates).
+pub fn extract_overlapping(
+    g: &Csr,
+    o: &Oriented,
+    ranges: &[Range<u32>],
+    hub: HubThreshold,
+) -> Vec<OwnedPartition> {
+    debug_assert_eq!(g.num_nodes(), o.num_nodes());
+    let owners = OwnerTable::new(ranges);
+    let p = ranges.len();
+    let t = crate::par::clamp_threads(crate::par::default_threads(), p, 1);
+    crate::par::for_ranges(p, t, |_, idx| {
+        idx.map(|i| extract_overlap(g, o, ranges[i].clone(), hub, owners.clone()))
+            .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+fn extract_overlap(
+    g: &Csr,
+    o: &Oriented,
+    range: Range<u32>,
+    hub: HubThreshold,
+    owners: OwnerTable,
+) -> OwnedPartition {
+    // Ghosts: full-neighborhood contacts outside the core id-interval.
+    let mut ghosts: Vec<VertexId> = Vec::new();
+    for v in range.clone() {
+        ghosts.extend(g.neighbors(v).iter().copied().filter(|u| !range.contains(u)));
+    }
+    ghosts.sort_unstable();
+    ghosts.dedup();
+    // Members ascend: ghosts below the core interval, the core, ghosts above.
+    let split = ghosts.partition_point(|&u| u < range.start);
+    let mut members = Vec::with_capacity(ghosts.len() + range.len());
+    members.extend_from_slice(&ghosts[..split]);
+    members.extend(range.clone());
+    members.extend_from_slice(&ghosts[split..]);
+
+    let mut offsets = Vec::with_capacity(members.len() + 1);
+    offsets.push(0u64);
+    let mut targets = Vec::new();
+    for &u in &members {
+        targets.extend_from_slice(o.nbrs(u));
+        offsets.push(targets.len() as u64);
+    }
+    let hubs = HubIndex::build(&offsets, &targets, hub);
+    OwnedPartition { range, members: Some(members), offsets, targets, hubs, owners }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostFn;
+    use crate::graph::classic;
+    use crate::partition::balance::balanced_ranges;
+    use crate::partition::cost::{cost_vector, prefix_sums};
+    use crate::partition::nonoverlap::partition_sizes;
+    use crate::partition::overlap::overlap_sizes;
+
+    fn setup(p: usize) -> (Csr, Oriented, Vec<Range<u32>>) {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, p);
+        (g, o, ranges)
+    }
+
+    #[test]
+    fn core_rows_match_shared_graph() {
+        let (_g, o, ranges) = setup(5);
+        let parts = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        assert_eq!(parts.len(), 5);
+        let mut edges = 0u64;
+        for part in &parts {
+            for v in part.range() {
+                assert_eq!(part.nbrs(v), o.nbrs(v), "row {v}");
+                assert_eq!(part.view(v).list(), o.nbrs(v));
+                assert_eq!(part.effective_degree(v), o.effective_degree(v));
+            }
+            edges += part.num_edges();
+        }
+        assert_eq!(edges, o.num_edges(), "partitions tile E");
+    }
+
+    #[test]
+    fn single_partition_is_the_whole_orientation() {
+        let (_g, o, _r) = setup(1);
+        let ranges = vec![0..o.num_nodes() as u32];
+        let parts = extract_nonoverlapping(&o, &ranges, HubThreshold::Off);
+        assert_eq!(parts[0].offsets, o.offsets());
+        assert_eq!(parts[0].targets, o.targets());
+        assert_eq!(parts[0].accel_bytes(), 0);
+    }
+
+    #[test]
+    fn remote_access_panics_on_core_partition() {
+        let (_g, o, ranges) = setup(3);
+        let parts = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        let remote = ranges[0].start;
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = parts[1].nbrs(remote);
+        }));
+        assert!(caught.is_err(), "remote access must panic — the data is not here");
+    }
+
+    #[test]
+    fn resident_bytes_match_predictions_exactly() {
+        let (g, o, ranges) = setup(4);
+        let parts = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        for (part, s) in parts.iter().zip(partition_sizes(&o, &ranges)) {
+            assert_eq!(part.resident_bytes(), s.bytes());
+        }
+        let over = extract_overlapping(&g, &o, &ranges, HubThreshold::Auto);
+        for (part, s) in over.iter().zip(overlap_sizes(&g, &o, &ranges)) {
+            assert_eq!(part.resident_bytes(), s.bytes());
+            assert_eq!(part.num_rows() as u64, s.all_nodes);
+            assert_eq!(part.num_edges(), s.edges);
+        }
+    }
+
+    #[test]
+    fn overlap_holds_every_referenced_row() {
+        let (g, o, ranges) = setup(4);
+        let parts = extract_overlapping(&g, &o, &ranges, HubThreshold::Auto);
+        for part in &parts {
+            for v in part.range() {
+                for &u in part.nbrs(v) {
+                    // Oriented targets are full-neighborhood contacts, so
+                    // the overlap partition must hold their rows locally.
+                    assert_eq!(part.nbrs(u), o.nbrs(u), "ghost row {u}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extraction_identical_at_any_thread_count() {
+        let g = crate::gen::pa::preferential_attachment(
+            1500,
+            8,
+            &mut crate::gen::rng::Rng::seeded(9),
+        );
+        let o = Oriented::from_graph(&g);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let ranges = balanced_ranges(&prefix, 7);
+        let prev = crate::par::default_threads();
+        crate::par::set_default_threads(1);
+        let serial = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        crate::par::set_default_threads(4);
+        let par = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        crate::par::set_default_threads(prev);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.offsets, b.offsets);
+            assert_eq!(a.targets, b.targets);
+            assert_eq!(a.members, b.members);
+            assert_eq!(a.resident_bytes(), b.resident_bytes());
+            assert_eq!(a.accel_bytes(), b.accel_bytes());
+        }
+    }
+
+    #[test]
+    fn empty_ranges_yield_empty_partitions() {
+        let (_g, o, _r) = setup(1);
+        let n = o.num_nodes() as u32;
+        let ranges = vec![0..0u32, 0..n, n..n];
+        let parts = extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        assert_eq!(parts[0].num_rows(), 0);
+        assert_eq!(parts[0].num_edges(), 0);
+        assert_eq!(parts[0].resident_bytes(), 8, "one offset entry");
+        assert_eq!(parts[2].num_rows(), 0);
+        assert_eq!(parts[1].num_edges(), o.num_edges());
+    }
+}

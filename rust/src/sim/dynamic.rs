@@ -70,6 +70,8 @@ impl DynamicSim {
                     idle_ns: w.idle_ns,
                     msgs: w.tasks_run,
                     bytes: 0,
+                    // §V ranks store the whole network — no partition.
+                    mem_bytes: 0,
                 })
                 .collect(),
             makespan_ns: self.makespan_ns,

@@ -176,6 +176,12 @@ pub struct RankSim {
     pub msgs: u64,
     /// Payload bytes sent.
     pub bytes: u64,
+    /// Predicted partition residency of the rank
+    /// ([`crate::partition::nonoverlap::PartitionSize::bytes`]); filled by
+    /// the §IV space-efficient simulator so virtual-time sweeps report the
+    /// memory dimension alongside runtime. 0 for simulators whose ranks
+    /// hold the whole graph.
+    pub mem_bytes: u64,
 }
 
 impl RankSim {
@@ -213,6 +219,12 @@ impl SimResult {
     /// Total payload bytes.
     pub fn total_bytes(&self) -> u64 {
         self.per_rank.iter().map(|r| r.bytes).sum()
+    }
+
+    /// Largest per-rank predicted partition residency (0 when the
+    /// simulated scheme keeps the whole graph per rank).
+    pub fn max_mem_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|r| r.mem_bytes).max().unwrap_or(0)
     }
 }
 

@@ -35,6 +35,14 @@ pub fn simulate(
 ) -> SimResult {
     let p = ranges.len();
     let mut ranks = vec![RankSim::default(); p];
+    // Memory dimension: what each simulated rank would resident-hold — the
+    // same prediction the real owned-partition drivers are gated against.
+    for (r, s) in ranks
+        .iter_mut()
+        .zip(crate::partition::nonoverlap::partition_sizes(o, ranges))
+    {
+        r.mem_bytes = s.bytes();
+    }
 
     // Sequential reference: all pair-work (true noisy adaptive-kernel
     // cost), no messages.
@@ -242,19 +250,23 @@ mod tests {
     fn sim_message_counts_match_real_run() {
         // The simulator must make the *same* send decisions as the threaded
         // implementation.
+        use crate::adj::HubThreshold;
         use crate::partition::balance::{balanced_ranges, owner_table};
         use crate::partition::cost::{cost_vector, prefix_sums};
-        use std::sync::Arc;
         let g = crate::gen::pa::preferential_attachment(600, 8, &mut Rng::seeded(12));
-        let o = Arc::new(Oriented::from_graph(&g));
+        let o = Oriented::from_graph(&g);
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, 5);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        let real = crate::algo::surrogate::run(&o, &ranges, &owner).unwrap();
+        let owner = owner_table(&ranges, o.num_nodes());
+        let real = crate::algo::surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
         let sim = simulate(&o, &ranges, &owner, Scheme::Surrogate, &CostModel::default());
         assert_eq!(real.metrics.totals().messages_sent, sim.total_msgs());
-        let real_d = crate::algo::direct::run(&o, &ranges, &owner).unwrap();
+        let real_d = crate::algo::direct::run(&o, &ranges, HubThreshold::Auto).unwrap();
         let sim_d = simulate(&o, &ranges, &owner, Scheme::Direct, &CostModel::default());
         assert_eq!(real_d.metrics.totals().messages_sent, sim_d.total_msgs());
+        // And the simulator's memory dimension is the same prediction the
+        // real run's owned partitions were measured against.
+        assert_eq!(sim.max_mem_bytes(), real.metrics.max_partition_bytes());
+        assert!(sim.max_mem_bytes() > 0);
     }
 }

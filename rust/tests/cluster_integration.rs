@@ -5,18 +5,21 @@
 
 use std::sync::Arc;
 
+use tricount::adj::HubThreshold;
 use tricount::algo::{direct, dynamic_lb, patric, surrogate};
 use tricount::config::CostFn;
 use tricount::gen::rng::Rng;
 use tricount::graph::csr::Csr;
 use tricount::graph::ordering::Oriented;
 use tricount::graph::{classic, io};
-use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::balance::balanced_ranges;
 use tricount::partition::cost::{cost_vector, prefix_sums};
 use tricount::seq::{naive, node_iterator};
 use tricount::tensor::hybrid;
 
-/// Run every counter on the graph and assert exact agreement.
+/// Run every counter on the graph and assert exact agreement. The §IV
+/// drivers run on fully materialized owned partitions; every run is also
+/// checked for exact measured == predicted partition residency.
 fn assert_all_agree(g: &Csr, expect: u64, ps: &[usize]) {
     let o = Arc::new(Oriented::from_graph(g));
     assert_eq!(node_iterator::count(&o), expect, "sequential");
@@ -26,13 +29,18 @@ fn assert_all_agree(g: &Csr, expect: u64, ps: &[usize]) {
     for &p in ps {
         let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
         let ranges = balanced_ranges(&prefix, p);
-        let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-        assert_eq!(surrogate::run(&o, &ranges, &owner).unwrap().triangles, expect, "surrogate P={p}");
-        assert_eq!(direct::run(&o, &ranges, &owner).unwrap().triangles, expect, "direct P={p}");
+        let s = surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
+        assert_eq!(s.triangles, expect, "surrogate P={p}");
+        assert_eq!(s.metrics.partition_accounting_divergence(), None, "surrogate mem P={p}");
+        let d = direct::run(&o, &ranges, HubThreshold::Auto).unwrap();
+        assert_eq!(d.triangles, expect, "direct P={p}");
+        assert_eq!(d.metrics.partition_accounting_divergence(), None, "direct mem P={p}");
 
         let patric_prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
         let patric_ranges = balanced_ranges(&patric_prefix, p);
-        assert_eq!(patric::run(&o, &patric_ranges).unwrap().triangles, expect, "patric P={p}");
+        let pr = patric::run(g, &o, &patric_ranges, HubThreshold::Auto).unwrap();
+        assert_eq!(pr.triangles, expect, "patric P={p}");
+        assert_eq!(pr.metrics.partition_accounting_divergence(), None, "patric mem P={p}");
 
         if p >= 2 {
             let r = dynamic_lb::run(&o, p, dynamic_lb::Options::default()).unwrap();
@@ -101,10 +109,45 @@ fn config_driven_run_matches() {
     cfg.set("workload", "pa:800:6").unwrap();
     cfg.set("procs", "5").unwrap();
     let g = cfg.build_graph().unwrap();
-    let o = Arc::new(Oriented::from_graph(&g));
+    let o = Oriented::from_graph(&g);
     let expect = node_iterator::count(&o);
     let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
     let ranges = balanced_ranges(&prefix, cfg.procs);
-    let owner = Arc::new(owner_table(&ranges, o.num_nodes()));
-    assert_eq!(surrogate::run(&o, &ranges, &owner).unwrap().triangles, expect);
+    assert_eq!(
+        surrogate::run(&o, &ranges, cfg.hub_threshold).unwrap().triangles,
+        expect
+    );
+}
+
+/// The issue's required matrix: owned-partition counts equal the
+/// shared-view oracle (`seq::node_iterator` over the full graph) across
+/// PA / R-MAT / ER at P ∈ {1, 2, 8}, for all three §IV drivers.
+#[test]
+fn owned_partitions_match_shared_oracle_across_generators() {
+    let mut rng = Rng::seeded(2024);
+    let graphs: Vec<(&str, Csr)> = vec![
+        ("pa", tricount::gen::pa::preferential_attachment(1500, 8, &mut rng)),
+        ("rmat", tricount::gen::rmat::rmat(9, 6, Default::default(), &mut rng)),
+        ("er", tricount::gen::erdos_renyi::gnm(1200, 6000, &mut rng)),
+    ];
+    for (name, g) in &graphs {
+        let o = Oriented::from_graph(g);
+        let expect = node_iterator::count(&o);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        for p in [1usize, 2, 8] {
+            let ranges = balanced_ranges(&prefix, p);
+            let s = surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
+            assert_eq!(s.triangles, expect, "{name} surrogate P={p}");
+            assert_eq!(s.metrics.partition_accounting_divergence(), None, "{name} P={p}");
+            let d = direct::run(&o, &ranges, HubThreshold::Auto).unwrap();
+            assert_eq!(d.triangles, expect, "{name} direct P={p}");
+            let pr = patric::run(g, &o, &ranges, HubThreshold::Auto).unwrap();
+            assert_eq!(pr.triangles, expect, "{name} patric P={p}");
+            // Non-overlapping residency bounded by PATRIC's overlap.
+            assert!(
+                s.metrics.max_partition_bytes() <= pr.metrics.max_partition_bytes(),
+                "{name} P={p}: ours must not exceed overlap"
+            );
+        }
+    }
 }

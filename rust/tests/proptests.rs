@@ -5,14 +5,16 @@
 
 use std::sync::Arc;
 
+use tricount::adj::HubThreshold;
 use tricount::algo::tasks;
 use tricount::config::CostFn;
 use tricount::gen::rng::Rng;
 use tricount::graph::ordering::Oriented;
-use tricount::partition::balance::{balanced_ranges, owner_table};
+use tricount::partition::balance::{balanced_ranges, owner_table, OwnerTable};
 use tricount::partition::cost::{cost_vector, prefix_sums};
 use tricount::partition::nonoverlap::partition_sizes;
 use tricount::partition::overlap::overlap_sizes;
+use tricount::partition::owned;
 use tricount::prop::{arb_graph, arb_update_batches, quickcheck};
 use tricount::seq::{naive, node_iterator};
 use tricount::stream::compact::CompactionPolicy;
@@ -57,10 +59,32 @@ fn prop_owner_table_consistent_with_ranges() {
         let p = 1 + rng.below_usize(8);
         let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
         let owner = owner_table(&ranges, g.num_nodes());
+        let compact = OwnerTable::new(&ranges);
         for v in 0..g.num_nodes() as u32 {
             let i = owner[v as usize] as usize;
             if !ranges[i].contains(&v) {
                 return Err(format!("node {v} routed to rank {i} ({:?})", ranges[i]));
+            }
+            // The O(P) bounds table must route identically to the O(n) one.
+            if compact.owner_of(v) as usize != i {
+                return Err(format!("OwnerTable routes {v} to {}, dense to {i}", compact.owner_of(v)));
+            }
+        }
+        // Owner runs tile every oriented list with correctly-owned runs.
+        for v in 0..g.num_nodes() as u32 {
+            let nv = o.nbrs(v);
+            let mut at = 0usize;
+            for (j, run) in compact.runs(nv) {
+                if run.start != at || run.is_empty() {
+                    return Err(format!("runs of N_{v} do not tile: {run:?} at {at}"));
+                }
+                at = run.end;
+                if nv[run].iter().any(|&u| owner[u as usize] != j) {
+                    return Err(format!("run of N_{v} misrouted to {j}"));
+                }
+            }
+            if at != nv.len() {
+                return Err(format!("runs of N_{v} stop at {at}/{}", nv.len()));
             }
         }
         Ok(())
@@ -96,6 +120,46 @@ fn prop_overlap_dominates_nonoverlap_per_range() {
             if b.edges < a.edges || b.all_nodes < a.all_nodes {
                 return Err(format!("partition {i}: overlap {b:?} < non {a:?}"));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_owned_partitions_measure_exactly_what_predictions_say() {
+    // The PR 4 invariant: materialized per-rank storage equals the
+    // arithmetic size accounting byte-for-byte, for both layouts, and the
+    // §IV drivers report the same numbers through their metrics.
+    quickcheck("owned resident bytes == predicted bytes", |rng, case| {
+        let g = arb_graph(rng, 70);
+        let o = Oriented::from_graph(&g);
+        let p = 1 + rng.below_usize(8);
+        let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), p);
+        let parts = owned::extract_nonoverlapping(&o, &ranges, HubThreshold::Auto);
+        for (i, (part, s)) in parts.iter().zip(partition_sizes(&o, &ranges)).enumerate() {
+            if part.resident_bytes() != s.bytes() {
+                return Err(format!(
+                    "case {case} partition {i}: measured {} != predicted {}",
+                    part.resident_bytes(),
+                    s.bytes()
+                ));
+            }
+        }
+        let over = owned::extract_overlapping(&g, &o, &ranges, HubThreshold::Auto);
+        for (i, (part, s)) in over.iter().zip(overlap_sizes(&g, &o, &ranges)).enumerate() {
+            if part.resident_bytes() != s.bytes() {
+                return Err(format!(
+                    "case {case} overlap partition {i}: measured {} != predicted {}",
+                    part.resident_bytes(),
+                    s.bytes()
+                ));
+            }
+        }
+        // End-to-end: the drivers' metrics carry the same exact accounting.
+        let r = tricount::algo::surrogate::run(&o, &ranges, HubThreshold::Auto)
+            .map_err(|e| e.to_string())?;
+        if r.metrics.partition_accounting_divergence().is_some() {
+            return Err(format!("case {case}: surrogate metrics diverged"));
         }
         Ok(())
     });
@@ -156,8 +220,8 @@ fn prop_surrogate_message_elimination() {
         let o = Arc::new(Oriented::from_graph(&g));
         let p = 1 + rng.below_usize(6);
         let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
-        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
-        let r = tricount::algo::surrogate::run(&o, &ranges, &owner)
+        let owner = owner_table(&ranges, g.num_nodes());
+        let r = tricount::algo::surrogate::run(&o, &ranges, HubThreshold::Auto)
             .map_err(|e| e.to_string())?;
         let mut expect = 0u64;
         for v in 0..g.num_nodes() as u32 {
@@ -190,8 +254,7 @@ fn prop_all_parallel_algorithms_match_oracle() {
         }
         let p = 1 + rng.below_usize(5);
         let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), p);
-        let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
-        let s = tricount::algo::surrogate::run(&o, &ranges, &owner)
+        let s = tricount::algo::surrogate::run(&o, &ranges, HubThreshold::Auto)
             .map_err(|e| e.to_string())?
             .triangles;
         if s != expect {
@@ -199,7 +262,7 @@ fn prop_all_parallel_algorithms_match_oracle() {
         }
         // Alternate direct/dynamic to keep runtime bounded.
         if i % 2 == 0 {
-            let d = tricount::algo::direct::run(&o, &ranges, &owner)
+            let d = tricount::algo::direct::run(&o, &ranges, HubThreshold::Auto)
                 .map_err(|e| e.to_string())?
                 .triangles;
             if d != expect {
@@ -340,8 +403,8 @@ fn prop_hybrid_counts_equal_pure_sorted_across_drivers() {
                     let p = 1 + rng.below_usize(4);
                     let ranges =
                         balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Hybrid)), p);
-                    let owner = Arc::new(owner_table(&ranges, g.num_nodes()));
-                    tricount::algo::surrogate::run(&o, &ranges, &owner)
+                    // Partitions inherit the tested hub policy directly.
+                    tricount::algo::surrogate::run(&o, &ranges, t)
                         .map_err(|e| e.to_string())?
                         .triangles
                 }
@@ -354,7 +417,7 @@ fn prop_hybrid_counts_equal_pure_sorted_across_drivers() {
                     let p = 1 + rng.below_usize(4);
                     let ranges =
                         balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::Degree)), p);
-                    tricount::algo::patric::run(&o, &ranges)
+                    tricount::algo::patric::run(&g, &o, &ranges, t)
                         .map_err(|e| e.to_string())?
                         .triangles
                 }
