@@ -17,6 +17,8 @@ use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::partition::nonoverlap::partition_sizes;
 use crate::partition::owned::{self, OwnedPartition};
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::{TriangleCount, VertexId};
 
 /// Wire messages of the direct scheme.
@@ -46,9 +48,19 @@ pub fn run(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> Result<RunResult> {
+    run_on(&Fabric::Channel, graph, ranges, hub).0
+}
+
+/// [`run`] on an explicit fabric (conformance entry point).
+pub fn run_on(
+    fabric: &Fabric,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_nonoverlapping(graph, ranges, hub);
     let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned::<Msg, _>(parts, predicted, rank_main)
+    driver::run_owned_on::<Msg, _>(fabric, parts, predicted, rank_main)
 }
 
 struct RankState {
@@ -127,7 +139,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     }
 
     c.metrics.work_units = st.work;
-    c.reduce_sum(st.t);
+    c.reduce_sum(st.t)?;
     Ok(st.t)
 }
 

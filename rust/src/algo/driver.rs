@@ -9,11 +9,18 @@
 //! can capture the shared `Arc<Oriented>`. The harness records each rank's
 //! **measured** partition residency next to the scheme's arithmetic
 //! prediction; `tricount count` gates on their exact equality.
+//!
+//! Every driver is fabric-generic: the `*_on` entry points take a
+//! [`Fabric`] and run the identical rank program over the production
+//! channel transport or the seeded virtual transport the conformance
+//! suite schedules adversarially (`testkit::sim`, DESIGN.md §10).
 
 use crate::comm::metrics::{ClusterMetrics, CommMetrics};
-use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::comm::threads::{Comm, Payload};
 use crate::error::Result;
 use crate::partition::owned::OwnedPartition;
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::TriangleCount;
 
 /// Result of a parallel run.
@@ -37,15 +44,19 @@ pub(crate) fn fold(results: Vec<(TriangleCount, CommMetrics)>) -> RunResult {
 }
 
 /// Run a fallible per-rank program over owned partitions, one rank per
-/// partition. `predicted[i]` is the scheme's byte prediction for partition
-/// `i` ([`crate::partition::nonoverlap::PartitionSize::bytes`] or
+/// partition, on the chosen fabric. `predicted[i]` is the scheme's byte
+/// prediction for partition `i`
+/// ([`crate::partition::nonoverlap::PartitionSize::bytes`] or
 /// [`crate::partition::overlap::OverlapSize::bytes`]); the measured
-/// residency is taken from the partition each rank actually held.
-pub(crate) fn run_owned<M, F>(
+/// residency is taken from the partition each rank actually held. The
+/// trace is `Some` iff the fabric is virtual, and is returned even when
+/// the run errors (fault schedules are replay-checkable).
+pub(crate) fn run_owned_on<M, F>(
+    fabric: &Fabric,
     parts: Vec<OwnedPartition>,
     predicted: Vec<u64>,
     rank_main: F,
-) -> Result<RunResult>
+) -> (Result<RunResult>, Option<TraceReport>)
 where
     M: Payload,
     F: Fn(&mut Comm<M>, &OwnedPartition) -> Result<TriangleCount> + Sync,
@@ -53,15 +64,19 @@ where
     let p = parts.len();
     debug_assert_eq!(p, predicted.len());
     let parts = &parts;
-    let results = Cluster::try_run::<M, TriangleCount, _>(p, |c| {
+    let (results, trace) = fabric.try_run::<M, TriangleCount, _>(p, |c| {
         let part = &parts[c.rank()];
         c.metrics.partition_bytes = part.resident_bytes();
         c.metrics.accel_bytes = part.accel_bytes();
         rank_main(c, part)
-    })?;
+    });
+    let results = match results {
+        Ok(r) => r,
+        Err(e) => return (Err(e), trace),
+    };
     let mut run = fold(results);
     for (m, pred) in run.metrics.per_rank.iter_mut().zip(predicted) {
         m.partition_bytes_pred = pred;
     }
-    Ok(run)
+    (Ok(run), trace)
 }

@@ -18,12 +18,14 @@ use std::sync::Arc;
 
 use crate::algo::driver::{self, RunResult};
 use crate::algo::tasks::{self, Task};
-use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::comm::threads::{Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::partition::cost::{cost_vector, prefix_sums};
 use crate::seq::node_iterator;
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::TriangleCount;
 
 /// Task-granularity policy for the dynamic phase.
@@ -72,10 +74,21 @@ impl Default for Options {
 /// Run with `p` ranks (1 coordinator + `p−1` workers; `p ≥ 2` or the run
 /// is rejected as an invalid configuration).
 pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> {
+    run_on(&Fabric::Channel, graph, p, opts).0
+}
+
+/// [`run`] on an explicit fabric (conformance entry point).
+pub fn run_on(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+    opts: Options,
+) -> (Result<RunResult>, Option<TraceReport>) {
     if p < 2 {
-        return Err(crate::error::Error::Config(format!(
+        let e = crate::error::Error::Config(format!(
             "dynamic-lb needs P >= 2 (a coordinator and at least one worker), got P={p}"
-        )));
+        ));
+        return (Err(e), None);
     }
     let costs = cost_vector(graph, opts.cost_fn);
     let prefix = Arc::new(prefix_sums(&costs));
@@ -90,15 +103,17 @@ pub fn run(graph: &Arc<Oriented>, p: usize, opts: Options) -> Result<RunResult> 
         Granularity::Fixed(k) => tasks::fixed_tasks(&prefix, tp, k),
     });
 
-    let results = Cluster::try_run::<Msg, TriangleCount, _>(p, |c| {
+    let (results, trace) = fabric.try_run::<Msg, TriangleCount, _>(p, |c| {
         if c.rank() == 0 {
             coordinator(c, &queue)
         } else {
             worker(c, graph.clone(), &initial, &prefix)
         }
-    })?;
-
-    Ok(driver::fold(results))
+    });
+    match results {
+        Ok(r) => (Ok(driver::fold(r)), trace),
+        Err(e) => (Err(e), trace),
+    }
 }
 
 /// Coordinator (paper Fig 11 lines 4-12). Comm failures propagate as
@@ -123,7 +138,7 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<TriangleCoun
             _ => unreachable!("coordinator only receives requests"),
         }
     }
-    c.reduce_sum(0);
+    c.reduce_sum(0)?;
     Ok(0)
 }
 
@@ -155,7 +170,7 @@ fn worker(
     }
 
     c.metrics.work_units = work;
-    c.reduce_sum(t);
+    c.reduce_sum(t)?;
     Ok(t)
 }
 

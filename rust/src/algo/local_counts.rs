@@ -12,11 +12,14 @@ use std::sync::Arc;
 
 use crate::adj;
 use crate::algo::tasks::{self, Task};
-use crate::comm::threads::{Cluster, Comm, Payload};
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::{Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 
 enum Msg {
     Request,
@@ -35,7 +38,23 @@ impl Payload for Msg {
 
 /// Compute `T_v` for every node on `p` ranks (1 coordinator + p−1 workers).
 pub fn per_node_counts(graph: &Arc<Oriented>, p: usize) -> Result<Vec<u64>> {
-    assert!(p >= 2);
+    per_node_counts_on(&Fabric::Channel, graph, p).0.map(|(tv, _)| tv)
+}
+
+/// [`per_node_counts`] on an explicit fabric (conformance entry point);
+/// also returns the per-rank comm metrics so the suite can check the
+/// sent == received invariants.
+pub fn per_node_counts_on(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+) -> (Result<(Vec<u64>, ClusterMetrics)>, Option<TraceReport>) {
+    if p < 2 {
+        let e = crate::error::Error::Config(format!(
+            "per-node counts need P >= 2 (a coordinator and at least one worker), got P={p}"
+        ));
+        return (Err(e), None);
+    }
     let n = graph.num_nodes();
     let workers = p - 1;
     let prefix = Arc::new(prefix_sums(&cost_vector(graph, CostFn::Degree)));
@@ -43,22 +62,28 @@ pub fn per_node_counts(graph: &Arc<Oriented>, p: usize) -> Result<Vec<u64>> {
     let initial = Arc::new(tasks::equal_cost_tasks(&prefix, 0, tp, workers));
     let queue = Arc::new(tasks::shrinking_tasks(&prefix, tp, workers));
 
-    let results = Cluster::try_run::<Msg, Vec<u64>, _>(p, |c| {
+    let (results, trace) = fabric.try_run::<Msg, Vec<u64>, _>(p, |c| {
         if c.rank() == 0 {
             coordinator(c, &queue)?;
             Ok(Vec::new())
         } else {
             worker(c, graph.clone(), &initial, n)
         }
-    })?;
+    });
+    let results = match results {
+        Ok(r) => r,
+        Err(e) => return (Err(e), trace),
+    };
 
     let mut out = vec![0u64; n];
-    for (tv, _) in results {
+    let mut metrics = ClusterMetrics::default();
+    for (tv, m) in results {
         for (i, t) in tv.iter().enumerate() {
             out[i] += t;
         }
+        metrics.per_rank.push(m);
     }
-    Ok(out)
+    (Ok((out, metrics)), trace)
 }
 
 fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
@@ -80,7 +105,7 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
             _ => unreachable!(),
         }
     }
-    c.barrier();
+    c.barrier()?;
     Ok(())
 }
 
@@ -98,7 +123,7 @@ fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usiz
             Msg::Request => unreachable!(),
         }
     }
-    c.barrier();
+    c.barrier()?;
     Ok(tv)
 }
 

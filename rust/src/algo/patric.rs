@@ -23,6 +23,8 @@ use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
 use crate::partition::overlap::overlap_sizes;
 use crate::partition::owned::{self, OwnedPartition};
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::TriangleCount;
 
 /// Run PATRIC over consecutive core ranges (balanced with its own best
@@ -36,9 +38,23 @@ pub fn run(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> Result<RunResult> {
+    run_on(&Fabric::Channel, g, graph, ranges, hub).0
+}
+
+/// [`run`] on an explicit fabric (conformance entry point). PATRIC sends
+/// no data messages, so the only protocol surface the virtual fabric
+/// exercises is the final reduction — which is exactly where a dead rank
+/// must surface as an `Err` instead of a hang.
+pub fn run_on(
+    fabric: &Fabric,
+    g: &Csr,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_overlapping(g, graph, ranges, hub);
     let predicted = overlap_sizes(g, graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned::<u64, _>(parts, predicted, rank_main)
+    driver::run_owned_on::<u64, _>(fabric, parts, predicted, rank_main)
 }
 
 fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> {
@@ -54,7 +70,7 @@ fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> 
         }
     }
     c.metrics.work_units = work;
-    c.reduce_sum(t);
+    c.reduce_sum(t)?;
     Ok(t)
 }
 

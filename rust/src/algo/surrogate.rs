@@ -24,6 +24,8 @@ use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::partition::nonoverlap::partition_sizes;
 use crate::partition::owned::{self, OwnedPartition};
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::{TriangleCount, VertexId};
 
 /// Wire messages of the space-efficient algorithm (§IV-A: `⟨t, X⟩`).
@@ -85,9 +87,21 @@ pub fn run(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> Result<RunResult> {
+    run_on(&Fabric::Channel, graph, ranges, hub).0
+}
+
+/// [`run`] on an explicit fabric — the conformance suite passes
+/// `Fabric::Sim` to drive this exact protocol through adversarial
+/// schedules; the trace is `Some` iff the fabric is virtual.
+pub fn run_on(
+    fabric: &Fabric,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_nonoverlapping(graph, ranges, hub);
     let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned::<Msg, _>(parts, predicted, rank_main)
+    driver::run_owned_on::<Msg, _>(fabric, parts, predicted, rank_main)
 }
 
 /// The per-rank program (paper Fig 3 lines 1-22 + reduce).
@@ -133,7 +147,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
 
     c.metrics.work_units = work;
     // Lines 24-25: barrier + reduce.
-    c.reduce_sum(t);
+    c.reduce_sum(t)?;
     Ok(t)
 }
 

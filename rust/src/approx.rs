@@ -115,4 +115,77 @@ mod tests {
         let est = wedge_sampling(&g, 5_000, &mut Rng::seeded(7));
         assert_eq!(est as u64, 120);
     }
+
+    #[test]
+    fn doulion_unbiased_on_er_within_concentration() {
+        // ER is the near-regular regime: DOULION's variance is mild, so a
+        // modest trial mean must sit close to the exact count.
+        let g = crate::gen::erdos_renyi::gnm(2000, 16_000, &mut Rng::seeded(21));
+        let exact = node_iterator::count(&Oriented::from_graph(&g)) as f64;
+        assert!(exact > 0.0, "need a graph with triangles");
+        let mut rng = Rng::seeded(22);
+        let trials = 30;
+        let mean: f64 =
+            (0..trials).map(|_| doulion(&g, 0.5, &mut rng)).sum::<f64>() / trials as f64;
+        let rel = (mean - exact).abs() / exact;
+        assert!(rel < 0.2, "mean {mean} vs exact {exact} (rel {rel:.3})");
+    }
+
+    #[test]
+    fn wedge_closure_fraction_concentrates_on_pa() {
+        // Hoeffding: with k iid wedge samples, the closure fraction p̂
+        // deviates from p = 3T/W by more than ε with prob ≤ 2·exp(−2kε²).
+        // k = 40_000, ε = 0.03 ⇒ prob < 10⁻³¹ — a failure here is a bug,
+        // not bad luck.
+        let g = crate::gen::pa::preferential_attachment(3000, 16, &mut Rng::seeded(23));
+        let o = Oriented::from_graph(&g);
+        let t = node_iterator::count(&o) as f64;
+        let wedges: f64 = (0..g.num_nodes() as VertexId)
+            .map(|v| {
+                let d = g.degree(v) as f64;
+                d * (d - 1.0) / 2.0
+            })
+            .sum();
+        let k = 40_000;
+        let est = wedge_sampling(&g, k, &mut Rng::seeded(24));
+        let p_hat = 3.0 * est / wedges;
+        let p = 3.0 * t / wedges;
+        assert!((p_hat - p).abs() < 0.03, "p̂ {p_hat:.4} vs p {p:.4}");
+    }
+
+    #[test]
+    fn prop_doulion_p1_is_exact_on_arbitrary_graphs() {
+        crate::prop::quickcheck("doulion(p=1) == exact", |rng, _| {
+            let g = crate::prop::arb_graph(rng, 80);
+            let exact = node_iterator::count(&Oriented::from_graph(&g)) as f64;
+            let est = doulion(&g, 1.0, rng);
+            if est != exact {
+                return Err(format!("p=1 estimate {est} != exact {exact}"));
+            }
+            // Any keep-probability must produce a finite, non-negative
+            // estimate (no panic, no NaN) on arbitrary inputs.
+            let p = 0.05 + 0.95 * rng.f64();
+            let est = doulion(&g, p, rng);
+            if !(est.is_finite() && est >= 0.0) {
+                return Err(format!("p={p}: degenerate estimate {est}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_inputs_return_zero_without_panicking() {
+        // Empty graphs — zero nodes and zero edges — and triangle-free
+        // graphs must yield exactly 0 from both estimators.
+        for g in [crate::graph::csr::Csr::empty(0), crate::graph::csr::Csr::empty(12)] {
+            assert_eq!(doulion(&g, 0.5, &mut Rng::seeded(1)), 0.0);
+            assert_eq!(wedge_sampling(&g, 1_000, &mut Rng::seeded(2)), 0.0);
+        }
+        // Triangle-free with wedges (star) and without hubs (Petersen).
+        for g in [classic::star(40), classic::petersen()] {
+            assert_eq!(doulion(&g, 1.0, &mut Rng::seeded(3)), 0.0);
+            assert_eq!(doulion(&g, 0.4, &mut Rng::seeded(4)), 0.0);
+            assert_eq!(wedge_sampling(&g, 5_000, &mut Rng::seeded(5)), 0.0);
+        }
+    }
 }

@@ -1,7 +1,7 @@
 //! Threaded message-passing backend — the crate's "MPI".
 //!
 //! Each of the `P` ranks runs on its own OS thread with private state;
-//! ranks communicate **only** through typed point-to-point channels plus a
+//! ranks communicate **only** through a [`Transport`] endpoint plus a
 //! barrier, mirroring the paper's distributed-memory model (§II Computation
 //! Model). No rank reads another rank's partition; the dynamic-LB algorithm
 //! shares the graph read-only via `Arc`, which is faithful to §V's
@@ -9,15 +9,22 @@
 //!
 //! The API is deliberately MPI-shaped: `send`, `try_recv`, `recv_timeout`,
 //! `barrier`, `reduce_sum` — so the algorithm modules read like the paper's
-//! pseudocode.
+//! pseudocode. [`Comm`] owns the per-rank metrics and dispatches every
+//! operation to one of two fabrics behind the [`Transport`] trait
+//! (`comm::transport`): the production [`ChannelTransport`] (the default —
+//! `Cluster::run`/`try_run` are byte-for-byte the seed behavior), or the
+//! seeded deterministic `testkit::sim` fabric the conformance suite drives
+//! adversarial schedules through (DESIGN.md §10).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Barrier, Mutex, OnceLock};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::comm::metrics::CommMetrics;
+use crate::comm::transport::{channel_fabric, ChannelTransport, Envelope, Transport};
 use crate::error::{Error, Result};
+use crate::testkit::sim::VirtualEndpoint;
+
+pub use crate::comm::transport::Payload;
 
 /// Default guard against protocol deadlocks in tests/CI. Override with the
 /// `TRICOUNT_RECV_GUARD_SECS` env var (whole seconds, > 0) for large-graph
@@ -43,50 +50,52 @@ fn guard_from(val: Option<&str>) -> Duration {
     }
 }
 
-/// Internal channel envelope: sender rank, control-plane flag, payload.
-/// The flag lets the receive side account control traffic apart from data
-/// (the send side already does), keeping [`CommMetrics`] symmetric.
-struct Envelope<M> {
-    src: usize,
-    control: bool,
-    msg: M,
+/// The fabric a [`Comm`] runs over. An enum (not a box), and every call
+/// dispatches through a per-variant `match` (the [`with_transport!`]
+/// macro) rather than a trait object, so the channel path keeps genuine
+/// static dispatch — the seed's channel code with one predictable branch
+/// in front, no vtable on the hot path.
+enum Backend<M: Payload> {
+    Channel(ChannelTransport<M>),
+    Virtual(VirtualEndpoint<M>),
 }
 
-/// Messages must declare their wire size so the metrics layer can account
-/// bytes the way the paper reasons about them (neighbor-list words).
-pub trait Payload: Send + 'static {
-    /// Serialized size in bytes if this were on an MPI wire.
-    fn size_bytes(&self) -> u64;
+/// Statically dispatch one [`Transport`] call to the active variant.
+macro_rules! with_transport {
+    ($backend:expr, $t:ident => $call:expr) => {
+        match $backend {
+            Backend::Channel($t) => $call,
+            Backend::Virtual($t) => $call,
+        }
+    };
 }
 
-struct Shared {
-    barrier: Barrier,
-    reduce_cells: Mutex<Vec<u64>>,
-    reduce_acc: AtomicU64,
-}
-
-/// A rank's endpoint: its id, channels to every peer, and its metrics.
+/// A rank's endpoint: its transport and its metrics.
 pub struct Comm<M: Payload> {
-    rank: usize,
-    size: usize,
-    senders: Vec<Sender<Envelope<M>>>,
-    receiver: Receiver<Envelope<M>>,
-    shared: Arc<Shared>,
+    backend: Backend<M>,
     /// Per-rank counters, returned to the driver by [`Cluster::run`].
     pub metrics: CommMetrics,
 }
 
 impl<M: Payload> Comm<M> {
+    pub(crate) fn from_channel(t: ChannelTransport<M>) -> Self {
+        Comm { backend: Backend::Channel(t), metrics: CommMetrics::default() }
+    }
+
+    pub(crate) fn from_virtual(t: VirtualEndpoint<M>) -> Self {
+        Comm { backend: Backend::Virtual(t), metrics: CommMetrics::default() }
+    }
+
     /// This rank's id in `0..size`.
     #[inline]
     pub fn rank(&self) -> usize {
-        self.rank
+        with_transport!(&self.backend, t => t.rank())
     }
 
     /// Number of ranks `P`.
     #[inline]
     pub fn size(&self) -> usize {
-        self.size
+        with_transport!(&self.backend, t => t.size())
     }
 
     /// Point-to-point send (asynchronous, unbounded buffering — MPI eager
@@ -94,24 +103,22 @@ impl<M: Payload> Comm<M> {
     pub fn send(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.messages_sent += 1;
         self.metrics.bytes_sent += msg.size_bytes();
-        self.senders[dst]
-            .send(Envelope { src: self.rank, control: false, msg })
-            .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
+        let src = self.rank();
+        with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: false, msg }))
     }
 
     /// Control-plane send (completion notifiers, task protocol): accounted
     /// separately from data messages, on both endpoints.
     pub fn send_control(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.control_sent += 1;
-        self.senders[dst]
-            .send(Envelope { src: self.rank, control: true, msg })
-            .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
+        let src = self.rank();
+        with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: true, msg }))
     }
 
-    /// Broadcast a control message to every other rank via `clone_fn`.
+    /// Broadcast a control message to every other rank via `make`.
     pub fn bcast_control(&mut self, make: impl Fn() -> M) -> Result<()> {
-        for dst in 0..self.size {
-            if dst != self.rank {
+        for dst in 0..self.size() {
+            if dst != self.rank() {
                 self.send_control(dst, make())?;
             }
         }
@@ -131,50 +138,30 @@ impl<M: Payload> Comm<M> {
 
     /// Non-blocking receive.
     pub fn try_recv(&mut self) -> Option<(usize, M)> {
-        match self.receiver.try_recv() {
-            Ok(env) => Some(self.accept(env)),
-            Err(_) => None,
-        }
+        let env = with_transport!(&mut self.backend, t => t.try_recv())?;
+        Some(self.accept(env))
     }
 
     /// Blocking receive with the deadlock guard; records wait time as idle.
+    /// On the channel fabric the guard is [`recv_guard`] wall-clock; on the
+    /// virtual fabric it is exact deadlock detection under virtual time.
     pub fn recv(&mut self) -> Result<(usize, M)> {
-        let guard = recv_guard();
         let start = Instant::now();
-        let r = self.receiver.recv_timeout(guard);
+        let r = with_transport!(&mut self.backend, t => t.recv());
         self.metrics.recv_wait += start.elapsed();
-        match r {
-            Ok(env) => Ok(self.accept(env)),
-            Err(RecvTimeoutError::Timeout) => Err(Error::Cluster(format!(
-                "rank {} recv timed out after {guard:?} (protocol deadlock?)",
-                self.rank
-            ))),
-            Err(RecvTimeoutError::Disconnected) => {
-                Err(Error::Cluster(format!("rank {} peers disconnected", self.rank)))
-            }
-        }
+        r.map(|env| self.accept(env))
     }
 
-    /// Synchronize all ranks (MPI_Barrier).
-    pub fn barrier(&self) {
-        self.shared.barrier.wait();
+    /// Synchronize all ranks (MPI_Barrier). Fails instead of hanging when
+    /// the fabric can prove completion impossible (virtual fabric only).
+    pub fn barrier(&mut self) -> Result<()> {
+        with_transport!(&mut self.backend, t => t.barrier())
     }
 
     /// Sum-reduce a u64 across all ranks; everyone receives the total
-    /// (MPI_Allreduce(SUM)). Internally: write cell → barrier → read.
-    pub fn reduce_sum(&self, value: u64) -> u64 {
-        {
-            let mut cells = self.shared.reduce_cells.lock().unwrap();
-            cells[self.rank] = value;
-        }
-        self.shared.barrier.wait();
-        if self.rank == 0 {
-            let cells = self.shared.reduce_cells.lock().unwrap();
-            let sum = cells.iter().sum();
-            self.shared.reduce_acc.store(sum, Ordering::SeqCst);
-        }
-        self.shared.barrier.wait();
-        self.shared.reduce_acc.load(Ordering::SeqCst)
+    /// (MPI_Allreduce(SUM)).
+    pub fn reduce_sum(&mut self, value: u64) -> Result<u64> {
+        with_transport!(&mut self.backend, t => t.reduce_sum(value))
     }
 }
 
@@ -182,8 +169,9 @@ impl<M: Payload> Comm<M> {
 pub struct Cluster;
 
 impl Cluster {
-    /// Run `f(rank_comm)` on `p` ranks; returns each rank's result and its
-    /// metrics, indexed by rank. Propagates rank panics as [`Error::Cluster`].
+    /// Run `f(rank_comm)` on `p` ranks over the channel fabric; returns
+    /// each rank's result and its metrics, indexed by rank. Propagates rank
+    /// panics as [`Error::Cluster`].
     pub fn run<M, R, F>(p: usize, f: F) -> Result<Vec<(R, CommMetrics)>>
     where
         M: Payload,
@@ -206,33 +194,20 @@ impl Cluster {
         F: Fn(&mut Comm<M>) -> Result<R> + Sync,
     {
         assert!(p >= 1, "cluster needs at least one rank");
-        let mut senders = Vec::with_capacity(p);
-        let mut receivers = Vec::with_capacity(p);
-        for _ in 0..p {
-            let (tx, rx) = std::sync::mpsc::channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let shared = Arc::new(Shared {
-            barrier: Barrier::new(p),
-            reduce_cells: Mutex::new(vec![0; p]),
-            reduce_acc: AtomicU64::new(0),
-        });
+        let comms = channel_fabric(p).into_iter().map(Comm::from_channel).collect();
+        Self::launch(comms, f)
+    }
 
-        let mut comms: Vec<Comm<M>> = receivers
-            .into_iter()
-            .enumerate()
-            .map(|(rank, receiver)| Comm {
-                rank,
-                size: p,
-                senders: senders.clone(),
-                receiver,
-                shared: shared.clone(),
-                metrics: CommMetrics::default(),
-            })
-            .collect();
-        drop(senders);
-
+    /// Spawn one thread per pre-built endpoint, run `f`, join, and fold
+    /// panics/errors. Shared by [`Cluster::try_run`] (channel fabric) and
+    /// `testkit::sim::try_run_sim` (virtual fabric).
+    pub(crate) fn launch<M, R, F>(mut comms: Vec<Comm<M>>, f: F) -> Result<Vec<(R, CommMetrics)>>
+    where
+        M: Payload,
+        R: Send,
+        F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+    {
+        let p = comms.len();
         let f = &f;
         let results: Vec<std::thread::Result<(Result<R>, CommMetrics)>> =
             std::thread::scope(|s| {
@@ -240,6 +215,7 @@ impl Cluster {
                     .drain(..)
                     .map(|mut comm| {
                         s.spawn(move || {
+                            with_transport!(&mut comm.backend, t => t.start());
                             let start = Instant::now();
                             let r = f(&mut comm);
                             comm.metrics.total = start.elapsed();
@@ -269,21 +245,10 @@ impl Cluster {
     }
 }
 
-impl Payload for Vec<u32> {
-    fn size_bytes(&self) -> u64 {
-        (self.len() * 4) as u64
-    }
-}
-
-impl Payload for u64 {
-    fn size_bytes(&self) -> u64 {
-        8
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn ring_pass() {
@@ -302,7 +267,8 @@ mod tests {
 
     #[test]
     fn reduce_sum_all_ranks_see_total() {
-        let res = Cluster::run::<u64, u64, _>(5, |c| c.reduce_sum(c.rank() as u64 + 1)).unwrap();
+        let res =
+            Cluster::run::<u64, u64, _>(5, |c| c.reduce_sum(c.rank() as u64 + 1).unwrap()).unwrap();
         for (v, _) in res {
             assert_eq!(v, 15);
         }
@@ -384,7 +350,7 @@ mod tests {
         let p1 = phase1.clone();
         Cluster::run::<u64, (), _>(4, move |c| {
             p1.fetch_add(1, Ordering::SeqCst);
-            c.barrier();
+            c.barrier().unwrap();
             // After the barrier every rank must observe all 4 increments.
             assert_eq!(p1.load(Ordering::SeqCst), 4);
         })
@@ -393,7 +359,7 @@ mod tests {
 
     #[test]
     fn single_rank_cluster() {
-        let res = Cluster::run::<u64, u64, _>(1, |c| c.reduce_sum(7)).unwrap();
+        let res = Cluster::run::<u64, u64, _>(1, |c| c.reduce_sum(7).unwrap()).unwrap();
         assert_eq!(res[0].0, 7);
     }
 

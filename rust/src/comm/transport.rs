@@ -1,0 +1,196 @@
+//! The transport abstraction under [`crate::comm::threads::Comm`].
+//!
+//! The paper's algorithms are message-passing *protocols*; which fabric
+//! carries the messages is an implementation detail the protocol must not
+//! depend on. This module pins that contract as the [`Transport`] trait and
+//! provides the production implementation, [`ChannelTransport`]: one
+//! unbounded mpsc channel per rank plus a shared barrier/reduce cell —
+//! exactly the seed's `comm::threads` internals, extracted unchanged.
+//!
+//! The second implementation is `testkit::sim::VirtualEndpoint`: a seeded,
+//! deterministically scheduled fabric with virtual time, adversarial
+//! delivery orders and injectable faults, used by the conformance suite to
+//! pin protocol correctness under schedules the OS scheduler would produce
+//! once a year at 3am (DESIGN.md §10).
+//!
+//! Semantics every implementation must honor (the MPI subset the
+//! algorithms assume):
+//!
+//! * **Non-overtaking per (src, dst) pair**: two messages from the same
+//!   sender to the same receiver are delivered in send order. Messages
+//!   from *different* senders may interleave arbitrarily.
+//! * `send` is asynchronous with unbounded buffering (MPI eager mode).
+//! * `barrier`/`reduce_sum` are collectives over all ranks; they are
+//!   fallible because a fabric may detect that completion has become
+//!   impossible (a dead rank) instead of hanging.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::comm::threads::recv_guard;
+use crate::error::{Error, Result};
+
+/// Messages must declare their wire size so the metrics layer can account
+/// bytes the way the paper reasons about them (neighbor-list words).
+pub trait Payload: Send + 'static {
+    /// Serialized size in bytes if this were on an MPI wire.
+    fn size_bytes(&self) -> u64;
+}
+
+impl Payload for Vec<u32> {
+    fn size_bytes(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+}
+
+impl Payload for u64 {
+    fn size_bytes(&self) -> u64 {
+        8
+    }
+}
+
+/// Wire envelope: sender rank, control-plane flag, payload. The flag lets
+/// the receive side account control traffic apart from data (the send side
+/// already does), keeping `CommMetrics` symmetric.
+pub struct Envelope<M> {
+    pub src: usize,
+    pub control: bool,
+    pub msg: M,
+}
+
+/// A rank's endpoint into some message fabric. `Comm` stores one per rank
+/// (inline, as an enum variant) and dispatches each call statically per
+/// variant, so every counting path runs unmodified over any implementation
+/// with no vtable on the channel hot path. The trait is kept object-safe
+/// anyway so external harnesses may box their own fabrics.
+pub trait Transport<M: Payload>: Send {
+    /// This rank's id in `0..size`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks `P`.
+    fn size(&self) -> usize;
+
+    /// Called once by the launcher before the rank program runs. Fabrics
+    /// that gate execution (the virtual scheduler) block here until the
+    /// rank is scheduled; the channel fabric starts immediately.
+    fn start(&mut self) {}
+
+    /// Asynchronous point-to-point send (self-send allowed).
+    fn send(&mut self, dst: usize, env: Envelope<M>) -> Result<()>;
+
+    /// Non-blocking receive.
+    fn try_recv(&mut self) -> Option<Envelope<M>>;
+
+    /// Blocking receive. Must not hang forever: implementations bound the
+    /// wait (wall-clock guard on channels, virtual-time deadlock detection
+    /// on the simulator) and surface it as an `Err`.
+    fn recv(&mut self) -> Result<Envelope<M>>;
+
+    /// Synchronize all ranks (MPI_Barrier).
+    fn barrier(&mut self) -> Result<()>;
+
+    /// Sum-reduce a u64 across all ranks; everyone receives the total
+    /// (MPI_Allreduce(SUM)).
+    fn reduce_sum(&mut self, value: u64) -> Result<u64>;
+}
+
+/// State shared by all ranks of one channel-backed cluster.
+struct ChannelShared {
+    barrier: Barrier,
+    reduce_cells: Mutex<Vec<u64>>,
+    reduce_acc: AtomicU64,
+}
+
+/// The production fabric: typed mpsc channels + `std::sync::Barrier`,
+/// exactly the seed implementation. Zero new indirection on the hot path —
+/// `Comm` holds it inline (enum variant, not a box).
+pub struct ChannelTransport<M: Payload> {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Envelope<M>>>,
+    receiver: Receiver<Envelope<M>>,
+    shared: Arc<ChannelShared>,
+}
+
+/// Build the `P` connected channel endpoints of a cluster, indexed by rank.
+pub fn channel_fabric<M: Payload>(p: usize) -> Vec<ChannelTransport<M>> {
+    let mut senders = Vec::with_capacity(p);
+    let mut receivers = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = std::sync::mpsc::channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let shared = Arc::new(ChannelShared {
+        barrier: Barrier::new(p),
+        reduce_cells: Mutex::new(vec![0; p]),
+        reduce_acc: AtomicU64::new(0),
+    });
+    receivers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, receiver)| ChannelTransport {
+            rank,
+            size: p,
+            senders: senders.clone(),
+            receiver,
+            shared: shared.clone(),
+        })
+        .collect()
+}
+
+impl<M: Payload> Transport<M> for ChannelTransport<M> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, dst: usize, env: Envelope<M>) -> Result<()> {
+        self.senders[dst]
+            .send(env)
+            .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
+    }
+
+    fn try_recv(&mut self) -> Option<Envelope<M>> {
+        self.receiver.try_recv().ok()
+    }
+
+    fn recv(&mut self) -> Result<Envelope<M>> {
+        let guard = recv_guard();
+        match self.receiver.recv_timeout(guard) {
+            Ok(env) => Ok(env),
+            Err(RecvTimeoutError::Timeout) => Err(Error::Cluster(format!(
+                "rank {} recv timed out after {guard:?} (protocol deadlock?)",
+                self.rank
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Cluster(format!("rank {} peers disconnected", self.rank)))
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.shared.barrier.wait();
+        Ok(())
+    }
+
+    /// Internally: write cell → barrier → rank 0 sums → barrier → read.
+    fn reduce_sum(&mut self, value: u64) -> Result<u64> {
+        {
+            let mut cells = self.shared.reduce_cells.lock().unwrap();
+            cells[self.rank] = value;
+        }
+        self.shared.barrier.wait();
+        if self.rank == 0 {
+            let cells = self.shared.reduce_cells.lock().unwrap();
+            let sum = cells.iter().sum();
+            self.shared.reduce_acc.store(sum, Ordering::SeqCst);
+        }
+        self.shared.barrier.wait();
+        Ok(self.shared.reduce_acc.load(Ordering::SeqCst))
+    }
+}

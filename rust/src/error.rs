@@ -23,6 +23,10 @@ pub enum Error {
     /// A parallel run failed (worker panic, channel breakage).
     Cluster(String),
 
+    /// A report cell had an unexpected type or shape (typed accessor
+    /// failure in `exp::report` — names the row, column and actual cell).
+    Report(String),
+
     /// AOT artifact missing or malformed.
     Artifact(String),
 
@@ -38,6 +42,7 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(m) => write!(f, "invalid config: {m}"),
             Error::Cluster(m) => write!(f, "cluster execution failed: {m}"),
+            Error::Report(m) => write!(f, "malformed report: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
         }

@@ -48,18 +48,13 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn dynamic_reduces_idle() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        for pair in r.rows.chunks(2) {
-            let get_max = |row: &Vec<Cell>| match row[3] {
-                Cell::Secs(x) => x,
-                _ => panic!(),
-            };
-            let (stat, dynm) = (get_max(&pair[0]), get_max(&pair[1]));
+        for i in (0..r.rows.len()).step_by(2) {
+            let stat = r.secs(i, "idle max").unwrap();
+            let dynm = r.secs(i + 1, "idle max").unwrap();
             assert!(dynm <= stat, "dynamic idle {dynm} !<= static idle {stat}");
         }
     }

@@ -42,17 +42,13 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn surrogate_dominates_direct() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        for row in &r.rows {
-            let (s, d) = match (&row[2], &row[3]) {
-                (Cell::Float(s), Cell::Float(d)) => (*s, *d),
-                _ => panic!(),
-            };
+        for i in 0..r.rows.len() {
+            let s = r.float(i, "speedup surrogate").unwrap();
+            let d = r.float(i, "speedup direct").unwrap();
             assert!(s >= d, "surrogate {s} !>= direct {d}");
         }
     }

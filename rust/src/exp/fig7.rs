@@ -55,25 +55,20 @@ materialized largest rank partition (== prediction)"
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn overlap_ratio_grows_with_degree() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        let col = |i: usize| -> Vec<f64> {
-            r.rows
-                .iter()
-                .map(|row| if let Cell::Float(x) = row[i] { x } else { panic!() })
-                .collect()
+        let col = |name: &str| -> Vec<f64> {
+            (0..r.rows.len()).map(|i| r.float(i, name).unwrap()).collect()
         };
-        let ratios = col(4);
+        let ratios = col("ratio");
         assert!(
             ratios.last().unwrap() > ratios.first().unwrap(),
             "ratio must grow with degree: {ratios:?}"
         );
         // Measured largest partition must equal the prediction on every row.
-        for (pred, meas) in col(1).iter().zip(col(2)) {
+        for (pred, meas) in col("ours MB").iter().zip(col("ours measured MB")) {
             assert!((pred - meas).abs() < 1e-9, "measured {meas} != predicted {pred}");
         }
     }

@@ -39,20 +39,17 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn memory_decreases_with_p() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
+        let mbs: Vec<f64> = (0..r.rows.len())
+            .map(|i| r.float(i, "largest partition MB").unwrap())
+            .collect();
         // Within each network the MB column must be non-increasing in P.
-        for chunk in r.rows.chunks(3) {
-            let mbs: Vec<f64> = chunk
-                .iter()
-                .map(|row| if let Cell::Float(x) = row[2] { x } else { panic!() })
-                .collect();
-            for w in mbs.windows(2) {
-                assert!(w[1] <= w[0] * 1.05, "memory must shrink with P: {mbs:?}");
+        for chunk in mbs.chunks(3) {
+            for w in chunk.windows(2) {
+                assert!(w[1] <= w[0] * 1.05, "memory must shrink with P: {chunk:?}");
             }
         }
     }

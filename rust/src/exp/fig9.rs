@@ -42,16 +42,12 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn runtime_growth_is_bounded() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        let ts: Vec<f64> = r
-            .rows
-            .iter()
-            .map(|row| if let Cell::Secs(x) = row[3] { x } else { panic!() })
+        let ts: Vec<f64> = (0..r.rows.len())
+            .map(|i| r.secs(i, "virtual runtime").unwrap())
             .collect();
         // 4× more processors+work must not blow runtime up by more than ~4×
         // (perfect weak scaling would be 1×; PA work superlinearity and comm

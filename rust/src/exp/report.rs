@@ -1,7 +1,7 @@
 //! Tabular report emitter shared by all experiment drivers: aligned text
 //! to stdout (paper-shaped rows) + CSV for plotting.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use std::io::Write;
 
 /// A cell value.
@@ -15,6 +15,53 @@ pub enum Cell {
 }
 
 impl Cell {
+    /// Variant name for error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Cell::Text(_) => "text",
+            Cell::Int(_) => "int",
+            Cell::Float(_) => "float",
+            Cell::Secs(_) => "secs",
+        }
+    }
+
+    /// Typed extraction; a mismatched variant is an [`Error::Report`]
+    /// naming the actual cell instead of a unit panic.
+    pub fn as_int(&self) -> Result<u64> {
+        match self {
+            Cell::Int(x) => Ok(*x),
+            other => Err(other.type_error("int")),
+        }
+    }
+
+    /// See [`Cell::as_int`]; strict — an `Int` cell is not a float.
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Cell::Float(x) => Ok(*x),
+            other => Err(other.type_error("float")),
+        }
+    }
+
+    /// See [`Cell::as_int`].
+    pub fn as_secs(&self) -> Result<f64> {
+        match self {
+            Cell::Secs(x) => Ok(*x),
+            other => Err(other.type_error("secs")),
+        }
+    }
+
+    /// See [`Cell::as_int`].
+    pub fn as_text(&self) -> Result<&str> {
+        match self {
+            Cell::Text(s) => Ok(s),
+            other => Err(other.type_error("text")),
+        }
+    }
+
+    fn type_error(&self, expected: &str) -> Error {
+        Error::Report(format!("expected a {expected} cell, got {} `{}`", self.kind(), self.render()))
+    }
+
     fn render(&self) -> String {
         match self {
             Cell::Text(s) => s.clone(),
@@ -133,6 +180,54 @@ impl Report {
         self.notes.push(s.into());
     }
 
+    /// Cell lookup by row index and column *name*. A missing column, an
+    /// out-of-range row, or a ragged row is an [`Error::Report`] with
+    /// enough context to name the malformed cell.
+    pub fn cell(&self, row: usize, col: &str) -> Result<&Cell> {
+        let ci = self
+            .columns
+            .iter()
+            .position(|c| c == col)
+            .ok_or_else(|| {
+                Error::Report(format!("no column `{col}` (have: {})", self.columns.join(", ")))
+            })?;
+        let r = self
+            .rows
+            .get(row)
+            .ok_or_else(|| Error::Report(format!("row {row} out of range ({} rows)", self.rows.len())))?;
+        r.get(ci).ok_or_else(|| {
+            Error::Report(format!("row {row} has {} cells, no column `{col}` (index {ci})", r.len()))
+        })
+    }
+
+    /// Typed accessors over [`Report::cell`] — the shared extraction the
+    /// experiment assertions use instead of `match … panic!()`.
+    pub fn int(&self, row: usize, col: &str) -> Result<u64> {
+        self.cell(row, col)?.as_int().map_err(|e| Self::at(row, col, e))
+    }
+
+    /// See [`Report::int`].
+    pub fn float(&self, row: usize, col: &str) -> Result<f64> {
+        self.cell(row, col)?.as_float().map_err(|e| Self::at(row, col, e))
+    }
+
+    /// See [`Report::int`].
+    pub fn secs(&self, row: usize, col: &str) -> Result<f64> {
+        self.cell(row, col)?.as_secs().map_err(|e| Self::at(row, col, e))
+    }
+
+    /// See [`Report::int`].
+    pub fn text(&self, row: usize, col: &str) -> Result<&str> {
+        self.cell(row, col)?.as_text().map_err(|e| Self::at(row, col, e))
+    }
+
+    fn at(row: usize, col: &str, e: Error) -> Error {
+        match e {
+            Error::Report(m) => Error::Report(format!("row {row}, column `{col}`: {m}")),
+            e => e,
+        }
+    }
+
     /// Aligned text table to stdout.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
@@ -237,6 +332,27 @@ mod tests {
         r.note("virtual time");
         assert_eq!(r.rows.len(), 1);
         r.print(); // smoke: no panic
+    }
+
+    #[test]
+    fn typed_accessors_and_context() {
+        let mut r = Report::new(["net", "P", "t", "x"]);
+        r.row(["miami".into(), Cell::Int(4), Cell::Secs(0.25), Cell::Float(1.5)]);
+        assert_eq!(r.text(0, "net").unwrap(), "miami");
+        assert_eq!(r.int(0, "P").unwrap(), 4);
+        assert_eq!(r.secs(0, "t").unwrap(), 0.25);
+        assert_eq!(r.float(0, "x").unwrap(), 1.5);
+
+        // A malformed row fails with row/column/variant context.
+        let e = r.float(0, "P").unwrap_err().to_string();
+        assert!(e.contains("row 0"), "{e}");
+        assert!(e.contains("column `P`"), "{e}");
+        assert!(e.contains("expected a float cell, got int `4`"), "{e}");
+        let e = r.int(0, "nope").unwrap_err().to_string();
+        assert!(e.contains("no column `nope`"), "{e}");
+        let e = r.int(3, "P").unwrap_err().to_string();
+        assert!(e.contains("row 3 out of range"), "{e}");
+        assert!(matches!(r.cell(0, "zzz"), Err(crate::error::Error::Report(_))));
     }
 
     #[test]

@@ -86,15 +86,10 @@ mod tests {
         assert_eq!(r.rows.len(), super::ROWS.len());
         // Non-overlap must never exceed overlap, and the measured largest
         // partition must equal the prediction.
-        for row in &r.rows {
-            let (ours, measured, patric) = match (&row[1], &row[2], &row[3]) {
-                (
-                    crate::exp::report::Cell::Float(a),
-                    crate::exp::report::Cell::Float(b),
-                    crate::exp::report::Cell::Float(c),
-                ) => (*a, *b, *c),
-                _ => panic!("unexpected cells"),
-            };
+        for i in 0..r.rows.len() {
+            let ours = r.float(i, "ours MB").unwrap();
+            let measured = r.float(i, "ours measured MB").unwrap();
+            let patric = r.float(i, "PATRIC MB").unwrap();
             assert!(ours <= patric * 1.001, "ours={ours} patric={patric}");
             assert!((ours - measured).abs() < 1e-9, "measured {measured} != predicted {ours}");
         }

@@ -58,18 +58,14 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn quick_run_orderings_hold() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        for row in &r.rows {
-            let get = |i: usize| match &row[i] {
-                Cell::Secs(s) => *s,
-                _ => panic!("expected secs"),
-            };
-            let (patric, direct, surrogate) = (get(1), get(2), get(3));
+        for i in 0..r.rows.len() {
+            let patric = r.secs(i, "[21]").unwrap();
+            let direct = r.secs(i, "direct").unwrap();
+            let surrogate = r.secs(i, "surrogate").unwrap();
             assert!(direct > surrogate, "direct {direct} !> surrogate {surrogate}");
             assert!(surrogate >= patric * 0.9, "surrogate {surrogate} vs patric {patric}");
         }

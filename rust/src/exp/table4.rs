@@ -48,17 +48,12 @@ pub fn run(opts: &Options) -> Result<Report> {
 
 #[cfg(test)]
 mod tests {
-    use crate::exp::report::Cell;
-
     #[test]
     fn dynamic_at_least_as_fast_as_patric() {
         let opts = crate::exp::Options { quick: true, out_dir: None, ..Default::default() };
         let r = super::run(&opts).unwrap();
-        for row in &r.rows {
-            let ratio = match &row[3] {
-                Cell::Float(x) => *x,
-                _ => panic!(),
-            };
+        for i in 0..r.rows.len() {
+            let ratio = r.float(i, "speedup vs [21]").unwrap();
             assert!(ratio >= 1.0, "dynamic slower than PATRIC: ratio {ratio}");
         }
     }

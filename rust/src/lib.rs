@@ -35,6 +35,16 @@
 //!   over `comm::threads`, sliding-window expiry, periodic compaction back
 //!   into a fresh CSR, and a cost-model throughput projector in
 //!   `sim::streaming`. See `DESIGN.md` §6 for the lifecycle.
+//! * **`testkit/`** — deterministic cluster simulation behind the
+//!   [`comm::Transport`] trait: `Cluster` runs every protocol unchanged
+//!   over either the production channel fabric or a seeded virtual fabric
+//!   ([`testkit::sim`]) with virtual time, adversarial delivery schedules,
+//!   injectable faults (rank death, message loss, stragglers) and an
+//!   FNV trace hash with *same seed ⇒ identical trace* replay semantics.
+//!   [`testkit::conformance`] runs every counting path — the three §IV
+//!   drivers, both §V drivers, and `stream/` — against the
+//!   `seq::node_iterator` oracle across workload × P × schedule matrices
+//!   (`tricount conformance`, gated in CI; DESIGN.md §10).
 //! * **`par/` + the radix build** — the multithreaded preprocessing
 //!   pipeline: [`graph::builder`] constructs the CSR with an O(m)
 //!   two-pass counting/radix scatter (no comparison sort, no per-row
@@ -118,7 +128,19 @@ pub mod seq {
 pub mod comm {
     pub mod metrics;
     pub mod threads;
+    pub mod transport;
     pub use threads::{Cluster, Comm};
+    pub use transport::{Payload, Transport};
+}
+
+pub mod testkit {
+    pub mod conformance;
+    pub mod sched;
+    pub mod sim;
+    pub mod trace;
+    pub use sched::{FaultPlan, SchedulePolicy, SimConfig};
+    pub use sim::Fabric;
+    pub use trace::TraceReport;
 }
 
 pub mod partition {

@@ -42,6 +42,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "generate" => cmd_generate(&args[1..]),
         "partition-stats" => cmd_partition_stats(&args[1..]),
         "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
+        "conformance" => cmd_conformance(&args[1..]),
         "exp" => cmd_exp(&args[1..]),
         "info" => cmd_info(&args[1..]),
         "help" | "--help" | "-h" => {
@@ -95,6 +96,15 @@ COMMANDS:
                     --workloads S1,S2,…  --threads T1,T2,… (n|auto)
                     --reps N --seed S --hub-threshold T
                     --out PATH (default BENCH_pipeline.json)
+  conformance       adversarial-schedule conformance suite: every counting
+                    path (surrogate|direct|patric|dynamic-lb|local-counts|
+                    stream) on the seeded virtual transport vs the
+                    sequential oracle, each cell run twice (replay
+                    determinism: identical trace hash), plus rank-death and
+                    message-loss fault checks
+                    --seeds N (schedules per config, default 16)
+                    --procs P1,P2,…  --workloads S1,S2,…
+                    --paths p1,p2,…  --faults on|off  --out DIR
   exp               paper experiments
                     --id ID|all [--list] [--quick] [--scale X] [--out DIR]
   info              PJRT platform + discovered artifacts"
@@ -617,6 +627,125 @@ fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
     report.print();
     report.write_json(out)?;
     println!("[written: {out}]");
+    Ok(())
+}
+
+/// `tricount conformance` — the adversarial-schedule suite over the
+/// virtual transport (DESIGN.md §10). Exits nonzero on any conformance
+/// failure; the emitted JSON contains only schedule-deterministic fields,
+/// so CI runs it twice and diffs the files as the replay gate.
+fn cmd_conformance(args: &[String]) -> Result<()> {
+    use tricount::testkit::conformance::{self, Options, Path};
+
+    let mut opts = Options::default();
+    let mut out: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got `{}`", args[i])))?;
+        let value = args
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        match key {
+            "seeds" => {
+                opts.seeds = value.parse().map_err(|e| Error::Config(format!("--seeds: {e}")))?;
+                if opts.seeds == 0 {
+                    return Err(Error::Config("--seeds must be >= 1".into()));
+                }
+            }
+            "procs" => {
+                opts.procs = value
+                    .split(',')
+                    .map(|s| {
+                        s.trim()
+                            .parse::<usize>()
+                            .map_err(|e| Error::Config(format!("--procs: {e}")))
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
+                if opts.procs.iter().any(|&p| p < 2) {
+                    return Err(Error::Config(
+                        "--procs entries must be >= 2 (the §V drivers need a coordinator)".into(),
+                    ));
+                }
+            }
+            "workloads" => {
+                opts.workloads =
+                    value.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+                if opts.workloads.is_empty() {
+                    return Err(Error::Config("--workloads needs at least one spec".into()));
+                }
+            }
+            "paths" => {
+                opts.paths = value
+                    .split(',')
+                    .map(|s| {
+                        Path::ALL
+                            .iter()
+                            .copied()
+                            .find(|p| p.name() == s.trim())
+                            .ok_or_else(|| Error::Config(format!("unknown path `{s}`")))
+                    })
+                    .collect::<Result<Vec<Path>>>()?;
+            }
+            "faults" => {
+                opts.faults = match value.as_str() {
+                    "on" => true,
+                    "off" => false,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "--faults expects on|off, got `{other}`"
+                        )))
+                    }
+                };
+            }
+            "out" => out = Some(value.clone()),
+            other => return Err(Error::Config(format!("unknown conformance flag `--{other}`"))),
+        }
+        i += 2;
+    }
+
+    let t0 = std::time::Instant::now();
+    let r = conformance::run(&opts)?;
+    let mut report = exp::report::Report::new(["path", "workload", "P", "schedules", "trace_hash", "status"]);
+    for c in &r.configs {
+        report.row([
+            c.path.into(),
+            c.workload.clone().into(),
+            c.p.into(),
+            (c.schedules as usize).into(),
+            format!("{:016x}", c.hash).into(),
+            (if c.ok { "ok" } else { "FAIL" }).into(),
+        ]);
+    }
+    report.note(format!(
+        "matrix hash {:016x} over {} schedule cells (each run twice) + {} fault checks",
+        r.matrix_hash, r.cells, r.fault_checks
+    ));
+    report.print();
+    println!(
+        "conformance: {} configs, {} cells, {} fault checks, {} failures ({:.2?})",
+        r.configs.len(),
+        r.cells,
+        r.fault_checks,
+        r.failures.len(),
+        t0.elapsed()
+    );
+    for f in &r.failures {
+        eprintln!("conformance FAIL: {f}");
+    }
+    if let Some(dir) = out {
+        std::fs::create_dir_all(&dir)?;
+        report.write_csv(&format!("{dir}/conformance.csv"))?;
+        report.write_json(&format!("{dir}/conformance.json"))?;
+        println!("[written: {dir}/conformance.{{csv,json}}]");
+    }
+    if !r.failures.is_empty() {
+        return Err(Error::Cluster(format!(
+            "conformance suite failed: {} violation(s)",
+            r.failures.len()
+        )));
+    }
     Ok(())
 }
 

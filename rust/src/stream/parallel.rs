@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::{Cluster, Comm};
+use crate::comm::threads::Comm;
 use crate::config::CostFn;
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
@@ -32,6 +32,8 @@ use crate::stream::batch::Batch;
 use crate::stream::compact::CompactionPolicy;
 use crate::stream::delta::{count_op, Scratch};
 use crate::stream::state::StreamState;
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::TraceReport;
 use crate::TriangleCount;
 
 /// Options for a parallel stream run.
@@ -122,6 +124,21 @@ pub fn run_with_initial(
     opts: StreamOptions,
     initial: TriangleCount,
 ) -> Result<StreamRunResult> {
+    run_with_initial_on(&Fabric::Channel, base, batches, p, opts, initial).0
+}
+
+/// [`run_with_initial`] on an explicit fabric (conformance entry point).
+/// The stream protocol's only collective surface is the per-batch
+/// `MPI_Allreduce(SUM)` pair — which is exactly where a dead rank must
+/// surface as an `Err` instead of a hang.
+pub fn run_with_initial_on(
+    fabric: &Fabric,
+    base: &Csr,
+    batches: &[Batch],
+    p: usize,
+    opts: StreamOptions,
+    initial: TriangleCount,
+) -> (Result<StreamRunResult>, Option<TraceReport>) {
     assert!(p >= 1, "need at least one rank");
     // Balance node ownership by degree (the streaming analogue of §IV-B:
     // an update's cost is the degree of its endpoints). Only degrees are
@@ -134,9 +151,13 @@ pub fn run_with_initial(
     let base: Arc<Csr> = Arc::new(base.clone());
     let batches: Arc<Vec<Batch>> = Arc::new(batches.to_vec());
 
-    let results = Cluster::run::<u64, RankOutput, _>(p, |c| {
+    let (results, trace) = fabric.try_run::<u64, RankOutput, _>(p, |c| {
         rank_main(c, base.clone(), batches.clone(), owner.clone(), opts, initial)
-    })?;
+    });
+    let results = match results {
+        Ok(r) => r,
+        Err(e) => return (Err(e), trace),
+    };
 
     let mut metrics = ClusterMetrics::default();
     let mut outputs = Vec::with_capacity(p);
@@ -144,10 +165,10 @@ pub fn run_with_initial(
         metrics.per_rank.push(m);
         outputs.push(out);
     }
-    let final_graph = outputs[0]
-        .final_graph
-        .take()
-        .ok_or_else(|| Error::Cluster("rank 0 produced no final graph".into()))?;
+    let final_graph = match outputs[0].final_graph.take() {
+        Some(g) => g,
+        None => return (Err(Error::Cluster("rank 0 produced no final graph".into())), trace),
+    };
 
     let mut per_batch = Vec::with_capacity(batches.len());
     let mut triangles = initial;
@@ -167,17 +188,22 @@ pub fn run_with_initial(
     }
     let final_triangles = triangles;
 
-    Ok(StreamRunResult {
-        initial_triangles: initial,
-        final_triangles,
-        per_batch,
-        final_graph,
-        metrics,
-        compactions: outputs[0].compactions,
-    })
+    (
+        Ok(StreamRunResult {
+            initial_triangles: initial,
+            final_triangles,
+            per_batch,
+            final_graph,
+            metrics,
+            compactions: outputs[0].compactions,
+        }),
+        trace,
+    )
 }
 
 /// The per-rank program: replicate state, count owned ops, allreduce.
+/// Comm and replica failures propagate as `Err` through the launcher
+/// instead of poisoning the cluster with a panic.
 fn rank_main(
     c: &mut Comm<u64>,
     base: Arc<Csr>,
@@ -185,15 +211,14 @@ fn rank_main(
     owner: Arc<Vec<u32>>,
     opts: StreamOptions,
     initial: TriangleCount,
-) -> RankOutput {
+) -> Result<RankOutput> {
     let me = c.rank() as u32;
     let mut state = StreamState::with_initial((*base).clone(), opts.policy, initial);
     let mut scratch = Scratch::default();
     let mut per_batch = Vec::with_capacity(batches.len());
 
     for batch in batches.iter() {
-        let nb = crate::stream::batch::normalize(state.base(), state.overlay(), batch)
-            .expect("batch normalization failed");
+        let nb = crate::stream::batch::normalize(state.base(), state.overlay(), batch)?;
         // Arm the hub-bitmap cache against this batch's snapshot (identical
         // on every rank — replicas are in lockstep, so the resolved
         // threshold and therefore the per-op work charge are deterministic).
@@ -216,12 +241,10 @@ fn rank_main(
             work += r.work;
         }
         // MPI_Allreduce(SUM) ×2: positive and negative magnitudes.
-        let delta = c.reduce_sum(plus) as i64 - c.reduce_sum(minus) as i64;
+        let delta = c.reduce_sum(plus)? as i64 - c.reduce_sum(minus)? as i64;
         c.metrics.work_units += work;
-        state
-            .apply_normalized(&nb, delta)
-            .expect("replica diverged while applying normalized batch");
-        state.maybe_compact().expect("compaction failed");
+        state.apply_normalized(&nb, delta)?;
+        state.maybe_compact()?;
         per_batch.push(RankBatch {
             delta,
             work,
@@ -230,12 +253,8 @@ fn rank_main(
         });
     }
 
-    let final_graph = if c.rank() == 0 {
-        Some(state.snapshot().expect("final materialization failed"))
-    } else {
-        None
-    };
-    RankOutput { per_batch, final_graph, compactions: state.compactions() }
+    let final_graph = if c.rank() == 0 { Some(state.snapshot()?) } else { None };
+    Ok(RankOutput { per_batch, final_graph, compactions: state.compactions() })
 }
 
 #[cfg(test)]

@@ -1,0 +1,455 @@
+//! The conformance suite: every counting path × every workload family ×
+//! every cluster size × many adversarial schedules, against the
+//! `seq::node_iterator` oracle.
+//!
+//! A *cell* is one `(path, workload, P, schedule-seed)` tuple. For each
+//! cell the suite runs the full protocol twice on the virtual fabric
+//! ([`Fabric::Sim`]) and asserts:
+//!
+//! 1. **Exactness** — the parallel count equals the sequential oracle
+//!    (for the stream path: the from-scratch recount of the final graph),
+//!    under a message schedule the OS would almost never produce;
+//! 2. **Replay determinism** — both runs produce the identical trace hash
+//!    (and count): the schedule is a value, not an accident;
+//! 3. **Metric conservation** — Σ messages_sent == Σ messages_received
+//!    and Σ control_sent == Σ control_received per tag class, i.e. every
+//!    protocol drains its own traffic.
+//!
+//! A separate fault pass injects rank death into *every* path (must yield
+//! `Err`, never hang) and message loss into every path with point-to-point
+//! traffic (outcome must replay identically; for the request/reply
+//! protocols the lost message must trip the virtual recv guard).
+//!
+//! Used by `tricount conformance --seeds n` (CI gates on it, twice, and
+//! diffs the emitted JSON for the replay-determinism check) and by
+//! `rust/tests/conformance.rs`. To add a new protocol, give it a
+//! `run_on(&Fabric, …)` entry point, a [`Path`] variant, and an arm in
+//! [`run_path`] — DESIGN.md §10 walks through it.
+
+use std::sync::Arc;
+
+use crate::adj::HubThreshold;
+use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate};
+use crate::comm::metrics::ClusterMetrics;
+use crate::config::CostFn;
+use crate::error::Result;
+use crate::gen::rng::Rng;
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::partition::balance::balanced_ranges;
+use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::seq::node_iterator;
+use crate::stream::batch::Batch;
+use crate::stream::parallel::StreamOptions;
+use crate::stream::state::StreamState;
+use crate::stream::workload::{edge_stream, StreamSpec};
+use crate::testkit::sched::{FaultPlan, SimConfig};
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::{combine_hashes, TraceReport};
+use crate::TriangleCount;
+
+/// Every message-passing counting path in the crate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Path {
+    /// §IV space-efficient surrogate scheme over `OwnedPartition`s.
+    Surrogate,
+    /// §IV-C direct (request/reply) baseline.
+    Direct,
+    /// Overlapping-partition PATRIC baseline (reduce-only protocol).
+    Patric,
+    /// §V coordinator/worker dynamic load balancer.
+    DynamicLb,
+    /// Per-node counts through the §V protocol.
+    LocalCounts,
+    /// Incremental counting over edge-update batches (allreduce per batch).
+    Stream,
+}
+
+impl Path {
+    pub const ALL: [Path; 6] = [
+        Path::Surrogate,
+        Path::Direct,
+        Path::Patric,
+        Path::DynamicLb,
+        Path::LocalCounts,
+        Path::Stream,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Path::Surrogate => "surrogate",
+            Path::Direct => "direct",
+            Path::Patric => "patric",
+            Path::DynamicLb => "dynamic-lb",
+            Path::LocalCounts => "local-counts",
+            Path::Stream => "stream",
+        }
+    }
+
+    /// Does the protocol exchange point-to-point messages (and can
+    /// therefore lose one)? PATRIC and the stream driver only reduce.
+    pub fn has_p2p(self) -> bool {
+        !matches!(self, Path::Patric | Path::Stream)
+    }
+}
+
+/// Suite options; [`Options::default`] is the acceptance matrix.
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Workload specs (`config::build_workload` grammar) — defaults cover
+    /// the paper's three degree regimes: PA (skewed), R-MAT (power-law),
+    /// ER (near-regular). Small on purpose: a cell runs a full protocol
+    /// twice, serialized on the virtual fabric.
+    pub workloads: Vec<String>,
+    pub procs: Vec<usize>,
+    /// Adversarial schedules per (path, workload, P) config.
+    pub seeds: u64,
+    pub paths: Vec<Path>,
+    /// Run the rank-death / message-loss pass too.
+    pub faults: bool,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            workloads: vec!["pa:160:6".into(), "rmat:7:4".into(), "er:220:5".into()],
+            procs: vec![2, 4, 8],
+            seeds: 16,
+            paths: Path::ALL.to_vec(),
+            faults: true,
+        }
+    }
+}
+
+/// One counting run's observable outcome.
+struct PathRun {
+    count: TriangleCount,
+    metrics: ClusterMetrics,
+}
+
+/// Per-(path, workload, P) summary over all schedule seeds.
+#[derive(Clone, Debug)]
+pub struct ConfigSummary {
+    pub path: &'static str,
+    pub workload: String,
+    pub p: usize,
+    pub schedules: u64,
+    /// Combined trace hash over the config's schedules — the quantity the
+    /// CI replay step diffs across two process invocations.
+    pub hash: u64,
+    pub ok: bool,
+}
+
+/// Result of a full suite run. `failures` is empty iff the suite passed;
+/// the runner never aborts early, so one broken cell doesn't mask others.
+#[derive(Clone, Debug, Default)]
+pub struct ConformanceReport {
+    pub configs: Vec<ConfigSummary>,
+    /// Total schedule cells executed (each runs the protocol twice).
+    pub cells: u64,
+    pub fault_checks: u64,
+    pub failures: Vec<String>,
+    /// Combined hash over every cell trace, in fixed iteration order.
+    pub matrix_hash: u64,
+}
+
+impl ConformanceReport {
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// A workload prepared once and shared by all its cells.
+struct Prepared {
+    spec: String,
+    graph: Csr,
+    oriented: Arc<Oriented>,
+    oracle: TriangleCount,
+    stream_base: Csr,
+    stream_batches: Vec<Batch>,
+    stream_initial: TriangleCount,
+    stream_oracle: TriangleCount,
+}
+
+impl Prepared {
+    fn build(spec: &str) -> Result<Prepared> {
+        let graph = crate::config::build_workload(spec, 1.0, 1)?;
+        let oriented = Arc::new(Oriented::from_graph(&graph));
+        let oracle = node_iterator::count(&oriented);
+        // Stream cells replay a deterministic update stream derived from
+        // the same graph; the oracle is the sequential engine's recount.
+        let sspec = StreamSpec {
+            base_fraction: 0.6,
+            batch_size: 30,
+            batches: 5,
+            delete_fraction: 0.25,
+        };
+        let w = edge_stream(&graph, &sspec, &mut Rng::seeded(0x517EA4));
+        let mut st = StreamState::new(w.base.clone());
+        for b in &w.batches {
+            st.apply_batch(b)?;
+        }
+        let stream_oracle = st.recount()?;
+        let stream_initial = node_iterator::count(&Oriented::from_graph(&w.base));
+        Ok(Prepared {
+            spec: spec.to_string(),
+            graph,
+            oriented,
+            oracle,
+            stream_base: w.base,
+            stream_batches: w.batches,
+            stream_initial,
+            stream_oracle,
+        })
+    }
+
+    fn oracle_for(&self, path: Path) -> TriangleCount {
+        match path {
+            Path::Stream => self.stream_oracle,
+            _ => self.oracle,
+        }
+    }
+}
+
+fn ranges_for(o: &Oriented, cost: CostFn, p: usize) -> Vec<std::ops::Range<u32>> {
+    balanced_ranges(&prefix_sums(&cost_vector(o, cost)), p)
+}
+
+/// Drive one counting path over one fabric. This is the only place that
+/// knows how to launch each protocol — a new protocol needs exactly one
+/// new arm here.
+fn run_path(
+    path: Path,
+    fabric: &Fabric,
+    w: &Prepared,
+    p: usize,
+) -> (Result<PathRun>, Option<TraceReport>) {
+    match path {
+        Path::Surrogate => {
+            let ranges = ranges_for(&w.oriented, CostFn::SurrogateNew, p);
+            let (r, t) = surrogate::run_on(fabric, &w.oriented, &ranges, HubThreshold::Auto);
+            (r.map(|r| PathRun { count: r.triangles, metrics: r.metrics }), t)
+        }
+        Path::Direct => {
+            let ranges = ranges_for(&w.oriented, CostFn::SurrogateNew, p);
+            let (r, t) = direct::run_on(fabric, &w.oriented, &ranges, HubThreshold::Auto);
+            (r.map(|r| PathRun { count: r.triangles, metrics: r.metrics }), t)
+        }
+        Path::Patric => {
+            let ranges = ranges_for(&w.oriented, CostFn::PatricBest, p);
+            let (r, t) =
+                patric::run_on(fabric, &w.graph, &w.oriented, &ranges, HubThreshold::Auto);
+            (r.map(|r| PathRun { count: r.triangles, metrics: r.metrics }), t)
+        }
+        Path::DynamicLb => {
+            let (r, t) = dynamic_lb::run_on(fabric, &w.oriented, p, dynamic_lb::Options::default());
+            (r.map(|r| PathRun { count: r.triangles, metrics: r.metrics }), t)
+        }
+        Path::LocalCounts => {
+            let (r, t) = local_counts::per_node_counts_on(fabric, &w.oriented, p);
+            (
+                r.map(|(tv, metrics)| PathRun { count: tv.iter().sum::<u64>() / 3, metrics }),
+                t,
+            )
+        }
+        Path::Stream => {
+            let (r, t) = crate::stream::parallel::run_with_initial_on(
+                fabric,
+                &w.stream_base,
+                &w.stream_batches,
+                p,
+                StreamOptions::default(),
+                w.stream_initial,
+            );
+            (r.map(|r| PathRun { count: r.final_triangles, metrics: r.metrics }), t)
+        }
+    }
+}
+
+/// Deterministic per-cell schedule seed.
+fn cell_seed(wi: usize, p: usize, pi: usize, s: u64) -> u64 {
+    combine_hashes([wi as u64, p as u64, pi as u64, s])
+}
+
+fn outcome_string(r: &Result<PathRun>) -> String {
+    match r {
+        Ok(run) => format!("ok: {} triangles", run.count),
+        Err(e) => format!("err: {e}"),
+    }
+}
+
+/// Run the full matrix. `Err` only for setup failures (bad workload
+/// spec); conformance violations are collected in
+/// [`ConformanceReport::failures`].
+pub fn run(opts: &Options) -> Result<ConformanceReport> {
+    let mut report = ConformanceReport::default();
+    let mut all_hashes: Vec<u64> = Vec::new();
+    let prepared: Vec<Prepared> =
+        opts.workloads.iter().map(|s| Prepared::build(s)).collect::<Result<_>>()?;
+
+    for (wi, w) in prepared.iter().enumerate() {
+        for &p in &opts.procs {
+            for (pi, &path) in opts.paths.iter().enumerate() {
+                let mut cfg_hashes = Vec::with_capacity(opts.seeds as usize);
+                let mut ok = true;
+                for s in 0..opts.seeds {
+                    // Every 4th schedule adds a straggler rank — a
+                    // fault-shaped perturbation that must not move counts.
+                    let faults = if s % 4 == 3 {
+                        FaultPlan::slow_rank(p - 1, 16)
+                    } else {
+                        FaultPlan::default()
+                    };
+                    let cfg = SimConfig::with_faults(cell_seed(wi, p, pi, s), faults);
+                    let fabric = Fabric::Sim(cfg);
+                    let (r1, t1) = run_path(path, &fabric, w, p);
+                    let (r2, t2) = run_path(path, &fabric, w, p);
+                    report.cells += 1;
+                    let cell = format!("{} {} P={p} schedule#{s}", path.name(), w.spec);
+                    let mut fail = |msg: String, ok: &mut bool| {
+                        report.failures.push(format!("{cell}: {msg}"));
+                        *ok = false;
+                    };
+                    match (&r1, &r2, t1, t2) {
+                        (Ok(a), Ok(b), Some(t1), Some(t2)) => {
+                            let oracle = w.oracle_for(path);
+                            if a.count != oracle {
+                                fail(
+                                    format!("count {} != oracle {oracle}", a.count),
+                                    &mut ok,
+                                );
+                            }
+                            if b.count != a.count {
+                                fail(
+                                    format!("replay count {} != first run {}", b.count, a.count),
+                                    &mut ok,
+                                );
+                            }
+                            if t1.hash != t2.hash {
+                                fail(
+                                    format!(
+                                        "replay trace hash {:#x} != {:#x} (events {} vs {})",
+                                        t2.hash, t1.hash, t2.events, t1.events
+                                    ),
+                                    &mut ok,
+                                );
+                            }
+                            let tot = a.metrics.totals();
+                            if tot.messages_sent != tot.messages_received {
+                                fail(
+                                    format!(
+                                        "data messages sent {} != received {}",
+                                        tot.messages_sent, tot.messages_received
+                                    ),
+                                    &mut ok,
+                                );
+                            }
+                            if tot.control_sent != tot.control_received {
+                                fail(
+                                    format!(
+                                        "control messages sent {} != received {}",
+                                        tot.control_sent, tot.control_received
+                                    ),
+                                    &mut ok,
+                                );
+                            }
+                            cfg_hashes.push(t1.hash);
+                            all_hashes.push(t1.hash);
+                        }
+                        (r1, r2, _, _) => {
+                            fail(
+                                format!(
+                                    "run failed: {} / replay: {}",
+                                    outcome_string(r1),
+                                    outcome_string(r2)
+                                ),
+                                &mut ok,
+                            );
+                        }
+                    }
+                }
+                report.configs.push(ConfigSummary {
+                    path: path.name(),
+                    workload: w.spec.clone(),
+                    p,
+                    schedules: opts.seeds,
+                    hash: combine_hashes(cfg_hashes),
+                    ok,
+                });
+            }
+        }
+    }
+
+    if opts.faults {
+        if let Some(w) = prepared.first() {
+            fault_suite(w, &opts.paths, &mut report);
+        }
+    }
+    report.matrix_hash = combine_hashes(all_hashes);
+    Ok(report)
+}
+
+/// The fault pass: rank death on every path, message loss on every path
+/// with point-to-point traffic. P is fixed at 4 (all paths accept it).
+fn fault_suite(w: &Prepared, paths: &[Path], report: &mut ConformanceReport) {
+    const P: usize = 4;
+    for (pi, &path) in paths.iter().enumerate() {
+        // Rank death mid-protocol: the run must fail — with the same error
+        // on replay — never hang.
+        let cfg = SimConfig::with_faults(cell_seed(0xDEAD, P, pi, 0), FaultPlan::kill(1, 1));
+        let fabric = Fabric::Sim(cfg);
+        let (r1, _) = run_path(path, &fabric, w, P);
+        let (r2, _) = run_path(path, &fabric, w, P);
+        report.fault_checks += 1;
+        match (&r1, &r2) {
+            (Err(e1), Err(e2)) => {
+                let (e1, e2) = (e1.to_string(), e2.to_string());
+                if e1 != e2 {
+                    report.failures.push(format!(
+                        "{} rank-death: nondeterministic error (`{e1}` vs `{e2}`)",
+                        path.name()
+                    ));
+                }
+            }
+            _ => report.failures.push(format!(
+                "{} rank-death: expected Err, got {} / {}",
+                path.name(),
+                outcome_string(&r1),
+                outcome_string(&r2)
+            )),
+        }
+
+        // Message loss: outcome must replay identically; for request/reply
+        // protocols the receiver must stall into the virtual recv guard.
+        if !path.has_p2p() {
+            continue;
+        }
+        let (src, dst) = match path {
+            // Workers talk to the coordinator first.
+            Path::DynamicLb | Path::LocalCounts => (1usize, 0usize),
+            _ => (0usize, 1usize),
+        };
+        let cfg =
+            SimConfig::with_faults(cell_seed(0xD809, P, pi, 1), FaultPlan::drop_nth(src, dst, 1));
+        let fabric = Fabric::Sim(cfg);
+        let (r1, t1) = run_path(path, &fabric, w, P);
+        let (r2, t2) = run_path(path, &fabric, w, P);
+        report.fault_checks += 1;
+        let (o1, o2) = (outcome_string(&r1), outcome_string(&r2));
+        if o1 != o2 || t1.map(|t| t.hash) != t2.map(|t| t.hash) {
+            report
+                .failures
+                .push(format!("{} message-drop: nondeterministic (`{o1}` vs `{o2}`)", path.name()));
+        }
+        if matches!(path, Path::Direct | Path::DynamicLb | Path::LocalCounts) {
+            match &r1 {
+                Err(e) if e.to_string().contains("virtual recv guard") => {}
+                other => report.failures.push(format!(
+                    "{} message-drop: expected a virtual recv guard trip, got {}",
+                    path.name(),
+                    outcome_string(other)
+                )),
+            }
+        }
+    }
+}

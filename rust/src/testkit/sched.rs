@@ -1,0 +1,127 @@
+//! Schedule policies and fault plans for the virtual fabric.
+//!
+//! A "schedule" in the conformance suite is everything the OS and the
+//! network would normally decide for us: which rank runs next, how long a
+//! message spends on the wire, which rank is slow, which rank dies, which
+//! message is lost. [`SimConfig`] pins all of it to a seed, so a schedule
+//! is a *value* — replayable, shrinkable, diffable (DESIGN.md §10).
+
+/// Knobs of the deterministic scheduler (`testkit::sim`). All randomness
+/// is drawn from the run's seeded `gen::rng::Rng`, in a serialized order,
+/// so a policy + seed names exactly one schedule.
+#[derive(Clone, Debug)]
+pub struct SchedulePolicy {
+    /// Minimum wire latency of a message, in virtual ticks.
+    pub min_delay: u64,
+    /// Extra uniform latency in `0..jitter` ticks (0 = fixed latency).
+    /// Jitter across *different* sender ranks is what reorders deliveries;
+    /// per-(src,dst) order is always preserved (MPI non-overtaking).
+    pub jitter: u64,
+    /// Probability that a rank yields the execution token after a
+    /// non-blocking transport op (send / try_recv), letting another rank
+    /// interleave at that point.
+    pub switch_prob: f64,
+    /// Probability that the scheduler delivers the earliest in-flight
+    /// message *before* resuming a runnable rank — biases schedules toward
+    /// early message arrival (exercises the opportunistic `try_recv`
+    /// paths); low values starve receivers until they block.
+    pub deliver_bias: f64,
+}
+
+impl SchedulePolicy {
+    /// The conformance default: jittered latencies, frequent interleaving,
+    /// mixed eager/lazy delivery.
+    pub fn adversarial() -> Self {
+        SchedulePolicy { min_delay: 1, jitter: 24, switch_prob: 0.5, deliver_bias: 0.35 }
+    }
+
+    /// Near-synchronous: fixed latency, no voluntary yields, eager
+    /// delivery. The tamest schedule the fabric can produce — useful as a
+    /// baseline when debugging a failing adversarial seed.
+    pub fn gentle() -> Self {
+        SchedulePolicy { min_delay: 1, jitter: 0, switch_prob: 0.0, deliver_bias: 1.0 }
+    }
+}
+
+/// Kill `rank` when its transport-op counter reaches `at_op` (1-based:
+/// `at_op: 1` kills it at its very first transport op, `try_recv`
+/// included). A kill landing on a fallible op fails it with a
+/// deterministic `Error::Cluster`; one landing on a `try_recv` (which
+/// cannot fail) kills the rank silently — `None` is returned and the next
+/// fallible op surfaces the dead-rank error. Messages the rank already
+/// sent stay on the wire, everything addressed to it afterwards is
+/// dropped, and peers that can no longer make progress fail through the
+/// virtual recv guard instead of hanging.
+#[derive(Clone, Copy, Debug)]
+pub struct Kill {
+    pub rank: usize,
+    pub at_op: u64,
+}
+
+/// Silently drop the `nth` (1-based) message sent on the directed edge
+/// `src → dst`. The sender is unaware (the send succeeds), exactly like a
+/// lost wire message; the receiver's protocol stalls and trips the
+/// virtual recv guard deterministically.
+#[derive(Clone, Copy, Debug)]
+pub struct DropRule {
+    pub src: usize,
+    pub dst: usize,
+    pub nth: u64,
+}
+
+/// Multiply the wire latency of every message to or from `rank` by
+/// `factor` — a straggler. Purely a schedule perturbation: counts must be
+/// unaffected.
+#[derive(Clone, Copy, Debug)]
+pub struct SlowRank {
+    pub rank: usize,
+    pub factor: u64,
+}
+
+/// Faults injected into a virtual run. Empty by default.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub kills: Vec<Kill>,
+    pub drops: Vec<DropRule>,
+    pub slow: Vec<SlowRank>,
+}
+
+impl FaultPlan {
+    /// One straggler rank — a fault-shaped schedule perturbation that must
+    /// not change any count.
+    pub fn slow_rank(rank: usize, factor: u64) -> Self {
+        FaultPlan { slow: vec![SlowRank { rank, factor }], ..Default::default() }
+    }
+
+    /// Kill one rank at its `at_op`-th transport operation.
+    pub fn kill(rank: usize, at_op: u64) -> Self {
+        FaultPlan { kills: vec![Kill { rank, at_op }], ..Default::default() }
+    }
+
+    /// Drop the `nth` message on `src → dst`.
+    pub fn drop_nth(src: usize, dst: usize, nth: u64) -> Self {
+        FaultPlan { drops: vec![DropRule { src, dst, nth }], ..Default::default() }
+    }
+}
+
+/// One fully specified virtual-cluster run: seed + policy + faults.
+/// Same config ⇒ identical schedule ⇒ identical trace hash
+/// (`testkit::trace`), which is what the replay-determinism gates assert.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    pub policy: SchedulePolicy,
+    pub faults: FaultPlan,
+}
+
+impl SimConfig {
+    /// The conformance suite's default schedule family.
+    pub fn adversarial(seed: u64) -> Self {
+        SimConfig { seed, policy: SchedulePolicy::adversarial(), faults: FaultPlan::default() }
+    }
+
+    /// Adversarial schedule plus a fault plan.
+    pub fn with_faults(seed: u64, faults: FaultPlan) -> Self {
+        SimConfig { seed, policy: SchedulePolicy::adversarial(), faults }
+    }
+}

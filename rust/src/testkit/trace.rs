@@ -1,0 +1,199 @@
+//! Trace recording for the virtual fabric: every scheduler-visible event
+//! is folded into an FNV-1a hash, so an entire run compresses to one u64
+//! with the property *same seed ⇒ identical schedule ⇒ identical hash*.
+//!
+//! The hash covers, per event, the tuple
+//! `(step, kind, src, dst, tag, bytes, virtual_time)` — enough that any
+//! divergence in message order, payload size, fault firing or collective
+//! sequencing changes it. The conformance suite runs every cell twice and
+//! asserts hash equality (replay determinism), and CI diffs the whole
+//! matrix across two process invocations (DESIGN.md §10).
+
+/// Event kinds folded into the trace. Discriminants are part of the hash
+/// domain — append new kinds, never renumber.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// A rank handed an envelope to the fabric.
+    Send = 1,
+    /// The scheduler moved an envelope from the wire into a mailbox.
+    Deliver = 2,
+    /// A `DropRule` ate the envelope at send time.
+    DropFault = 3,
+    /// Delivery target was dead or already finished; envelope discarded.
+    DropUnreachable = 4,
+    /// A `Kill` fired.
+    Death = 5,
+    /// The virtual recv guard tripped (deadlock detected) for a rank.
+    Guard = 6,
+    /// A barrier generation completed.
+    Barrier = 7,
+    /// A reduce generation completed.
+    Reduce = 8,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+#[inline]
+fn fnv_fold(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Incremental recorder owned by the scheduler state (all events are
+/// appended under the execution token, so the sequence is serialized and
+/// deterministic by construction).
+#[derive(Clone, Debug)]
+pub struct TraceRecorder {
+    hash: u64,
+    events: u64,
+    sends: u64,
+    delivered: u64,
+    dropped: u64,
+    deaths: u64,
+    guards: u64,
+}
+
+impl Default for TraceRecorder {
+    fn default() -> Self {
+        TraceRecorder {
+            hash: FNV_OFFSET,
+            events: 0,
+            sends: 0,
+            delivered: 0,
+            dropped: 0,
+            deaths: 0,
+            guards: 0,
+        }
+    }
+}
+
+impl TraceRecorder {
+    /// Fold one event. `tag` is the message class (0 data, 1 control) for
+    /// message events, and kind-specific otherwise (generation counters
+    /// for collectives, op counters for deaths).
+    pub fn event(&mut self, kind: EventKind, src: u64, dst: u64, tag: u64, bytes: u64, vt: u64) {
+        self.events += 1;
+        let mut h = self.hash;
+        for x in [self.events, kind as u64, src, dst, tag, bytes, vt] {
+            h = fnv_fold(h, x);
+        }
+        self.hash = h;
+        match kind {
+            EventKind::Send => self.sends += 1,
+            EventKind::Deliver => self.delivered += 1,
+            EventKind::DropFault | EventKind::DropUnreachable => self.dropped += 1,
+            EventKind::Death => self.deaths += 1,
+            EventKind::Guard => self.guards += 1,
+            EventKind::Barrier | EventKind::Reduce => {}
+        }
+    }
+
+    /// Snapshot into the public report.
+    pub fn report(&self, vt_end: u64) -> TraceReport {
+        TraceReport {
+            hash: self.hash,
+            events: self.events,
+            sends: self.sends,
+            delivered: self.delivered,
+            dropped: self.dropped,
+            deaths: self.deaths,
+            guards: self.guards,
+            vt_end,
+        }
+    }
+}
+
+/// What a virtual run leaves behind. `hash` is the replay fingerprint;
+/// the counters make trace diffs human-readable when two hashes disagree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceReport {
+    /// FNV-1a over the full event sequence — the replay fingerprint.
+    pub hash: u64,
+    /// Total events folded.
+    pub events: u64,
+    /// Envelopes handed to the fabric.
+    pub sends: u64,
+    /// Envelopes delivered into a mailbox.
+    pub delivered: u64,
+    /// Envelopes lost (fault drops + unreachable targets).
+    pub dropped: u64,
+    /// Kill faults fired.
+    pub deaths: u64,
+    /// Ranks failed by the virtual recv guard.
+    pub guards: u64,
+    /// Virtual clock at the end of the run.
+    pub vt_end: u64,
+}
+
+/// Combine per-cell trace hashes into one matrix fingerprint (order
+/// matters — the conformance runner feeds cells in a fixed order).
+pub fn combine_hashes(hashes: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = FNV_OFFSET;
+    for x in hashes {
+        h = fnv_fold(h, x);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_hash_identically() {
+        let mut a = TraceRecorder::default();
+        let mut b = TraceRecorder::default();
+        for r in [&mut a, &mut b] {
+            r.event(EventKind::Send, 0, 1, 0, 16, 5);
+            r.event(EventKind::Deliver, 0, 1, 0, 16, 9);
+        }
+        assert_eq!(a.report(9), b.report(9));
+        assert_eq!(a.report(9).sends, 1);
+        assert_eq!(a.report(9).delivered, 1);
+    }
+
+    #[test]
+    fn any_field_change_changes_hash() {
+        let base = {
+            let mut r = TraceRecorder::default();
+            r.event(EventKind::Send, 0, 1, 0, 16, 5);
+            r.report(5).hash
+        };
+        // Perturb each field in turn.
+        let variants: Vec<(EventKind, u64, u64, u64, u64, u64)> = vec![
+            (EventKind::Deliver, 0, 1, 0, 16, 5),
+            (EventKind::Send, 2, 1, 0, 16, 5),
+            (EventKind::Send, 0, 2, 0, 16, 5),
+            (EventKind::Send, 0, 1, 1, 16, 5),
+            (EventKind::Send, 0, 1, 0, 20, 5),
+            (EventKind::Send, 0, 1, 0, 16, 6),
+        ];
+        for (k, a, b, t, n, v) in variants {
+            let mut r = TraceRecorder::default();
+            r.event(k, a, b, t, n, v);
+            assert_ne!(r.report(v).hash, base, "{k:?} {a} {b} {t} {n} {v}");
+        }
+    }
+
+    #[test]
+    fn event_order_matters() {
+        let mut a = TraceRecorder::default();
+        a.event(EventKind::Send, 0, 1, 0, 8, 1);
+        a.event(EventKind::Send, 1, 0, 0, 8, 1);
+        let mut b = TraceRecorder::default();
+        b.event(EventKind::Send, 1, 0, 0, 8, 1);
+        b.event(EventKind::Send, 0, 1, 0, 8, 1);
+        assert_ne!(a.report(1).hash, b.report(1).hash);
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        assert_ne!(combine_hashes([1, 2, 3]), combine_hashes([3, 2, 1]));
+        assert_eq!(combine_hashes([1, 2, 3]), combine_hashes([1, 2, 3]));
+    }
+}

@@ -1,0 +1,137 @@
+//! Tier-1 conformance gate: every counting path, over the seeded virtual
+//! transport, against the sequential oracle, across adversarial schedules
+//! (ISSUE 5 acceptance criteria; DESIGN.md §10).
+//!
+//! The schedule count per (path, workload, P) config defaults to 16 and
+//! can be scaled with `TRICOUNT_CONFORMANCE_SEEDS` (>= 1) for quick local
+//! iterations; CI runs the default.
+
+use tricount::testkit::conformance::{run, ConformanceReport, Options, Path};
+use tricount::testkit::sched::{FaultPlan, SimConfig};
+use tricount::testkit::sim::Fabric;
+
+fn seeds_from_env(default: u64) -> u64 {
+    std::env::var("TRICOUNT_CONFORMANCE_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&s| s > 0)
+        .unwrap_or(default)
+}
+
+fn assert_clean(r: &ConformanceReport) {
+    assert!(
+        r.ok(),
+        "{} conformance violation(s):\n{}",
+        r.failures.len(),
+        r.failures.join("\n")
+    );
+}
+
+/// The acceptance matrix: all six paths × PA/R-MAT/ER × P∈{2,4,8} ×
+/// ≥16 adversarial schedules per config, every cell run twice (replay).
+#[test]
+fn full_adversarial_matrix_matches_oracle() {
+    let opts = Options { seeds: seeds_from_env(16), faults: false, ..Default::default() };
+    let r = run(&opts).unwrap();
+    assert_clean(&r);
+    let expected_configs = opts.workloads.len() * opts.procs.len() * opts.paths.len();
+    assert_eq!(r.configs.len(), expected_configs);
+    assert_eq!(r.cells, expected_configs as u64 * opts.seeds);
+    // Adversarial schedules must actually differ: within a config the
+    // per-seed traces are combined, and across configs the hashes of a
+    // chatty path must not all collapse to one value.
+    let surrogate_hashes: std::collections::BTreeSet<u64> = r
+        .configs
+        .iter()
+        .filter(|c| c.path == "surrogate")
+        .map(|c| c.hash)
+        .collect();
+    assert!(surrogate_hashes.len() > 1, "surrogate configs all hashed identically");
+}
+
+/// Fault pass: rank death errors out on every path; a lost message trips
+/// the virtual recv guard on the request/reply protocols; both replay
+/// deterministically.
+#[test]
+fn fault_injection_errors_deterministically() {
+    let opts = Options {
+        seeds: 1,
+        workloads: vec!["pa:160:6".into()],
+        procs: vec![4],
+        faults: true,
+        ..Default::default()
+    };
+    let r = run(&opts).unwrap();
+    assert_clean(&r);
+    // death check per path + drop check per p2p path.
+    let p2p = Path::ALL.iter().filter(|p| p.has_p2p()).count() as u64;
+    assert_eq!(r.fault_checks, Path::ALL.len() as u64 + p2p);
+}
+
+/// Same seed ⇒ same matrix hash across two *separate* suite invocations —
+/// the in-process version of the CI double-run diff.
+#[test]
+fn matrix_hash_replays_across_invocations() {
+    let opts = Options {
+        seeds: 3,
+        workloads: vec!["rmat:7:4".into()],
+        procs: vec![2, 4],
+        faults: false,
+        ..Default::default()
+    };
+    let a = run(&opts).unwrap();
+    let b = run(&opts).unwrap();
+    assert_clean(&a);
+    assert_eq!(a.matrix_hash, b.matrix_hash);
+    assert_eq!(
+        a.configs.iter().map(|c| c.hash).collect::<Vec<_>>(),
+        b.configs.iter().map(|c| c.hash).collect::<Vec<_>>()
+    );
+}
+
+/// The virtual fabric agrees with the production channel fabric on the
+/// same protocol (sanity: the Transport extraction changed nothing).
+#[test]
+fn virtual_and_channel_fabrics_agree_on_surrogate() {
+    use tricount::adj::HubThreshold;
+    use tricount::algo::surrogate;
+    use tricount::config::CostFn;
+    use tricount::graph::ordering::Oriented;
+    use tricount::partition::balance::balanced_ranges;
+    use tricount::partition::cost::{cost_vector, prefix_sums};
+
+    let g = tricount::config::build_workload("pa:200:6", 1.0, 3).unwrap();
+    let o = Oriented::from_graph(&g);
+    let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), 4);
+    let (chan, trace) = surrogate::run_on(&Fabric::Channel, &o, &ranges, HubThreshold::Auto);
+    assert!(trace.is_none(), "channel fabric must not produce a trace");
+    let cfg = SimConfig::adversarial(99);
+    let (sim, trace) = surrogate::run_on(&Fabric::Sim(cfg), &o, &ranges, HubThreshold::Auto);
+    let (chan, sim) = (chan.unwrap(), sim.unwrap());
+    assert_eq!(chan.triangles, sim.triangles);
+    assert_eq!(
+        chan.triangles,
+        tricount::seq::node_iterator::count(&o)
+    );
+    let t = trace.expect("virtual fabric must produce a trace");
+    assert!(t.sends > 0 && t.delivered == t.sends);
+}
+
+/// A straggler rank (slow-rank fault) reschedules everything but moves no
+/// counts — checked here on the dynamic load balancer, whose whole point
+/// is tolerating exactly this.
+#[test]
+fn straggler_does_not_move_dynamic_lb_counts() {
+    use std::sync::Arc;
+    use tricount::algo::dynamic_lb::{self, Options as LbOptions};
+    use tricount::graph::ordering::Oriented;
+
+    let g = tricount::config::build_workload("er:220:5", 1.0, 5).unwrap();
+    let o = Arc::new(Oriented::from_graph(&g));
+    let oracle = tricount::seq::node_iterator::count(&o);
+    for seed in 0..4 {
+        let cfg = SimConfig::with_faults(seed, FaultPlan::slow_rank(2, 32));
+        let (r, _) = dynamic_lb::run_on(&Fabric::Sim(cfg), &o, 4, LbOptions::default());
+        assert_eq!(r.unwrap().triangles, oracle, "seed {seed}");
+    }
+}

@@ -1,0 +1,504 @@
+#!/usr/bin/env python3
+"""Differential mirror of rust/src/testkit/sim.rs (authoring-container
+validation: the image has no Rust toolchain, so the scheduler state
+machine is proven out here before tier-1 runs post-merge).
+
+Mirrors the exact design: one execution token; rank programs as
+coroutines yielding transport ops; scheduler choices (resume / deliver /
+guard) drawn from a seeded RNG; virtual time advanced only by
+deliveries; per-edge monotone delivery clocks; kill/drop/slow faults;
+FNV-1a trace hashing over (step, kind, src, dst, tag, bytes, vt).
+
+Validated properties (each a design-level acceptance criterion):
+  1. same seed => identical trace hash and results (replay determinism);
+  2. different seeds explore different schedules;
+  3. per-(src,dst) FIFO under jitter (MPI non-overtaking);
+  4. a surrogate-shaped protocol counts exactly on every schedule,
+     including straggler ranks, and drains (sent == received);
+  5. termination: kill/drop never hang -- blocked ranks fail through the
+     deadlock guard deterministically;
+  6. barrier/reduce generations complete or guard-fail, never wedge.
+
+Run: python3 tools/testkit_sim_mirror.py
+"""
+
+import heapq
+import itertools
+import random
+from collections import deque
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK = (1 << 64) - 1
+
+SEND, DELIVER, DROP_FAULT, DROP_UNREACH, DEATH, GUARD, BARRIER, REDUCE = range(1, 9)
+
+READY, RUNNING, BRECV, BBARRIER, BREDUCE, DONE, DEAD = range(7)
+
+
+def fnv_fold(h, x):
+    for _ in range(8):
+        h = ((h ^ (x & 0xFF)) * FNV_PRIME) & MASK
+        x >>= 8
+    return h
+
+
+class Trace:
+    def __init__(self):
+        self.hash = FNV_OFFSET
+        self.events = self.sends = self.delivered = self.dropped = 0
+        self.deaths = self.guards = 0
+
+    def event(self, kind, src, dst, tag, nbytes, vt):
+        self.events += 1
+        h = self.hash
+        for x in (self.events, kind, src, dst, tag, nbytes, vt):
+            h = fnv_fold(h, x)
+        self.hash = h
+        if kind == SEND:
+            self.sends += 1
+        elif kind == DELIVER:
+            self.delivered += 1
+        elif kind in (DROP_FAULT, DROP_UNREACH):
+            self.dropped += 1
+        elif kind == DEATH:
+            self.deaths += 1
+        elif kind == GUARD:
+            self.guards += 1
+
+
+class Sim:
+    """The SimState + scheduler, with rank programs as generators that
+    yield op tuples and receive op results via .send()."""
+
+    def __init__(self, p, programs, seed, jitter=24, switch=0.5, bias=0.35,
+                 kills=(), drops=(), slow=()):
+        self.p = p
+        self.rng = random.Random(seed)
+        self.jitter, self.switch, self.bias = jitter, switch, bias
+        self.kills = dict(kills)          # rank -> at_op
+        self.drops = set(drops)           # (src, dst, nth)
+        self.slow = dict(slow)            # rank -> factor
+        self.phase = [READY] * p
+        self.mailbox = [deque() for _ in range(p)]
+        self.ops = [0] * p
+        self.result = [None] * p          # 'ok', or ('err', msg)
+        self.recv_count = [0] * p
+        self.in_flight = []               # heap of (at, seq, dst, env)
+        self.seq = itertools.count(1)
+        self.edge_clock = [0] * (p * p)
+        self.edge_sends = [0] * (p * p)
+        self.now = 0
+        self.trace = Trace()
+        self.bar_wait = 0
+        self.red_cells = [None] * p
+        self.red_result = 0
+        # pending wake-value for ranks woken from a block
+        self.wake = [None] * p
+        self.progs = [programs[r](r) for r in range(p)]
+
+    # -- scheduler (mirrors SimState::schedule) --------------------------
+    def schedule(self):
+        while True:
+            ready = [i for i in range(self.p) if self.phase[i] == READY]
+            can_deliver = bool(self.in_flight)
+            deliver = can_deliver and (not ready or self.rng.random() < self.bias)
+            if deliver:
+                at, _, dst, env = heapq.heappop(self.in_flight)
+                self.now = max(self.now, at)
+                src, tag, nbytes, _ = env
+                if self.phase[dst] in (DONE, DEAD):
+                    self.trace.event(DROP_UNREACH, src, dst, tag, nbytes, self.now)
+                else:
+                    self.trace.event(DELIVER, src, dst, tag, nbytes, self.now)
+                    self.mailbox[dst].append(env)
+                    if self.phase[dst] == BRECV:
+                        self.wake[dst] = ("msg", self.mailbox[dst].popleft())
+                        self.phase[dst] = READY
+                continue
+            if ready:
+                pick = ready[self.rng.randrange(len(ready))]
+                self.phase[pick] = RUNNING
+                return pick
+            blocked = [i for i in range(self.p)
+                       if self.phase[i] in (BRECV, BBARRIER, BREDUCE)]
+            if not blocked:
+                return None
+            for i in blocked:
+                self.trace.event(GUARD, i, 0, 0, 0, self.now)
+                self.wake[i] = ("fail", f"rank {i} virtual recv guard at vt {self.now}")
+                self.phase[i] = READY
+
+    def _drain_dead(self, r, first):
+        """Run a dead rank's program to completion (it keeps executing on
+        its own thread in Rust, with every transport op failing fast)."""
+        val = first
+        while True:
+            try:
+                op = self.progs[r].send(val)
+            except StopIteration as st:
+                self.result[r] = st.value if st.value is not None else "ok"
+                return
+            if op[0] == "try_recv":
+                val = ("none", None)
+            elif op[0] == "send":
+                val = ("err", f"rank {r} is dead")
+            else:
+                val = ("fail", f"rank {r} is dead")
+
+    # -- op execution (mirrors the VirtualEndpoint ops) -------------------
+    def run(self):
+        feed = {}            # rank -> result to send into its generator
+        pending_try = set()  # ranks mid-try_recv that yielded the token
+        cur = self.schedule()
+        while cur is not None:
+            r = cur
+            # complete an interrupted try_recv now that we hold the token
+            if r in pending_try:
+                pending_try.discard(r)
+                feed[r] = (("msg", self.mailbox[r].popleft())
+                           if self.mailbox[r] else ("none", None))
+            # consume a wake value set by the scheduler (recv/collectives)
+            if self.wake[r] is not None:
+                feed[r] = self.wake[r]
+                self.wake[r] = None
+            try:
+                op = self.progs[r].send(feed.pop(r, None))
+            except StopIteration as st:
+                self.result[r] = st.value if st.value is not None else "ok"
+                if self.phase[r] != DEAD:
+                    self.phase[r] = DONE
+                cur = self.schedule()
+                continue
+            kind = op[0]
+            # preamble: op count + kill fault (try_recv included; it cannot
+            # fail, so a kill there is silent and the next fallible op errs)
+            self.ops[r] += 1
+            if (r in self.kills and self.ops[r] >= self.kills[r]
+                    and self.phase[r] != DEAD):
+                self.phase[r] = DEAD
+                self.trace.event(DEATH, r, 0, self.ops[r], 0, self.now)
+                if kind == "try_recv":
+                    first = ("none", None)
+                elif kind == "send":
+                    first = ("err", f"rank {r} killed at op {self.ops[r]}")
+                else:
+                    first = ("fail", f"rank {r} killed at op {self.ops[r]}")
+                self._drain_dead(r, first)
+                cur = self.schedule()
+                continue
+
+            if kind == "send":
+                _, dst, tag, nbytes, payload = op
+                if self.phase[dst] in (DEAD, DONE):
+                    feed[r] = ("err", f"rank {r} send to dead rank {dst}")
+                    continue
+                e = r * self.p + dst
+                self.edge_sends[e] += 1
+                self.trace.event(SEND, r, dst, tag, nbytes, self.now)
+                if (r, dst, self.edge_sends[e]) in self.drops:
+                    self.trace.event(DROP_FAULT, r, dst, tag, nbytes, self.now)
+                else:
+                    delay = 1 + (self.rng.randrange(self.jitter) if self.jitter else 0)
+                    for who, f in self.slow.items():
+                        if who in (r, dst):
+                            delay *= f
+                    at = max(self.now + delay, self.edge_clock[e] + 1)
+                    self.edge_clock[e] = at
+                    heapq.heappush(self.in_flight,
+                                   (at, next(self.seq), dst, (r, tag, nbytes, payload)))
+                feed[r] = ("ok", None)
+                if self.rng.random() < self.switch:
+                    self.phase[r] = READY
+                    cur = self.schedule()
+            elif kind == "try_recv":
+                if self.rng.random() < self.switch:
+                    self.phase[r] = READY
+                    pending_try.add(r)
+                    cur = self.schedule()
+                else:
+                    feed[r] = (("msg", self.mailbox[r].popleft())
+                               if self.mailbox[r] else ("none", None))
+            elif kind == "recv":
+                if self.mailbox[r]:
+                    feed[r] = ("msg", self.mailbox[r].popleft())
+                else:
+                    self.phase[r] = BRECV
+                    cur = self.schedule()  # wake[r] will carry the result
+            elif kind == "barrier":
+                self.bar_wait += 1
+                if self.bar_wait == self.p:
+                    self.bar_wait = 0
+                    self.trace.event(BARRIER, r, 0, 0, 0, self.now)
+                    for i in range(self.p):
+                        if self.phase[i] == BBARRIER:
+                            self.wake[i] = ("ok", None)
+                            self.phase[i] = READY
+                    self.wake[r] = ("ok", None)
+                    self.phase[r] = READY
+                else:
+                    self.phase[r] = BBARRIER
+                cur = self.schedule()
+            elif kind == "reduce":
+                self.red_cells[r] = op[1]
+                if all(c is not None for c in self.red_cells):
+                    s = sum(self.red_cells)
+                    self.red_result = s
+                    self.red_cells = [None] * self.p
+                    self.trace.event(REDUCE, r, 0, 0, s, self.now)
+                    for i in range(self.p):
+                        if self.phase[i] == BREDUCE:
+                            self.wake[i] = ("red", s)
+                            self.phase[i] = READY
+                    self.wake[r] = ("red", s)
+                    self.phase[r] = READY
+                else:
+                    self.phase[r] = BREDUCE
+                cur = self.schedule()
+            else:
+                raise AssertionError(f"unknown op {kind}")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# protocol programs (generators): yield op tuples, receive ('ok'|'msg'|...)
+
+
+def ring_program(total):
+    def prog(r):
+        res = yield ("send", (r + 1) % total, 0, 8, r * r)
+        if res[0] == "err":
+            return ("err", res[1])
+        res = yield ("recv",)
+        if res[0] == "fail":
+            return ("err", res[1])
+        return ("val", res[1][3])
+    return prog
+
+
+def surrogate_like(adj, owner, total):
+    """Mini §IV surrogate mirroring the Rust protocol shape: rank owns
+    nodes where owner[v]==r; for each oriented edge (v,u) with remote
+    owner j, send N_v to j once; local pairs counted directly;
+    opportunistic try_recv drains between nodes (like the Rust driver);
+    completion notifiers; reduce at the end."""
+    def prog(r):
+        t = 0
+        completions = 0
+
+        def serve(payload):
+            nonlocal t, completions
+            if payload[0] == "done":
+                completions += 1
+            else:
+                _, _v, nv = payload
+                for u in nv:
+                    if owner[u] == r:
+                        t += len(set(adj[u]) & set(nv))
+
+        for v in [v for v in range(len(adj)) if owner[v] == r]:
+            nv = adj[v]
+            sent_to = set()
+            for u in nv:
+                j = owner[u]
+                if j == r:
+                    t += len(set(adj[u]) & set(nv))
+                elif j not in sent_to:
+                    sent_to.add(j)
+                    res = yield ("send", j, 0, 8 + 4 * len(nv), ("data", v, tuple(nv)))
+                    if res[0] == "err":
+                        return ("err", res[1])
+            # opportunistic drain (Rust: `while let Some(..) = c.try_recv()`)
+            while True:
+                res = yield ("try_recv",)
+                if res[0] != "msg":
+                    break
+                serve(res[1][3])
+        for j in range(total):
+            if j != r:
+                res = yield ("send", j, 1, 8, ("done",))
+                if res[0] == "err":
+                    return ("err", res[1])
+        while completions < total - 1:
+            res = yield ("recv",)
+            if res[0] == "fail":
+                return ("err", res[1])
+            serve(res[1][3])
+        res = yield ("reduce", t)
+        if res[0] == "fail":
+            return ("err", res[1])
+        return ("count", res[1])
+    return prog
+
+
+def reqreply(total):
+    """Mini direct scheme: rank 0 requests a value from every other rank
+    and waits for all replies; others serve one request then wait for a
+    'done'."""
+    def prog(r):
+        if r == 0:
+            pending = 0
+            for j in range(1, total):
+                res = yield ("send", j, 0, 16, ("req",))
+                if res[0] == "err":
+                    return ("err", res[1])
+                pending += 1
+            acc = 0
+            while pending:
+                res = yield ("recv",)
+                if res[0] == "fail":
+                    return ("err", res[1])
+                acc += res[1][3][1]
+                pending -= 1
+            for j in range(1, total):
+                res = yield ("send", j, 1, 8, ("fin",))
+                if res[0] == "err":
+                    return ("err", res[1])
+            return ("val", acc)
+        res = yield ("recv",)
+        if res[0] == "fail":
+            return ("err", res[1])
+        res = yield ("send", 0, 0, 12, ("rep", r * 11))
+        if res[0] == "err":
+            return ("err", res[1])
+        res = yield ("recv",)
+        if res[0] == "fail":
+            return ("err", res[1])
+        return "ok"
+    return prog
+
+
+def fifo_probe(total):
+    def prog(r):
+        if r == 0:
+            for i in range(12):
+                res = yield ("send", 1, 0, 8, i)
+                if res[0] == "err":
+                    return ("err", res[1])
+            return "ok"
+        got = []
+        for _ in range(12):
+            res = yield ("recv",)
+            if res[0] == "fail":
+                return ("err", res[1])
+            got.append(res[1][3])
+        return ("order", tuple(got))
+    return prog
+
+
+def rand_graph(rng, n, m):
+    edges = set()
+    while len(edges) < m:
+        u, v = rng.randrange(n), rng.randrange(n)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    adj = [[] for _ in range(n)]
+    deg = [0] * n
+    for u, v in edges:
+        deg[u] += 1
+        deg[v] += 1
+    # orientation: lower (degree, id) points to higher
+    order = sorted(range(n), key=lambda v: (deg[v], v))
+    pos = {v: i for i, v in enumerate(order)}
+    for u, v in edges:
+        a, b = (u, v) if pos[u] < pos[v] else (v, u)
+        adj[a].append(b)
+    tri = 0
+    es = set(edges)
+    for v in range(n):
+        for i, a in enumerate(adj[v]):
+            for b in adj[v][i + 1:]:
+                if (min(a, b), max(a, b)) in es:
+                    tri += 1
+    return adj, tri
+
+
+def main():
+    fails = 0
+
+    def check(name, cond, detail=""):
+        nonlocal fails
+        if not cond:
+            fails += 1
+            print(f"FAIL {name} {detail}")
+
+    # 1. replay determinism + 2. seed sensitivity (ring)
+    hashes = []
+    for seed in range(8):
+        runs = [Sim(4, {r: ring_program(4) for r in range(4)}, seed).run()
+                for _ in range(2)]
+        a, b = runs
+        check("replay-hash", a.trace.hash == b.trace.hash, f"seed={seed}")
+        check("replay-result", a.result == b.result, f"seed={seed}")
+        check("ring-vals", sorted(x[1] for x in a.result) == [0, 1, 4, 9], a.result)
+        hashes.append(a.trace.hash)
+    check("seed-diversity", len(set(hashes)) > 1, hashes)
+
+    # 3. per-edge FIFO under jitter
+    for seed in range(30):
+        s = Sim(2, {r: fifo_probe(2) for r in range(2)}, seed, switch=0.0).run()
+        check("fifo", s.result[1] == ("order", tuple(range(12))), f"seed={seed} {s.result[1]}")
+
+    # 4. surrogate-like exactness over many schedules (+ stragglers)
+    grng = random.Random(7)
+    for case in range(6):
+        n, m = 24, 60
+        adj, tri = rand_graph(grng, n, m)
+        for p in (2, 3, 5):
+            owner = [min(v * p // n, p - 1) for v in range(n)]
+            for seed in range(16):
+                slow = {p - 1: 16} if seed % 4 == 3 else {}
+                s = Sim(p, {r: surrogate_like(adj, owner, p) for r in range(p)},
+                        seed, slow=slow).run()
+                counts = {x[1] for x in s.result if x[0] == "count"}
+                check("surrogate-exact", counts == {tri},
+                      f"case={case} p={p} seed={seed} got={counts} want={tri}")
+                check("drained", s.trace.delivered == s.trace.sends,
+                      f"case={case} p={p} seed={seed}")
+
+    # 5a. kill never hangs: every rank ends Done/Dead with a result
+    for seed in range(12):
+        s = Sim(3, {r: reqreply(3) for r in range(3)}, seed, kills={1: 1}).run()
+        check("kill-terminates", all(r is not None for r in s.result), s.result)
+        errs = [r for r in s.result if isinstance(r, tuple) and r[0] == "err"]
+        check("kill-errs", len(errs) >= 1, s.result)
+        s2 = Sim(3, {r: reqreply(3) for r in range(3)}, seed, kills={1: 1}).run()
+        check("kill-replay", s.result == s2.result and s.trace.hash == s2.trace.hash,
+              f"seed={seed}")
+
+    # 5b. drop trips the guard deterministically
+    for seed in range(12):
+        s = Sim(3, {r: reqreply(3) for r in range(3)}, seed, drops={(0, 1, 1)}).run()
+        guard_errs = [r for r in s.result
+                      if isinstance(r, tuple) and r[0] == "err" and "guard" in r[1]]
+        check("drop-guard", len(guard_errs) >= 1, s.result)
+        s2 = Sim(3, {r: reqreply(3) for r in range(3)}, seed, drops={(0, 1, 1)}).run()
+        check("drop-replay", s.result == s2.result and s.trace.hash == s2.trace.hash,
+              f"seed={seed}")
+
+    # 6. barrier + reduce complete; death in reduce guards out
+    def red_prog(total):
+        def prog(r):
+            res = yield ("barrier",)
+            if res[0] == "fail":
+                return ("err", res[1])
+            res = yield ("reduce", r + 1)
+            if res[0] == "fail":
+                return ("err", res[1])
+            return ("val", res[1])
+        return prog
+
+    for seed in range(10):
+        s = Sim(5, {r: red_prog(5) for r in range(5)}, seed).run()
+        check("reduce-total", all(x == ("val", 15) for x in s.result), s.result)
+        s = Sim(4, {r: red_prog(4) for r in range(4)}, seed, kills={2: 1}).run()
+        check("reduce-death", all(r is not None for r in s.result), s.result)
+        check("reduce-death-err",
+              any(isinstance(r, tuple) and r[0] == "err" for r in s.result), s.result)
+
+    print("PASS" if fails == 0 else f"{fails} FAILURES")
+    return 0 if fails == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
