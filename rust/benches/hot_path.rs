@@ -83,6 +83,25 @@ fn main() {
         c
     });
 
+    println!("\n== obs overhead: hybrid dispatch ± per-rank kernel sink ==");
+    {
+        use tricount::adj::{self, stats, NeighborView};
+        let a = sorted_list(&mut rng, 10_000, 1_000_000);
+        let b = sorted_list(&mut rng, 10_000, 1_000_000);
+        let units = (a.len() + b.len()) as u64 * 200;
+        let body = |a: &[u32], b: &[u32]| {
+            let mut t = 0;
+            for _ in 0..200 {
+                adj::intersect_count(NeighborView::sorted(a), NeighborView::sorted(b), &mut t);
+            }
+            t
+        };
+        bench("dispatch 10K∩10K ×200 (global ctrs)", units, "elem", || body(&a, &b));
+        let sink = std::sync::Arc::new(stats::RankKernelCounters::default());
+        let _scope = stats::install_rank(sink);
+        bench("dispatch 10K∩10K ×200 (+rank sink)", units, "elem", || body(&a, &b));
+    }
+
     println!("\n== end-to-end sequential counting ==");
     for (name, g) in [
         ("PA(200K, 16)", tricount::gen::pa::preferential_attachment(200_000, 16, &mut Rng::seeded(2))),

@@ -3,14 +3,26 @@
 //! Every [`crate::adj::view::intersect_count`] / [`intersect_into`]
 //! call records which kernel actually ran, so runs can report the
 //! representation mix (`tricount count`: `k_list_list`, `k_list_bitmap`,
-//! `k_bitmap_bitmap` in the JSON schema). Counters are process-global
-//! relaxed atomics — a single uncontended add next to an intersection that
-//! walks whole lists — and are aggregated across rank threads, matching how
-//! the rest of the metrics layer reports cluster-wide totals.
+//! `k_bitmap_bitmap` in the JSON schema). Two sinks exist:
+//!
+//! * **Process-global** relaxed atomics — the cross-rank sum, as the
+//!   CLI has always reported it.
+//! * An optional **per-rank** sink: the cluster launcher installs one
+//!   [`RankKernelCounters`] handle into each rank thread's TLS
+//!   ([`install_rank`]), and [`record`] bumps it alongside the global
+//!   counters. That scopes the mix per rank for the obs registry
+//!   (`obs::registry`) without the global snapshot changing meaning —
+//!   Σ per-rank == global delta, pinned by test.
+//!
+//! Each bump is a single uncontended add (plus one TLS read) next to an
+//! intersection that walks whole lists; the obs overhead gate
+//! (`rust/tests/obs_overhead.rs`) bounds the cost at < 3%.
 //!
 //! [`intersect_into`]: crate::adj::view::intersect_into
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// One counter per cache line so rank threads bumping different paths
 /// don't false-share (they still share a line when hitting the *same*
@@ -33,7 +45,66 @@ pub enum KernelPath {
     BitmapBitmap,
 }
 
-/// Record one dispatch decision.
+/// Per-rank counter cell. The launcher owns one `Arc` per rank, installs
+/// a clone into the rank thread's TLS for the duration of the rank
+/// program, and snapshots it into that rank's `CommMetrics::kernel`.
+/// Atomics (not `Cell`) so the owner may snapshot while the rank runs.
+#[derive(Debug, Default)]
+pub struct RankKernelCounters {
+    list_list: AtomicU64,
+    list_bitmap: AtomicU64,
+    bitmap_bitmap: AtomicU64,
+}
+
+impl RankKernelCounters {
+    #[inline]
+    fn bump(&self, path: KernelPath) {
+        let c = match path {
+            KernelPath::ListList => &self.list_list,
+            KernelPath::ListBitmap => &self.list_bitmap,
+            KernelPath::BitmapBitmap => &self.bitmap_bitmap,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read this rank's counters.
+    pub fn snapshot(&self) -> KernelStats {
+        KernelStats {
+            list_list: self.list_list.load(Ordering::Relaxed),
+            list_bitmap: self.list_bitmap.load(Ordering::Relaxed),
+            bitmap_bitmap: self.bitmap_bitmap.load(Ordering::Relaxed),
+        }
+    }
+}
+
+thread_local! {
+    static RANK_COUNTERS: RefCell<Option<Arc<RankKernelCounters>>> =
+        const { RefCell::new(None) };
+}
+
+/// RAII guard returned by [`install_rank`]; uninstalls the per-rank sink
+/// from this thread's TLS on drop (including unwinds), so a finished rank
+/// thread can never leak its sink into unrelated work.
+pub struct RankScope {
+    _priv: (),
+}
+
+impl Drop for RankScope {
+    fn drop(&mut self) {
+        RANK_COUNTERS.with(|s| *s.borrow_mut() = None);
+    }
+}
+
+/// Install `counters` as the calling thread's per-rank kernel sink.
+/// Nested installs replace (last wins) until their guard drops.
+pub fn install_rank(counters: Arc<RankKernelCounters>) -> RankScope {
+    RANK_COUNTERS.with(|s| *s.borrow_mut() = Some(counters));
+    RankScope { _priv: () }
+}
+
+/// Record one dispatch decision: always into the process-global sum, and
+/// additionally into the calling thread's per-rank sink if one is
+/// installed.
 #[inline]
 pub fn record(path: KernelPath) {
     let c = match path {
@@ -42,9 +113,14 @@ pub fn record(path: KernelPath) {
         KernelPath::BitmapBitmap => &BITMAP_BITMAP,
     };
     c.0.fetch_add(1, Ordering::Relaxed);
+    RANK_COUNTERS.with(|s| {
+        if let Some(rc) = s.borrow().as_deref() {
+            rc.bump(path);
+        }
+    });
 }
 
-/// Snapshot of the process-wide counters.
+/// Snapshot of the process-wide counters (the cross-rank sum).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct KernelStats {
     pub list_list: u64,
@@ -61,6 +137,14 @@ impl KernelStats {
     /// Intersections that used a bitmap kernel.
     pub fn bitmap_hits(&self) -> u64 {
         self.list_bitmap + self.bitmap_bitmap
+    }
+
+    /// Field-wise accumulate (used by `CommMetrics::merge`, so the
+    /// cluster total of per-rank kernels is again a `KernelStats`).
+    pub fn merge(&mut self, other: &KernelStats) {
+        self.list_list += other.list_list;
+        self.list_bitmap += other.list_bitmap;
+        self.bitmap_bitmap += other.bitmap_bitmap;
     }
 }
 
@@ -94,5 +178,30 @@ mod tests {
         let after = snapshot();
         assert!(after.bitmap_bitmap >= before.bitmap_bitmap + 2);
         assert!(after.total() >= before.total() + 2);
+    }
+
+    #[test]
+    fn rank_scope_routes_bumps_while_installed() {
+        let mine = Arc::new(RankKernelCounters::default());
+        {
+            let _scope = install_rank(mine.clone());
+            record(KernelPath::ListList);
+            record(KernelPath::ListBitmap);
+        }
+        // Guard dropped: further bumps are global-only.
+        record(KernelPath::ListList);
+        let got = mine.snapshot();
+        assert_eq!(got, KernelStats { list_list: 1, list_bitmap: 1, bitmap_bitmap: 0 });
+        // Per-rank cells are exact even though the globals are shared with
+        // concurrently running tests: nothing else holds this Arc.
+        assert_eq!(got.total(), 2);
+    }
+
+    #[test]
+    fn kernel_stats_merge_is_fieldwise() {
+        let mut a = KernelStats { list_list: 1, list_bitmap: 2, bitmap_bitmap: 3 };
+        a.merge(&KernelStats { list_list: 10, list_bitmap: 20, bitmap_bitmap: 30 });
+        assert_eq!(a, KernelStats { list_list: 11, list_bitmap: 22, bitmap_bitmap: 33 });
+        assert_eq!(a.total(), 66);
     }
 }

@@ -15,6 +15,7 @@ use crate::algo::driver::{self, RunResult};
 use crate::comm::threads::{Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
+use crate::obs::span::SpanPhase;
 use crate::partition::nonoverlap::partition_sizes;
 use crate::partition::owned::{self, OwnedPartition};
 use crate::testkit::sim::Fabric;
@@ -101,6 +102,9 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     let me = c.rank() as u32;
     let mut st = RankState { t: 0, work: 0, completions: 0, pending: 0 };
 
+    // Compute span over the request/count sweep; the drain loops below
+    // appear as recv-wait on the timeline.
+    c.span_begin(SpanPhase::Compute);
     for v in part.range() {
         let vv = part.view(v);
         let nv = vv.list();
@@ -123,6 +127,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
             handle(c, part, src, msg, &mut st)?;
         }
     }
+    c.span_end();
 
     // Drain until all our responses arrived (serving peers' requests too,
     // otherwise two ranks could wait on each other forever).

@@ -22,6 +22,7 @@ use crate::comm::threads::{Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
+use crate::obs::span::SpanPhase;
 use crate::partition::cost::{cost_vector, prefix_sums};
 use crate::seq::node_iterator;
 use crate::testkit::sim::Fabric;
@@ -154,8 +155,12 @@ fn worker(
     let mut work = 0u64;
 
     // Initial task — deterministic, no coordinator involved (Eqn 1).
+    // Each task executes under its own Compute span, so the timeline
+    // shows the task granularity and the request/assign gaps between.
     if let Some(task) = initial.get(wid) {
+        c.span_begin(SpanPhase::Compute);
         run_task(&graph, *task, &mut t, &mut work);
+        c.span_end();
     }
 
     // Dynamic phase: request → assign/terminate loop.
@@ -163,7 +168,11 @@ fn worker(
         c.send_control(0, Msg::Request)?;
         let (_src, msg) = c.recv()?;
         match msg {
-            Msg::Assign(task) => run_task(&graph, task, &mut t, &mut work),
+            Msg::Assign(task) => {
+                c.span_begin(SpanPhase::Compute);
+                run_task(&graph, task, &mut t, &mut work);
+                c.span_end();
+            }
             Msg::Terminate => break,
             Msg::Request => unreachable!("workers never receive requests"),
         }

@@ -17,6 +17,7 @@ use crate::comm::threads::{Comm, Payload};
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
+use crate::obs::span::SpanPhase;
 use crate::partition::cost::{cost_vector, prefix_sums};
 use crate::testkit::sim::Fabric;
 use crate::testkit::trace::TraceReport;
@@ -112,13 +113,20 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
 fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usize) -> Result<Vec<u64>> {
     let wid = c.rank() - 1;
     let mut tv = vec![0u64; n];
+    // One Compute span per executed task (same convention as dynamic_lb).
     if let Some(task) = initial.get(wid) {
+        c.span_begin(SpanPhase::Compute);
         run_task(&o, *task, &mut tv);
+        c.span_end();
     }
     loop {
         c.send_control(0, Msg::Request)?;
         match c.recv()?.1 {
-            Msg::Assign(task) => run_task(&o, task, &mut tv),
+            Msg::Assign(task) => {
+                c.span_begin(SpanPhase::Compute);
+                run_task(&o, task, &mut tv);
+                c.span_end();
+            }
             Msg::Terminate => break,
             Msg::Request => unreachable!(),
         }

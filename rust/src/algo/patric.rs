@@ -21,6 +21,7 @@ use crate::comm::threads::Comm;
 use crate::error::Result;
 use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
+use crate::obs::span::SpanPhase;
 use crate::partition::overlap::overlap_sizes;
 use crate::partition::owned::{self, OwnedPartition};
 use crate::testkit::sim::Fabric;
@@ -60,6 +61,9 @@ pub fn run_on(
 fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> {
     let mut t: TriangleCount = 0;
     let mut work = 0u64;
+    // PATRIC is embarrassingly local until the final reduce: one Compute
+    // span covers the entire counting sweep.
+    c.span_begin(SpanPhase::Compute);
     for v in part.range() {
         let vv = part.view(v);
         for &u in vv.list() {
@@ -69,6 +73,7 @@ fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> 
             work += adj::intersect_cost(vv, vu);
         }
     }
+    c.span_end();
     c.metrics.work_units = work;
     c.reduce_sum(t)?;
     Ok(t)

@@ -22,6 +22,7 @@ use crate::algo::driver::{self, RunResult};
 use crate::comm::threads::{Comm, Payload};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
+use crate::obs::span::SpanPhase;
 use crate::partition::nonoverlap::partition_sizes;
 use crate::partition::owned::{self, OwnedPartition};
 use crate::testkit::sim::Fabric;
@@ -114,6 +115,9 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     // Lines 2-12: local counting + sends + opportunistic receive. N_v is
     // walked as per-owner runs (§IV-C `LastProc`): one contiguous run per
     // destination partition ⇒ exactly one send per (v, remote partition).
+    // The whole sweep is one Compute span; the serve loop below shows up
+    // as recv-wait on the timeline instead.
+    c.span_begin(SpanPhase::Compute);
     for v in part.range() {
         let vv = part.view(v);
         let nv = vv.list();
@@ -135,6 +139,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
             handle(part, msg, &mut t, &mut work, &mut completions);
         }
     }
+    c.span_end();
 
     // Line 16: broadcast completion notifier.
     c.bcast_control(|| Msg::Completion)?;

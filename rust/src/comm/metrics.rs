@@ -7,6 +7,9 @@
 
 use std::time::Duration;
 
+use crate::adj::stats::KernelStats;
+use crate::obs::span::SpanLog;
+
 /// Counters a single rank accumulates during a run.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommMetrics {
@@ -50,10 +53,21 @@ pub struct CommMetrics {
     /// opt-in state, reported apart from the CSR bytes the §IV
     /// space-efficiency claim is about.
     pub accel_bytes: u64,
+    /// Kernel-path mix of the intersections *this rank* dispatched
+    /// (`adj::stats` per-rank scoping — the launcher installs a per-rank
+    /// sink for the rank program's duration). The process-global
+    /// `adj::stats::snapshot()` remains the cross-rank sum.
+    pub kernel: KernelStats,
+    /// This rank's phase-span timeline (`obs::span`): wall-µs ticks on
+    /// the channel fabric, virtual ticks on the testkit fabric. Replayed
+    /// virtual schedules reproduce this log bit-identically.
+    pub spans: SpanLog,
 }
 
 impl CommMetrics {
-    /// Merge another rank's counters (for cluster-wide totals).
+    /// Merge another rank's counters (for cluster-wide totals). Span
+    /// logs are deliberately *not* concatenated — a timeline belongs to
+    /// one rank; cluster totals keep an empty log.
     pub fn merge(&mut self, other: &CommMetrics) {
         self.messages_sent += other.messages_sent;
         self.bytes_sent += other.bytes_sent;
@@ -66,6 +80,7 @@ impl CommMetrics {
         self.partition_bytes += other.partition_bytes;
         self.partition_bytes_pred += other.partition_bytes_pred;
         self.accel_bytes += other.accel_bytes;
+        self.kernel.merge(&other.kernel);
     }
 }
 
@@ -141,6 +156,7 @@ mod tests {
             partition_bytes: 100,
             partition_bytes_pred: 100,
             accel_bytes: 16,
+            kernel: KernelStats { list_list: 3, list_bitmap: 1, bitmap_bitmap: 2 },
             ..Default::default()
         };
         a.merge(&b);
@@ -151,6 +167,9 @@ mod tests {
         assert_eq!(a.partition_bytes, 100);
         assert_eq!(a.partition_bytes_pred, 100);
         assert_eq!(a.accel_bytes, 16);
+        // Kernel mixes sum field-wise; span logs stay per-rank (empty here).
+        assert_eq!(a.kernel.total(), 6);
+        assert_eq!(a.spans.recorded(), 0);
     }
 
     #[test]

@@ -16,12 +16,14 @@
 //! seeded deterministic `testkit::sim` fabric the conformance suite drives
 //! adversarial schedules through (DESIGN.md §10).
 
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::adj::stats as kernel_stats;
 use crate::comm::metrics::CommMetrics;
 use crate::comm::transport::{channel_fabric, ChannelTransport, Envelope, Transport};
 use crate::error::{Error, Result};
+use crate::obs::span::{SpanPhase, SpanRecorder};
 use crate::testkit::sim::VirtualEndpoint;
 
 pub use crate::comm::transport::Payload;
@@ -70,20 +72,59 @@ macro_rules! with_transport {
     };
 }
 
-/// A rank's endpoint: its transport and its metrics.
+/// A rank's endpoint: its transport, its metrics and its span timeline.
 pub struct Comm<M: Payload> {
     backend: Backend<M>,
     /// Per-rank counters, returned to the driver by [`Cluster::run`].
     pub metrics: CommMetrics,
+    /// Per-rank phase-span recorder (`obs::span`): wall clock on the
+    /// channel fabric, the scheduler's virtual clock on the testkit
+    /// fabric. Every blocking comm op records its span automatically;
+    /// algorithms mark compute sections via [`Comm::span_begin`] /
+    /// [`Comm::span_end`]. Harvested into `CommMetrics::spans` by the
+    /// launcher when the rank program returns.
+    pub spans: SpanRecorder,
 }
 
 impl<M: Payload> Comm<M> {
     pub(crate) fn from_channel(t: ChannelTransport<M>) -> Self {
-        Comm { backend: Backend::Channel(t), metrics: CommMetrics::default() }
+        Comm {
+            backend: Backend::Channel(t),
+            metrics: CommMetrics::default(),
+            spans: SpanRecorder::wall(),
+        }
     }
 
     pub(crate) fn from_virtual(t: VirtualEndpoint<M>) -> Self {
-        Comm { backend: Backend::Virtual(t), metrics: CommMetrics::default() }
+        Comm {
+            backend: Backend::Virtual(t),
+            metrics: CommMetrics::default(),
+            spans: SpanRecorder::virtual_clock(),
+        }
+    }
+
+    /// Current tick in this rank's clock domain: µs since launch on the
+    /// channel fabric, the scheduler's virtual clock on the sim fabric.
+    #[inline]
+    fn ticks(&self) -> u64 {
+        match &self.backend {
+            Backend::Channel(_) => self.spans.wall_now(),
+            Backend::Virtual(t) => t.virtual_now().unwrap_or(0),
+        }
+    }
+
+    /// Open a phase span (typically [`SpanPhase::Compute`] around a
+    /// counting section) on this rank's timeline; close it with
+    /// [`Comm::span_end`]. Spans nest LIFO.
+    pub fn span_begin(&mut self, phase: SpanPhase) {
+        let t = self.ticks();
+        self.spans.begin_at(phase, t);
+    }
+
+    /// Close the most recently opened span.
+    pub fn span_end(&mut self) {
+        let t = self.ticks();
+        self.spans.end_at(t);
     }
 
     /// This rank's id in `0..size`.
@@ -104,7 +145,11 @@ impl<M: Payload> Comm<M> {
         self.metrics.messages_sent += 1;
         self.metrics.bytes_sent += msg.size_bytes();
         let src = self.rank();
-        with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: false, msg }))
+        let t0 = self.ticks();
+        let r = with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: false, msg }));
+        let t1 = self.ticks();
+        self.spans.record(SpanPhase::Send, t0, t1);
+        r
     }
 
     /// Control-plane send (completion notifiers, task protocol): accounted
@@ -112,7 +157,11 @@ impl<M: Payload> Comm<M> {
     pub fn send_control(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.control_sent += 1;
         let src = self.rank();
-        with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: true, msg }))
+        let t0 = self.ticks();
+        let r = with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: true, msg }));
+        let t1 = self.ticks();
+        self.spans.record(SpanPhase::Send, t0, t1);
+        r
     }
 
     /// Broadcast a control message to every other rank via `make`.
@@ -144,24 +193,54 @@ impl<M: Payload> Comm<M> {
 
     /// Blocking receive with the deadlock guard; records wait time as idle.
     /// On the channel fabric the guard is [`recv_guard`] wall-clock; on the
-    /// virtual fabric it is exact deadlock detection under virtual time.
+    /// virtual fabric it is exact deadlock detection under virtual time —
+    /// and `recv_wait` itself is measured in *virtual ticks* there (1 tick
+    /// ↔ 1 µs), so the wait is deterministic under a replayed schedule.
     pub fn recv(&mut self) -> Result<(usize, M)> {
-        let start = Instant::now();
+        let t0 = self.ticks();
+        let start = matches!(self.backend, Backend::Channel(_)).then(Instant::now);
         let r = with_transport!(&mut self.backend, t => t.recv());
-        self.metrics.recv_wait += start.elapsed();
+        let t1 = self.ticks();
+        self.metrics.recv_wait += match start {
+            Some(s) => s.elapsed(),
+            None => Duration::from_micros(t1.saturating_sub(t0)),
+        };
+        self.spans.record(SpanPhase::RecvWait, t0, t1);
         r.map(|env| self.accept(env))
     }
 
     /// Synchronize all ranks (MPI_Barrier). Fails instead of hanging when
     /// the fabric can prove completion impossible (virtual fabric only).
     pub fn barrier(&mut self) -> Result<()> {
-        with_transport!(&mut self.backend, t => t.barrier())
+        let t0 = self.ticks();
+        let r = with_transport!(&mut self.backend, t => t.barrier());
+        let t1 = self.ticks();
+        self.spans.record(SpanPhase::Barrier, t0, t1);
+        r
     }
 
     /// Sum-reduce a u64 across all ranks; everyone receives the total
     /// (MPI_Allreduce(SUM)).
     pub fn reduce_sum(&mut self, value: u64) -> Result<u64> {
-        with_transport!(&mut self.backend, t => t.reduce_sum(value))
+        let t0 = self.ticks();
+        let r = with_transport!(&mut self.backend, t => t.reduce_sum(value));
+        let t1 = self.ticks();
+        self.spans.record(SpanPhase::Reduce, t0, t1);
+        r
+    }
+
+    /// Stamp end-of-run metrics once the rank program has returned: the
+    /// run's `total` (virtual ticks → µs on the sim fabric, so replays
+    /// agree; wall time otherwise), the per-rank kernel mix, and the span
+    /// log. Called by the launcher while the rank still holds the
+    /// scheduler token, so every reading is deterministic.
+    fn finish(&mut self, start: Instant, kernels: &kernel_stats::RankKernelCounters) {
+        self.metrics.total = match &self.backend {
+            Backend::Channel(_) => start.elapsed(),
+            Backend::Virtual(t) => Duration::from_micros(t.virtual_now().unwrap_or(0)),
+        };
+        self.metrics.kernel = kernels.snapshot();
+        self.metrics.spans = self.spans.take_log();
     }
 }
 
@@ -215,11 +294,21 @@ impl Cluster {
                     .drain(..)
                     .map(|mut comm| {
                         s.spawn(move || {
+                            // Per-rank kernel sink: bumps from this thread
+                            // land in `kernels` (and the global sum) until
+                            // the scope guard drops at thread exit.
+                            let kernels =
+                                Arc::new(kernel_stats::RankKernelCounters::default());
+                            let _scope = kernel_stats::install_rank(kernels.clone());
                             with_transport!(&mut comm.backend, t => t.start());
+                            // Re-anchor wall span ticks at thread start so
+                            // they share a time origin with `total` below
+                            // (the endpoints were built pre-spawn).
+                            comm.spans.reset_epoch();
                             let start = Instant::now();
                             let r = f(&mut comm);
-                            comm.metrics.total = start.elapsed();
-                            (r, comm.metrics)
+                            comm.finish(start, &kernels);
+                            (r, std::mem::take(&mut comm.metrics))
                         })
                     })
                     .collect();
@@ -405,6 +494,34 @@ mod tests {
         match r {
             Err(Error::Cluster(msg)) => assert!(msg.contains("rank 1"), "{msg}"),
             other => panic!("expected rank 1's error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spans_recorded_on_channel_fabric() {
+        use crate::obs::span::ClockDomain;
+        let res = Cluster::run::<u64, (), _>(2, |c| {
+            c.span_begin(SpanPhase::Compute);
+            if c.rank() == 0 {
+                c.send(1, 5).unwrap();
+            } else {
+                c.recv().unwrap();
+            }
+            c.span_end();
+            c.barrier().unwrap();
+            c.reduce_sum(1).unwrap();
+        })
+        .unwrap();
+        for (rank, (_, m)) in res.iter().enumerate() {
+            let count =
+                |p: SpanPhase| m.spans.spans.iter().filter(|s| s.phase == p).count();
+            assert_eq!(m.spans.domain, ClockDomain::Wall);
+            assert_eq!(count(SpanPhase::Compute), 1, "rank {rank}");
+            assert_eq!(count(SpanPhase::Barrier), 1, "rank {rank}");
+            assert_eq!(count(SpanPhase::Reduce), 1, "rank {rank}");
+            assert_eq!(count(SpanPhase::Send), usize::from(rank == 0));
+            assert_eq!(count(SpanPhase::RecvWait), usize::from(rank == 1));
+            assert_eq!(m.spans.dropped, 0);
         }
     }
 

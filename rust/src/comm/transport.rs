@@ -93,6 +93,17 @@ pub trait Transport<M: Payload>: Send {
     /// Sum-reduce a u64 across all ranks; everyone receives the total
     /// (MPI_Allreduce(SUM)).
     fn reduce_sum(&mut self, value: u64) -> Result<u64>;
+
+    /// Deterministic virtual-clock reading, in ticks, for fabrics that
+    /// schedule under one; `None` on wall-clock fabrics (the default).
+    /// The obs layer uses it to stamp phase spans and `recv_wait` in
+    /// virtual time, so adversarial schedules replay to bit-identical
+    /// timelines (DESIGN.md §11). Only meaningful while the calling rank
+    /// is the scheduled one — which is always true from inside a rank
+    /// program on the simulator.
+    fn virtual_now(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// State shared by all ranks of one channel-backed cluster.

@@ -55,6 +55,16 @@
 //!   §8). [`pipeline`] (`tricount bench-pipeline`) times the stages
 //!   against the retained comparison-sort baseline and writes
 //!   `BENCH_pipeline.json`, the repo's recorded perf baseline.
+//! * **`obs/`** — the observability layer: per-rank phase-span timelines
+//!   ([`obs::span`], ring-buffered, wall-clock on the channel fabric and
+//!   *virtual-time* on the testkit fabric so adversarial schedules replay
+//!   to bit-identical timelines), a unified schema-versioned metrics
+//!   registry ([`obs::registry`]: comm counters + per-rank kernel mix +
+//!   stream batches + pipeline phases in one JSON snapshot),
+//!   Chrome/Perfetto trace export ([`obs::export`], `--trace-out` on
+//!   `count`/`stream`/`bench-pipeline`/`conformance`), and the Fig-13
+//!   idle/imbalance breakdown ([`obs::report`], `tricount obs-report`).
+//!   See DESIGN.md §11.
 //! * **L2/L1 (python/, build-time only)** — a blocked dense triangle-count
 //!   formulated for the MXU (`sum((L@L) ⊙ L)`) as a Pallas kernel inside a
 //!   JAX model, AOT-lowered to HLO text.
@@ -131,6 +141,15 @@ pub mod comm {
     pub mod transport;
     pub use threads::{Cluster, Comm};
     pub use transport::{Payload, Transport};
+}
+
+pub mod obs {
+    pub mod export;
+    pub mod registry;
+    pub mod report;
+    pub mod span;
+    pub use registry::{MetricsRegistry, SCHEMA_VERSION};
+    pub use span::{ClockDomain, Span, SpanLog, SpanPhase, SpanRecorder};
 }
 
 pub mod testkit {

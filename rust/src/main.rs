@@ -43,6 +43,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "partition-stats" => cmd_partition_stats(&args[1..]),
         "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
         "conformance" => cmd_conformance(&args[1..]),
+        "obs-report" => cmd_obs_report(&args[1..]),
         "exp" => cmd_exp(&args[1..]),
         "info" => cmd_info(&args[1..]),
         "help" | "--help" | "-h" => {
@@ -105,9 +106,23 @@ COMMANDS:
                     --seeds N (schedules per config, default 16)
                     --procs P1,P2,…  --workloads S1,S2,…
                     --paths p1,p2,…  --faults on|off  --out DIR
+  obs-report        validate and pretty-print an obs snapshot written by
+                    `count --obs-out` / `stream --obs-out` (schema v1):
+                    per-rank idle/imbalance breakdown, kernel mix, batches
+                    tricount obs-report SNAPSHOT.json [--trace TRACE.json]
+                    (--trace additionally validates a Perfetto trace file)
   exp               paper experiments
                     --id ID|all [--list] [--quick] [--scale X] [--out DIR]
-  info              PJRT platform + discovered artifacts"
+  info              PJRT platform + discovered artifacts
+
+OBSERVABILITY:
+  count, stream     --trace-out FILE (Chrome/Perfetto trace: one track per
+                    rank, spans for compute/send/recv-wait/barrier/reduce/
+                    batch-apply) --obs-out FILE (versioned JSON metrics
+                    snapshot; see `obs-report`)
+  bench-pipeline    --trace-out FILE (stage timings as a timeline)
+  conformance       --trace-out FILE (virtual-time timeline of a fixed
+                    adversarial cell — byte-identical across runs)"
     );
 }
 
@@ -148,7 +163,7 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
 
 fn cmd_count(args: &[String]) -> Result<()> {
     let (mut cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &["out"])?;
+    reject_unknown(&extra, &["out", "trace-out", "obs-out"])?;
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
     let gen_time = t0.elapsed();
@@ -202,6 +217,10 @@ fn cmd_count(args: &[String]) -> Result<()> {
     // Partitioned (§IV) runs leave their metrics here so the partition-
     // memory report and the measured==predicted gate below apply uniformly.
     let mut partitioned: Option<tricount::comm::metrics::ClusterMetrics> = None;
+    // Every cluster-launching path also leaves its metrics here for the
+    // obs/ per-rank breakdown and the trace/snapshot exports; the
+    // single-process paths synthesize a one-rank timeline below.
+    let mut cluster: Option<tricount::comm::metrics::ClusterMetrics> = None;
     let (triangles, detail) = match cfg.algorithm {
         Algorithm::Sequential => (node_iterator::count(&o), String::new()),
         Algorithm::Surrogate | Algorithm::Direct => {
@@ -220,6 +239,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
                 t.bytes_sent,
                 r.metrics.imbalance()
             );
+            cluster = Some(r.metrics.clone());
             partitioned = Some(r.metrics);
             (r.triangles, detail)
         }
@@ -228,6 +248,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             let ranges = balanced_ranges(&prefix, cfg.procs);
             let r = patric::run(&g, &o, &ranges, cfg.hub_threshold)?;
             let detail = format!("imbalance={:.3}", r.metrics.imbalance());
+            cluster = Some(r.metrics.clone());
             partitioned = Some(r.metrics);
             (r.triangles, detail)
         }
@@ -240,7 +261,9 @@ fn cmd_count(args: &[String]) -> Result<()> {
                     granularity: dynamic_lb::Granularity::Shrinking,
                 },
             )?;
-            (r.triangles, format!("imbalance={:.3}", r.metrics.imbalance()))
+            let detail = format!("imbalance={:.3}", r.metrics.imbalance());
+            cluster = Some(r.metrics);
+            (r.triangles, detail)
         }
         Algorithm::Hybrid => {
             let engine = tricount::runtime::engine::Engine::cpu()?;
@@ -294,6 +317,45 @@ fn cmd_count(args: &[String]) -> Result<()> {
         None => (0, 0, 0),
     };
 
+    // Fig-13-style per-rank idle/imbalance breakdown from the obs/ span
+    // timelines. Single-process paths (seq, hybrid) synthesize a one-rank
+    // wall timeline covering the whole counting phase so every algorithm
+    // produces a trace and a snapshot.
+    let cluster = cluster.unwrap_or_else(|| {
+        use tricount::obs::span::{ClockDomain, Span, SpanLog, SpanPhase};
+        tricount::comm::metrics::ClusterMetrics {
+            per_rank: vec![tricount::comm::metrics::CommMetrics {
+                total: elapsed,
+                kernel: kernels,
+                spans: SpanLog {
+                    domain: ClockDomain::Wall,
+                    spans: vec![Span {
+                        phase: SpanPhase::Compute,
+                        t_start: 0,
+                        t_end: elapsed.as_micros() as u64,
+                    }],
+                    dropped: 0,
+                },
+                ..Default::default()
+            }],
+        }
+    });
+    tricount::obs::report::print_breakdown(&cluster);
+    if let Some(path) = extra.get("trace-out") {
+        let json = tricount::obs::export::cluster_trace_json("tricount count", &cluster);
+        std::fs::write(path, &json)?;
+        println!("[written: {path} — load at ui.perfetto.dev or chrome://tracing]");
+    }
+    if let Some(path) = extra.get("obs-out") {
+        let mut reg = tricount::obs::MetricsRegistry::new("count");
+        reg.record_cluster(&cluster);
+        reg.record_global_kernels(kernels);
+        reg.note(&format!("workload={}", cfg.workload));
+        reg.note(&format!("algorithm={:?}", cfg.algorithm));
+        std::fs::write(path, reg.snapshot_json())?;
+        println!("[written: {path} — inspect with `tricount obs-report {path}`]");
+    }
+
     if let Some(dir) = extra.get("out") {
         std::fs::create_dir_all(dir)?;
         let mut report = exp::report::Report::new([
@@ -345,7 +407,10 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     };
     reject_unknown(
         &extra,
-        &["batch-size", "batches", "window", "delete-frac", "base-frac", "compact-every", "out", "verify"],
+        &[
+            "batch-size", "batches", "window", "delete-frac", "base-frac", "compact-every",
+            "out", "verify", "trace-out", "obs-out",
+        ],
     )?;
     let spec = workload::StreamSpec {
         base_fraction: parse_f64("base-frac", 0.5)?,
@@ -452,6 +517,25 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     }
     proj.note(format!("α = {:.2} ns/unit (calibrated)", model.alpha_ns));
     proj.print();
+
+    // obs/: per-rank span breakdown (Compute vs BatchApply vs the
+    // allreduce barrier per batch) + trace/snapshot exports.
+    tricount::obs::report::print_breakdown(&r.metrics);
+    if let Some(path) = get("trace-out") {
+        let json = tricount::obs::export::cluster_trace_json("tricount stream", &r.metrics);
+        std::fs::write(path, &json)?;
+        println!("[written: {path} — load at ui.perfetto.dev or chrome://tracing]");
+    }
+    if let Some(path) = get("obs-out") {
+        let mut reg = tricount::obs::MetricsRegistry::new("stream");
+        reg.record_cluster(&r.metrics);
+        reg.record_global_kernels(kernels);
+        reg.record_batches(&r.per_batch);
+        reg.note(&format!("workload={}", cfg.workload));
+        reg.note(&format!("updates={}", w.updates));
+        std::fs::write(path, reg.snapshot_json())?;
+        println!("[written: {path} — inspect with `tricount obs-report {path}`]");
+    }
 
     if let Some(dir) = get("out") {
         std::fs::create_dir_all(dir)?;
@@ -597,7 +681,7 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
 /// this on a small preset every push).
 fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
     let (cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &["workloads", "threads", "reps", "out"])?;
+    reject_unknown(&extra, &["workloads", "threads", "reps", "out", "trace-out"])?;
     let mut opts = tricount::pipeline::Options {
         seed: cfg.seed,
         hub_threshold: cfg.hub_threshold,
@@ -627,6 +711,28 @@ fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
     report.print();
     report.write_json(out)?;
     println!("[written: {out}]");
+
+    // `--trace-out`: the stage timings as a sequential Perfetto timeline —
+    // derived from the pinned 11-column Report, so the schema CI smokes
+    // stays untouched.
+    if let Some(path) = extra.get("trace-out") {
+        let mut stages: Vec<(String, f64)> = Vec::new();
+        for i in 0..report.rows.len() {
+            let w = report.text(i, "workload")?;
+            let t = report.int(i, "threads")?;
+            for (stage, col) in [
+                ("parse", "parse_s"),
+                ("build-radix", "build_radix_s"),
+                ("relabel", "relabel_s"),
+                ("orient+hub", "orient_hub_s"),
+            ] {
+                stages.push((format!("{stage} {w} T={t}"), report.secs(i, col)?));
+            }
+        }
+        let json = tricount::obs::export::stages_trace_json("tricount bench-pipeline", &stages);
+        std::fs::write(path, &json)?;
+        println!("[written: {path} — load at ui.perfetto.dev or chrome://tracing]");
+    }
     Ok(())
 }
 
@@ -639,6 +745,7 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
 
     let mut opts = Options::default();
     let mut out: Option<String> = None;
+    let mut trace_out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         let key = args[i]
@@ -700,6 +807,7 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
                 };
             }
             "out" => out = Some(value.clone()),
+            "trace-out" => trace_out = Some(value.clone()),
             other => return Err(Error::Config(format!("unknown conformance flag `--{other}`"))),
         }
         i += 2;
@@ -740,11 +848,69 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
         report.write_json(&format!("{dir}/conformance.json"))?;
         println!("[written: {dir}/conformance.{{csv,json}}]");
     }
+    if let Some(path) = trace_out {
+        // A representative cell on a fixed adversarial schedule: virtual
+        // ticks only, so the exported JSON is byte-identical across
+        // invocations (CI diffs two runs as the replay-visibility gate).
+        let m = tricount::testkit::conformance::demo_cell(0)?;
+        let json = tricount::obs::export::cluster_trace_json("tricount conformance", &m);
+        std::fs::write(&path, &json)?;
+        println!("[written: {path} — virtual-time timeline of surrogate pa:160:6 P=4 seed 0]");
+    }
     if !r.failures.is_empty() {
         return Err(Error::Cluster(format!(
             "conformance suite failed: {} violation(s)",
             r.failures.len()
         )));
+    }
+    Ok(())
+}
+
+/// `tricount obs-report` — validate an obs snapshot against schema v1 and
+/// render it human-readably; optionally validate a Perfetto trace file too.
+fn cmd_obs_report(args: &[String]) -> Result<()> {
+    let mut snapshot: Option<String> = None;
+    let mut trace: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--trace" => {
+                trace = Some(
+                    args.get(i + 1)
+                        .cloned()
+                        .ok_or_else(|| Error::Config("--trace needs a file".into()))?,
+                );
+                i += 2;
+            }
+            flag if flag.starts_with("--") => {
+                return Err(Error::Config(format!("unknown obs-report flag `{flag}`")))
+            }
+            path => {
+                if snapshot.replace(path.to_string()).is_some() {
+                    return Err(Error::Config(
+                        "obs-report takes exactly one snapshot path".into(),
+                    ));
+                }
+                i += 1;
+            }
+        }
+    }
+    let snapshot = snapshot
+        .ok_or_else(|| Error::Config("obs-report needs a snapshot path (from --obs-out)".into()))?;
+
+    let text = std::fs::read_to_string(&snapshot)?;
+    let v = tricount::obs::registry::validate_snapshot(&text)
+        .map_err(|e| Error::Report(format!("{snapshot}: {e}")))?;
+    println!("{snapshot}: schema v{} OK", tricount::obs::SCHEMA_VERSION);
+    let rendered = tricount::obs::report::render_snapshot(&v)
+        .map_err(|e| Error::Report(format!("{snapshot}: {e}")))?;
+    print!("{rendered}");
+
+    if let Some(tpath) = trace {
+        let ttext = std::fs::read_to_string(&tpath)?;
+        let events = tricount::obs::export::validate_trace(&ttext)
+            .map_err(|e| Error::Report(format!("{tpath}: {e}")))?;
+        println!("{tpath}: Perfetto trace OK ({events} events)");
     }
     Ok(())
 }

@@ -1,0 +1,183 @@
+//! Chrome/Perfetto trace-event export (`--trace-out`).
+//!
+//! Emits the legacy Chrome trace-event JSON format — an object with a
+//! `traceEvents` array of complete (`"ph": "X"`) duration events — which
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` both load
+//! directly. Layout: one process, one track (`tid`) per rank, `ts`/`dur`
+//! in microseconds. On the virtual fabric 1 scheduler tick is exported
+//! as 1 µs (DESIGN.md §11), and because span logs there replay
+//! bit-identically under a seed, the emitted file is *byte-identical*
+//! across runs — the conformance CLI relies on that.
+//!
+//! The emitter is deterministic by construction: fixed field order,
+//! fixed event order (metadata first, then ranks in order, spans in log
+//! order), no timestamps of its own.
+
+use crate::comm::metrics::ClusterMetrics;
+use crate::obs::registry::{parse_json, JsonValue};
+
+/// Serialize a cluster run as one Perfetto trace: per rank, a
+/// `thread_name` metadata event plus one `X` event per recorded span.
+pub fn cluster_trace_json(process_name: &str, m: &ClusterMetrics) -> String {
+    let mut ev = vec![format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        escape(process_name)
+    )];
+    for (rank, rm) in m.per_rank.iter().enumerate() {
+        ev.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {rank}, \
+             \"args\": {{\"name\": \"rank {rank} ({}, {} dropped)\"}}}}",
+            rm.spans.domain.name(),
+            rm.spans.dropped
+        ));
+        for s in &rm.spans.spans {
+            ev.push(format!(
+                "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+                 \"pid\": 0, \"tid\": {rank}}}",
+                s.phase.name(),
+                s.t_start,
+                s.dur()
+            ));
+        }
+    }
+    wrap_events(&ev)
+}
+
+/// Serialize named sequential stages (e.g. the preprocessing pipeline's
+/// per-workload phase timings) as one trace track: stage `i` starts where
+/// stage `i-1` ended. Durations are given in seconds and exported in µs.
+pub fn stages_trace_json(process_name: &str, stages: &[(String, f64)]) -> String {
+    let mut ev = vec![format!(
+        "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": 0, \
+         \"args\": {{\"name\": \"{}\"}}}}",
+        escape(process_name)
+    )];
+    let mut ts: u64 = 0;
+    for (name, secs) in stages {
+        let dur = (secs * 1e6).max(0.0) as u64;
+        ev.push(format!(
+            "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {ts}, \"dur\": {dur}, \
+             \"pid\": 0, \"tid\": 0}}",
+            escape(name)
+        ));
+        ts += dur;
+    }
+    wrap_events(&ev)
+}
+
+fn wrap_events(events: &[String]) -> String {
+    let mut s = String::with_capacity(64 + events.iter().map(|e| e.len() + 6).sum::<usize>());
+    s.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
+    for (i, e) in events.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(e);
+        s.push_str(if i + 1 < events.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("]}\n");
+    s
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Parse `json` and check it is a loadable trace-event document: a top
+/// object with a `traceEvents` array whose entries carry `name`, `ph`,
+/// `pid`, `tid` (and `ts`/`dur` for `X` events). Returns the event count.
+pub fn validate_trace(json: &str) -> Result<usize, String> {
+    let v = parse_json(json)?;
+    let events = v
+        .get("traceEvents")
+        .and_then(JsonValue::as_arr)
+        .ok_or("trace: missing traceEvents array")?;
+    for (i, e) in events.iter().enumerate() {
+        let ctx = format!("traceEvents[{i}]");
+        let str_field = |key: &str| {
+            e.get(key)
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| format!("{ctx}: missing string {key}"))
+        };
+        let int_field = |key: &str| {
+            e.get(key)
+                .and_then(JsonValue::as_u64)
+                .ok_or_else(|| format!("{ctx}: missing integer {key}"))
+        };
+        str_field("name")?;
+        let ph = str_field("ph")?;
+        int_field("pid")?;
+        int_field("tid")?;
+        if ph == "X" {
+            int_field("ts")?;
+            int_field("dur")?;
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::metrics::CommMetrics;
+    use crate::obs::span::{ClockDomain, Span, SpanLog, SpanPhase};
+
+    fn one_rank_cluster() -> ClusterMetrics {
+        ClusterMetrics {
+            per_rank: vec![CommMetrics {
+                spans: SpanLog {
+                    domain: ClockDomain::Virtual,
+                    spans: vec![
+                        Span { phase: SpanPhase::Compute, t_start: 0, t_end: 10 },
+                        Span { phase: SpanPhase::Barrier, t_start: 10, t_end: 12 },
+                    ],
+                    dropped: 0,
+                },
+                ..Default::default()
+            }],
+        }
+    }
+
+    #[test]
+    fn cluster_trace_is_valid_and_deterministic() {
+        let m = one_rank_cluster();
+        let a = cluster_trace_json("tricount count", &m);
+        let b = cluster_trace_json("tricount count", &m);
+        assert_eq!(a, b, "same metrics must serialize to identical bytes");
+        // 1 process_name + 1 thread_name + 2 spans.
+        assert_eq!(validate_trace(&a), Ok(4));
+        let v = parse_json(&a).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events[2].get("name").unwrap().as_str(), Some("compute"));
+        assert_eq!(events[2].get("dur").unwrap().as_u64(), Some(10));
+        assert_eq!(events[3].get("ts").unwrap().as_u64(), Some(10));
+    }
+
+    #[test]
+    fn stages_lay_out_sequentially() {
+        let stages = vec![("parse x".to_string(), 0.001), ("build \"q\"".to_string(), 0.002)];
+        let json = stages_trace_json("tricount bench-pipeline", &stages);
+        assert_eq!(validate_trace(&json), Ok(3));
+        let v = parse_json(&json).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events[1].get("ts").unwrap().as_u64(), Some(0));
+        assert_eq!(events[1].get("dur").unwrap().as_u64(), Some(1000));
+        assert_eq!(events[2].get("ts").unwrap().as_u64(), Some(1000));
+        assert_eq!(events[2].get("name").unwrap().as_str(), Some("build \"q\""));
+    }
+
+    #[test]
+    fn validate_trace_rejects_malformed() {
+        assert!(validate_trace("{}").is_err());
+        assert!(validate_trace("{\"traceEvents\": [{\"ph\": \"X\"}]}").is_err());
+        assert!(validate_trace("not json").is_err());
+    }
+}

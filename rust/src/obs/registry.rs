@@ -1,0 +1,642 @@
+//! The unified metrics registry: one versioned JSON snapshot per run.
+//!
+//! Before `obs/`, instrumentation was scattered — `comm/metrics.rs` held
+//! per-rank counters, `adj/stats.rs` a process-global kernel mix, the
+//! pipeline timed phases ad hoc, and the stream driver kept its own batch
+//! stats. [`MetricsRegistry`] collects all of them into a single
+//! schema-versioned snapshot (`--obs-out` on the CLI, rendered by
+//! `tricount obs-report`), so every measurement a run produces has one
+//! canonical, machine-checkable home.
+//!
+//! The schema (version [`SCHEMA_VERSION`]) is hand-written JSON — the
+//! crate is dependency-free — and [`validate_snapshot`] is the gate: it
+//! re-parses an emitted snapshot with the in-crate parser
+//! ([`parse_json`]) and checks every required key, which is exactly what
+//! the CI smoke step and the golden test below run. Schema evolution
+//! contract (DESIGN.md §11): adding keys bumps nothing, removing or
+//! renaming any key listed in the validators bumps `SCHEMA_VERSION`.
+
+use crate::adj::stats::KernelStats;
+use crate::comm::metrics::ClusterMetrics;
+use crate::obs::span::{ClockDomain, SpanPhase};
+use crate::stream::parallel::BatchStats;
+
+/// Version stamped into (and required from) every snapshot.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Quote + escape a string for JSON output.
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// One stream batch, reduced to the schema's scalar fields.
+#[derive(Clone, Copy, Debug)]
+struct BatchRow {
+    delta: i64,
+    triangles: u64,
+    inserts: u64,
+    deletes: u64,
+    work: u64,
+}
+
+/// Collects a run's measurements and serializes them as one snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    command: String,
+    cluster: ClusterMetrics,
+    global_kernels: KernelStats,
+    batches: Vec<BatchRow>,
+    phases: Vec<(String, f64)>,
+    notes: Vec<String>,
+}
+
+impl MetricsRegistry {
+    /// A registry for one CLI run (`command` names the subcommand).
+    pub fn new(command: &str) -> Self {
+        MetricsRegistry { command: command.to_string(), ..Default::default() }
+    }
+
+    /// Adopt the per-rank metrics of a finished cluster run (comm
+    /// counters, kernel mix, span timelines).
+    pub fn record_cluster(&mut self, m: &ClusterMetrics) {
+        self.cluster = m.clone();
+    }
+
+    /// Record the process-global kernel snapshot (the cross-rank sum the
+    /// CLI has always printed).
+    pub fn record_global_kernels(&mut self, k: KernelStats) {
+        self.global_kernels = k;
+    }
+
+    /// Record per-batch stream stats.
+    pub fn record_batches(&mut self, batches: &[BatchStats]) {
+        self.batches.extend(batches.iter().map(|b| BatchRow {
+            delta: b.delta,
+            triangles: b.triangles,
+            inserts: b.inserts as u64,
+            deletes: b.deletes as u64,
+            work: b.work_per_rank.iter().sum(),
+        }));
+    }
+
+    /// Record one named phase timing (pipeline stages, CLI-side timings).
+    pub fn record_phase(&mut self, name: &str, secs: f64) {
+        self.phases.push((name.to_string(), secs));
+    }
+
+    /// Attach a free-form annotation (workload, algorithm, config).
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    /// The run's clock domain, taken from rank 0's span log.
+    fn clock_domain(&self) -> ClockDomain {
+        self.cluster.per_rank.first().map(|m| m.spans.domain).unwrap_or_default()
+    }
+
+    /// Serialize the snapshot (schema version [`SCHEMA_VERSION`]).
+    /// Deterministic: field order is fixed and no timestamps are stamped,
+    /// so identical runs emit identical bytes.
+    pub fn snapshot_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
+        s.push_str(&format!("  \"command\": {},\n", quote(&self.command)));
+        s.push_str(&format!(
+            "  \"clock_domain\": {},\n",
+            quote(self.clock_domain().name())
+        ));
+        s.push_str("  \"ranks\": [\n");
+        for (rank, m) in self.cluster.per_rank.iter().enumerate() {
+            let by_phase: Vec<String> = SpanPhase::ALL
+                .iter()
+                .map(|p| format!("\"{}\": {}", p.name(), m.spans.phase_ticks(*p)))
+                .collect();
+            s.push_str(&format!(
+                "    {{\"rank\": {rank}, \"messages_sent\": {}, \"bytes_sent\": {}, \
+                 \"messages_received\": {}, \"control_sent\": {}, \"control_received\": {}, \
+                 \"recv_wait_us\": {}, \"total_us\": {}, \"work_units\": {}, \
+                 \"partition_bytes\": {}, \"partition_bytes_pred\": {}, \"accel_bytes\": {}, \
+                 \"kernel\": {}, \
+                 \"spans\": {{\"recorded\": {}, \"dropped\": {}, \"by_phase_us\": {{{}}}}}}}{}\n",
+                m.messages_sent,
+                m.bytes_sent,
+                m.messages_received,
+                m.control_sent,
+                m.control_received,
+                m.recv_wait.as_micros(),
+                m.total.as_micros(),
+                m.work_units,
+                m.partition_bytes,
+                m.partition_bytes_pred,
+                m.accel_bytes,
+                kernel_json(&m.kernel),
+                m.spans.recorded(),
+                m.spans.dropped,
+                by_phase.join(", "),
+                if rank + 1 < self.cluster.per_rank.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"kernels_global\": {},\n", kernel_json(&self.global_kernels)));
+        s.push_str("  \"batches\": [\n");
+        for (i, b) in self.batches.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"batch\": {i}, \"delta\": {}, \"triangles\": {}, \"inserts\": {}, \
+                 \"deletes\": {}, \"work\": {}}}{}\n",
+                b.delta,
+                b.triangles,
+                b.inserts,
+                b.deletes,
+                b.work,
+                if i + 1 < self.batches.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"phases\": [\n");
+        for (i, (name, secs)) in self.phases.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": {}, \"secs\": {secs:.6}}}{}\n",
+                quote(name),
+                if i + 1 < self.phases.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        let notes: Vec<String> = self.notes.iter().map(|n| quote(n)).collect();
+        s.push_str(&format!("  \"notes\": [{}]\n", notes.join(", ")));
+        s.push_str("}\n");
+        s
+    }
+}
+
+fn kernel_json(k: &KernelStats) -> String {
+    format!(
+        "{{\"list_list\": {}, \"list_bitmap\": {}, \"bitmap_bitmap\": {}}}",
+        k.list_list, k.list_bitmap, k.bitmap_bitmap
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON parser (recursive descent) — powers `tricount obs-report`,
+// snapshot/trace validation, and the golden schema test. Full JSON value
+// grammar; numbers are f64 (every value the schemas emit fits exactly).
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Objects preserve key order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Number, required to be a non-negative integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Number, required to be an integer (possibly negative).
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            JsonValue::Num(n) if n.fract() == 0.0 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        self.ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(JsonValue::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000c}'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Surrogate pairs: combine, else replacement.
+                            if (0xD800..0xDC00).contains(&cp)
+                                && self.b[self.i..].starts_with(b"\\u")
+                            {
+                                self.i += 1; // consume '\', hex4 eats "uXXXX"
+                                let lo = self.hex4()?;
+                                let c = 0x10000
+                                    + ((cp - 0xD800) << 10)
+                                    + (lo.wrapping_sub(0xDC00) & 0x3FF);
+                                out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                            } else {
+                                out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                            }
+                            continue;
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str upstream,
+                    // so boundaries are valid).
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| "invalid utf-8".to_string())?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.i += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    /// Parse a `uXXXX` escape tail (cursor on the 'u'); consumes all 5
+    /// bytes and returns the code unit.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let s = self
+            .b
+            .get(self.i + 1..self.i + 5)
+            .and_then(|b| std::str::from_utf8(b).ok())
+            .ok_or_else(|| format!("bad \\u escape at byte {}", self.i))?;
+        let cp = u32::from_str_radix(s, 16)
+            .map_err(|_| format!("bad \\u escape at byte {}", self.i))?;
+        self.i += 5;
+        Ok(cp)
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(JsonValue::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(JsonValue::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(JsonValue::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document (trailing whitespace allowed, nothing else).
+pub fn parse_json(s: &str) -> Result<JsonValue, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Schema validation
+// ---------------------------------------------------------------------------
+
+const RANK_KEYS: [&str; 14] = [
+    "rank",
+    "messages_sent",
+    "bytes_sent",
+    "messages_received",
+    "control_sent",
+    "control_received",
+    "recv_wait_us",
+    "total_us",
+    "work_units",
+    "partition_bytes",
+    "partition_bytes_pred",
+    "accel_bytes",
+    "kernel",
+    "spans",
+];
+
+const KERNEL_KEYS: [&str; 3] = ["list_list", "list_bitmap", "bitmap_bitmap"];
+
+fn require<'v>(v: &'v JsonValue, key: &str, ctx: &str) -> Result<&'v JsonValue, String> {
+    v.get(key).ok_or_else(|| format!("{ctx}: missing key \"{key}\""))
+}
+
+fn require_kernel(v: &JsonValue, ctx: &str) -> Result<(), String> {
+    for k in KERNEL_KEYS {
+        require(v, k, ctx)?
+            .as_u64()
+            .ok_or_else(|| format!("{ctx}: \"{k}\" must be a non-negative integer"))?;
+    }
+    Ok(())
+}
+
+/// Parse `json` and check it against snapshot schema [`SCHEMA_VERSION`].
+/// Returns the parsed document so renderers don't parse twice.
+pub fn validate_snapshot(json: &str) -> Result<JsonValue, String> {
+    let v = parse_json(json)?;
+    let ver = require(&v, "schema_version", "snapshot")?
+        .as_u64()
+        .ok_or("snapshot: schema_version must be an integer")?;
+    if ver != SCHEMA_VERSION {
+        return Err(format!("snapshot: schema_version {ver} != supported {SCHEMA_VERSION}"));
+    }
+    require(&v, "command", "snapshot")?.as_str().ok_or("snapshot: command must be a string")?;
+    let domain = require(&v, "clock_domain", "snapshot")?
+        .as_str()
+        .ok_or("snapshot: clock_domain must be a string")?;
+    if domain != "wall" && domain != "virtual" {
+        return Err(format!("snapshot: unknown clock_domain \"{domain}\""));
+    }
+    let ranks = require(&v, "ranks", "snapshot")?
+        .as_arr()
+        .ok_or("snapshot: ranks must be an array")?;
+    for (i, r) in ranks.iter().enumerate() {
+        let ctx = format!("ranks[{i}]");
+        for k in RANK_KEYS {
+            require(r, k, &ctx)?;
+        }
+        require_kernel(require(r, "kernel", &ctx)?, &format!("{ctx}.kernel"))?;
+        let spans = require(r, "spans", &ctx)?;
+        require(spans, "recorded", &ctx)?
+            .as_u64()
+            .ok_or_else(|| format!("{ctx}.spans.recorded must be an integer"))?;
+        require(spans, "dropped", &ctx)?
+            .as_u64()
+            .ok_or_else(|| format!("{ctx}.spans.dropped must be an integer"))?;
+        let by_phase = require(spans, "by_phase_us", &ctx)?;
+        for p in SpanPhase::ALL {
+            require(by_phase, p.name(), &format!("{ctx}.spans.by_phase_us"))?
+                .as_u64()
+                .ok_or_else(|| {
+                    format!("{ctx}.spans.by_phase_us.{} must be an integer", p.name())
+                })?;
+        }
+    }
+    require_kernel(require(&v, "kernels_global", "snapshot")?, "kernels_global")?;
+    require(&v, "batches", "snapshot")?.as_arr().ok_or("snapshot: batches must be an array")?;
+    require(&v, "phases", "snapshot")?.as_arr().ok_or("snapshot: phases must be an array")?;
+    require(&v, "notes", "snapshot")?.as_arr().ok_or("snapshot: notes must be an array")?;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::metrics::CommMetrics;
+    use crate::obs::span::{Span, SpanLog};
+    use std::time::Duration;
+
+    fn synthetic_cluster() -> ClusterMetrics {
+        let mk = |rank: u64| CommMetrics {
+            messages_sent: rank + 1,
+            bytes_sent: 10 * (rank + 1),
+            messages_received: rank,
+            recv_wait: Duration::from_micros(7 * rank),
+            total: Duration::from_micros(100),
+            work_units: 5,
+            kernel: KernelStats { list_list: rank, list_bitmap: 1, bitmap_bitmap: 0 },
+            spans: SpanLog {
+                domain: ClockDomain::Virtual,
+                spans: vec![
+                    Span { phase: SpanPhase::Compute, t_start: 0, t_end: 60 },
+                    Span { phase: SpanPhase::RecvWait, t_start: 60, t_end: 60 + 7 * rank },
+                ],
+                dropped: 0,
+            },
+            ..Default::default()
+        };
+        ClusterMetrics { per_rank: vec![mk(0), mk(1)] }
+    }
+
+    #[test]
+    fn golden_snapshot_roundtrips_and_validates() {
+        let mut reg = MetricsRegistry::new("count");
+        reg.record_cluster(&synthetic_cluster());
+        reg.record_global_kernels(KernelStats { list_list: 1, list_bitmap: 2, bitmap_bitmap: 0 });
+        reg.record_phase("parse", 0.25);
+        reg.note("workload=pa:160:6");
+        let json = reg.snapshot_json();
+        let v = validate_snapshot(&json).expect("snapshot must satisfy its own schema");
+        assert_eq!(v.get("schema_version").unwrap().as_u64(), Some(SCHEMA_VERSION));
+        assert_eq!(v.get("command").unwrap().as_str(), Some("count"));
+        assert_eq!(v.get("clock_domain").unwrap().as_str(), Some("virtual"));
+        let ranks = v.get("ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks[1].get("recv_wait_us").unwrap().as_u64(), Some(7));
+        let by_phase = ranks[1].get("spans").unwrap().get("by_phase_us").unwrap();
+        assert_eq!(by_phase.get("compute").unwrap().as_u64(), Some(60));
+        assert_eq!(by_phase.get("recv_wait").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("phases").unwrap().as_arr().unwrap().len(), 1);
+        // Determinism: same registry ⇒ identical bytes.
+        assert_eq!(json, reg.snapshot_json());
+    }
+
+    #[test]
+    fn validation_rejects_missing_keys_and_bad_version() {
+        assert!(validate_snapshot("{}").is_err());
+        assert!(validate_snapshot("{\"schema_version\": 999}").is_err());
+        let mut reg = MetricsRegistry::new("count");
+        reg.record_cluster(&synthetic_cluster());
+        let good = reg.snapshot_json();
+        let bad = good.replace("\"recv_wait_us\"", "\"recv_wait_renamed\"");
+        assert!(validate_snapshot(&bad).is_err());
+    }
+
+    #[test]
+    fn batches_and_notes_serialize() {
+        let mut reg = MetricsRegistry::new("stream");
+        reg.record_batches(&[BatchStats {
+            delta: -3,
+            triangles: 42,
+            inserts: 4,
+            deletes: 2,
+            work_per_rank: vec![5, 6],
+        }]);
+        reg.note("quoted \"note\" with\nnewline");
+        let json = reg.snapshot_json();
+        let v = validate_snapshot(&json).unwrap();
+        let batches = v.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].get("delta").unwrap().as_i64(), Some(-3));
+        assert_eq!(batches[0].get("triangles").unwrap().as_u64(), Some(42));
+        assert_eq!(batches[0].get("work").unwrap().as_u64(), Some(11));
+        let notes = v.get("notes").unwrap().as_arr().unwrap();
+        assert_eq!(notes[0].as_str(), Some("quoted \"note\" with\nnewline"));
+    }
+
+    #[test]
+    fn parser_handles_core_grammar() {
+        let v = parse_json(r#"{"a": [1, -2.5, true, false, null], "b": {"c": "x\ty"}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0].as_u64(), Some(1));
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(-2.5));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str(), Some("x\ty"));
+        assert!(parse_json("{\"a\": 1,}").is_err());
+        assert!(parse_json("[1 2]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+        assert_eq!(parse_json("[]").unwrap(), JsonValue::Arr(vec![]));
+        assert_eq!(
+            parse_json("\"\\u00e9\\u0041\"").unwrap(),
+            JsonValue::Str("\u{e9}A".to_string())
+        );
+    }
+}

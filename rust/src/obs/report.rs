@@ -1,0 +1,255 @@
+//! Human-readable observability reports: the Fig-13-style per-rank
+//! compute/wait breakdown `tricount count` prints, and the renderer
+//! behind `tricount obs-report <snapshot.json>`.
+//!
+//! The paper's Fig. 13 decomposes each rank's runtime into computation
+//! vs idle time to motivate dynamic load balancing (§V); this module
+//! reproduces that decomposition from span timelines: *idle* is the time
+//! a rank spent in `recv`-wait, barriers and reduces, *busy* is the
+//! remainder of its total runtime (compute + send hand-offs). Both
+//! views — live `ClusterMetrics` and a parsed snapshot — go through the
+//! same row renderer so the CLI and `obs-report` agree byte-for-byte on
+//! format.
+
+use crate::comm::metrics::ClusterMetrics;
+use crate::obs::registry::JsonValue;
+use crate::obs::span::SpanPhase;
+
+/// One rank's breakdown row, in µs (or virtual ticks — same scale).
+struct Row {
+    rank: usize,
+    total: u64,
+    recv_wait: u64,
+    barrier: u64,
+    reduce: u64,
+    send: u64,
+    batch: u64,
+    recorded: u64,
+    dropped: u64,
+    work: u64,
+}
+
+impl Row {
+    fn idle(&self) -> u64 {
+        self.recv_wait + self.barrier + self.reduce
+    }
+
+    fn idle_pct(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            100.0 * self.idle() as f64 / self.total as f64
+        }
+    }
+}
+
+fn render_rows(clock: &str, rows: &[Row]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "obs: per-rank breakdown (clock={clock}; idle = recv_wait + barrier + reduce, \
+         paper Fig 13)\n"
+    ));
+    s.push_str(&format!(
+        "{:>6} {:>12} {:>12} {:>11} {:>9} {:>9} {:>9} {:>9} {:>9} {:>6}\n",
+        "rank", "total_us", "busy_us", "recv_wait", "barrier", "reduce", "send", "batch",
+        "spans", "idle%"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:>6} {:>12} {:>12} {:>11} {:>9} {:>9} {:>9} {:>9} {:>9} {:>6.1}\n",
+            r.rank,
+            r.total,
+            r.total.saturating_sub(r.idle()),
+            r.recv_wait,
+            r.barrier,
+            r.reduce,
+            r.send,
+            r.batch,
+            format!("{}/{}", r.recorded, r.dropped),
+            r.idle_pct()
+        ));
+    }
+    if !rows.is_empty() {
+        let worst = rows
+            .iter()
+            .max_by(|a, b| a.idle_pct().partial_cmp(&b.idle_pct()).unwrap())
+            .unwrap();
+        let max_work = rows.iter().map(|r| r.work).max().unwrap() as f64;
+        let mean_work = rows.iter().map(|r| r.work).sum::<u64>() as f64 / rows.len() as f64;
+        let imb = if mean_work == 0.0 { 1.0 } else { max_work / mean_work };
+        s.push_str(&format!(
+            "obs: max idle {:.1}% (rank {}) | load imbalance (max/mean work) {imb:.2}\n",
+            worst.idle_pct(),
+            worst.rank
+        ));
+    }
+    s
+}
+
+fn rows_from_metrics(m: &ClusterMetrics) -> Vec<Row> {
+    m.per_rank
+        .iter()
+        .enumerate()
+        .map(|(rank, rm)| Row {
+            rank,
+            total: rm.total.as_micros() as u64,
+            recv_wait: rm.spans.phase_ticks(SpanPhase::RecvWait),
+            barrier: rm.spans.phase_ticks(SpanPhase::Barrier),
+            reduce: rm.spans.phase_ticks(SpanPhase::Reduce),
+            send: rm.spans.phase_ticks(SpanPhase::Send),
+            batch: rm.spans.phase_ticks(SpanPhase::BatchApply),
+            recorded: rm.spans.recorded() as u64,
+            dropped: rm.spans.dropped,
+            work: rm.work_units,
+        })
+        .collect()
+}
+
+/// Render the breakdown of a live cluster run.
+pub fn breakdown(m: &ClusterMetrics) -> String {
+    let clock = m.per_rank.first().map(|rm| rm.spans.domain.name()).unwrap_or("wall");
+    render_rows(clock, &rows_from_metrics(m))
+}
+
+/// Print the breakdown of a live cluster run (what `tricount count`
+/// emits after the counts).
+pub fn print_breakdown(m: &ClusterMetrics) {
+    print!("{}", breakdown(m));
+}
+
+fn ru64(v: &JsonValue, key: &str, ctx: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(JsonValue::as_u64)
+        .ok_or_else(|| format!("{ctx}: missing integer \"{key}\""))
+}
+
+/// Render a validated snapshot document (see
+/// [`crate::obs::registry::validate_snapshot`]) as the breakdown table
+/// plus batch/phase summaries — the body of `tricount obs-report`.
+pub fn render_snapshot(v: &JsonValue) -> Result<String, String> {
+    let command = v.get("command").and_then(JsonValue::as_str).unwrap_or("?");
+    let clock = v.get("clock_domain").and_then(JsonValue::as_str).unwrap_or("wall");
+    let ranks = v
+        .get("ranks")
+        .and_then(JsonValue::as_arr)
+        .ok_or("snapshot: missing ranks array")?;
+    let mut rows = Vec::with_capacity(ranks.len());
+    for (i, r) in ranks.iter().enumerate() {
+        let ctx = format!("ranks[{i}]");
+        let spans = r.get("spans").ok_or_else(|| format!("{ctx}: missing spans"))?;
+        let by_phase =
+            spans.get("by_phase_us").ok_or_else(|| format!("{ctx}: missing by_phase_us"))?;
+        rows.push(Row {
+            rank: ru64(r, "rank", &ctx)? as usize,
+            total: ru64(r, "total_us", &ctx)?,
+            recv_wait: ru64(by_phase, "recv_wait", &ctx)?,
+            barrier: ru64(by_phase, "barrier", &ctx)?,
+            reduce: ru64(by_phase, "reduce", &ctx)?,
+            send: ru64(by_phase, "send", &ctx)?,
+            batch: ru64(by_phase, "batch_apply", &ctx)?,
+            recorded: ru64(spans, "recorded", &ctx)?,
+            dropped: ru64(spans, "dropped", &ctx)?,
+            work: ru64(r, "work_units", &ctx)?,
+        });
+    }
+    let mut s = format!("obs snapshot: command={command} ranks={}\n", rows.len());
+    s.push_str(&render_rows(clock, &rows));
+    if let Some(kg) = v.get("kernels_global") {
+        s.push_str(&format!(
+            "obs: kernels (global) list_list={} list_bitmap={} bitmap_bitmap={}\n",
+            ru64(kg, "list_list", "kernels_global")?,
+            ru64(kg, "list_bitmap", "kernels_global")?,
+            ru64(kg, "bitmap_bitmap", "kernels_global")?
+        ));
+    }
+    if let Some(batches) = v.get("batches").and_then(JsonValue::as_arr) {
+        if !batches.is_empty() {
+            let mut net: i64 = 0;
+            for b in batches {
+                net += b.get("delta").and_then(JsonValue::as_i64).unwrap_or(0);
+            }
+            s.push_str(&format!("obs: {} stream batches, net delta {net:+}\n", batches.len()));
+        }
+    }
+    if let Some(phases) = v.get("phases").and_then(JsonValue::as_arr) {
+        for p in phases {
+            let name = p.get("name").and_then(JsonValue::as_str).unwrap_or("?");
+            let secs = p.get("secs").and_then(JsonValue::as_f64).unwrap_or(0.0);
+            s.push_str(&format!("obs: phase {name:<28} {secs:>10.6}s\n"));
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adj::stats::KernelStats;
+    use crate::comm::metrics::CommMetrics;
+    use crate::obs::registry::{validate_snapshot, MetricsRegistry};
+    use crate::obs::span::{ClockDomain, Span, SpanLog};
+    use std::time::Duration;
+
+    fn cluster() -> ClusterMetrics {
+        ClusterMetrics {
+            per_rank: vec![
+                CommMetrics {
+                    total: Duration::from_micros(100),
+                    work_units: 30,
+                    spans: SpanLog {
+                        domain: ClockDomain::Virtual,
+                        spans: vec![
+                            Span { phase: SpanPhase::Compute, t_start: 0, t_end: 80 },
+                            Span { phase: SpanPhase::RecvWait, t_start: 80, t_end: 100 },
+                        ],
+                        dropped: 0,
+                    },
+                    ..Default::default()
+                },
+                CommMetrics {
+                    total: Duration::from_micros(100),
+                    work_units: 10,
+                    spans: SpanLog {
+                        domain: ClockDomain::Virtual,
+                        spans: vec![Span { phase: SpanPhase::Barrier, t_start: 0, t_end: 50 }],
+                        dropped: 2,
+                    },
+                    ..Default::default()
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn breakdown_reports_idle_and_imbalance() {
+        let text = breakdown(&cluster());
+        assert!(text.contains("clock=virtual"), "{text}");
+        // Rank 0: 20/100 idle; rank 1: 50/100 idle → worst is rank 1.
+        assert!(text.contains("max idle 50.0% (rank 1)"), "{text}");
+        // max/mean work = 30 / 20.
+        assert!(text.contains("load imbalance (max/mean work) 1.50"), "{text}");
+        assert!(text.contains("1/2"), "dropped count must surface: {text}");
+    }
+
+    #[test]
+    fn empty_cluster_renders_header_only() {
+        let text = breakdown(&ClusterMetrics::default());
+        assert!(text.contains("per-rank breakdown"));
+        assert!(!text.contains("max idle"));
+    }
+
+    #[test]
+    fn snapshot_renderer_matches_live_renderer_rows() {
+        let m = cluster();
+        let mut reg = MetricsRegistry::new("count");
+        reg.record_cluster(&m);
+        reg.record_global_kernels(KernelStats::default());
+        let v = validate_snapshot(&reg.snapshot_json()).unwrap();
+        let rendered = render_snapshot(&v).unwrap();
+        // The snapshot path must reproduce the live table verbatim.
+        for line in breakdown(&m).lines() {
+            assert!(rendered.contains(line), "missing line {line:?} in:\n{rendered}");
+        }
+        assert!(rendered.contains("command=count"));
+    }
+}

@@ -1,0 +1,344 @@
+//! Per-rank phase-span recording — the timeline substrate of `obs/`.
+//!
+//! A *span* is one `{phase, t_start, t_end}` interval on a rank's
+//! timeline: a compute section, a blocking `recv` wait, a barrier, a
+//! reduce, a send hand-off, or a stream batch-apply. Spans are recorded
+//! into a fixed-capacity ring buffer so the recorder is allocation-free
+//! and O(1) per span on the hot path — when the ring is full the oldest
+//! span is overwritten and `dropped` counts the loss (never silent).
+//!
+//! Two clock domains (DESIGN.md §11):
+//!
+//! * **Wall** — ticks are microseconds since the recorder's creation
+//!   (`Instant`-based), used on the threads/channel backend.
+//! * **Virtual** — ticks are the testkit scheduler's virtual clock
+//!   (`Transport::virtual_now`), so the same `SimConfig` seed replays to
+//!   a *bit-identical* timeline. 1 virtual tick is exported as 1 µs.
+//!
+//! The recorder itself never reads a clock in the virtual domain — the
+//! caller (`comm::threads::Comm`) stamps ticks via `record`/`begin_at`/
+//! `end_at`, which keeps this module free of any transport dependency.
+
+use std::time::Instant;
+
+/// Phases a rank timeline is decomposed into. `name()` strings are part
+/// of the snapshot schema (`obs::registry`) — append variants, never
+/// rename.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanPhase {
+    /// Local counting work (intersections, task execution).
+    Compute,
+    /// Handing an envelope to the transport (data or control).
+    Send,
+    /// Blocked in `Comm::recv` waiting for an envelope.
+    RecvWait,
+    /// Inside `Comm::barrier`.
+    Barrier,
+    /// Inside `Comm::reduce_sum`.
+    Reduce,
+    /// Applying a normalized stream batch to owned state (+ compaction).
+    BatchApply,
+}
+
+impl SpanPhase {
+    /// Every phase, in schema order.
+    pub const ALL: [SpanPhase; 6] = [
+        SpanPhase::Compute,
+        SpanPhase::Send,
+        SpanPhase::RecvWait,
+        SpanPhase::Barrier,
+        SpanPhase::Reduce,
+        SpanPhase::BatchApply,
+    ];
+
+    /// Stable schema / trace-event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::Compute => "compute",
+            SpanPhase::Send => "send",
+            SpanPhase::RecvWait => "recv_wait",
+            SpanPhase::Barrier => "barrier",
+            SpanPhase::Reduce => "reduce",
+            SpanPhase::BatchApply => "batch_apply",
+        }
+    }
+}
+
+/// Which clock the ticks of a [`SpanLog`] were read from.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Microseconds of wall time since the recorder's epoch.
+    #[default]
+    Wall,
+    /// Testkit scheduler virtual ticks (deterministic under a seed).
+    Virtual,
+}
+
+impl ClockDomain {
+    /// Stable schema name ("wall" / "virtual").
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockDomain::Wall => "wall",
+            ClockDomain::Virtual => "virtual",
+        }
+    }
+}
+
+/// One closed interval on a rank's timeline, in the log's clock domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub phase: SpanPhase,
+    pub t_start: u64,
+    pub t_end: u64,
+}
+
+impl Span {
+    /// Interval length in ticks (0 for inverted intervals, which cannot
+    /// be produced by the recorder but may appear in hand-built logs).
+    pub fn dur(&self) -> u64 {
+        self.t_end.saturating_sub(self.t_start)
+    }
+}
+
+/// A finished, chronologically ordered span timeline for one rank, as
+/// carried by `CommMetrics::spans`. Equality is structural, which is what
+/// the conformance suite uses to assert replayed schedules reproduce
+/// identical virtual-time timelines.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SpanLog {
+    pub domain: ClockDomain,
+    pub spans: Vec<Span>,
+    /// Spans overwritten by ring wrap-around (oldest-first eviction).
+    pub dropped: u64,
+}
+
+impl SpanLog {
+    /// Σ duration of all recorded spans of `phase`, in ticks.
+    pub fn phase_ticks(&self, phase: SpanPhase) -> u64 {
+        self.spans.iter().filter(|s| s.phase == phase).map(|s| s.dur()).sum()
+    }
+
+    /// Number of spans retained in the log.
+    pub fn recorded(&self) -> usize {
+        self.spans.len()
+    }
+}
+
+/// Default ring capacity: large enough that the conformance workloads and
+/// the CLI smoke graphs never wrap, small enough (96 KiB/rank) to sit in
+/// every `Comm` unconditionally.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Low-overhead per-rank span recorder: a ring buffer of closed spans
+/// plus a LIFO stack of open ones (spans nest; `end_at` closes the most
+/// recent `begin_at`). Not thread-safe by design — each rank owns its
+/// recorder, exactly like `CommMetrics`.
+#[derive(Debug)]
+pub struct SpanRecorder {
+    domain: ClockDomain,
+    /// Wall-clock epoch; `None` in the virtual domain (ticks come from
+    /// the caller there).
+    epoch: Option<Instant>,
+    spans: Vec<Span>,
+    /// Next eviction slot once the ring is full.
+    head: usize,
+    cap: usize,
+    dropped: u64,
+    open: Vec<(SpanPhase, u64)>,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        SpanRecorder::wall()
+    }
+}
+
+impl SpanRecorder {
+    /// Wall-clock recorder; ticks are µs since this call.
+    pub fn wall() -> Self {
+        SpanRecorder {
+            domain: ClockDomain::Wall,
+            epoch: Some(Instant::now()),
+            spans: Vec::new(),
+            head: 0,
+            cap: DEFAULT_CAPACITY,
+            dropped: 0,
+            open: Vec::new(),
+        }
+    }
+
+    /// Virtual-clock recorder; the caller supplies every tick value.
+    pub fn virtual_clock() -> Self {
+        SpanRecorder { domain: ClockDomain::Virtual, epoch: None, ..SpanRecorder::wall() }
+    }
+
+    /// Override the ring capacity (builder-style; 0 is clamped to 1).
+    pub fn with_capacity(mut self, cap: usize) -> Self {
+        self.cap = cap.max(1);
+        self
+    }
+
+    /// This recorder's clock domain.
+    pub fn domain(&self) -> ClockDomain {
+        self.domain
+    }
+
+    /// Re-anchor the wall epoch at "now" (no-op in the virtual domain).
+    /// The cluster launcher calls this when the rank thread actually
+    /// starts running, so span ticks and the rank's measured `total`
+    /// share a time origin instead of including the spawn delay.
+    pub fn reset_epoch(&mut self) {
+        if self.epoch.is_some() {
+            self.epoch = Some(Instant::now());
+        }
+    }
+
+    /// Current wall tick (µs since the epoch); 0 in the virtual domain,
+    /// where the transport's virtual clock is authoritative instead.
+    pub fn wall_now(&self) -> u64 {
+        self.epoch.map(|e| e.elapsed().as_micros() as u64).unwrap_or(0)
+    }
+
+    /// Record a closed span. O(1); evicts the oldest span when full.
+    pub fn record(&mut self, phase: SpanPhase, t_start: u64, t_end: u64) {
+        let s = Span { phase, t_start, t_end: t_end.max(t_start) };
+        if self.spans.len() < self.cap {
+            self.spans.push(s);
+        } else {
+            self.spans[self.head] = s;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Open a span at an explicit tick. Spans nest LIFO.
+    pub fn begin_at(&mut self, phase: SpanPhase, t: u64) {
+        self.open.push((phase, t));
+    }
+
+    /// Close the most recently opened span at an explicit tick. A close
+    /// with no open span is ignored (robust against error paths).
+    pub fn end_at(&mut self, t: u64) {
+        if let Some((phase, t0)) = self.open.pop() {
+            self.record(phase, t0, t);
+        }
+    }
+
+    /// Wall-domain convenience: `begin_at(phase, wall_now())`.
+    pub fn begin(&mut self, phase: SpanPhase) {
+        let t = self.wall_now();
+        self.begin_at(phase, t);
+    }
+
+    /// Wall-domain convenience: `end_at(wall_now())`.
+    pub fn end(&mut self) {
+        let t = self.wall_now();
+        self.end_at(t);
+    }
+
+    /// Number of currently open (unclosed) spans.
+    pub fn open_depth(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Snapshot the ring into a chronologically ordered log. Open spans
+    /// are not included — close them first.
+    pub fn log(&self) -> SpanLog {
+        let mut spans = Vec::with_capacity(self.spans.len());
+        spans.extend_from_slice(&self.spans[self.head..]);
+        spans.extend_from_slice(&self.spans[..self.head]);
+        SpanLog { domain: self.domain, spans, dropped: self.dropped }
+    }
+
+    /// Extract the log and reset the ring (open-span stack is cleared:
+    /// anything still open when a rank finishes is an error-path remnant
+    /// and is deliberately discarded).
+    pub fn take_log(&mut self) -> SpanLog {
+        let log = self.log();
+        self.spans.clear();
+        self.head = 0;
+        self.dropped = 0;
+        self.open.clear();
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_lifo() {
+        let mut r = SpanRecorder::virtual_clock();
+        r.begin_at(SpanPhase::Compute, 0);
+        r.begin_at(SpanPhase::RecvWait, 3);
+        r.end_at(7); // closes RecvWait
+        r.end_at(10); // closes Compute
+        let log = r.take_log();
+        assert_eq!(log.domain, ClockDomain::Virtual);
+        assert_eq!(
+            log.spans,
+            vec![
+                Span { phase: SpanPhase::RecvWait, t_start: 3, t_end: 7 },
+                Span { phase: SpanPhase::Compute, t_start: 0, t_end: 10 },
+            ]
+        );
+        assert_eq!(log.phase_ticks(SpanPhase::Compute), 10);
+        assert_eq!(log.phase_ticks(SpanPhase::RecvWait), 4);
+        assert_eq!(log.dropped, 0);
+    }
+
+    #[test]
+    fn unmatched_end_is_ignored() {
+        let mut r = SpanRecorder::virtual_clock();
+        r.end_at(5);
+        assert_eq!(r.take_log().spans.len(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest_and_counts_drops() {
+        let mut r = SpanRecorder::virtual_clock().with_capacity(3);
+        for i in 0..5u64 {
+            r.record(SpanPhase::Send, i * 10, i * 10 + 1);
+        }
+        let log = r.log();
+        assert_eq!(log.dropped, 2);
+        // Oldest two (t_start 0, 10) evicted; remainder chronological.
+        let starts: Vec<u64> = log.spans.iter().map(|s| s.t_start).collect();
+        assert_eq!(starts, vec![20, 30, 40]);
+    }
+
+    #[test]
+    fn take_log_resets_recorder() {
+        let mut r = SpanRecorder::virtual_clock().with_capacity(2);
+        r.record(SpanPhase::Barrier, 0, 1);
+        r.record(SpanPhase::Barrier, 2, 3);
+        r.record(SpanPhase::Barrier, 4, 5);
+        assert_eq!(r.take_log().dropped, 1);
+        let log = r.take_log();
+        assert_eq!(log.spans.len(), 0);
+        assert_eq!(log.dropped, 0);
+    }
+
+    #[test]
+    fn inverted_interval_is_clamped() {
+        let mut r = SpanRecorder::virtual_clock();
+        r.record(SpanPhase::Reduce, 9, 4);
+        let log = r.log();
+        assert_eq!(log.spans[0].t_end, 9);
+        assert_eq!(log.spans[0].dur(), 0);
+    }
+
+    #[test]
+    fn wall_recorder_ticks_are_monotonic() {
+        let mut r = SpanRecorder::wall();
+        r.begin(SpanPhase::Compute);
+        let t0 = r.wall_now();
+        r.end();
+        let log = r.take_log();
+        assert_eq!(log.domain, ClockDomain::Wall);
+        assert_eq!(log.spans.len(), 1);
+        assert!(log.spans[0].t_end >= log.spans[0].t_start);
+        assert!(r.wall_now() >= t0);
+    }
+}

@@ -25,6 +25,7 @@ use crate::config::CostFn;
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
 use crate::graph::ordering::{precedes, Oriented};
+use crate::obs::span::SpanPhase;
 use crate::partition::balance::{balanced_ranges, owner_table};
 use crate::partition::cost::{cost_vector, prefix_sums};
 use crate::seq::node_iterator;
@@ -218,6 +219,10 @@ fn rank_main(
     let mut per_batch = Vec::with_capacity(batches.len());
 
     for batch in batches.iter() {
+        // Normalize + count under one Compute span; the replica update
+        // below gets its own BatchApply span. The allreduce pair between
+        // them records Reduce spans on its own.
+        c.span_begin(SpanPhase::Compute);
         let nb = crate::stream::batch::normalize(state.base(), state.overlay(), batch)?;
         // Arm the hub-bitmap cache against this batch's snapshot (identical
         // on every rank — replicas are in lockstep, so the resolved
@@ -240,11 +245,14 @@ fn rank_main(
             }
             work += r.work;
         }
+        c.span_end();
         // MPI_Allreduce(SUM) ×2: positive and negative magnitudes.
         let delta = c.reduce_sum(plus)? as i64 - c.reduce_sum(minus)? as i64;
         c.metrics.work_units += work;
+        c.span_begin(SpanPhase::BatchApply);
         state.apply_normalized(&nb, delta)?;
         state.maybe_compact()?;
+        c.span_end();
         per_batch.push(RankBatch {
             delta,
             work,

@@ -271,6 +271,19 @@ fn cell_seed(wi: usize, p: usize, pi: usize, s: u64) -> u64 {
     combine_hashes([wi as u64, p as u64, pi as u64, s])
 }
 
+/// Run one representative cell (surrogate, `pa:160:6`, P=4) on an
+/// adversarial virtual schedule and return its per-rank metrics — span
+/// timelines included, in **virtual** ticks. `tricount conformance
+/// --trace-out` exports this cell's timeline: with a fixed `seed` the
+/// JSON is byte-identical across process invocations, which is the
+/// suite's replay-determinism claim made visible in Perfetto.
+pub fn demo_cell(seed: u64) -> Result<ClusterMetrics> {
+    let w = Prepared::build("pa:160:6")?;
+    let fabric = Fabric::Sim(SimConfig::adversarial(seed));
+    let (r, _) = run_path(Path::Surrogate, &fabric, &w, 4);
+    r.map(|run| run.metrics)
+}
+
 fn outcome_string(r: &Result<PathRun>) -> String {
     match r {
         Ok(run) => format!("ok: {} triangles", run.count),
@@ -333,6 +346,40 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
                                     ),
                                     &mut ok,
                                 );
+                            }
+                            // Replayed schedules must reproduce the exact
+                            // virtual-time span timeline per rank — the
+                            // obs/ clock contract (DESIGN.md §11).
+                            for (i, (ma, mb)) in a
+                                .metrics
+                                .per_rank
+                                .iter()
+                                .zip(b.metrics.per_rank.iter())
+                                .enumerate()
+                            {
+                                if ma.spans != mb.spans {
+                                    fail(
+                                        format!(
+                                            "rank {i}: replay span timeline differs \
+                                             ({} vs {} spans, {} vs {} dropped)",
+                                            mb.spans.recorded(),
+                                            ma.spans.recorded(),
+                                            mb.spans.dropped,
+                                            ma.spans.dropped
+                                        ),
+                                        &mut ok,
+                                    );
+                                }
+                                if ma.recv_wait != mb.recv_wait || ma.total != mb.total {
+                                    fail(
+                                        format!(
+                                            "rank {i}: replay virtual times differ \
+                                             (recv_wait {:?} vs {:?}, total {:?} vs {:?})",
+                                            mb.recv_wait, ma.recv_wait, mb.total, ma.total
+                                        ),
+                                        &mut ok,
+                                    );
+                                }
                             }
                             let tot = a.metrics.totals();
                             if tot.messages_sent != tot.messages_received {

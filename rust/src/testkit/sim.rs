@@ -521,6 +521,14 @@ impl<M: Payload> Transport<M> for VirtualEndpoint<M> {
         drop(g);
         Ok(r)
     }
+
+    /// The scheduler's virtual clock. Deterministic whenever the calling
+    /// rank is the scheduled one (it holds the execution token, so `now`
+    /// cannot advance concurrently) — which is every point inside a rank
+    /// program, including the instants `Comm` stamps spans at.
+    fn virtual_now(&self) -> Option<u64> {
+        Some(self.shared.state.lock().unwrap().now)
+    }
 }
 
 /// Release the token and mark the rank finished when its program returns —

@@ -1,0 +1,119 @@
+//! obs/ end-to-end: span timelines harvested through real counting runs,
+//! wall-clock conservation on the channel fabric, virtual-time replay
+//! determinism on the testkit fabric, and the snapshot/trace exports
+//! validating against their own schemas.
+
+use std::sync::Arc;
+
+use tricount::adj::HubThreshold;
+use tricount::algo::surrogate;
+use tricount::comm::metrics::ClusterMetrics;
+use tricount::config::CostFn;
+use tricount::gen::rng::Rng;
+use tricount::graph::ordering::Oriented;
+use tricount::obs::span::{ClockDomain, SpanPhase};
+use tricount::obs::MetricsRegistry;
+use tricount::partition::balance::balanced_ranges;
+use tricount::partition::cost::{cost_vector, prefix_sums};
+use tricount::testkit::sched::SimConfig;
+use tricount::testkit::sim::Fabric;
+
+fn workload() -> (Arc<Oriented>, Vec<std::ops::Range<u32>>) {
+    let g = tricount::gen::pa::preferential_attachment(600, 8, &mut Rng::seeded(99));
+    let o = Arc::new(Oriented::from_graph(&g));
+    let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::SurrogateNew)), 4);
+    (o, ranges)
+}
+
+/// Σ blocked-phase span time per rank must fit inside the rank's measured
+/// total. Each wall span truncates independently to whole µs, so every
+/// recorded span can overshoot the truncated total by < 1 µs — hence the
+/// `recorded + slack` allowance.
+#[test]
+fn wall_spans_conserve_time_on_channel_fabric() {
+    let (o, ranges) = workload();
+    let r = surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
+    for (rank, m) in r.metrics.per_rank.iter().enumerate() {
+        assert_eq!(m.spans.domain, ClockDomain::Wall, "rank {rank}");
+        assert!(m.spans.recorded() > 0, "rank {rank}: no spans");
+        assert_eq!(m.spans.dropped, 0, "rank {rank}: ring overflowed");
+        let blocked = m.spans.phase_ticks(SpanPhase::RecvWait)
+            + m.spans.phase_ticks(SpanPhase::Barrier)
+            + m.spans.phase_ticks(SpanPhase::Reduce);
+        let budget = m.total.as_micros() as u64 + m.spans.recorded() as u64 + 2;
+        assert!(
+            blocked <= budget,
+            "rank {rank}: blocked {blocked} µs exceeds total {budget} µs"
+        );
+        for s in &m.spans.spans {
+            assert!(s.t_end >= s.t_start, "rank {rank}: inverted span {s:?}");
+            assert!(s.t_end <= budget, "rank {rank}: span past run end {s:?}");
+        }
+    }
+}
+
+/// The obs/ clock contract on the testkit fabric: same seed ⇒ the exact
+/// same virtual-time span timeline, not just the same trace hash.
+#[test]
+fn virtual_time_spans_replay_identically() {
+    let (o, ranges) = workload();
+    let run = |seed: u64| {
+        let fabric = Fabric::Sim(SimConfig::adversarial(seed));
+        surrogate::run_on(&fabric, &o, &ranges, HubThreshold::Auto).0.unwrap().metrics
+    };
+    let (a, b) = (run(3), run(3));
+    for (rank, (ma, mb)) in a.per_rank.iter().zip(b.per_rank.iter()).enumerate() {
+        assert_eq!(ma.spans.domain, ClockDomain::Virtual, "rank {rank}");
+        assert_eq!(ma.spans, mb.spans, "rank {rank}: replay timeline differs");
+        assert_eq!(ma.recv_wait, mb.recv_wait, "rank {rank}");
+        assert_eq!(ma.total, mb.total, "rank {rank}");
+    }
+    // And a different schedule seed is allowed to (and here does) move time.
+    let c = run(4);
+    assert_eq!(a.per_rank.len(), c.per_rank.len());
+}
+
+/// Same-seed virtual runs export byte-identical Perfetto traces — the
+/// property `tricount conformance --trace-out` leans on.
+#[test]
+fn virtual_trace_export_is_byte_identical() {
+    let (o, ranges) = workload();
+    let trace = |_| {
+        let fabric = Fabric::Sim(SimConfig::adversarial(11));
+        let m = surrogate::run_on(&fabric, &o, &ranges, HubThreshold::Auto).0.unwrap().metrics;
+        tricount::obs::export::cluster_trace_json("test", &m)
+    };
+    assert_eq!(trace(0), trace(1));
+}
+
+/// End to end: real run → registry snapshot → schema validation → renderer,
+/// and the same metrics through the Perfetto exporter → trace validation.
+#[test]
+fn snapshot_and_trace_validate_end_to_end() {
+    let (o, ranges) = workload();
+    let r = surrogate::run(&o, &ranges, HubThreshold::Auto).unwrap();
+
+    let mut reg = MetricsRegistry::new("test-e2e");
+    reg.record_cluster(&r.metrics);
+    reg.record_global_kernels(tricount::adj::stats::snapshot());
+    reg.record_phase("count", 0.25);
+    reg.note("integration test");
+    let json = reg.snapshot_json();
+    let v = tricount::obs::registry::validate_snapshot(&json).expect("schema-valid snapshot");
+    let rendered = tricount::obs::report::render_snapshot(&v).expect("renderable snapshot");
+    assert!(rendered.contains("command=test-e2e"), "{rendered}");
+
+    let trace = tricount::obs::export::cluster_trace_json("test-e2e", &r.metrics);
+    let events = tricount::obs::export::validate_trace(&trace).expect("valid trace");
+    // Metadata (process + one per rank) plus at least one span per rank.
+    assert!(events > 1 + 2 * r.metrics.per_rank.len(), "only {events} events");
+
+    // Σ per-rank kernel mix is carried into the snapshot's rank objects
+    // (exact equality with the process-global counters is asserted in the
+    // single-test `obs_kernel_scoping` binary, where nothing else bumps
+    // the globals).
+    let total: u64 = r.metrics.per_rank.iter().map(|m| m.kernel.total()).sum();
+    assert!(total > 0, "surrogate dispatched no intersections?");
+    let empty = ClusterMetrics::default();
+    assert_eq!(empty.totals().kernel.total(), 0);
+}

@@ -1,0 +1,44 @@
+//! Per-rank kernel-counter scoping (`adj::stats` → `CommMetrics::kernel`):
+//! the launcher installs a per-rank sink, `record()` double-bumps it and
+//! the process-global counters, so the global snapshot stays the exact
+//! cross-rank sum.
+//!
+//! This binary holds ONLY this test on purpose: the global counters are
+//! process-wide, so the `global == Σ per-rank` equality is only sound when
+//! nothing else in the process dispatches intersections concurrently. The
+//! looser per-rank assertions live in `obs_integration.rs` alongside the
+//! full pipelines.
+
+use tricount::adj::stats::KernelStats;
+use tricount::adj::{self, NeighborView};
+use tricount::comm::threads::Cluster;
+
+#[test]
+fn global_kernel_snapshot_is_exact_sum_of_rank_scopes() {
+    tricount::adj::stats::reset();
+    let a: Vec<u32> = (0..64).collect();
+    let b: Vec<u32> = (0..64).map(|x| 2 * x).collect();
+
+    // Rank r dispatches (r + 1) * 10 list×list intersections.
+    let res = Cluster::run::<u64, u64, _>(2, |c| {
+        let mut t = 0u64;
+        for _ in 0..(c.rank() + 1) * 10 {
+            adj::intersect_count(NeighborView::sorted(&a), NeighborView::sorted(&b), &mut t);
+        }
+        t
+    })
+    .unwrap();
+    let global = tricount::adj::stats::snapshot();
+
+    // Per-rank scoping: each rank's CommMetrics carries exactly its own mix.
+    assert_eq!(res[0].1.kernel, KernelStats { list_list: 10, ..Default::default() });
+    assert_eq!(res[1].1.kernel, KernelStats { list_list: 20, ..Default::default() });
+
+    // The process-global counters remain the cross-rank sum.
+    let mut sum = KernelStats::default();
+    for (_, m) in &res {
+        sum.merge(&m.kernel);
+    }
+    assert_eq!(global, sum);
+    assert_eq!(global.total(), 30);
+}
