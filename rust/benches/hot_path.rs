@@ -58,6 +58,16 @@ fn main() {
         }
         c
     });
+    // The SWAR tier the hybrid dispatch now prefers on balanced list×list
+    // pairs — same inputs as the two rows above, so the win is directly
+    // readable from the table.
+    bench("simd-blocked balanced 10K∩10K ×200", units, "elem", || {
+        let mut c = 0;
+        for _ in 0..200 {
+            intersect::count_simd_blocked(&a, &b, &mut c);
+        }
+        c
+    });
 
     let small = sorted_list(&mut rng, 64, 1_000_000);
     let units = (small.len() + b.len()) as u64 * 2000;

@@ -3,7 +3,8 @@
 //! Every [`crate::adj::view::intersect_count`] / [`intersect_into`]
 //! call records which kernel actually ran, so runs can report the
 //! representation mix (`tricount count`: `k_list_list`, `k_list_bitmap`,
-//! `k_bitmap_bitmap` in the JSON schema). Two sinks exist:
+//! `k_bitmap_bitmap`, `k_simd_blocked` in the JSON schema). Two sinks
+//! exist:
 //!
 //! * **Process-global** relaxed atomics — the cross-rank sum, as the
 //!   CLI has always reported it.
@@ -33,6 +34,7 @@ struct PaddedCounter(AtomicU64);
 static LIST_LIST: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 static LIST_BITMAP: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 static BITMAP_BITMAP: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+static SIMD_BLOCKED: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 
 /// Which kernel the dispatch chose for one intersection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,6 +45,11 @@ pub enum KernelPath {
     ListBitmap,
     /// Both sides have bitmaps: word-AND + popcount.
     BitmapBitmap,
+    /// Sorted×sorted on the SWAR blocked-merge tier
+    /// ([`crate::intersect::count_simd_blocked`]): balanced mid-size
+    /// pairs where the u64-packed window comparison beats the scalar
+    /// merge (DESIGN.md §12).
+    SimdBlocked,
 }
 
 /// Per-rank counter cell. The launcher owns one `Arc` per rank, installs
@@ -54,6 +61,7 @@ pub struct RankKernelCounters {
     list_list: AtomicU64,
     list_bitmap: AtomicU64,
     bitmap_bitmap: AtomicU64,
+    simd_blocked: AtomicU64,
 }
 
 impl RankKernelCounters {
@@ -63,6 +71,7 @@ impl RankKernelCounters {
             KernelPath::ListList => &self.list_list,
             KernelPath::ListBitmap => &self.list_bitmap,
             KernelPath::BitmapBitmap => &self.bitmap_bitmap,
+            KernelPath::SimdBlocked => &self.simd_blocked,
         };
         c.fetch_add(1, Ordering::Relaxed);
     }
@@ -73,6 +82,7 @@ impl RankKernelCounters {
             list_list: self.list_list.load(Ordering::Relaxed),
             list_bitmap: self.list_bitmap.load(Ordering::Relaxed),
             bitmap_bitmap: self.bitmap_bitmap.load(Ordering::Relaxed),
+            simd_blocked: self.simd_blocked.load(Ordering::Relaxed),
         }
     }
 }
@@ -111,6 +121,7 @@ pub fn record(path: KernelPath) {
         KernelPath::ListList => &LIST_LIST,
         KernelPath::ListBitmap => &LIST_BITMAP,
         KernelPath::BitmapBitmap => &BITMAP_BITMAP,
+        KernelPath::SimdBlocked => &SIMD_BLOCKED,
     };
     c.0.fetch_add(1, Ordering::Relaxed);
     RANK_COUNTERS.with(|s| {
@@ -126,12 +137,15 @@ pub struct KernelStats {
     pub list_list: u64,
     pub list_bitmap: u64,
     pub bitmap_bitmap: u64,
+    /// SWAR blocked-merge list×list tier (a dispatch refinement of the
+    /// list×list arm, counted separately so the mix is observable).
+    pub simd_blocked: u64,
 }
 
 impl KernelStats {
     /// Total intersections dispatched.
     pub fn total(&self) -> u64 {
-        self.list_list + self.list_bitmap + self.bitmap_bitmap
+        self.list_list + self.list_bitmap + self.bitmap_bitmap + self.simd_blocked
     }
 
     /// Intersections that used a bitmap kernel.
@@ -145,6 +159,7 @@ impl KernelStats {
         self.list_list += other.list_list;
         self.list_bitmap += other.list_bitmap;
         self.bitmap_bitmap += other.bitmap_bitmap;
+        self.simd_blocked += other.simd_blocked;
     }
 }
 
@@ -154,6 +169,7 @@ pub fn snapshot() -> KernelStats {
         list_list: LIST_LIST.0.load(Ordering::Relaxed),
         list_bitmap: LIST_BITMAP.0.load(Ordering::Relaxed),
         bitmap_bitmap: BITMAP_BITMAP.0.load(Ordering::Relaxed),
+        simd_blocked: SIMD_BLOCKED.0.load(Ordering::Relaxed),
     }
 }
 
@@ -162,6 +178,7 @@ pub fn reset() {
     LIST_LIST.0.store(0, Ordering::Relaxed);
     LIST_BITMAP.0.store(0, Ordering::Relaxed);
     BITMAP_BITMAP.0.store(0, Ordering::Relaxed);
+    SIMD_BLOCKED.0.store(0, Ordering::Relaxed);
 }
 
 #[cfg(test)]
@@ -191,7 +208,10 @@ mod tests {
         // Guard dropped: further bumps are global-only.
         record(KernelPath::ListList);
         let got = mine.snapshot();
-        assert_eq!(got, KernelStats { list_list: 1, list_bitmap: 1, bitmap_bitmap: 0 });
+        assert_eq!(
+            got,
+            KernelStats { list_list: 1, list_bitmap: 1, bitmap_bitmap: 0, simd_blocked: 0 }
+        );
         // Per-rank cells are exact even though the globals are shared with
         // concurrently running tests: nothing else holds this Arc.
         assert_eq!(got.total(), 2);
@@ -199,9 +219,17 @@ mod tests {
 
     #[test]
     fn kernel_stats_merge_is_fieldwise() {
-        let mut a = KernelStats { list_list: 1, list_bitmap: 2, bitmap_bitmap: 3 };
-        a.merge(&KernelStats { list_list: 10, list_bitmap: 20, bitmap_bitmap: 30 });
-        assert_eq!(a, KernelStats { list_list: 11, list_bitmap: 22, bitmap_bitmap: 33 });
-        assert_eq!(a.total(), 66);
+        let mut a = KernelStats { list_list: 1, list_bitmap: 2, bitmap_bitmap: 3, simd_blocked: 4 };
+        a.merge(&KernelStats {
+            list_list: 10,
+            list_bitmap: 20,
+            bitmap_bitmap: 30,
+            simd_blocked: 40,
+        });
+        assert_eq!(
+            a,
+            KernelStats { list_list: 11, list_bitmap: 22, bitmap_bitmap: 33, simd_blocked: 44 }
+        );
+        assert_eq!(a.total(), 110);
     }
 }

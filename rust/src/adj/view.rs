@@ -8,7 +8,9 @@
 //!
 //! | a \ b        | sorted                       | bitmap                  |
 //! |--------------|------------------------------|-------------------------|
-//! | **sorted**   | adaptive merge/gallop        | probe a's list into b\* |
+//! | **sorted**   | SWAR blocked merge when      | probe a's list into b\* |
+//! |              | balanced & ≥ both 16 long,   |                         |
+//! |              | else adaptive merge/gallop   |                         |
 //! | **bitmap**   | probe b's list into a\*      | word-AND + popcount,    |
 //! |              |                              | else probe shorter list |
 //!
@@ -137,8 +139,24 @@ fn plan<'a>(a: NeighborView<'a>, b: NeighborView<'a>) -> Plan<'a> {
 pub fn intersect_count(a: NeighborView, b: NeighborView, out_count: &mut u64) {
     match plan(a, b) {
         Plan::Merge => {
-            stats::record(KernelPath::ListList);
-            intersect::count_adaptive(a.list, b.list, out_count);
+            // The list×list arm has one further cost-guarded tier: balanced
+            // mid-size pairs go to the SWAR blocked merge (8 candidate
+            // comparisons per u64-packed window). Skewed pairs still gallop
+            // and short pairs still scalar-merge — the guard mirrors
+            // `adaptive_cost`'s merge branch, so `intersect_cost` is
+            // unchanged (the blocked tier is a constant-factor accelerator
+            // over the same `min + max` element walk; DESIGN.md §12).
+            let min_len = a.list.len().min(b.list.len());
+            let max_len = a.list.len().max(b.list.len());
+            if min_len >= intersect::SIMD_BLOCK_MIN
+                && max_len / min_len < intersect::GALLOP_RATIO
+            {
+                stats::record(KernelPath::SimdBlocked);
+                intersect::count_simd_blocked(a.list, b.list, out_count);
+            } else {
+                stats::record(KernelPath::ListList);
+                intersect::count_adaptive(a.list, b.list, out_count);
+            }
         }
         Plan::Probe { list, bits, path } => {
             stats::record(path);

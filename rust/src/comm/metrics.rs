@@ -156,7 +156,7 @@ mod tests {
             partition_bytes: 100,
             partition_bytes_pred: 100,
             accel_bytes: 16,
-            kernel: KernelStats { list_list: 3, list_bitmap: 1, bitmap_bitmap: 2 },
+            kernel: KernelStats { list_list: 3, list_bitmap: 1, bitmap_bitmap: 2, simd_blocked: 0 },
             ..Default::default()
         };
         a.merge(&b);

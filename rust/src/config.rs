@@ -79,7 +79,8 @@ impl std::str::FromStr for CostFn {
 pub struct RunConfig {
     /// Workload: a preset name (`livejournal-like`), `pa:<n>:<d>`,
     /// `rmat:<scale>:<ef>`, `er:<n>:<d̄>`, `contact:<n>:<d>`,
-    /// `file:<path>`, `bin:<path>` or `karate`.
+    /// `file:<path>` (edge-list text), `tcg:<path>` (zero-parse binary,
+    /// see `tricount convert`), `bin:<path>` (legacy) or `karate`.
     pub workload: String,
     /// Number of processors (ranks) P.
     pub procs: usize,
@@ -272,6 +273,7 @@ pub fn build_workload(spec: &str, scale: f64, seed: u64) -> Result<crate::graph:
         }
         ["file", path] => crate::graph::io::read_edge_list(path),
         ["bin", path] => crate::graph::io::read_binary(path),
+        ["tcg", path] => crate::graph::io::read_tcg(path),
         _ => Err(Error::Config(format!("unknown workload spec `{spec}`"))),
     }
 }
@@ -359,6 +361,12 @@ mod tests {
         assert_eq!(g.num_nodes(), 1000);
         assert_eq!(g.num_edges(), 4000);
         assert!(build_workload("wat:1", 1.0, 1).is_err());
+        // `tcg:` specs route through the zero-parse binary loader.
+        let p = std::env::temp_dir().join("tricount_cfg_spec.tcg");
+        crate::graph::io::write_tcg(&crate::graph::classic::karate(), &p).unwrap();
+        let g = build_workload(&format!("tcg:{}", p.display()), 1.0, 1).unwrap();
+        assert_eq!(g.num_nodes(), 34);
+        std::fs::remove_file(&p).unwrap();
     }
 
     #[test]

@@ -107,6 +107,9 @@ pub(crate) fn from_normalized_edge_list(
 /// to pay for it (a huge-n, tiny-m compaction degrades to the serial
 /// O(n)-scratch path instead of allocating t n-wide tables).
 fn effective_threads(requested: usize, num_edges: usize, n: usize) -> usize {
+    // Oversubscription clamp first (requesting 8 threads on a 2-core host
+    // must mean "2", not 8 time-shared workers), then the shape floors.
+    let requested = par::clamp_to_host(requested);
     par::clamp_threads(requested, num_edges, MIN_EDGES_PER_THREAD)
         .min(par::clamp_threads(requested, num_edges, n))
 }

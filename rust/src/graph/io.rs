@@ -1,6 +1,13 @@
 //! Graph I/O: whitespace-separated edge-list text (the SNAP interchange
-//! format the paper's datasets ship in) and a compact binary CSR format for
-//! fast reloads of generated workloads.
+//! format the paper's datasets ship in), the legacy `TRICSR01` binary dump,
+//! and the versioned zero-parse `.tcg` format (magic, schema version, n/m,
+//! offsets, packed u32 targets, FNV-1a integrity footer — DESIGN.md §12).
+//!
+//! The text parser is chunk-parallel: the input splits at newline
+//! boundaries into `build_threads` byte chunks, each scanned by the PR-3
+//! byte scanner into a private pair buffer, then stitched deterministically
+//! — bit-identical to the serial scan at every thread count (the same
+//! contract as the radix build, DESIGN.md §8).
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -38,10 +45,40 @@ pub fn read_edge_list<P: AsRef<Path>>(path: P) -> Result<Csr> {
 pub fn parse_edge_list<R: BufRead>(mut r: R) -> Result<Csr> {
     let mut buf = Vec::new();
     r.read_to_end(&mut buf)?;
-    let b = &buf[..];
-    let mut raw: Vec<(u64, u64)> = Vec::with_capacity(b.len() / 12 + 1);
+    parse_edge_list_bytes(&buf, crate::par::default_threads())
+}
+
+/// Floor on bytes per parse chunk: below this, thread spawn/join overhead
+/// beats the scan win, so small inputs degrade toward the serial scan
+/// (the `par::clamp_threads` rule, same as the builder's edge floor).
+const MIN_PARSE_BYTES_PER_CHUNK: usize = 4096;
+
+/// One chunk's scan state — the parallel parse's private buffer.
+struct ChunkScan {
+    /// Normalized `(min, max)` pairs decoded from this chunk.
+    pairs: Vec<(u64, u64)>,
+    /// Newlines this chunk consumed — the successors' line-number offset.
+    newlines: usize,
+    /// First parse error, at a 1-based line number local to this chunk.
+    err: Option<(usize, String)>,
+}
+
+/// Demote a [`parse_u64`] error to its (local line, message) parts.
+fn split_parse_err(e: Error) -> (usize, String) {
+    match e {
+        Error::Parse { line, msg } => (line, msg),
+        other => (0, other.to_string()),
+    }
+}
+
+/// The PR-3 byte scanner over one chunk. Chunks start at the byte after a
+/// newline (or the input start), so line accounting is exact: the chunk's
+/// line `k` is the document's line `newlines-before-chunk + k`.
+fn scan_chunk(b: &[u8]) -> ChunkScan {
+    let mut pairs: Vec<(u64, u64)> = Vec::with_capacity(b.len() / 12 + 1);
     let mut line = 1usize;
     let mut i = 0usize;
+    let mut err = None;
     while i < b.len() {
         // Skip horizontal whitespace (spaces, tabs, CR of CRLF endings).
         while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\r') {
@@ -62,34 +99,104 @@ pub fn parse_edge_list<R: BufRead>(mut r: R) -> Result<Csr> {
                 }
             }
             _ => {
-                let u = parse_u64(b, &mut i, line)?;
+                let u = match parse_u64(b, &mut i, line) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        err = Some(split_parse_err(e));
+                        break;
+                    }
+                };
                 while i < b.len() && matches!(b[i], b' ' | b'\t' | b'\r') {
                     i += 1;
                 }
                 if i >= b.len() || b[i] == b'\n' {
-                    return Err(Error::Parse { line, msg: "missing endpoint".into() });
+                    err = Some((line, "missing endpoint".into()));
+                    break;
                 }
-                let v = parse_u64(b, &mut i, line)?;
+                let v = match parse_u64(b, &mut i, line) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        err = Some(split_parse_err(e));
+                        break;
+                    }
+                };
                 // Ignore the rest of the line (weights, timestamps).
                 while i < b.len() && b[i] != b'\n' {
                     i += 1;
                 }
                 if u != v {
                     // Normalize inline: self loop dropped, (min, max) kept.
-                    raw.push(if u < v { (u, v) } else { (v, u) });
+                    pairs.push(if u < v { (u, v) } else { (v, u) });
                 }
             }
         }
     }
+    ChunkScan { pairs, newlines: line - 1, err }
+}
+
+/// Chunk-parallel edge-list parse over an in-memory byte buffer.
+///
+/// The buffer splits at newline boundaries into up to `threads` chunks
+/// (host-clamped, with a bytes-per-chunk floor), each scanned into a
+/// private pair vector on the `par/` fork-join scope, then stitched in
+/// chunk order. The stitch is deterministic by construction: the global
+/// `sort_unstable + dedup` canonicalizes the pair multiset — which is
+/// independent of chunk boundaries — so the output is **bit-identical to
+/// the serial scan at every thread count**, and the first failing chunk's
+/// error carries the same absolute line number the serial scan reports
+/// (its predecessors completed, so their newline counts are exact).
+pub fn parse_edge_list_bytes(b: &[u8], threads: usize) -> Result<Csr> {
+    let threads = crate::par::clamp_to_host(threads);
+    let t = crate::par::clamp_threads(threads, b.len(), MIN_PARSE_BYTES_PER_CHUNK);
+    // Chunk bounds: near-equal byte ranges, each advanced past the next
+    // newline so every line belongs to exactly one chunk.
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for r in crate::par::ranges(b.len(), t).iter().take(t - 1) {
+        let mut cut = r.end.max(*bounds.last().unwrap());
+        while cut < b.len() && b[cut] != b'\n' {
+            cut += 1;
+        }
+        bounds.push((cut + 1).min(b.len()));
+    }
+    bounds.push(b.len());
+    let chunks = bounds.len() - 1;
+    let scans: Vec<ChunkScan> =
+        crate::par::for_ranges(chunks, chunks, |c, _| scan_chunk(&b[bounds[c]..bounds[c + 1]]));
+
+    // Stitch in chunk order. The first failing chunk holds the document's
+    // first error (earlier chunks scanned their whole byte range cleanly).
+    let mut line_offset = 0usize;
+    let mut total = 0usize;
+    for s in &scans {
+        if let Some((local, msg)) = &s.err {
+            return Err(Error::Parse { line: line_offset + local, msg: msg.clone() });
+        }
+        line_offset += s.newlines;
+        total += s.pairs.len();
+    }
+    let mut raw: Vec<(u64, u64)> = Vec::with_capacity(total);
+    for s in &scans {
+        raw.extend_from_slice(&s.pairs);
+    }
+    drop(scans);
     raw.sort_unstable();
     raw.dedup();
-    // Compact ids. The map is monotone, so mapped edges stay (min, max).
+    // Compact ids. The map is monotone, so mapped edges stay (min, max);
+    // the id lookup is a pure per-edge function, so it parallelizes over
+    // owned output chunks without touching the determinism contract.
     let mut ids: Vec<u64> = raw.iter().flat_map(|&(u, v)| [u, v]).collect();
     ids.sort_unstable();
     ids.dedup();
     let lookup = |x: u64| ids.binary_search(&x).unwrap() as VertexId;
-    let edges: Vec<(VertexId, VertexId)> = raw.iter().map(|&(u, v)| (lookup(u), lookup(v))).collect();
-    crate::graph::builder::from_normalized_edge_list(ids.len(), edges, crate::par::default_threads())
+    let mut edges: Vec<(VertexId, VertexId)> = vec![(0, 0); raw.len()];
+    crate::par::for_chunks_mut(&mut edges, t, |_, start, chunk| {
+        for (k, e) in chunk.iter_mut().enumerate() {
+            let (u, v) = raw[start + k];
+            *e = (lookup(u), lookup(v));
+        }
+    });
+    crate::graph::builder::from_normalized_edge_list(ids.len(), edges, threads)
 }
 
 /// Decode one base-10 `u64` at `*i`, advancing past it. A token must be
@@ -172,6 +279,169 @@ pub fn read_binary<P: AsRef<Path>>(path: P) -> Result<Csr> {
         *t = u32::from_le_bytes(buf4);
     }
     let g = Csr::from_parts(offsets, targets);
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// .tcg — versioned zero-parse binary graph format (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// `.tcg` magic bytes.
+pub const TCG_MAGIC: &[u8; 8] = b"TCGRAPH1";
+
+/// `.tcg` schema version this build writes and reads. Evolution is
+/// append-only: new sections go between the targets array and the footer,
+/// announced by `flags` bits; a reader rejects any *higher* version rather
+/// than misread it (DESIGN.md §12).
+pub const TCG_VERSION: u32 = 1;
+
+/// Bytes ahead of the offsets array:
+/// `magic[8] | version: u32 | flags: u32 | n: u64 | len(targets): u64`.
+const TCG_HEADER_BYTES: usize = 8 + 4 + 4 + 8 + 8;
+
+/// Streaming FNV-1a 64 over raw bytes (same constants as the
+/// `testkit::trace` event fingerprint, which folds u64 events instead).
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        self.0 = h;
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Write the `.tcg` zero-parse format: header, offsets as `(n+1)×u64` LE,
+/// targets as `len×u32` LE, then an FNV-1a u64 footer over every preceding
+/// byte. The payload streams through one 64 KiB scratch buffer, so the
+/// writer never holds a second serialized copy of the graph.
+pub fn write_tcg<P: AsRef<Path>>(g: &Csr, path: P) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let mut hash = Fnv1a::new();
+    let mut header = Vec::with_capacity(TCG_HEADER_BYTES);
+    header.extend_from_slice(TCG_MAGIC);
+    header.extend_from_slice(&TCG_VERSION.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes()); // flags: none defined in v1
+    header.extend_from_slice(&(g.num_nodes() as u64).to_le_bytes());
+    header.extend_from_slice(&(g.targets().len() as u64).to_le_bytes());
+    hash.update(&header);
+    w.write_all(&header)?;
+    let mut buf: Vec<u8> = Vec::with_capacity(1 << 16);
+    let mut flush = |w: &mut BufWriter<File>, hash: &mut Fnv1a, buf: &mut Vec<u8>| -> Result<()> {
+        hash.update(buf);
+        w.write_all(buf)?;
+        buf.clear();
+        Ok(())
+    };
+    for &o in g.offsets() {
+        buf.extend_from_slice(&o.to_le_bytes());
+        if buf.len() + 8 > (1 << 16) {
+            flush(&mut w, &mut hash, &mut buf)?;
+        }
+    }
+    for &t in g.targets() {
+        buf.extend_from_slice(&t.to_le_bytes());
+        if buf.len() + 8 > (1 << 16) {
+            flush(&mut w, &mut hash, &mut buf)?;
+        }
+    }
+    flush(&mut w, &mut hash, &mut buf)?;
+    w.write_all(&hash.finish().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a `.tcg` file: header validation + two bulk `read_exact`s into
+/// preallocated buffers + footer check — no tokenizing, no id compaction,
+/// no sort. Cost collapses to the LE decode and the O(n + m) structural
+/// validation.
+///
+/// Failure taxonomy: wrong magic / unsupported version / declared sizes
+/// disagreeing with the file length / footer mismatch are all
+/// [`Error::Config`] (the file is not a usable `.tcg`); a short read mid-
+/// payload surfaces as [`Error::Io`] (`UnexpectedEof`) — never a panic —
+/// and structurally invalid content behind a valid footer is
+/// [`Error::InvalidGraph`]. The size check runs *before* any allocation,
+/// so a corrupt header cannot drive a runaway allocation either.
+pub fn read_tcg<P: AsRef<Path>>(path: P) -> Result<Csr> {
+    let mut f = File::open(path)?;
+    let file_len = f.metadata()?.len();
+    let mut header = [0u8; TCG_HEADER_BYTES];
+    f.read_exact(&mut header)?;
+    if &header[..8] != TCG_MAGIC {
+        return Err(Error::Config("not a .tcg file (bad magic)".into()));
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if version != TCG_VERSION {
+        return Err(Error::Config(format!(
+            ".tcg schema version {version} unsupported (this build reads {TCG_VERSION})"
+        )));
+    }
+    let n64 = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let tl64 = u64::from_le_bytes(header[24..32].try_into().unwrap());
+    let expect = n64
+        .checked_add(1)
+        .and_then(|x| x.checked_mul(8))
+        .and_then(|ob| tl64.checked_mul(4).and_then(|tb| ob.checked_add(tb)))
+        .and_then(|x| x.checked_add(TCG_HEADER_BYTES as u64 + 8));
+    if expect != Some(file_len) {
+        return Err(Error::Config(format!(
+            ".tcg size mismatch: header declares n={n64}, len(targets)={tl64} \
+             ({} bytes expected, file has {file_len})",
+            expect.map_or("overflowing".into(), |e| e.to_string())
+        )));
+    }
+    let (n, tl) = (n64 as usize, tl64 as usize);
+    let mut hash = Fnv1a::new();
+    hash.update(&header);
+
+    let mut obytes = vec![0u8; (n + 1) * 8];
+    f.read_exact(&mut obytes)?;
+    hash.update(&obytes);
+    let mut offsets = vec![0u64; n + 1];
+    for (o, c) in offsets.iter_mut().zip(obytes.chunks_exact(8)) {
+        *o = u64::from_le_bytes(c.try_into().unwrap());
+    }
+    drop(obytes);
+
+    let mut tbytes = vec![0u8; tl * 4];
+    f.read_exact(&mut tbytes)?;
+    hash.update(&tbytes);
+    let mut targets = vec![0 as VertexId; tl];
+    for (t, c) in targets.iter_mut().zip(tbytes.chunks_exact(4)) {
+        *t = u32::from_le_bytes(c.try_into().unwrap());
+    }
+    drop(tbytes);
+
+    let mut footer = [0u8; 8];
+    f.read_exact(&mut footer)?;
+    if u64::from_le_bytes(footer) != hash.finish() {
+        return Err(Error::Config(
+            ".tcg integrity footer mismatch (corrupt or partially written file)".into(),
+        ));
+    }
+    // Structural validation before `Csr::from_parts` (whose checks are
+    // debug-only): a well-footered but hand-mangled file must error, not
+    // panic or smuggle an unsorted row into the kernels.
+    if offsets.first() != Some(&0) || *offsets.last().unwrap() != tl as u64 {
+        return Err(Error::InvalidGraph(".tcg offsets do not span the targets array".into()));
+    }
+    if offsets.windows(2).any(|w| w[0] > w[1]) {
+        return Err(Error::InvalidGraph(".tcg offsets are not monotone".into()));
+    }
+    let g = Csr::from_parts(offsets, targets);
+    g.validate().map_err(Error::InvalidGraph)?;
     Ok(g)
 }
 
@@ -298,5 +568,94 @@ mod tests {
         let p = dir.join("junk.bin");
         std::fs::write(&p, b"NOTMAGIC rest").unwrap();
         assert!(read_binary(&p).is_err());
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tricount_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn tcg_roundtrip() {
+        for g in [classic::karate(), classic::petersen(), Csr::empty(0), Csr::empty(5)] {
+            let p = tmp("roundtrip.tcg");
+            write_tcg(&g, &p).unwrap();
+            let g2 = read_tcg(&p).unwrap();
+            assert_eq!(g, g2);
+        }
+    }
+
+    #[test]
+    fn tcg_corruption_taxonomy() {
+        let p = tmp("corrupt.tcg");
+        write_tcg(&classic::karate(), &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // Bad magic → Config.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(read_tcg(&p).unwrap_err(), Error::Config(_)), "magic");
+
+        // Unsupported (future) version → Config.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(read_tcg(&p).unwrap_err(), Error::Config(_)), "version");
+
+        // Flipped payload byte → footer mismatch → Config.
+        let mut bad = good.clone();
+        let mid = TCG_HEADER_BYTES + 3;
+        bad[mid] ^= 0x40;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(read_tcg(&p).unwrap_err(), Error::Config(_)), "footer");
+
+        // Flipped footer byte itself → Config.
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() ^= 1;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(read_tcg(&p).unwrap_err(), Error::Config(_)), "footer bytes");
+
+        // Header declaring more data than the file holds → Config before
+        // any allocation (no runaway `vec![0; huge]`).
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        assert!(matches!(read_tcg(&p).unwrap_err(), Error::Config(_)), "size bomb");
+
+        // Truncation at every boundary region: error (Config size check),
+        // never a panic.
+        for cut in [0, 4, TCG_HEADER_BYTES, good.len() - 9, good.len() - 1] {
+            std::fs::write(&p, &good[..cut]).unwrap();
+            assert!(read_tcg(&p).is_err(), "truncated at {cut}");
+        }
+    }
+
+    #[test]
+    fn chunked_parse_matches_serial_and_reports_serial_lines() {
+        // A text with comments, blank lines, CRLF and ragged spacing, big
+        // enough only via an explicit tiny chunk floor — so drive the
+        // chunking through parse_edge_list_bytes at several thread counts.
+        let mut txt = String::from("# header\n");
+        for i in 0..2000u32 {
+            txt.push_str(&format!("{} {}\n", i % 97, (i * 7) % 89 + 1));
+        }
+        let serial = parse_edge_list_bytes(txt.as_bytes(), 1).unwrap();
+        for t in [2usize, 8] {
+            let par = parse_edge_list_bytes(txt.as_bytes(), t).unwrap();
+            assert_eq!(serial, par, "T={t}");
+        }
+        // Error line numbers must match the serial scan's regardless of
+        // which chunk the bad token lands in.
+        let mut bad = txt.clone();
+        bad.push_str("oops 3\n");
+        let want_line = 2002;
+        for t in [1usize, 2, 8] {
+            match parse_edge_list_bytes(bad.as_bytes(), t).unwrap_err() {
+                Error::Parse { line, .. } => assert_eq!(line, want_line, "T={t}"),
+                other => panic!("expected parse error, got {other}"),
+            }
+        }
     }
 }

@@ -65,7 +65,9 @@ impl Oriented {
     /// bit-identical at every thread count.
     pub fn from_graph_threads(g: &Csr, hub_threshold: HubThreshold, threads: usize) -> Self {
         let n = g.num_nodes();
-        let t = crate::par::clamp_threads(threads, n, MIN_ROWS_PER_THREAD);
+        // Host clamp before the shape floor: oversubscribing cores never
+        // wins for fork-join row sweeps (see `par::clamp_to_host`).
+        let t = crate::par::clamp_threads(crate::par::clamp_to_host(threads), n, MIN_ROWS_PER_THREAD);
 
         // Degrees, per row.
         let mut degree = vec![0u32; n];

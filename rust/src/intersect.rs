@@ -1,7 +1,7 @@
 //! Sorted-set intersection kernels — the compute hot-spot of every
 //! algorithm in the paper (`S ← N_v ∩ N_u`, Fig 1 line 9).
 //!
-//! Three variants:
+//! Four variants:
 //! * [`count_merge`] — linear two-pointer merge, `O(|a| + |b|)`; the
 //!   paper's assumed kernel.
 //! * [`count_galloping`] — exponential search of the longer list,
@@ -9,6 +9,12 @@
 //!   exactly the "large degrees" regime this paper targets.
 //! * [`count_adaptive`] — picks between them by length ratio; the threshold
 //!   was tuned by `benches/hot_path.rs` (see EXPERIMENTS.md §Perf).
+//! * [`count_simd_blocked`] — SIMD-within-a-register blocked merge: packs
+//!   two u32 candidates per u64 word and tests 8 candidate pairs per
+//!   iteration with XOR lane-zero checks (stable Rust, no intrinsics, no
+//!   new dependencies). Requires strictly sorted duplicate-free inputs —
+//!   exactly the CSR row contract. Dispatched by [`crate::adj::view`] on
+//!   balanced mid-size list pairs (DESIGN.md §12).
 //!
 //! These are the **list×list** kernels. Counting drivers no longer call
 //! them on raw slices: they intersect through the hybrid dispatch in
@@ -89,6 +95,68 @@ pub fn count_adaptive(a: &[VertexId], b: &[VertexId], out_count: &mut u64) {
     }
 }
 
+/// Minimum shorter-list length before the blocked SWAR kernel pays off.
+/// Below this the blocked loop barely runs (its 2×4 window needs a few
+/// iterations to amortize the packing) and the scalar merge's tighter
+/// epilogue wins — the same measured-guard philosophy as the 4-wide
+/// run-skipping variant retired in EXPERIMENTS.md §Perf.
+pub const SIMD_BLOCK_MIN: usize = 16;
+
+#[inline(always)]
+fn pack2(lo: VertexId, hi: VertexId) -> u64 {
+    (lo as u64) | ((hi as u64) << 32)
+}
+
+/// SWAR blocked merge intersection count.
+///
+/// Compares a 2-wide window of `a` against a 4-wide window of `b` per
+/// iteration: the windows are packed into u64 words (two u32 lanes each)
+/// and all 8 candidate pairs are tested with four XORs + lane-zero checks,
+/// then the window with the smaller maximum advances (both on a tie).
+/// The scalar [`count_merge`] finishes the tails.
+///
+/// **Contract:** both inputs strictly sorted and duplicate-free (the CSR
+/// row invariant, `Csr::validate`). Duplicates would be double-counted by
+/// the windowed comparison; sortedness is what makes "advance the window
+/// with the smaller max" lossless — every future element of the other
+/// list is strictly greater than the discarded window's max, so no
+/// matching pair is ever skipped.
+#[inline]
+pub fn count_simd_blocked(a: &[VertexId], b: &[VertexId], out_count: &mut u64) {
+    // Orient so the 4-wide window walks the longer list: the wider window
+    // advances over more elements per step on the denser side.
+    let (a, b) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut c = 0u64;
+    while i + 2 <= a.len() && j + 4 <= b.len() {
+        let (a0, a1) = (a[i], a[i + 1]);
+        let (b0, b1, b2, b3) = (b[j], b[j + 1], b[j + 2], b[j + 3]);
+        let wa = pack2(a0, a1); // lanes (lo, hi) = (a0, a1)
+        let wr = pack2(a1, a0); // swapped lanes
+        let wb0 = pack2(b0, b1);
+        let wb1 = pack2(b2, b3);
+        // z = x ^ y has an all-zero lane exactly where the lanes match, so
+        // the four XORs cover all 8 (aᵢ, bⱼ) candidate pairs.
+        let z0 = wa ^ wb0; // lo: a0==b0, hi: a1==b1
+        let z1 = wr ^ wb0; // lo: a1==b0, hi: a0==b1
+        let z2 = wa ^ wb1; // lo: a0==b2, hi: a1==b3
+        let z3 = wr ^ wb1; // lo: a1==b2, hi: a0==b3
+        c += ((z0 & 0xFFFF_FFFF) == 0) as u64
+            + ((z0 >> 32) == 0) as u64
+            + ((z1 & 0xFFFF_FFFF) == 0) as u64
+            + ((z1 >> 32) == 0) as u64
+            + ((z2 & 0xFFFF_FFFF) == 0) as u64
+            + ((z2 >> 32) == 0) as u64
+            + ((z3 & 0xFFFF_FFFF) == 0) as u64
+            + ((z3 >> 32) == 0) as u64;
+        // Branchless window advance on max comparison (ties advance both).
+        i += 2 * (a1 <= b3) as usize;
+        j += 4 * (b3 <= a1) as usize;
+    }
+    *out_count += c;
+    count_merge(&a[i..], &b[j..], out_count);
+}
+
 /// Model of what [`count_adaptive`] actually costs, in "element steps":
 /// `min + max` for the merge path, `min·(1 + log₂(max/min))` for galloping.
 /// This is the list×list term of the hybrid cost model — pairs involving
@@ -151,6 +219,9 @@ mod tests {
         let mut c = 0;
         count_adaptive(a, b, &mut c);
         assert_eq!(c, expect, "adaptive {a:?} ∩ {b:?}");
+        let mut c = 0;
+        count_simd_blocked(a, b, &mut c);
+        assert_eq!(c, expect, "simd-blocked {a:?} ∩ {b:?}");
         assert_eq!(intersect_vec(a, b).len() as u64, expect);
     }
 
@@ -194,5 +265,48 @@ mod tests {
         let mut c = 0;
         count_galloping(&[100, 200], &[1, 2, 3], &mut c);
         assert_eq!(c, 0);
+    }
+
+    /// Adversarial coverage for the SWAR kernel: every window/tail shape
+    /// the blocked loop can reach, checked against the scalar merge.
+    #[test]
+    fn simd_blocked_adversarial_shapes() {
+        // Empty / sub-window lists never enter the blocked loop.
+        check_all(&[], &[], 0);
+        check_all(&[7], &[7], 1);
+        check_all(&[1, 3], &[2, 4, 6], 0);
+        // Disjoint interleaved (forces alternating window advances).
+        let evens: Vec<VertexId> = (0..64).map(|x| 2 * x).collect();
+        let odds: Vec<VertexId> = (0..64).map(|x| 2 * x + 1).collect();
+        check_all(&evens, &odds, 0);
+        // Disjoint ranges (one side exhausts immediately).
+        let lo: Vec<VertexId> = (0..32).collect();
+        let hi: Vec<VertexId> = (1000..1040).collect();
+        check_all(&lo, &hi, 0);
+        // Identical lists, including lengths exercising every tail residue
+        // 0–5 on both the 2-wide and 4-wide windows.
+        for len in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 16, 17, 21] {
+            let v: Vec<VertexId> = (0..len as u32).map(|x| 3 * x + 1).collect();
+            check_all(&v, &v, len as u64);
+        }
+        // Duplicate-free runs with partial overlap and ragged tails.
+        for (la, lb, shift) in [(20, 23, 5), (33, 6, 2), (7, 41, 3), (19, 22, 40)] {
+            let a: Vec<VertexId> = (0..la).collect();
+            let b: Vec<VertexId> = (0..lb).map(|x| x + shift).collect();
+            let expect = a.iter().filter(|x| b.binary_search(x).is_ok()).count() as u64;
+            check_all(&a, &b, expect);
+        }
+        // Shared max element (tie path: both windows advance together).
+        check_all(&[1, 2, 3, 7], &[4, 5, 6, 7], 1);
+    }
+
+    /// The blocked kernel's advance rule must not skip matches when
+    /// windows tie on their maxima mid-stream.
+    #[test]
+    fn simd_blocked_tie_advances_are_lossless() {
+        let a: Vec<VertexId> = vec![0, 3, 4, 7, 8, 11, 12, 15, 16, 19];
+        let b: Vec<VertexId> = vec![1, 2, 3, 7, 9, 10, 11, 15, 17, 18, 19, 23];
+        let expect = a.iter().filter(|x| b.binary_search(x).is_ok()).count() as u64;
+        check_all(&a, &b, expect);
     }
 }

@@ -25,8 +25,10 @@
 //!   out-degree ≥ an auto-tuned threshold) carry a packed bitmap
 //!   ([`adj::bitmap::BitmapRow`]) beside their sorted slice, and every
 //!   counting path intersects through the [`adj::view::NeighborView`] dispatch
-//!   (list×list merge/gallop, list×bitmap probe, bitmap×bitmap word-AND) —
-//!   see DESIGN.md §7 for the representation rule and kernel matrix.
+//!   (list×list merge/gallop with a SWAR u64-blocked tier on balanced
+//!   pairs, list×bitmap probe, bitmap×bitmap word-AND) — see DESIGN.md §7
+//!   for the representation rule and kernel matrix, §12 for the SWAR
+//!   dispatch guard.
 //! * **`stream/`** — incremental parallel counting over edge-update
 //!   batches: an [`stream::overlay::AdjDelta`] mutable overlay on the
 //!   immutable CSR, an exact per-batch Δ counter going through the `adj/`
@@ -48,13 +50,19 @@
 //! * **`par/` + the radix build** — the multithreaded preprocessing
 //!   pipeline: [`graph::builder`] constructs the CSR with an O(m)
 //!   two-pass counting/radix scatter (no comparison sort, no per-row
-//!   re-sort), and the whole parse → build → relabel → orient → hub-index
+//!   re-sort), text ingestion splits the document at newline boundaries
+//!   and scans chunks in parallel ([`graph::io::parse_edge_list_bytes`]),
+//!   and the whole parse → build → relabel → orient → hub-index
 //!   chain fans out over `--build-threads` scoped threads
-//!   ([`par::BuildThreads`]) with **bit-identical output at every thread
+//!   ([`par::BuildThreads`], clamped to the host's cores by
+//!   [`par::clamp_to_host`]) with **bit-identical output at every thread
 //!   count** (disjoint per-`(thread, bucket)` scatter regions; DESIGN.md
-//!   §8). [`pipeline`] (`tricount bench-pipeline`) times the stages
-//!   against the retained comparison-sort baseline and writes
-//!   `BENCH_pipeline.json`, the repo's recorded perf baseline.
+//!   §8). For repeated loads, `tricount convert` re-encodes any workload
+//!   as a zero-parse `.tcg` binary ([`graph::io::write_tcg`] /
+//!   [`graph::io::read_tcg`]; DESIGN.md §12). [`pipeline`]
+//!   (`tricount bench-pipeline`) times the stages against the retained
+//!   comparison-sort baseline and writes `BENCH_pipeline.json`, the
+//!   repo's recorded perf baseline.
 //! * **`obs/`** — the observability layer: per-rank phase-span timelines
 //!   ([`obs::span`], ring-buffered, wall-clock on the channel fabric and
 //!   *virtual-time* on the testkit fabric so adversarial schedules replay

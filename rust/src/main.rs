@@ -4,6 +4,7 @@
 //! * `count`    — count triangles on a workload with a chosen algorithm;
 //! * `stream`   — incremental counting over batched edge updates;
 //! * `generate` — write a workload graph to disk (edge list / binary);
+//! * `convert`  — encode any workload as a zero-parse `.tcg` binary;
 //! * `partition-stats` — per-partition memory accounting (ours vs PATRIC);
 //! * `exp`      — run paper experiments (`--id table2|fig4|…|all`);
 //! * `info`     — PJRT backend + artifact inventory.
@@ -40,6 +41,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "stream" => cmd_stream(&args[1..]),
         "analyze" => cmd_analyze(&args[1..]),
         "generate" => cmd_generate(&args[1..]),
+        "convert" => cmd_convert(&args[1..]),
         "partition-stats" => cmd_partition_stats(&args[1..]),
         "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
         "conformance" => cmd_conformance(&args[1..]),
@@ -63,7 +65,11 @@ USAGE: tricount <command> [--key value]...
 COMMANDS:
   count             count triangles
                     --workload SPEC  (karate | preset | pa:N:D | rmat:S:EF |
-                                      er:N:D | contact:N:D | file:PATH | bin:PATH)
+                                      er:N:D | contact:N:D | file:PATH |
+                                      tcg:PATH | bin:PATH)
+                    --format text|tcg (reinterpret a file-backed workload:
+                    text = edge-list parse, tcg = zero-parse binary load;
+                    see `tricount convert`)
                     --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
                     --procs P --cost-fn F (unit|dv|patric|new|hybrid) --scale X
                     --mem-budget B   (bytes, kb/mb/gb suffixes; surrogate|direct:
@@ -82,9 +88,13 @@ COMMANDS:
                     --workload SPEC --procs P --batch-size N --batches B
                     --window W (0 = no expiry) --delete-frac F --base-frac F
                     --compact-every C --hub-threshold T --out DIR
-                    --verify on|off
+                    --verify on|off --format text|tcg
   generate          build a workload and write it
-                    --workload SPEC --out PATH [--format edges|bin]
+                    --workload SPEC --out PATH [--format edges|bin|tcg]
+  convert           encode a workload as a zero-parse `.tcg` binary
+                    (versioned header + bulk u32 CSR payload + FNV-1a
+                    integrity footer; round-trip verified before exit)
+                    --workload SPEC --out PATH.tcg
   analyze           triangle-based network analysis (clustering,
                     transitivity, trussness, MR-shuffle blow-up, approx
                     baselines) --workload SPEC --procs P
@@ -93,9 +103,12 @@ COMMANDS:
   bench-pipeline    time the preprocessing pipeline (parse → radix CSR
                     build → degree relabel → orientation + hub index)
                     serially and at each thread count, verifying the
-                    parallel output is bit-identical to serial
+                    parallel output is bit-identical to serial; also times
+                    the chunk-parallel text parse and the zero-parse
+                    `.tcg` reload of every workload
                     --workloads S1,S2,…  --threads T1,T2,… (n|auto)
                     --reps N --seed S --hub-threshold T
+                    --format text|tcg (for file-backed workload specs)
                     --out PATH (default BENCH_pipeline.json)
   conformance       adversarial-schedule conformance suite: every counting
                     path (surrogate|direct|patric|dynamic-lb|local-counts|
@@ -163,7 +176,8 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
 
 fn cmd_count(args: &[String]) -> Result<()> {
     let (mut cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &["out", "trace-out", "obs-out"])?;
+    reject_unknown(&extra, &["out", "trace-out", "obs-out", "format"])?;
+    apply_format(&mut cfg, &extra)?;
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
     let gen_time = t0.elapsed();
@@ -289,8 +303,8 @@ fn cmd_count(args: &[String]) -> Result<()> {
         triangles, cfg.algorithm, cfg.procs, elapsed
     );
     println!(
-        "kernels: list×list={} list×bitmap={} bitmap×bitmap={}",
-        kernels.list_list, kernels.list_bitmap, kernels.bitmap_bitmap
+        "kernels: list×list={} simd×blocked={} list×bitmap={} bitmap×bitmap={}",
+        kernels.list_list, kernels.simd_blocked, kernels.list_bitmap, kernels.bitmap_bitmap
     );
 
     // Partitioned runs: per-rank partition residency, measured from the
@@ -360,8 +374,9 @@ fn cmd_count(args: &[String]) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let mut report = exp::report::Report::new([
             "workload", "algorithm", "procs", "n", "m", "triangles", "time_s",
-            "hub_threshold", "hubs", "bitmap_bytes", "k_list_list", "k_list_bitmap",
-            "k_bitmap_bitmap", "mem_measured_max", "mem_pred_max", "accel_max",
+            "hub_threshold", "hubs", "bitmap_bytes", "k_list_list", "k_simd_blocked",
+            "k_list_bitmap", "k_bitmap_bitmap", "mem_measured_max", "mem_pred_max",
+            "accel_max",
         ]);
         report.row([
             cfg.workload.clone().into(),
@@ -375,6 +390,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             hubs.hubs.into(),
             hubs.bitmap_bytes.into(),
             kernels.list_list.into(),
+            kernels.simd_blocked.into(),
             kernels.list_bitmap.into(),
             kernels.bitmap_bitmap.into(),
             mem_max.into(),
@@ -393,7 +409,8 @@ fn cmd_count(args: &[String]) -> Result<()> {
 fn cmd_stream(args: &[String]) -> Result<()> {
     use tricount::stream::{compact::CompactionPolicy, parallel, window, workload};
 
-    let (cfg, extra) = parse_config(args)?;
+    let (mut cfg, extra) = parse_config(args)?;
+    apply_format(&mut cfg, &extra)?;
     let get = |key: &str| extra.get(key).map(String::as_str);
     let parse_f64 = |key: &str, default: f64| -> Result<f64> {
         get(key).map_or(Ok(default), |s| {
@@ -409,7 +426,7 @@ fn cmd_stream(args: &[String]) -> Result<()> {
         &extra,
         &[
             "batch-size", "batches", "window", "delete-frac", "base-frac", "compact-every",
-            "out", "verify", "trace-out", "obs-out",
+            "out", "verify", "trace-out", "obs-out", "format",
         ],
     )?;
     let spec = workload::StreamSpec {
@@ -480,8 +497,8 @@ fn cmd_stream(args: &[String]) -> Result<()> {
     ]);
     report.note(format!("counting work: {} element steps", totals.work_units));
     report.note(format!(
-        "kernel paths: list×list={} list×bitmap={} bitmap×bitmap={}",
-        kernels.list_list, kernels.list_bitmap, kernels.bitmap_bitmap
+        "kernel paths: list×list={} simd×blocked={} list×bitmap={} bitmap×bitmap={}",
+        kernels.list_list, kernels.simd_blocked, kernels.list_bitmap, kernels.bitmap_bitmap
     ));
     report.print();
 
@@ -632,10 +649,71 @@ fn cmd_generate(args: &[String]) -> Result<()> {
     match format {
         "edges" => tricount::graph::io::write_edge_list(&g, out)?,
         "bin" => tricount::graph::io::write_binary(&g, out)?,
+        "tcg" => tricount::graph::io::write_tcg(&g, out)?,
         other => return Err(Error::Config(format!("unknown format `{other}`"))),
     }
     println!("wrote {} (n={}, m={})", out, g.num_nodes(), g.num_edges());
     Ok(())
+}
+
+/// `tricount convert` — materialize any workload (generator spec, text
+/// edge list, legacy `bin:`) and encode it as a zero-parse `.tcg` binary
+/// (DESIGN.md §12). The written file is immediately reloaded and compared
+/// against the in-memory graph, so a successful exit certifies the
+/// round-trip — `count --workload tcg:PATH` then loads it without parsing.
+fn cmd_convert(args: &[String]) -> Result<()> {
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &["out"])?;
+    let out = extra
+        .get("out")
+        .ok_or_else(|| Error::Config("convert needs --out PATH.tcg".into()))?;
+    let t0 = std::time::Instant::now();
+    let g = cfg.build_graph()?;
+    let build_time = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    tricount::graph::io::write_tcg(&g, out)?;
+    let write_time = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let back = tricount::graph::io::read_tcg(out)?;
+    let load_time = t0.elapsed();
+    if back != g {
+        return Err(Error::InvalidGraph(format!(
+            "convert: `{out}` reloaded differently from the graph just written"
+        )));
+    }
+    println!(
+        "wrote {} (n={}, m={}; build {:.2?}, encode {:.2?}, verified reload {:.2?})",
+        out,
+        g.num_nodes(),
+        g.num_edges(),
+        build_time,
+        write_time,
+        load_time
+    );
+    Ok(())
+}
+
+/// `--format text|tcg`: reinterpret a file-backed `--workload` spec's
+/// on-disk encoding. Generator specs are format-agnostic and pass through.
+fn apply_format(cfg: &mut RunConfig, extra: &std::collections::BTreeMap<String, String>) -> Result<()> {
+    if let Some(fmt) = extra.get("format") {
+        cfg.workload = reformat_spec(&cfg.workload, fmt)?;
+    }
+    Ok(())
+}
+
+fn reformat_spec(spec: &str, fmt: &str) -> Result<String> {
+    let path = spec.strip_prefix("file:").or_else(|| spec.strip_prefix("tcg:"));
+    Ok(match (fmt, path) {
+        ("text", Some(p)) => format!("file:{p}"),
+        ("tcg", Some(p)) => format!("tcg:{p}"),
+        ("text" | "tcg", None) => spec.to_string(),
+        _ => {
+            return Err(Error::Config(format!(
+                "--format expects text|tcg, got `{fmt}`"
+            )))
+        }
+    })
 }
 
 fn cmd_partition_stats(args: &[String]) -> Result<()> {
@@ -681,7 +759,7 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
 /// this on a small preset every push).
 fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
     let (cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &["workloads", "threads", "reps", "out", "trace-out"])?;
+    reject_unknown(&extra, &["workloads", "threads", "reps", "out", "trace-out", "format"])?;
     let mut opts = tricount::pipeline::Options {
         seed: cfg.seed,
         hub_threshold: cfg.hub_threshold,
@@ -692,6 +770,13 @@ fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
         if opts.workloads.is_empty() {
             return Err(Error::Config("--workloads needs at least one spec".into()));
         }
+    }
+    if let Some(fmt) = extra.get("format") {
+        opts.workloads = opts
+            .workloads
+            .iter()
+            .map(|w| reformat_spec(w, fmt))
+            .collect::<Result<Vec<String>>>()?;
     }
     if let Some(t) = extra.get("threads") {
         opts.threads = t
@@ -713,15 +798,17 @@ fn cmd_bench_pipeline(args: &[String]) -> Result<()> {
     println!("[written: {out}]");
 
     // `--trace-out`: the stage timings as a sequential Perfetto timeline —
-    // derived from the pinned 11-column Report, so the schema CI smokes
-    // stays untouched.
+    // derived from the pinned 13-column Report, so the schema CI smokes
+    // stays untouched. The parse span is the chunk-parallel parse the run
+    // actually executes at this thread count (`parse_text_par_s`).
     if let Some(path) = extra.get("trace-out") {
         let mut stages: Vec<(String, f64)> = Vec::new();
         for i in 0..report.rows.len() {
             let w = report.text(i, "workload")?;
             let t = report.int(i, "threads")?;
             for (stage, col) in [
-                ("parse", "parse_s"),
+                ("parse", "parse_text_par_s"),
+                ("load-tcg", "load_tcg_s"),
                 ("build-radix", "build_radix_s"),
                 ("relabel", "relabel_s"),
                 ("orient+hub", "orient_hub_s"),

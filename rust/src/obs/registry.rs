@@ -185,8 +185,8 @@ impl MetricsRegistry {
 
 fn kernel_json(k: &KernelStats) -> String {
     format!(
-        "{{\"list_list\": {}, \"list_bitmap\": {}, \"bitmap_bitmap\": {}}}",
-        k.list_list, k.list_bitmap, k.bitmap_bitmap
+        "{{\"list_list\": {}, \"list_bitmap\": {}, \"bitmap_bitmap\": {}, \"simd_blocked\": {}}}",
+        k.list_list, k.list_bitmap, k.bitmap_bitmap, k.simd_blocked
     )
 }
 
@@ -475,7 +475,10 @@ const RANK_KEYS: [&str; 14] = [
     "spans",
 ];
 
-const KERNEL_KEYS: [&str; 3] = ["list_list", "list_bitmap", "bitmap_bitmap"];
+// `simd_blocked` was added by the PR-7 kernel tier under the evolution
+// contract (adding keys bumps nothing): readers must require the four
+// known keys and ignore unknown ones.
+const KERNEL_KEYS: [&str; 4] = ["list_list", "list_bitmap", "bitmap_bitmap", "simd_blocked"];
 
 fn require<'v>(v: &'v JsonValue, key: &str, ctx: &str) -> Result<&'v JsonValue, String> {
     v.get(key).ok_or_else(|| format!("{ctx}: missing key \"{key}\""))
@@ -554,7 +557,12 @@ mod tests {
             recv_wait: Duration::from_micros(7 * rank),
             total: Duration::from_micros(100),
             work_units: 5,
-            kernel: KernelStats { list_list: rank, list_bitmap: 1, bitmap_bitmap: 0 },
+            kernel: KernelStats {
+                list_list: rank,
+                list_bitmap: 1,
+                bitmap_bitmap: 0,
+                simd_blocked: 2,
+            },
             spans: SpanLog {
                 domain: ClockDomain::Virtual,
                 spans: vec![
@@ -572,7 +580,12 @@ mod tests {
     fn golden_snapshot_roundtrips_and_validates() {
         let mut reg = MetricsRegistry::new("count");
         reg.record_cluster(&synthetic_cluster());
-        reg.record_global_kernels(KernelStats { list_list: 1, list_bitmap: 2, bitmap_bitmap: 0 });
+        reg.record_global_kernels(KernelStats {
+            list_list: 1,
+            list_bitmap: 2,
+            bitmap_bitmap: 0,
+            simd_blocked: 3,
+        });
         reg.record_phase("parse", 0.25);
         reg.note("workload=pa:160:6");
         let json = reg.snapshot_json();

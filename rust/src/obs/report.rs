@@ -156,10 +156,11 @@ pub fn render_snapshot(v: &JsonValue) -> Result<String, String> {
     s.push_str(&render_rows(clock, &rows));
     if let Some(kg) = v.get("kernels_global") {
         s.push_str(&format!(
-            "obs: kernels (global) list_list={} list_bitmap={} bitmap_bitmap={}\n",
+            "obs: kernels (global) list_list={} list_bitmap={} bitmap_bitmap={} simd_blocked={}\n",
             ru64(kg, "list_list", "kernels_global")?,
             ru64(kg, "list_bitmap", "kernels_global")?,
-            ru64(kg, "bitmap_bitmap", "kernels_global")?
+            ru64(kg, "bitmap_bitmap", "kernels_global")?,
+            ru64(kg, "simd_blocked", "kernels_global")?
         ));
     }
     if let Some(batches) = v.get("batches").and_then(JsonValue::as_arr) {

@@ -96,6 +96,22 @@ pub fn clamp_threads(requested: usize, work_items: usize, floor: usize) -> usize
     requested.clamp(1, (work_items / floor.max(1)).max(1))
 }
 
+/// Clamp a requested thread count to the host's available parallelism.
+///
+/// Oversubscribing a fork-join phase is never a win here: every `par/`
+/// consumer splits work into exactly `t` contiguous ranges up front, so
+/// `t` beyond the core count just multiplies spawn/join and cache-migration
+/// overhead while the excess threads time-share cores (measured: the
+/// rmat:16:16 pipeline hit 0.70× at T=8 on the 2-core bench host —
+/// BENCH_pipeline.json, PR 6 rows). Because every consumer is
+/// bit-identical at any thread count (DESIGN.md §8), clamping is a pure
+/// performance decision; explicit `--build-threads 8` on a 2-core host now
+/// means "use all 2 cores", not "context-switch 8 workers".
+pub fn clamp_to_host(requested: usize) -> usize {
+    let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    requested.clamp(1, host)
+}
+
 /// Split `0..len` into exactly `parts` contiguous near-equal ranges (the
 /// first `len % parts` ranges are one longer; trailing ranges may be empty
 /// when `parts > len`). The boundaries are a pure function of `(len,
@@ -320,6 +336,15 @@ mod tests {
         for (i, x) in data.iter().enumerate() {
             assert_eq!(*x, i as u64 * 3);
         }
+    }
+
+    #[test]
+    fn clamp_to_host_bounds() {
+        let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        assert_eq!(clamp_to_host(0), 1);
+        assert_eq!(clamp_to_host(1), 1);
+        assert_eq!(clamp_to_host(usize::MAX), host);
+        assert_eq!(clamp_to_host(host), host);
     }
 
     #[test]

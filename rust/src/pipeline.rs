@@ -22,11 +22,9 @@ use crate::config::build_workload;
 use crate::error::{Error, Result};
 use crate::exp::report::{Cell, Report};
 use crate::graph::builder::{from_edge_list_sort_baseline, from_edge_list_threads};
-use crate::graph::csr::Csr;
-use crate::graph::io::parse_edge_list;
+use crate::graph::io::{parse_edge_list_bytes, read_tcg, write_tcg};
 use crate::graph::ordering::Oriented;
 use crate::graph::relabel::degree_order_permutation;
-use crate::par;
 use crate::VertexId;
 
 /// What to measure.
@@ -75,9 +73,11 @@ fn timed<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
     (samples[reps / 2], out.unwrap())
 }
 
-/// One thread count's stage timings over one workload.
+/// One thread count's stage timings over one workload. `parse_par_s` is
+/// the chunk-parallel text parse at this thread count — the parse stage a
+/// `--build-threads t` run actually executes, hence the one in `total_s`.
 struct StageTimes {
-    parse_s: f64,
+    parse_par_s: f64,
     build_s: f64,
     relabel_s: f64,
     orient_s: f64,
@@ -85,7 +85,7 @@ struct StageTimes {
 
 impl StageTimes {
     fn total(&self) -> f64 {
-        self.parse_s + self.build_s + self.relabel_s + self.orient_s
+        self.parse_par_s + self.build_s + self.relabel_s + self.orient_s
     }
 }
 
@@ -113,6 +113,8 @@ pub fn run(opts: &Options) -> Result<Report> {
         "m",
         "threads",
         "parse_s",
+        "parse_text_par_s",
+        "load_tcg_s",
         "build_radix_s",
         "build_sort_s",
         "relabel_s",
@@ -136,29 +138,38 @@ pub fn run(opts: &Options) -> Result<Report> {
         }
 
         // Serial references — the sort baseline doubles as the timing
-        // baseline the radix build must beat.
+        // baseline the radix build must beat, and the serial byte-scan
+        // parse is the reference for both the chunked parse and the
+        // zero-parse `.tcg` load.
         let (sort_s, csr_ref) = timed(opts.reps, || from_edge_list_sort_baseline(n, edges.clone()));
         let csr_ref = csr_ref?;
-        let mut parse_ref: Option<Csr> = None;
+        let (parse_serial_s, parse_ref) =
+            timed(opts.reps, || parse_edge_list_bytes(&text, 1).expect("bench parse"));
+
+        // `.tcg` load: write the reference CSR once, time the bulk reload,
+        // and gate text-vs-binary equality (the formats must be two
+        // encodings of the same graph).
+        let tcg_path = std::env::temp_dir().join(format!(
+            "tricount_bench_{}_{}.tcg",
+            std::process::id(),
+            spec.replace([':', '/'], "_")
+        ));
+        write_tcg(&csr_ref, &tcg_path)?;
+        let (load_tcg_s, tcg_loaded) =
+            timed(opts.reps, || read_tcg(&tcg_path).expect("bench .tcg load"));
+        let _ = std::fs::remove_file(&tcg_path);
+        if tcg_loaded != csr_ref {
+            return Err(divergence(spec, 1, ".tcg round-trip"));
+        }
+
         let mut serial_total = 0.0f64;
         let mut serial_oriented: Option<Oriented> = None;
 
         for &t in &threads {
-            // Parse goes through the module-level default (its signature
-            // predates the knob); restore afterwards.
-            let prev = par::default_threads();
-            par::set_default_threads(t);
-            let (parse_s, parsed) = timed(opts.reps, || {
-                parse_edge_list(std::io::Cursor::new(&text[..])).expect("bench parse")
-            });
-            par::set_default_threads(prev);
-            match &parse_ref {
-                None => parse_ref = Some(parsed),
-                Some(r) => {
-                    if *r != parsed {
-                        return Err(divergence(spec, t, "parse"));
-                    }
-                }
+            let (parse_par_s, parsed) =
+                timed(opts.reps, || parse_edge_list_bytes(&text, t).expect("bench parse"));
+            if parsed != parse_ref {
+                return Err(divergence(spec, t, "chunk-parallel parse"));
             }
 
             let (build_s, built) =
@@ -193,7 +204,7 @@ pub fn run(opts: &Options) -> Result<Report> {
                 }
             }
 
-            let st = StageTimes { parse_s, build_s, relabel_s, orient_s };
+            let st = StageTimes { parse_par_s, build_s, relabel_s, orient_s };
             if t == 1 {
                 serial_total = st.total();
             }
@@ -203,7 +214,9 @@ pub fn run(opts: &Options) -> Result<Report> {
                 n.into(),
                 m.into(),
                 t.into(),
-                Cell::Secs(st.parse_s),
+                Cell::Secs(parse_serial_s),
+                Cell::Secs(st.parse_par_s),
+                Cell::Secs(load_tcg_s),
                 Cell::Secs(st.build_s),
                 Cell::Secs(sort_s),
                 Cell::Secs(st.relabel_s),
@@ -221,6 +234,13 @@ pub fn run(opts: &Options) -> Result<Report> {
     report.note(
         "build_sort_s = the seed's serial comparison-sort builder \
          (from_edge_list_sort_baseline), the timing baseline the radix build replaces"
+            .to_string(),
+    );
+    report.note(
+        "parse_s = serial byte-scan text parse (per-workload constant); \
+         parse_text_par_s = chunk-parallel parse at this row's thread count \
+         (the stage total_s includes); load_tcg_s = zero-parse binary reload \
+         of the same graph, text-vs-binary equality gated"
             .to_string(),
     );
     Ok(report)
@@ -241,7 +261,7 @@ mod tests {
         };
         let r = run(&opts).unwrap();
         assert_eq!(r.rows.len(), 2, "one row per thread count (1 and 2)");
-        assert_eq!(r.columns.len(), 11);
+        assert_eq!(r.columns.len(), 13);
         // JSON emission stays schema-valid.
         assert!(r.to_json().contains("\"build_radix_s\""));
     }

@@ -19,7 +19,10 @@ fn global_kernel_snapshot_is_exact_sum_of_rank_scopes() {
     let a: Vec<u32> = (0..64).collect();
     let b: Vec<u32> = (0..64).map(|x| 2 * x).collect();
 
-    // Rank r dispatches (r + 1) * 10 list×list intersections.
+    // Rank r dispatches (r + 1) * 10 list×list intersections. The lists
+    // are balanced and ≥ SIMD_BLOCK_MIN long, so the dispatch takes the
+    // SWAR blocked tier — which must scope per rank exactly like the
+    // scalar paths.
     let res = Cluster::run::<u64, u64, _>(2, |c| {
         let mut t = 0u64;
         for _ in 0..(c.rank() + 1) * 10 {
@@ -31,8 +34,8 @@ fn global_kernel_snapshot_is_exact_sum_of_rank_scopes() {
     let global = tricount::adj::stats::snapshot();
 
     // Per-rank scoping: each rank's CommMetrics carries exactly its own mix.
-    assert_eq!(res[0].1.kernel, KernelStats { list_list: 10, ..Default::default() });
-    assert_eq!(res[1].1.kernel, KernelStats { list_list: 20, ..Default::default() });
+    assert_eq!(res[0].1.kernel, KernelStats { simd_blocked: 10, ..Default::default() });
+    assert_eq!(res[1].1.kernel, KernelStats { simd_blocked: 20, ..Default::default() });
 
     // The process-global counters remain the cross-rank sum.
     let mut sum = KernelStats::default();

@@ -1,0 +1,38 @@
+//! Oversubscription regression gate (`#[ignore]`d — CI runs it in release).
+//!
+//! The PR-6 baseline recorded `rmat:16:16` at `--build-threads 8` running
+//! 0.70× *slower* than serial on a 2-core host: spawning more scoped
+//! threads than cores pays spawn + contention cost with zero extra
+//! parallelism. [`tricount::par::clamp_to_host`] clamps every thread
+//! request to `available_parallelism`, so an oversubscribed request must
+//! now cost no more than serial (plus timing noise).
+
+use tricount::adj::HubThreshold;
+use tricount::pipeline::{run, Options};
+
+#[test]
+#[ignore = "timing-sensitive: run with --release (CI does)"]
+fn oversubscribed_thread_request_does_not_regress() {
+    let opts = Options {
+        workloads: vec!["pa:30000:16".into()],
+        threads: vec![1, 8],
+        reps: 3,
+        seed: 42,
+        hub_threshold: HubThreshold::Auto,
+    };
+    let r = run(&opts).expect("pipeline run");
+    let mut t1 = None;
+    let mut t8 = None;
+    for i in 0..r.rows.len() {
+        match r.int(i, "threads").expect("threads column") {
+            1 => t1 = Some(r.secs(i, "total_s").expect("total_s column")),
+            8 => t8 = Some(r.secs(i, "total_s").expect("total_s column")),
+            _ => {}
+        }
+    }
+    let (t1, t8) = (t1.expect("T=1 row"), t8.expect("T=8 row"));
+    assert!(
+        t8 <= t1 * 1.1,
+        "T=8 total {t8:.4}s > 1.1x T=1 total {t1:.4}s — the host clamp regressed"
+    );
+}

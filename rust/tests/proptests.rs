@@ -3,6 +3,7 @@
 //! using the in-crate `prop` harness (proptest is unavailable offline; see
 //! DESIGN.md §3).
 
+use std::io::Write as _;
 use std::sync::Arc;
 
 use tricount::adj::HubThreshold;
@@ -623,6 +624,105 @@ fn prop_stream_compaction_equivalent_through_parallel_builder() {
         let gp = par.snapshot().map_err(|e| e.to_string())?;
         if gs != gp {
             return Err(format!("case {case}: compacted graphs diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tcg_write_load_is_identity_and_corruption_is_detected() {
+    // The `.tcg` ingestion satellite: write→load is the identity for any
+    // generated graph; flipping the magic, version or integrity footer is a
+    // Config error; truncating at a random byte is an error, never a panic.
+    quickcheck("tcg round-trip + corruption taxonomy", |rng, case| {
+        let g = arb_build_base(rng, case);
+        let path = std::env::temp_dir().join(format!(
+            "tricount_prop_{}_{case}.tcg",
+            std::process::id()
+        ));
+        tricount::graph::io::write_tcg(&g, &path).map_err(|e| e.to_string())?;
+        let back = tricount::graph::io::read_tcg(&path).map_err(|e| e.to_string())?;
+        if back != g {
+            return Err(format!("case {case}: .tcg reload != written graph"));
+        }
+        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+        // Single-byte corruptions: magic (offset 0), version (offset 8),
+        // footer (last byte) — each must surface as a Config error.
+        for (name, off) in [("magic", 0), ("version", 8), ("footer", bytes.len() - 1)] {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0xFF;
+            std::fs::write(&path, &bad).map_err(|e| e.to_string())?;
+            match tricount::graph::io::read_tcg(&path) {
+                Err(tricount::error::Error::Config(_)) => {}
+                other => {
+                    return Err(format!(
+                        "case {case}: corrupted {name} gave {other:?}, want Config"
+                    ))
+                }
+            }
+        }
+        // Truncation at any cut point: an error (the file always ends with
+        // an 8-byte footer, so a strict prefix can never verify), no panic.
+        let cut = rng.below_usize(bytes.len());
+        std::fs::write(&path, &bytes[..cut]).map_err(|e| e.to_string())?;
+        if tricount::graph::io::read_tcg(&path).is_ok() {
+            return Err(format!("case {case}: truncation at {cut} loaded"));
+        }
+        std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_parallel_parse_matches_serial() {
+    // The chunk-parallel text parse must be bit-identical to serial at any
+    // thread count (DESIGN.md §8 extended to parsing), including documents
+    // salted with comments and blank lines — and a malformed line must be
+    // reported with the same (global) line number no matter how the
+    // document was chunked.
+    quickcheck("chunked text parse == serial (PA/R-MAT/ER)", |rng, case| {
+        // Every fourth case is big enough (≫ the 4 KiB chunk floor) that
+        // T=8 really scans eight chunks instead of clamping to serial.
+        let g = if case % 4 == 0 {
+            tricount::gen::pa::preferential_attachment(20_000, 8, rng)
+        } else {
+            arb_stream_base(rng, case)
+        };
+        let mut text: Vec<u8> = Vec::new();
+        for (u, v) in g.edges() {
+            if rng.chance(0.03) {
+                text.extend_from_slice(b"# interleaved comment\n");
+            }
+            if rng.chance(0.03) {
+                text.push(b'\n');
+            }
+            writeln!(text, "{u} {v}").map_err(|e| e.to_string())?;
+        }
+        let serial =
+            tricount::graph::io::parse_edge_list_bytes(&text, 1).map_err(|e| e.to_string())?;
+        for t in [2usize, 8] {
+            let par =
+                tricount::graph::io::parse_edge_list_bytes(&text, t).map_err(|e| e.to_string())?;
+            if par != serial {
+                return Err(format!("case {case}: chunked parse diverged at T={t}"));
+            }
+        }
+        // Error equivalence: same first-error line at every thread count.
+        text.extend_from_slice(b"bogus tokens here\n");
+        let want = tricount::graph::io::parse_edge_list_bytes(&text, 1)
+            .err()
+            .ok_or_else(|| format!("case {case}: serial parse accepted bad line"))?
+            .to_string();
+        for t in [2usize, 8] {
+            let got = tricount::graph::io::parse_edge_list_bytes(&text, t)
+                .err()
+                .ok_or_else(|| format!("case {case}: T={t} parse accepted bad line"))?
+                .to_string();
+            if got != want {
+                return Err(format!(
+                    "case {case}: T={t} error `{got}` != serial `{want}`"
+                ));
+            }
         }
         Ok(())
     });
