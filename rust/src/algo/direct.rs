@@ -9,11 +9,14 @@
 //! Ranks hold the same materialized [`OwnedPartition`]s as the surrogate
 //! scheme; only the communication protocol differs.
 
+use std::collections::BTreeMap;
+
 use crate::adj::hub::HubThreshold;
 use crate::adj::{self, NeighborView};
 use crate::algo::driver::{self, RunResult};
-use crate::comm::threads::{Comm, Payload};
-use crate::error::Result;
+use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
+use crate::comm::transport::{Liveness, RetryPolicy};
+use crate::error::{Error, Result};
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
 use crate::partition::nonoverlap::partition_sizes;
@@ -26,8 +29,11 @@ use crate::{TriangleCount, VertexId};
 pub enum Msg {
     /// "Send me `N_u`; it's for my node `v`."
     Request { u: VertexId, v: VertexId },
-    /// `N_u`, echoed with the requester's `v` so no pending-state is needed.
-    Response { v: VertexId, nu: Vec<VertexId> },
+    /// `N_u`, echoed with the full requested `(u, v)` pair so the
+    /// requester can clear exactly one outstanding entry — which is what
+    /// makes retransmitted requests safe: a duplicate response no longer
+    /// matches an outstanding pair and is discarded without counting.
+    Response { u: VertexId, v: VertexId, nu: Vec<VertexId> },
     /// Termination notifier (§IV-D).
     Completion,
 }
@@ -36,7 +42,7 @@ impl Payload for Msg {
     fn size_bytes(&self) -> u64 {
         match self {
             Msg::Request { .. } => 16,
-            Msg::Response { nu, .. } => 12 + 4 * nu.len() as u64,
+            Msg::Response { nu, .. } => 16 + 4 * nu.len() as u64,
             Msg::Completion => 8,
         }
     }
@@ -59,16 +65,34 @@ pub fn run_on(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> (Result<RunResult>, Option<TraceReport>) {
+    run_hooked_on(fabric, graph, ranges, hub, None)
+}
+
+/// [`run_on`] with an `ft/` checkpoint sink (`ft::supervisor` entry
+/// point). Every triangle rank `i` counts has its min-vertex in rank `i`'s
+/// own range, so once the response drain finishes, the range is *acked*
+/// with its exact sum — recovery then re-counts only un-acked ranges.
+pub fn run_hooked_on(
+    fabric: &Fabric,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+    progress: Option<std::sync::Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_nonoverlapping(graph, ranges, hub);
     let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned_on::<Msg, _>(fabric, parts, predicted, rank_main)
+    driver::run_owned_hooked_on::<Msg, _>(fabric, parts, predicted, progress, rank_main)
 }
 
 struct RankState {
     t: TriangleCount,
     work: u64,
     completions: usize,
-    pending: u64,
+    /// Requests awaiting a response, `(u, v) → owner rank`. A response
+    /// clears its entry; one that matches nothing is a retransmit
+    /// duplicate and is dropped without counting (exactly-once counting
+    /// over an at-least-once wire).
+    outstanding: BTreeMap<(VertexId, VertexId), usize>,
 }
 
 fn handle(
@@ -80,18 +104,22 @@ fn handle(
 ) -> Result<()> {
     match msg {
         Msg::Request { u, v } => {
-            // We own u; ship N_u back, tagged with the requester's v.
+            // We own u; ship N_u back, echoing the requested pair. Serving
+            // is idempotent — duplicate requests just cost a duplicate
+            // response, which the requester discards.
             let nu = part.nbrs(u).to_vec();
-            c.send(src, Msg::Response { v, nu })?;
+            c.send(src, Msg::Response { u, v, nu })?;
         }
-        Msg::Response { v, nu } => {
+        Msg::Response { u, v, nu } => {
+            if st.outstanding.remove(&(u, v)).is_none() {
+                return Ok(()); // duplicate response to a retransmit
+            }
             // Remote N_u is a wire payload (plain sorted view); the local
             // N_v goes through the hybrid dispatch.
             let vv = part.view(v);
             let nuv = NeighborView::sorted(&nu);
             adj::intersect_count(vv, nuv, &mut st.t);
             st.work += adj::intersect_cost(vv, nuv);
-            st.pending -= 1;
         }
         Msg::Completion => st.completions += 1,
     }
@@ -100,7 +128,8 @@ fn handle(
 
 fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> {
     let me = c.rank() as u32;
-    let mut st = RankState { t: 0, work: 0, completions: 0, pending: 0 };
+    let mut st =
+        RankState { t: 0, work: 0, completions: 0, outstanding: BTreeMap::new() };
 
     // Compute span over the request/count sweep; the drain loops below
     // appear as recv-wait on the timeline.
@@ -119,7 +148,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
                 // One request per remote oriented edge — redundancy included.
                 for &u in &nv[run] {
                     c.send(j as usize, Msg::Request { u, v })?;
-                    st.pending += 1;
+                    st.outstanding.insert((u, v), j as usize);
                 }
             }
         }
@@ -129,12 +158,58 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     }
     c.span_end();
 
+    // Checkpoint the sweep-local partial before waiting on the wire.
+    let r = part.range();
+    let unit = ProgressUnit::range(r.start, r.end);
+    c.ckpt_partial(unit, st.t);
+
     // Drain until all our responses arrived (serving peers' requests too,
-    // otherwise two ranks could wait on each other forever).
-    while st.pending > 0 {
-        let (src, msg) = c.recv()?;
-        handle(c, part, src, msg, &mut st)?;
+    // otherwise two ranks could wait on each other forever). A deadline
+    // expiry with requests still outstanding retransmits them — bounded
+    // by the retry policy — and a dead owner fails fast through the
+    // liveness board instead of burning the full guard.
+    let policy = RetryPolicy::default();
+    let mut attempt = 0u32;
+    while !st.outstanding.is_empty() {
+        match c.recv_deadline(policy.deadline_for(attempt))? {
+            Some((src, msg)) => {
+                handle(c, part, src, msg, &mut st)?;
+                attempt = 0;
+            }
+            None => {
+                if let Some(&dead) = st
+                    .outstanding
+                    .values()
+                    .find(|&&j| c.liveness_of(j) == Liveness::Dead)
+                {
+                    return Err(Error::Cluster(format!(
+                        "rank {}: peer rank {dead} died with {} responses outstanding",
+                        c.rank(),
+                        st.outstanding.len()
+                    )));
+                }
+                if attempt >= policy.max_retries {
+                    return Err(Error::Cluster(format!(
+                        "rank {}: {} responses still outstanding after {} retries",
+                        c.rank(),
+                        st.outstanding.len(),
+                        policy.max_retries
+                    )));
+                }
+                attempt += 1;
+                let resend: Vec<((VertexId, VertexId), usize)> =
+                    st.outstanding.iter().map(|(&k, &j)| (k, j)).collect();
+                for ((u, v), j) in resend {
+                    c.metrics.retries += 1;
+                    c.send(j, Msg::Request { u, v })?;
+                }
+            }
+        }
     }
+
+    // All of this rank's min-vertex triangles are now resolved — the own
+    // range is exact from here on, whatever happens to the peers.
+    c.ckpt_ack(unit, st.t);
 
     c.bcast_control(|| Msg::Completion)?;
 

@@ -15,8 +15,10 @@
 //! channel transport or the seeded virtual transport the conformance
 //! suite schedules adversarially (`testkit::sim`, DESIGN.md §10).
 
+use std::sync::Arc;
+
 use crate::comm::metrics::{ClusterMetrics, CommMetrics};
-use crate::comm::threads::{Comm, Payload};
+use crate::comm::threads::{Comm, Payload, Progress};
 use crate::error::Result;
 use crate::partition::owned::OwnedPartition;
 use crate::testkit::sim::Fabric;
@@ -61,10 +63,26 @@ where
     M: Payload,
     F: Fn(&mut Comm<M>, &OwnedPartition) -> Result<TriangleCount> + Sync,
 {
+    run_owned_hooked_on(fabric, parts, predicted, None, rank_main)
+}
+
+/// [`run_owned_on`] with an `ft/` checkpoint sink installed on every rank
+/// — the supervised entry point (`ft::supervisor`).
+pub(crate) fn run_owned_hooked_on<M, F>(
+    fabric: &Fabric,
+    parts: Vec<OwnedPartition>,
+    predicted: Vec<u64>,
+    progress: Option<Arc<dyn Progress>>,
+    rank_main: F,
+) -> (Result<RunResult>, Option<TraceReport>)
+where
+    M: Payload,
+    F: Fn(&mut Comm<M>, &OwnedPartition) -> Result<TriangleCount> + Sync,
+{
     let p = parts.len();
     debug_assert_eq!(p, predicted.len());
     let parts = &parts;
-    let (results, trace) = fabric.try_run::<M, TriangleCount, _>(p, |c| {
+    let (results, trace) = fabric.try_run_hooked::<M, TriangleCount, _>(p, progress, |c| {
         let part = &parts[c.rank()];
         c.metrics.partition_bytes = part.resident_bytes();
         c.metrics.accel_bytes = part.accel_bytes();

@@ -18,9 +18,10 @@ use std::sync::Arc;
 
 use crate::algo::driver::{self, RunResult};
 use crate::algo::tasks::{self, Task};
-use crate::comm::threads::{Comm, Payload};
-use crate::config::CostFn;
+use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
+use crate::comm::transport::RetryPolicy;
 use crate::error::Result;
+use crate::config::CostFn;
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
 use crate::partition::cost::{cost_vector, prefix_sums};
@@ -41,8 +42,13 @@ pub enum Granularity {
 
 /// Wire messages of the coordinator/worker protocol.
 pub enum Msg {
-    /// Worker `i` is idle (paper `⟨i⟩`; sender rank is carried by the envelope).
-    Request,
+    /// Worker `i` is idle (paper `⟨i⟩`; sender rank is carried by the
+    /// envelope). Carries the worker's count of *completed* dynamic tasks
+    /// so the coordinator can tell "finished my last assignment" from
+    /// "never received it" — a request whose `completed` lags the
+    /// assignment counter retransmits the outstanding task instead of
+    /// leaking it (DESIGN.md §13).
+    Request { completed: u64 },
     /// A task assignment `⟨v, t⟩`.
     Assign(Task),
     /// No more tasks (`⟨terminate⟩`).
@@ -52,7 +58,7 @@ pub enum Msg {
 impl Payload for Msg {
     fn size_bytes(&self) -> u64 {
         match self {
-            Msg::Request => 8,
+            Msg::Request { .. } => 16,
             Msg::Assign(_) => 16,
             Msg::Terminate => 8,
         }
@@ -85,6 +91,19 @@ pub fn run_on(
     p: usize,
     opts: Options,
 ) -> (Result<RunResult>, Option<TraceReport>) {
+    run_hooked_on(fabric, graph, p, opts, None)
+}
+
+/// [`run_on`] with an `ft/` checkpoint sink (`ft::supervisor` entry
+/// point). Workers ack each task with its exact count the moment it
+/// finishes, so recovery re-counts only tasks nobody acked.
+pub fn run_hooked_on(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+    opts: Options,
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
     if p < 2 {
         let e = crate::error::Error::Config(format!(
             "dynamic-lb needs P >= 2 (a coordinator and at least one worker), got P={p}"
@@ -103,12 +122,46 @@ pub fn run_on(
         Granularity::Shrinking => tasks::shrinking_tasks(&prefix, tp, workers),
         Granularity::Fixed(k) => tasks::fixed_tasks(&prefix, tp, k),
     });
+    launch(fabric, graph, p, initial, queue, progress)
+}
 
-    let (results, trace) = fabric.try_run::<Msg, TriangleCount, _>(p, |c| {
+/// Run an *explicit* task list through the coordinator/worker protocol —
+/// no initial assignment, every task served dynamically. This is the
+/// supervisor's recovery entry point (§V semantics: survivors steal the
+/// unclaimed ranges of a dead rank), which is why executed tasks show as
+/// [`SpanPhase::Recovery`] work when a sink is installed.
+pub fn run_tasks_on(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+    work_list: &[Task],
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
+    if p < 2 {
+        let e = crate::error::Error::Config(format!(
+            "dynamic-lb needs P >= 2 (a coordinator and at least one worker), got P={p}"
+        ));
+        return (Err(e), None);
+    }
+    let initial = Arc::new(Vec::new());
+    let queue = Arc::new(work_list.to_vec());
+    launch(fabric, graph, p, initial, queue, progress)
+}
+
+fn launch(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+    initial: Arc<Vec<Task>>,
+    queue: Arc<Vec<Task>>,
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
+    let recovery = initial.is_empty() && progress.is_some();
+    let (results, trace) = fabric.try_run_hooked::<Msg, TriangleCount, _>(p, progress, |c| {
         if c.rank() == 0 {
             coordinator(c, &queue)
         } else {
-            worker(c, graph.clone(), &initial, &prefix)
+            worker(c, graph.clone(), &initial, recovery)
         }
     });
     match results {
@@ -119,21 +172,41 @@ pub fn run_on(
 
 /// Coordinator (paper Fig 11 lines 4-12). Comm failures propagate as
 /// `Err` through [`Cluster::try_run`] instead of poisoning the cluster.
+///
+/// Fault hardening: the coordinator remembers, per worker, how many tasks
+/// it assigned and which one is outstanding. A request whose `completed`
+/// count lags the assignment counter means the last `Assign` was lost on
+/// the wire — it is retransmitted rather than skipped, so no task can leak
+/// out of the queue. Duplicate terminate-requests (a worker retrying a
+/// lost `Terminate`) are answered again without double-counting the
+/// worker.
 fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<TriangleCount> {
     let mut next = 0usize;
     let mut terminated = 0usize;
     let workers = c.size() - 1;
+    let mut assigned = vec![0u64; c.size()];
+    let mut outstanding: Vec<Option<Task>> = vec![None; c.size()];
+    let mut done = vec![false; c.size()];
     while terminated < workers {
         let (src, msg) = c.recv()?;
         match msg {
-            Msg::Request => {
-                if next < queue.len() {
+            Msg::Request { completed } => {
+                if completed < assigned[src] {
+                    let task = outstanding[src]
+                        .expect("a lagging worker always has an outstanding task");
+                    c.send_control(src, Msg::Assign(task))?;
+                } else if next < queue.len() {
                     let t = queue[next];
                     next += 1;
+                    assigned[src] += 1;
+                    outstanding[src] = Some(t);
                     c.send_control(src, Msg::Assign(t))?;
                 } else {
                     c.send_control(src, Msg::Terminate)?;
-                    terminated += 1;
+                    if !done[src] {
+                        done[src] = true;
+                        terminated += 1;
+                    }
                 }
             }
             _ => unreachable!("coordinator only receives requests"),
@@ -148,33 +221,60 @@ fn worker(
     c: &mut Comm<Msg>,
     graph: Arc<Oriented>,
     initial: &Arc<Vec<Task>>,
-    _prefix: &Arc<Vec<u64>>,
+    recovery: bool,
 ) -> Result<TriangleCount> {
     let wid = c.rank() - 1; // worker index 0..P-1
+    let phase = if recovery { SpanPhase::Recovery } else { SpanPhase::Compute };
     let mut t: TriangleCount = 0;
     let mut work = 0u64;
+    let mut completed = 0u64;
 
     // Initial task — deterministic, no coordinator involved (Eqn 1).
     // Each task executes under its own Compute span, so the timeline
     // shows the task granularity and the request/assign gaps between.
     if let Some(task) = initial.get(wid) {
-        c.span_begin(SpanPhase::Compute);
-        run_task(&graph, *task, &mut t, &mut work);
+        c.span_begin(phase);
+        let dt = run_task(&graph, *task, &mut t, &mut work);
         c.span_end();
+        c.ckpt_ack(ProgressUnit::task(task.start, task.len), dt);
     }
 
-    // Dynamic phase: request → assign/terminate loop.
-    loop {
-        c.send_control(0, Msg::Request)?;
-        let (_src, msg) = c.recv()?;
+    // Dynamic phase: request → assign/terminate loop. A lost assignment
+    // or terminate is retried under the bounded policy; when retries
+    // exhaust against a coordinator the liveness board still calls alive,
+    // it can only be past termination (parked in the reduce with every
+    // worker accounted for), so the lost message was a `Terminate` and
+    // self-terminating is exact. A dead coordinator propagates as `Err`.
+    let policy = RetryPolicy::default();
+    let mut last_done: Option<Task> = None;
+    'outer: loop {
+        c.send_control(0, Msg::Request { completed })?;
+        let msg = 'recv: loop {
+            let got =
+                c.recv_retry(0, &policy, |c| c.send_control(0, Msg::Request { completed }))?;
+            match got {
+                // Retries exhausted, coordinator alive ⇒ lost Terminate.
+                None => break 'outer,
+                // A retransmit of the task we just ran (the coordinator
+                // answered a duplicate request): skip it without counting
+                // — the answer to the *current* request is still coming.
+                Some((_src, Msg::Assign(task))) if last_done == Some(task) => {
+                    continue 'recv;
+                }
+                Some((_src, m)) => break 'recv m,
+            }
+        };
         match msg {
             Msg::Assign(task) => {
-                c.span_begin(SpanPhase::Compute);
-                run_task(&graph, task, &mut t, &mut work);
+                c.span_begin(phase);
+                let dt = run_task(&graph, task, &mut t, &mut work);
                 c.span_end();
+                completed += 1;
+                last_done = Some(task);
+                c.ckpt_ack(ProgressUnit::task(task.start, task.len), dt);
             }
             Msg::Terminate => break,
-            Msg::Request => unreachable!("workers never receive requests"),
+            Msg::Request { .. } => unreachable!("workers never receive requests"),
         }
     }
 
@@ -185,13 +285,17 @@ fn worker(
 
 /// `COUNTTRIANGLES⟨v,t⟩` (paper Fig 10) + work accounting (the executed
 /// hybrid-dispatch measure, consistent with every other driver's
-/// `work_units`).
+/// `work_units`). Returns the task's own contribution (the checkpoint
+/// ack sum).
 #[inline]
-fn run_task(o: &Oriented, task: Task, t: &mut TriangleCount, work: &mut u64) {
-    node_iterator::count_range(o, task.start, task.end(), t);
+fn run_task(o: &Oriented, task: Task, t: &mut TriangleCount, work: &mut u64) -> u64 {
+    let mut dt = 0u64;
+    node_iterator::count_range(o, task.start, task.end(), &mut dt);
     for v in task.range() {
         *work += node_iterator::node_work_true(o, v);
     }
+    *t += dt;
+    dt
 }
 
 #[cfg(test)]

@@ -13,7 +13,8 @@ use std::sync::Arc;
 use crate::adj;
 use crate::algo::tasks::{self, Task};
 use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::{Comm, Payload};
+use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
+use crate::comm::transport::RetryPolicy;
 use crate::config::CostFn;
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
@@ -23,7 +24,10 @@ use crate::testkit::sim::Fabric;
 use crate::testkit::trace::TraceReport;
 
 enum Msg {
-    Request,
+    /// Worker is idle; carries its completed-task count so a lost
+    /// `Assign` is retransmitted, never leaked (same hardening as
+    /// [`crate::algo::dynamic_lb`]).
+    Request { completed: u64 },
     Assign(Task),
     Terminate,
 }
@@ -31,7 +35,8 @@ enum Msg {
 impl Payload for Msg {
     fn size_bytes(&self) -> u64 {
         match self {
-            Msg::Request | Msg::Terminate => 8,
+            Msg::Request { .. } => 16,
+            Msg::Terminate => 8,
             Msg::Assign(_) => 16,
         }
     }
@@ -50,6 +55,21 @@ pub fn per_node_counts_on(
     graph: &Arc<Oriented>,
     p: usize,
 ) -> (Result<(Vec<u64>, ClusterMetrics)>, Option<TraceReport>) {
+    per_node_counts_hooked_on(fabric, graph, p, None)
+}
+
+/// [`per_node_counts_on`] with an `ft/` checkpoint sink (`ft::supervisor`
+/// entry point). Tasks are acked with their *unscaled* triangle count
+/// (each found triangle credits 3 corners in `T_v` but counts once here),
+/// so the supervisor's salvage math is uniform across paths. The per-node
+/// *vector* of a dead rank is unrecoverable from checkpoints — only the
+/// global count is; `supervise` promises only the count.
+pub fn per_node_counts_hooked_on(
+    fabric: &Fabric,
+    graph: &Arc<Oriented>,
+    p: usize,
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<(Vec<u64>, ClusterMetrics)>, Option<TraceReport>) {
     if p < 2 {
         let e = crate::error::Error::Config(format!(
             "per-node counts need P >= 2 (a coordinator and at least one worker), got P={p}"
@@ -63,7 +83,7 @@ pub fn per_node_counts_on(
     let initial = Arc::new(tasks::equal_cost_tasks(&prefix, 0, tp, workers));
     let queue = Arc::new(tasks::shrinking_tasks(&prefix, tp, workers));
 
-    let (results, trace) = fabric.try_run::<Msg, Vec<u64>, _>(p, |c| {
+    let (results, trace) = fabric.try_run_hooked::<Msg, Vec<u64>, _>(p, progress, |c| {
         if c.rank() == 0 {
             coordinator(c, &queue)?;
             Ok(Vec::new())
@@ -90,17 +110,30 @@ pub fn per_node_counts_on(
 fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
     let mut next = 0usize;
     let mut terminated = 0usize;
+    let mut assigned = vec![0u64; c.size()];
+    let mut outstanding: Vec<Option<Task>> = vec![None; c.size()];
+    let mut done = vec![false; c.size()];
     while terminated < c.size() - 1 {
         let (src, msg) = c.recv()?;
         match msg {
-            Msg::Request => {
-                if next < queue.len() {
+            Msg::Request { completed } => {
+                if completed < assigned[src] {
+                    // The last Assign was lost — retransmit it.
+                    let task = outstanding[src]
+                        .expect("a lagging worker always has an outstanding task");
+                    c.send_control(src, Msg::Assign(task))?;
+                } else if next < queue.len() {
                     let t = queue[next];
                     next += 1;
+                    assigned[src] += 1;
+                    outstanding[src] = Some(t);
                     c.send_control(src, Msg::Assign(t))?;
                 } else {
                     c.send_control(src, Msg::Terminate)?;
-                    terminated += 1;
+                    if !done[src] {
+                        done[src] = true;
+                        terminated += 1;
+                    }
                 }
             }
             _ => unreachable!(),
@@ -113,29 +146,53 @@ fn coordinator(c: &mut Comm<Msg>, queue: &Arc<Vec<Task>>) -> Result<()> {
 fn worker(c: &mut Comm<Msg>, o: Arc<Oriented>, initial: &Arc<Vec<Task>>, n: usize) -> Result<Vec<u64>> {
     let wid = c.rank() - 1;
     let mut tv = vec![0u64; n];
+    let mut completed = 0u64;
     // One Compute span per executed task (same convention as dynamic_lb).
     if let Some(task) = initial.get(wid) {
         c.span_begin(SpanPhase::Compute);
-        run_task(&o, *task, &mut tv);
+        let found = run_task(&o, *task, &mut tv);
         c.span_end();
+        c.ckpt_ack(ProgressUnit::task(task.start, task.len), found);
     }
-    loop {
-        c.send_control(0, Msg::Request)?;
-        match c.recv()?.1 {
+    let policy = RetryPolicy::default();
+    let mut last_done: Option<Task> = None;
+    'outer: loop {
+        c.send_control(0, Msg::Request { completed })?;
+        let msg = 'recv: loop {
+            let got = c
+                .recv_retry(0, &policy, |c| c.send_control(0, Msg::Request { completed }))?;
+            match got {
+                // Retries exhausted, coordinator alive ⇒ lost Terminate.
+                None => break 'outer,
+                // Stale retransmit of an already-executed task: skip.
+                Some((_src, Msg::Assign(task))) if last_done == Some(task) => {
+                    continue 'recv;
+                }
+                Some((_src, m)) => break 'recv m,
+            }
+        };
+        match msg {
             Msg::Assign(task) => {
                 c.span_begin(SpanPhase::Compute);
-                run_task(&o, task, &mut tv);
+                let found = run_task(&o, task, &mut tv);
                 c.span_end();
+                completed += 1;
+                last_done = Some(task);
+                c.ckpt_ack(ProgressUnit::task(task.start, task.len), found);
             }
             Msg::Terminate => break,
-            Msg::Request => unreachable!(),
+            Msg::Request { .. } => unreachable!(),
         }
     }
     c.barrier()?;
     Ok(tv)
 }
 
-fn run_task(o: &Oriented, task: Task, tv: &mut [u64]) {
+/// Returns the number of triangles *found* while processing the task
+/// (each credits 3 corners in `tv` but counts once toward the global
+/// total — the checkpoint ack sum).
+fn run_task(o: &Oriented, task: Task, tv: &mut [u64]) -> u64 {
+    let mut found = 0u64;
     let mut ws = Vec::new();
     for v in task.range() {
         let vv = o.view(v);
@@ -146,9 +203,11 @@ fn run_task(o: &Oriented, task: Task, tv: &mut [u64]) {
                 tv[v as usize] += 1;
                 tv[u as usize] += 1;
                 tv[w as usize] += 1;
+                found += 1;
             }
         }
     }
+    found
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@
 use crate::adj;
 use crate::adj::hub::HubThreshold;
 use crate::algo::driver::{self, RunResult};
-use crate::comm::threads::Comm;
+use crate::comm::threads::{Comm, Progress, ProgressUnit};
 use crate::error::Result;
 use crate::graph::csr::Csr;
 use crate::graph::ordering::Oriented;
@@ -53,9 +53,24 @@ pub fn run_on(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> (Result<RunResult>, Option<TraceReport>) {
+    run_hooked_on(fabric, g, graph, ranges, hub, None)
+}
+
+/// [`run_on`] with an `ft/` checkpoint sink (`ft::supervisor` entry
+/// point). PATRIC needs no communication to count, so the whole core
+/// range is acked with its exact sum the moment the local sweep ends —
+/// recovery then re-extracts partitions for the un-acked ranges only.
+pub fn run_hooked_on(
+    fabric: &Fabric,
+    g: &Csr,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+    progress: Option<std::sync::Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_overlapping(g, graph, ranges, hub);
     let predicted = overlap_sizes(g, graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned_on::<u64, _>(fabric, parts, predicted, rank_main)
+    driver::run_owned_hooked_on::<u64, _>(fabric, parts, predicted, progress, rank_main)
 }
 
 fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> {
@@ -74,6 +89,8 @@ fn rank_main(c: &mut Comm<u64>, part: &OwnedPartition) -> Result<TriangleCount> 
         }
     }
     c.span_end();
+    let r = part.range();
+    c.ckpt_ack(ProgressUnit::range(r.start, r.end), t);
     c.metrics.work_units = work;
     c.reduce_sum(t)?;
     Ok(t)

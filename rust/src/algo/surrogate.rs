@@ -19,7 +19,7 @@ use std::sync::Arc;
 use crate::adj::hub::HubThreshold;
 use crate::adj::{self, NeighborView};
 use crate::algo::driver::{self, RunResult};
-use crate::comm::threads::{Comm, Payload};
+use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
@@ -100,9 +100,24 @@ pub fn run_on(
     ranges: &[std::ops::Range<u32>],
     hub: HubThreshold,
 ) -> (Result<RunResult>, Option<TraceReport>) {
+    run_hooked_on(fabric, graph, ranges, hub, None)
+}
+
+/// [`run_on`] with an `ft/` checkpoint sink (`ft::supervisor` entry
+/// point). Surrogate counting is *entangled* — a triangle with min-vertex
+/// `v` may be resolved at any surrogate — so ranks publish monotone
+/// partials (valid global lower bounds), never acks; recovery is full
+/// re-execution on the survivors (DESIGN.md §13).
+pub fn run_hooked_on(
+    fabric: &Fabric,
+    graph: &Oriented,
+    ranges: &[std::ops::Range<u32>],
+    hub: HubThreshold,
+    progress: Option<std::sync::Arc<dyn Progress>>,
+) -> (Result<RunResult>, Option<TraceReport>) {
     let parts = owned::extract_nonoverlapping(graph, ranges, hub);
     let predicted = partition_sizes(graph, ranges).iter().map(|s| s.bytes()).collect();
-    driver::run_owned_on::<Msg, _>(fabric, parts, predicted, rank_main)
+    driver::run_owned_hooked_on::<Msg, _>(fabric, parts, predicted, progress, rank_main)
 }
 
 /// The per-rank program (paper Fig 3 lines 1-22 + reduce).
@@ -141,6 +156,14 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     }
     c.span_end();
 
+    // Checkpoint: everything this rank counted so far, keyed by its own
+    // range. The per-rank totals are globally disjoint (each triangle is
+    // counted at exactly one rank), so their sum is a valid lower bound
+    // even though served counts belong to other ranks' min-vertices.
+    let r = part.range();
+    let unit = ProgressUnit::range(r.start, r.end);
+    c.ckpt_partial(unit, t);
+
     // Line 16: broadcast completion notifier.
     c.bcast_control(|| Msg::Completion)?;
 
@@ -148,6 +171,7 @@ fn rank_main(c: &mut Comm<Msg>, part: &OwnedPartition) -> Result<TriangleCount> 
     while completions < c.size() - 1 {
         let (_src, msg) = c.recv()?;
         handle(part, msg, &mut t, &mut work, &mut completions);
+        c.ckpt_partial(unit, t);
     }
 
     c.metrics.work_units = work;

@@ -29,6 +29,21 @@ pub struct CommMetrics {
     /// Wall time spent blocked waiting to receive (the measured component of
     /// idle time on the threads backend).
     pub recv_wait: Duration,
+    /// Transport ops this rank issued (sends + receives + collective
+    /// arrivals) — the clock the fault plans' `Kill::at_op` counts in, and
+    /// the key the cluster launcher orders failures by (lowest op count =
+    /// root cause).
+    pub transport_ops: u64,
+    /// Request retransmissions after a `recv_deadline` expiry (ft/ bounded
+    /// retry). 0 on a fault-free run — the conformance drop cells assert
+    /// these are bounded and non-zero where a message was eaten.
+    pub retries: u64,
+    /// Work units re-executed on recovery attempts (`ft::supervisor`):
+    /// the measured cost of surviving the fault, reported apart from
+    /// `work_units` so the fault-free cost stays comparable.
+    pub reexec_work_units: u64,
+    /// Payload bytes re-sent on recovery attempts.
+    pub reexec_bytes: u64,
     /// Wall time of the rank's whole run.
     pub total: Duration,
     /// Work units executed, in the element steps the hybrid dispatch
@@ -75,6 +90,10 @@ impl CommMetrics {
         self.control_sent += other.control_sent;
         self.control_received += other.control_received;
         self.recv_wait += other.recv_wait;
+        self.transport_ops += other.transport_ops;
+        self.retries += other.retries;
+        self.reexec_work_units += other.reexec_work_units;
+        self.reexec_bytes += other.reexec_bytes;
         self.total = self.total.max(other.total);
         self.work_units += other.work_units;
         self.partition_bytes += other.partition_bytes;

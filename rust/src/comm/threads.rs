@@ -21,7 +21,9 @@ use std::time::{Duration, Instant};
 
 use crate::adj::stats as kernel_stats;
 use crate::comm::metrics::CommMetrics;
-use crate::comm::transport::{channel_fabric, ChannelTransport, Envelope, Transport};
+use crate::comm::transport::{
+    channel_fabric, ChannelTransport, Envelope, Liveness, RetryPolicy, Transport,
+};
 use crate::error::{Error, Result};
 use crate::obs::span::{SpanPhase, SpanRecorder};
 use crate::testkit::sim::VirtualEndpoint;
@@ -34,22 +36,87 @@ pub use crate::comm::transport::Payload;
 pub const RECV_DEADLOCK_GUARD: Duration = Duration::from_secs(30);
 
 /// The effective guard: `TRICOUNT_RECV_GUARD_SECS` if set and valid, else
-/// [`RECV_DEADLOCK_GUARD`]. Read once and cached for the process.
+/// [`RECV_DEADLOCK_GUARD`]. Read once and cached for the process. This is
+/// the *infallible* reader used on the transport hot path; an invalid
+/// override falls back to the default here but is surfaced as
+/// [`Error::Config`] by [`try_recv_guard`], which every cluster entry
+/// point calls before launching — so a typo fails the run at startup
+/// instead of silently running with a 30s guard.
 pub fn recv_guard() -> Duration {
     static GUARD: OnceLock<Duration> = OnceLock::new();
     *GUARD.get_or_init(|| {
         guard_from(std::env::var("TRICOUNT_RECV_GUARD_SECS").ok().as_deref())
+            .unwrap_or(RECV_DEADLOCK_GUARD)
     })
 }
 
-/// Parse an override value; invalid / missing / zero falls back to the
-/// default (factored out of [`recv_guard`] so the policy is testable
-/// without racing on process-global env state).
-fn guard_from(val: Option<&str>) -> Duration {
-    match val.and_then(|s| s.trim().parse::<u64>().ok()) {
-        Some(secs) if secs > 0 => Duration::from_secs(secs),
-        _ => RECV_DEADLOCK_GUARD,
+/// Validate the `TRICOUNT_RECV_GUARD_SECS` override: `Error::Config` on
+/// anything that is not a positive whole number of seconds. Called at
+/// cluster startup ([`Cluster::try_run`], the sim launcher, the CLI) so
+/// a bad value fails fast; the validated duration is the single timeout
+/// the deadline machinery ([`crate::comm::transport::RetryPolicy`],
+/// `Transport::recv_deadline`) derives from.
+pub fn try_recv_guard() -> Result<Duration> {
+    guard_from(std::env::var("TRICOUNT_RECV_GUARD_SECS").ok().as_deref())
+}
+
+/// Parse an override value (factored out of the readers so the policy is
+/// testable without racing on process-global env state). Missing ⇒ the
+/// default; present but invalid or zero ⇒ `Error::Config`.
+fn guard_from(val: Option<&str>) -> Result<Duration> {
+    match val {
+        None => Ok(RECV_DEADLOCK_GUARD),
+        Some(s) => match s.trim().parse::<u64>() {
+            Ok(secs) if secs > 0 => Ok(Duration::from_secs(secs)),
+            _ => Err(Error::Config(format!(
+                "TRICOUNT_RECV_GUARD_SECS=`{s}` is not a positive whole number of seconds"
+            ))),
+        },
     }
+}
+
+/// A unit of checkpointable progress (`ft/checkpoint`): a vertex range or
+/// a task, identified independently of which rank computes it — that is
+/// what lets recovery re-attribute a dead rank's units to survivors.
+/// `kind` namespaces the key space per protocol (range vs task vs batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ProgressUnit {
+    pub kind: u8,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl ProgressUnit {
+    /// A §IV vertex-range unit `[lo, hi)`.
+    pub fn range(lo: u32, hi: u32) -> Self {
+        ProgressUnit { kind: 0, lo, hi }
+    }
+
+    /// A §V task unit (start, start+len).
+    pub fn task(start: u32, len: u32) -> Self {
+        ProgressUnit { kind: 1, lo: start, hi: start.saturating_add(len) }
+    }
+
+    /// A stream batch unit (batch index).
+    pub fn batch(index: u32) -> Self {
+        ProgressUnit { kind: 2, lo: index, hi: index + 1 }
+    }
+}
+
+/// Checkpoint sink installed on every [`Comm`] of a supervised run
+/// (`ft::checkpoint::CheckpointStore` implements it). Publications happen
+/// at phase boundaries from rank threads; implementations synchronize
+/// internally. When no sink is installed (every unsupervised run) the
+/// hooks are a single `Option` test — the fault-free overhead the
+/// `ft_overhead` CI gate bounds.
+pub trait Progress: Send + Sync {
+    /// Publish a *monotone partial* sum for a unit: a guaranteed-disjoint
+    /// contribution keyed by the contributing rank (overwrites that
+    /// rank's previous partial for the unit).
+    fn partial(&self, rank: usize, unit: ProgressUnit, sum: u64);
+
+    /// Acknowledge a unit as fully resolved with its exact final sum.
+    fn ack(&self, rank: usize, unit: ProgressUnit, sum: u64);
 }
 
 /// The fabric a [`Comm`] runs over. An enum (not a box), and every call
@@ -84,6 +151,10 @@ pub struct Comm<M: Payload> {
     /// [`Comm::span_end`]. Harvested into `CommMetrics::spans` by the
     /// launcher when the rank program returns.
     pub spans: SpanRecorder,
+    /// Checkpoint sink of the supervising `ft/` run, if any — installed
+    /// by the launcher; `None` (one branch per checkpoint call) on every
+    /// unsupervised run.
+    progress: Option<Arc<dyn Progress>>,
 }
 
 impl<M: Payload> Comm<M> {
@@ -92,6 +163,7 @@ impl<M: Payload> Comm<M> {
             backend: Backend::Channel(t),
             metrics: CommMetrics::default(),
             spans: SpanRecorder::wall(),
+            progress: None,
         }
     }
 
@@ -100,6 +172,23 @@ impl<M: Payload> Comm<M> {
             backend: Backend::Virtual(t),
             metrics: CommMetrics::default(),
             spans: SpanRecorder::virtual_clock(),
+            progress: None,
+        }
+    }
+
+    /// Publish a monotone partial sum for a unit (no-op unsupervised).
+    #[inline]
+    pub fn ckpt_partial(&self, unit: ProgressUnit, sum: u64) {
+        if let Some(p) = &self.progress {
+            p.partial(self.rank(), unit, sum);
+        }
+    }
+
+    /// Acknowledge a unit as fully resolved (no-op unsupervised).
+    #[inline]
+    pub fn ckpt_ack(&self, unit: ProgressUnit, sum: u64) {
+        if let Some(p) = &self.progress {
+            p.ack(self.rank(), unit, sum);
         }
     }
 
@@ -144,6 +233,7 @@ impl<M: Payload> Comm<M> {
     pub fn send(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.messages_sent += 1;
         self.metrics.bytes_sent += msg.size_bytes();
+        self.metrics.transport_ops += 1;
         let src = self.rank();
         let t0 = self.ticks();
         let r = with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: false, msg }));
@@ -156,6 +246,7 @@ impl<M: Payload> Comm<M> {
     /// separately from data messages, on both endpoints.
     pub fn send_control(&mut self, dst: usize, msg: M) -> Result<()> {
         self.metrics.control_sent += 1;
+        self.metrics.transport_ops += 1;
         let src = self.rank();
         let t0 = self.ticks();
         let r = with_transport!(&mut self.backend, t => t.send(dst, Envelope { src, control: true, msg }));
@@ -187,6 +278,7 @@ impl<M: Payload> Comm<M> {
 
     /// Non-blocking receive.
     pub fn try_recv(&mut self) -> Option<(usize, M)> {
+        self.metrics.transport_ops += 1;
         let env = with_transport!(&mut self.backend, t => t.try_recv())?;
         Some(self.accept(env))
     }
@@ -197,6 +289,7 @@ impl<M: Payload> Comm<M> {
     /// and `recv_wait` itself is measured in *virtual ticks* there (1 tick
     /// ↔ 1 µs), so the wait is deterministic under a replayed schedule.
     pub fn recv(&mut self) -> Result<(usize, M)> {
+        self.metrics.transport_ops += 1;
         let t0 = self.ticks();
         let start = matches!(self.backend, Backend::Channel(_)).then(Instant::now);
         let r = with_transport!(&mut self.backend, t => t.recv());
@@ -209,9 +302,66 @@ impl<M: Payload> Comm<M> {
         r.map(|env| self.accept(env))
     }
 
+    /// Blocking receive bounded by an explicit deadline (`ft/` transport
+    /// hardening): `Ok(None)` when it expires undelivered — wall time on
+    /// the channel fabric, deterministic virtual time on the sim fabric —
+    /// so request/reply protocols can retry with [`RetryPolicy`] backoff
+    /// instead of tripping the recv guard.
+    pub fn recv_deadline(&mut self, d: Duration) -> Result<Option<(usize, M)>> {
+        self.metrics.transport_ops += 1;
+        let t0 = self.ticks();
+        let start = matches!(self.backend, Backend::Channel(_)).then(Instant::now);
+        let r = with_transport!(&mut self.backend, t => t.recv_deadline(d));
+        let t1 = self.ticks();
+        self.metrics.recv_wait += match start {
+            Some(s) => s.elapsed(),
+            None => Duration::from_micros(t1.saturating_sub(t0)),
+        };
+        self.spans.record(SpanPhase::RecvWait, t0, t1);
+        r.map(|env| env.map(|e| self.accept(e)))
+    }
+
+    /// Classify a peer off the fabric's liveness board. Staleness
+    /// threshold = half the recv guard: a rank silent that long while
+    /// the board still says "running" reads as [`Liveness::Slow`].
+    pub fn liveness_of(&self, rank: usize) -> Liveness {
+        with_transport!(&self.backend, t => t.liveness(rank, recv_guard() / 2))
+    }
+
+    /// Bounded-retry receive for request/reply protocols: wait under the
+    /// policy's backed-off deadlines, calling `resend` to retransmit the
+    /// request before each retry. Returns `Ok(None)` when retries exhaust
+    /// against a peer the liveness board still calls alive (caller
+    /// decides: a lost control message vs a straggler), and `Err` as soon
+    /// as the board says the peer is dead.
+    pub fn recv_retry(
+        &mut self,
+        peer: usize,
+        policy: &RetryPolicy,
+        mut resend: impl FnMut(&mut Self) -> Result<()>,
+    ) -> Result<Option<(usize, M)>> {
+        for attempt in 0..=policy.max_retries {
+            if let Some(got) = self.recv_deadline(policy.deadline_for(attempt))? {
+                return Ok(Some(got));
+            }
+            if self.liveness_of(peer) == Liveness::Dead {
+                return Err(Error::Cluster(format!(
+                    "rank {}: peer rank {peer} is dead (liveness board) after {attempt} retries",
+                    self.rank()
+                )));
+            }
+            if attempt < policy.max_retries {
+                self.metrics.retries += 1;
+                resend(self)?;
+            }
+        }
+        Ok(None)
+    }
+
     /// Synchronize all ranks (MPI_Barrier). Fails instead of hanging when
     /// the fabric can prove completion impossible (virtual fabric only).
     pub fn barrier(&mut self) -> Result<()> {
+        self.metrics.transport_ops += 1;
         let t0 = self.ticks();
         let r = with_transport!(&mut self.backend, t => t.barrier());
         let t1 = self.ticks();
@@ -222,6 +372,7 @@ impl<M: Payload> Comm<M> {
     /// Sum-reduce a u64 across all ranks; everyone receives the total
     /// (MPI_Allreduce(SUM)).
     pub fn reduce_sum(&mut self, value: u64) -> Result<u64> {
+        self.metrics.transport_ops += 1;
         let t0 = self.ticks();
         let r = with_transport!(&mut self.backend, t => t.reduce_sum(value));
         let t1 = self.ticks();
@@ -273,14 +424,46 @@ impl Cluster {
         F: Fn(&mut Comm<M>) -> Result<R> + Sync,
     {
         assert!(p >= 1, "cluster needs at least one rank");
+        try_recv_guard()?;
         let comms = channel_fabric(p).into_iter().map(Comm::from_channel).collect();
-        Self::launch(comms, f)
+        Self::launch(comms, None, f)
+    }
+
+    /// [`Cluster::try_run`] with an `ft/` checkpoint sink installed on
+    /// every rank's [`Comm`] — the supervised entry point.
+    pub fn try_run_supervised<M, R, F>(
+        p: usize,
+        progress: Option<Arc<dyn Progress>>,
+        f: F,
+    ) -> Result<Vec<(R, CommMetrics)>>
+    where
+        M: Payload,
+        R: Send,
+        F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+    {
+        assert!(p >= 1, "cluster needs at least one rank");
+        try_recv_guard()?;
+        let comms = channel_fabric(p).into_iter().map(Comm::from_channel).collect();
+        Self::launch(comms, progress, f)
     }
 
     /// Spawn one thread per pre-built endpoint, run `f`, join, and fold
     /// panics/errors. Shared by [`Cluster::try_run`] (channel fabric) and
     /// `testkit::sim::try_run_sim` (virtual fabric).
-    pub(crate) fn launch<M, R, F>(mut comms: Vec<Comm<M>>, f: F) -> Result<Vec<(R, CommMetrics)>>
+    ///
+    /// Failure attribution: *all* rank results are collected first, then
+    /// the failure with the **lowest transport-op count** is reported
+    /// (ties broken by rank id). A dead rank makes its peers fail too,
+    /// later in protocol time — joining in rank order and returning the
+    /// first `Err` would blame whichever victim happens to have the
+    /// lowest rank id, not the root cause. Panicking ranks have no
+    /// metrics, so they report op count 0 — a panic is never a
+    /// downstream symptom of another rank's failure.
+    pub(crate) fn launch<M, R, F>(
+        mut comms: Vec<Comm<M>>,
+        progress: Option<Arc<dyn Progress>>,
+        f: F,
+    ) -> Result<Vec<(R, CommMetrics)>>
     where
         M: Payload,
         R: Send,
@@ -288,6 +471,7 @@ impl Cluster {
     {
         let p = comms.len();
         let f = &f;
+        let progress = &progress;
         let results: Vec<std::thread::Result<(Result<R>, CommMetrics)>> =
             std::thread::scope(|s| {
                 let handles: Vec<_> = comms
@@ -300,6 +484,7 @@ impl Cluster {
                             let kernels =
                                 Arc::new(kernel_stats::RankKernelCounters::default());
                             let _scope = kernel_stats::install_rank(kernels.clone());
+                            comm.progress = progress.clone();
                             with_transport!(&mut comm.backend, t => t.start());
                             // Re-anchor wall span ticks at thread start so
                             // they share a time origin with `total` below
@@ -307,6 +492,7 @@ impl Cluster {
                             comm.spans.reset_epoch();
                             let start = Instant::now();
                             let r = f(&mut comm);
+                            with_transport!(&mut comm.backend, t => t.retire(r.is_ok()));
                             comm.finish(start, &kernels);
                             (r, std::mem::take(&mut comm.metrics))
                         })
@@ -316,19 +502,44 @@ impl Cluster {
             });
 
         let mut out = Vec::with_capacity(p);
+        // (ops, rank, error) of every failure; report min by (ops, rank).
+        let mut failures: Vec<(u64, usize, Error)> = Vec::new();
         for (rank, r) in results.into_iter().enumerate() {
             match r {
                 Ok((Ok(x), m)) => out.push((x, m)),
-                Ok((Err(e), _)) => return Err(e),
+                Ok((Err(e), m)) => {
+                    let msg = match e {
+                        Error::Cluster(m) => m,
+                        Error::RankFailure { msg, .. } => msg,
+                        other => other.to_string(),
+                    };
+                    failures.push((
+                        m.transport_ops,
+                        rank,
+                        Error::RankFailure { rank, ops: m.transport_ops, msg },
+                    ));
+                }
                 Err(e) => {
                     let msg = e
                         .downcast_ref::<String>()
                         .cloned()
                         .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                         .unwrap_or_else(|| "unknown panic".into());
-                    return Err(Error::Cluster(format!("rank {rank} panicked: {msg}")));
+                    failures.push((
+                        0,
+                        rank,
+                        Error::RankFailure { rank, ops: 0, msg: format!("panicked: {msg}") },
+                    ));
                 }
             }
+        }
+        if let Some(pos) = failures
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (ops, rank, _))| (*ops, *rank))
+            .map(|(i, _)| i)
+        {
+            return Err(failures.swap_remove(pos).2);
         }
         Ok(out)
     }
@@ -422,12 +633,21 @@ mod tests {
 
     #[test]
     fn recv_guard_override_parsing() {
-        assert_eq!(guard_from(None), RECV_DEADLOCK_GUARD);
-        assert_eq!(guard_from(Some("120")), Duration::from_secs(120));
-        assert_eq!(guard_from(Some(" 45 ")), Duration::from_secs(45));
-        assert_eq!(guard_from(Some("0")), RECV_DEADLOCK_GUARD, "zero is invalid");
-        assert_eq!(guard_from(Some("ten")), RECV_DEADLOCK_GUARD);
-        assert_eq!(guard_from(Some("")), RECV_DEADLOCK_GUARD);
+        assert_eq!(guard_from(None).unwrap(), RECV_DEADLOCK_GUARD);
+        assert_eq!(guard_from(Some("120")).unwrap(), Duration::from_secs(120));
+        assert_eq!(guard_from(Some(" 45 ")).unwrap(), Duration::from_secs(45));
+        // Malformed overrides are *startup errors* (Error::Config), not
+        // silent fallbacks — a mistyped guard must not mask as the
+        // 30-minute default on a production run.
+        for bad in ["0", "ten", "", "-5", "1.5"] {
+            match guard_from(Some(bad)) {
+                Err(Error::Config(msg)) => {
+                    assert!(msg.contains("TRICOUNT_RECV_GUARD_SECS"), "{msg}");
+                    assert!(msg.contains(bad) || bad.is_empty(), "{msg}");
+                }
+                other => panic!("guard_from({bad:?}) = {other:?}, expected Config error"),
+            }
+        }
         // The cached process-wide value resolves to *some* positive guard.
         assert!(recv_guard() >= Duration::from_secs(1));
     }
@@ -460,8 +680,12 @@ mod tests {
             }
         });
         match r {
-            Err(Error::Cluster(msg)) => assert!(msg.contains("injected fault"), "{msg}"),
-            other => panic!("expected cluster error, got {other:?}"),
+            Err(Error::RankFailure { rank, ops, msg }) => {
+                assert_eq!(rank, 1);
+                assert_eq!(ops, 0, "a panicking rank has no metrics to report ops from");
+                assert!(msg.contains("injected fault"), "{msg}");
+            }
+            other => panic!("expected rank-failure error, got {other:?}"),
         }
     }
 
@@ -477,7 +701,10 @@ mod tests {
             }
         });
         match r {
-            Err(Error::Cluster(msg)) => assert!(msg.contains("injected comm failure"), "{msg}"),
+            Err(Error::RankFailure { rank, msg, .. }) => {
+                assert_eq!(rank, 1);
+                assert!(msg.contains("injected comm failure"), "{msg}");
+            }
             other => panic!("expected the rank's error, got {other:?}"),
         }
     }
@@ -492,10 +719,52 @@ mod tests {
             }
         });
         match r {
-            Err(Error::Cluster(msg)) => assert!(msg.contains("rank 1"), "{msg}"),
+            Err(Error::RankFailure { rank, msg, .. }) => {
+                assert_eq!(rank, 1, "rank-id tiebreak at equal op counts");
+                assert!(msg.contains("rank 1"), "{msg}");
+            }
             other => panic!("expected rank 1's error, got {other:?}"),
         }
     }
+
+    #[test]
+    fn lowest_op_count_failure_wins_over_lowest_rank() {
+        // Root-cause attribution: rank 2 fails after *fewer* transport
+        // ops than rank 1, so rank 2 is the reported failure even though
+        // rank 1 has the lower id. (Rank 1 does 4 sends before failing;
+        // rank 2 does 1. Rank 0 drains everything and succeeds.)
+        let r = Cluster::try_run::<u64, (), _>(3, |c| match c.rank() {
+            1 => {
+                for i in 0..4 {
+                    c.send(0, i).unwrap();
+                }
+                Err(Error::Cluster("late symptom".into()))
+            }
+            2 => {
+                c.send(0, 99).unwrap();
+                Err(Error::Cluster("early root cause".into()))
+            }
+            _ => {
+                for _ in 0..5 {
+                    c.recv().unwrap();
+                }
+                Ok(())
+            }
+        });
+        match r {
+            Err(Error::RankFailure { rank, ops, msg }) => {
+                assert_eq!(rank, 2, "{msg}");
+                assert_eq!(ops, 1);
+                assert!(msg.contains("early root cause"), "{msg}");
+            }
+            other => panic!("expected rank 2's failure, got {other:?}"),
+        }
+    }
+
+    // The end-to-end check that a malformed TRICOUNT_RECV_GUARD_SECS fails
+    // `Cluster::try_run` at startup lives in `tests/recv_guard_env.rs` —
+    // it mutates the process environment, which would race the other
+    // cluster tests in this binary.
 
     #[test]
     fn spans_recorded_on_channel_fabric() {

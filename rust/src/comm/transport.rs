@@ -24,9 +24,10 @@
 //!   fallible because a fabric may detect that completion has become
 //!   impossible (a dead rank) instead of hanging.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::comm::threads::recv_guard;
 use crate::error::{Error, Result};
@@ -59,6 +60,58 @@ pub struct Envelope<M> {
     pub msg: M,
 }
 
+/// What a fabric can say about a peer when asked (`ft/` supervision). The
+/// classification rides on the *liveness board* every fabric maintains —
+/// a heartbeat tag class published on each transport op, not extra wire
+/// messages — so a supervisor can distinguish "slow" (recent heartbeat,
+/// keep waiting / retry) from "dead" (failed or retired, re-execute).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liveness {
+    /// Peer heart-beat recently; a missing reply means in-flight or queued.
+    Alive,
+    /// Peer still running but its last heartbeat is stale — a straggler.
+    Slow,
+    /// Peer failed, was killed by a fault plan, or already retired.
+    Dead,
+}
+
+/// Bounded-retry schedule for request/reply protocols (`ft/` transport
+/// hardening). Deadlines grow by a deterministic exponential backoff so a
+/// replayed schedule retries at identical (virtual) times:
+/// `deadline(attempt) = base · backoff^attempt`.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// First-attempt receive deadline.
+    pub base: Duration,
+    /// Retransmissions allowed after the first deadline expiry.
+    pub max_retries: u32,
+    /// Deadline multiplier per retry (≥ 1).
+    pub backoff: u32,
+}
+
+impl Default for RetryPolicy {
+    /// Derived from the configured [`recv_guard`] so there is one timeout
+    /// knob: the total budget across all attempts stays within a small
+    /// multiple of the guard (base = guard/4, 3 retries, ×2 backoff ⇒
+    /// ≤ 3.75 × guard before a peer is presumed dead).
+    fn default() -> Self {
+        RetryPolicy { base: recv_guard() / 4, max_retries: 3, backoff: 2 }
+    }
+}
+
+impl RetryPolicy {
+    /// Deadline for the given 0-based attempt, saturating on overflow.
+    pub fn deadline_for(&self, attempt: u32) -> Duration {
+        let factor = self.backoff.saturating_pow(attempt.min(16));
+        self.base.saturating_mul(factor.max(1))
+    }
+}
+
+/// Per-rank run state on the liveness board.
+pub(crate) const LIVE_RUNNING: u8 = 0;
+pub(crate) const LIVE_DONE: u8 = 1;
+pub(crate) const LIVE_FAILED: u8 = 2;
+
 /// A rank's endpoint into some message fabric. `Comm` stores one per rank
 /// (inline, as an enum variant) and dispatches each call statically per
 /// variant, so every counting path runs unmodified over any implementation
@@ -87,6 +140,33 @@ pub trait Transport<M: Payload>: Send {
     /// on the simulator) and surface it as an `Err`.
     fn recv(&mut self) -> Result<Envelope<M>>;
 
+    /// Receive with an explicit deadline: `Ok(None)` when it expires with
+    /// nothing delivered — the caller decides whether to retry (bounded,
+    /// [`RetryPolicy`]) or escalate. The channel fabric waits `d` of wall
+    /// time; the virtual fabric answers the deadline in *virtual time*
+    /// (the scheduler wakes deadline-blocked ranks deterministically when
+    /// no other progress is possible), so recovery schedules replay. The
+    /// default routes through [`Transport::recv`] for fabrics without
+    /// timers — correct, but it turns deadline expiry into that fabric's
+    /// blocking-receive error.
+    fn recv_deadline(&mut self, _d: Duration) -> Result<Option<Envelope<M>>> {
+        self.recv().map(Some)
+    }
+
+    /// Classify a peer from the fabric's liveness board ([`Liveness`]):
+    /// heartbeats are published on every transport op, and `stale_after`
+    /// is the silence span after which a running peer reads as `Slow`.
+    /// Fabrics without a board answer `Alive` (the conservative default:
+    /// never presume a peer dead on no evidence).
+    fn liveness(&self, _rank: usize, _stale_after: Duration) -> Liveness {
+        Liveness::Alive
+    }
+
+    /// Called once by the launcher when the rank program returns, with
+    /// its outcome — retires this rank on the liveness board so peers
+    /// stop waiting on it.
+    fn retire(&mut self, _ok: bool) {}
+
     /// Synchronize all ranks (MPI_Barrier).
     fn barrier(&mut self) -> Result<()>;
 
@@ -106,11 +186,20 @@ pub trait Transport<M: Payload>: Send {
     }
 }
 
-/// State shared by all ranks of one channel-backed cluster.
+/// State shared by all ranks of one channel-backed cluster: the
+/// barrier/reduce cells plus the liveness board (`ft/` supervision) —
+/// per-rank run state and last-heartbeat stamps, published lock-free on
+/// every transport op.
 struct ChannelShared {
     barrier: Barrier,
     reduce_cells: Mutex<Vec<u64>>,
     reduce_acc: AtomicU64,
+    /// Per-rank [`LIVE_RUNNING`]/[`LIVE_DONE`]/[`LIVE_FAILED`].
+    state: Vec<AtomicU8>,
+    /// Per-rank µs-since-fabric-build of the last transport op.
+    beat: Vec<AtomicU64>,
+    /// Common epoch the heartbeat stamps are measured from.
+    epoch: Instant,
 }
 
 /// The production fabric: typed mpsc channels + `std::sync::Barrier`,
@@ -137,6 +226,9 @@ pub fn channel_fabric<M: Payload>(p: usize) -> Vec<ChannelTransport<M>> {
         barrier: Barrier::new(p),
         reduce_cells: Mutex::new(vec![0; p]),
         reduce_acc: AtomicU64::new(0),
+        state: (0..p).map(|_| AtomicU8::new(LIVE_RUNNING)).collect(),
+        beat: (0..p).map(|_| AtomicU64::new(0)).collect(),
+        epoch: Instant::now(),
     });
     receivers
         .into_iter()
@@ -151,6 +243,15 @@ pub fn channel_fabric<M: Payload>(p: usize) -> Vec<ChannelTransport<M>> {
         .collect()
 }
 
+impl<M: Payload> ChannelTransport<M> {
+    /// Publish this rank's heartbeat (µs since the fabric epoch).
+    #[inline]
+    fn beat(&self) {
+        self.shared.beat[self.rank]
+            .store(self.shared.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
 impl<M: Payload> Transport<M> for ChannelTransport<M> {
     fn rank(&self) -> usize {
         self.rank
@@ -161,36 +262,71 @@ impl<M: Payload> Transport<M> for ChannelTransport<M> {
     }
 
     fn send(&mut self, dst: usize, env: Envelope<M>) -> Result<()> {
+        self.beat();
         self.senders[dst]
             .send(env)
             .map_err(|_| Error::Cluster(format!("rank {} send to dead rank {dst}", self.rank)))
     }
 
     fn try_recv(&mut self) -> Option<Envelope<M>> {
+        self.beat();
         self.receiver.try_recv().ok()
     }
 
+    /// The blocking receive **is** the deadline receive at the configured
+    /// [`recv_guard`] — one timeout path, not two: the guard env override
+    /// and every ft/ deadline flow through [`Transport::recv_deadline`].
     fn recv(&mut self) -> Result<Envelope<M>> {
         let guard = recv_guard();
-        match self.receiver.recv_timeout(guard) {
-            Ok(env) => Ok(env),
-            Err(RecvTimeoutError::Timeout) => Err(Error::Cluster(format!(
+        match self.recv_deadline(guard)? {
+            Some(env) => Ok(env),
+            None => Err(Error::Cluster(format!(
                 "rank {} recv timed out after {guard:?} (protocol deadlock?)",
                 self.rank
             ))),
+        }
+    }
+
+    fn recv_deadline(&mut self, d: Duration) -> Result<Option<Envelope<M>>> {
+        self.beat();
+        match self.receiver.recv_timeout(d) {
+            Ok(env) => Ok(Some(env)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
             Err(RecvTimeoutError::Disconnected) => {
                 Err(Error::Cluster(format!("rank {} peers disconnected", self.rank)))
             }
         }
     }
 
+    fn liveness(&self, rank: usize, stale_after: Duration) -> Liveness {
+        match self.shared.state[rank].load(Ordering::Relaxed) {
+            LIVE_FAILED | LIVE_DONE => Liveness::Dead,
+            _ => {
+                let last = self.shared.beat[rank].load(Ordering::Relaxed);
+                let now = self.shared.epoch.elapsed().as_micros() as u64;
+                if now.saturating_sub(last) > stale_after.as_micros() as u64 {
+                    Liveness::Slow
+                } else {
+                    Liveness::Alive
+                }
+            }
+        }
+    }
+
+    fn retire(&mut self, ok: bool) {
+        let s = if ok { LIVE_DONE } else { LIVE_FAILED };
+        self.shared.state[self.rank].store(s, Ordering::Release);
+    }
+
     fn barrier(&mut self) -> Result<()> {
+        self.beat();
         self.shared.barrier.wait();
         Ok(())
     }
 
     /// Internally: write cell → barrier → rank 0 sums → barrier → read.
     fn reduce_sum(&mut self, value: u64) -> Result<u64> {
+        self.beat();
         {
             let mut cells = self.shared.reduce_cells.lock().unwrap();
             cells[self.rank] = value;

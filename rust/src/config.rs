@@ -112,6 +112,12 @@ pub struct RunConfig {
     /// ([`crate::partition::nonoverlap::min_procs_for_budget`]) — the
     /// paper's Table II sizing question, answered by the tool.
     pub mem_budget: Option<u64>,
+    /// `--on-fault <fail|recover|degrade>`: what a supervised run does
+    /// when a rank dies (DESIGN.md §13). `fail` (default) propagates the
+    /// error, `recover` re-executes the un-acked remainder on the
+    /// survivors for the exact count, `degrade` answers from checkpoints
+    /// with a stated confidence bound.
+    pub on_fault: crate::ft::FaultPolicy,
 }
 
 impl Default for RunConfig {
@@ -128,6 +134,7 @@ impl Default for RunConfig {
             hub_threshold: crate::adj::HubThreshold::Auto,
             build_threads: crate::par::BuildThreads::Auto,
             mem_budget: None,
+            on_fault: crate::ft::FaultPolicy::Fail,
         }
     }
 }
@@ -190,6 +197,7 @@ impl RunConfig {
                 }
                 self.mem_budget = Some(b);
             }
+            "on_fault" | "on-fault" => self.on_fault = value.parse()?,
             other => return Err(Error::Config(format!("unknown key `{other}`"))),
         }
         if key == "procs" && self.procs == 0 {
@@ -331,6 +339,19 @@ mod tests {
         assert_eq!(c.mem_budget, Some(1000));
         assert!(c.set("mem-budget", "0").is_err());
         assert!(c.set("mem-budget", "lots").is_err());
+    }
+
+    #[test]
+    fn on_fault_key() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.on_fault, crate::ft::FaultPolicy::Fail);
+        c.set("on-fault", "recover").unwrap();
+        assert_eq!(c.on_fault, crate::ft::FaultPolicy::Recover);
+        c.set("on_fault", "degrade").unwrap();
+        assert_eq!(c.on_fault, crate::ft::FaultPolicy::Degrade);
+        c.set("on-fault", "fail").unwrap();
+        assert_eq!(c.on_fault, crate::ft::FaultPolicy::Fail);
+        assert!(c.set("on-fault", "panic").is_err());
     }
 
     #[test]

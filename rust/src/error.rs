@@ -23,6 +23,13 @@ pub enum Error {
     /// A parallel run failed (worker panic, channel breakage).
     Cluster(String),
 
+    /// A specific rank failed mid-protocol. Carries the rank id and the
+    /// transport-op count at which it failed so the cluster launcher can
+    /// attribute the *root cause* (lowest op count = earliest failure in
+    /// protocol time) and the `ft/` supervisor can identify the victim
+    /// without parsing message strings.
+    RankFailure { rank: usize, ops: u64, msg: String },
+
     /// A report cell had an unexpected type or shape (typed accessor
     /// failure in `exp::report` — names the row, column and actual cell).
     Report(String),
@@ -42,6 +49,9 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(m) => write!(f, "invalid config: {m}"),
             Error::Cluster(m) => write!(f, "cluster execution failed: {m}"),
+            Error::RankFailure { rank, ops, msg } => {
+                write!(f, "cluster execution failed: rank {rank} after {ops} transport ops: {msg}")
+            }
             Error::Report(m) => write!(f, "malformed report: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),

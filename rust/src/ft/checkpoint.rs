@@ -1,0 +1,246 @@
+//! Checkpointed progress for supervised runs (DESIGN.md §13).
+//!
+//! Every counting path publishes progress through the
+//! [`Progress`] sink installed by `ft::supervisor`:
+//!
+//! * **acks** — a [`ProgressUnit`] (vertex range, §V task, or stream
+//!   batch) fully resolved with its exact sum. Acked units never need
+//!   re-counting: recovery's remainder is their complement.
+//! * **partials** — monotone, globally disjoint contributions keyed by
+//!   the publishing rank (surrogate/direct sweep totals). Partials of a
+//!   rank that later dies were published *before* the death and survive
+//!   it — they are the floor of the degraded confidence bound.
+//!
+//! The store is shared memory on this runtime (one process per cluster);
+//! on a real MPI deployment it would be a replicated log, which is why
+//! the interface is append/overwrite-only and queries are pull-style.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::comm::threads::{Progress, ProgressUnit};
+
+#[derive(Clone, Debug, Default)]
+struct UnitState {
+    /// Exact final sum, set at most once per unit (re-acks overwrite with
+    /// the same value — publication is idempotent).
+    acked: Option<u64>,
+    /// Per-rank monotone partials for a unit not yet acked.
+    partials: BTreeMap<usize, u64>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    units: BTreeMap<ProgressUnit, UnitState>,
+    /// Acks per publishing rank — the per-rank task watermark.
+    acks_by_rank: BTreeMap<usize, u64>,
+}
+
+/// The shared checkpoint board of one supervised run.
+#[derive(Debug, Default)]
+pub struct CheckpointStore {
+    inner: Mutex<Inner>,
+}
+
+impl Progress for CheckpointStore {
+    fn partial(&self, rank: usize, unit: ProgressUnit, sum: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.units.entry(unit).or_default().partials.insert(rank, sum);
+    }
+
+    fn ack(&self, rank: usize, unit: ProgressUnit, sum: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.units.entry(unit).or_default().acked = Some(sum);
+        *g.acks_by_rank.entry(rank).or_insert(0) += 1;
+    }
+}
+
+impl CheckpointStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Σ of exact sums over acked units — salvaged work that recovery
+    /// must not re-count.
+    pub fn acked_sum(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.units.values().filter_map(|u| u.acked).sum()
+    }
+
+    /// The guaranteed floor: per unit, the exact sum if acked, otherwise
+    /// the sum of its per-rank partials (each a disjoint undercount).
+    pub fn floor_sum(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.units
+            .values()
+            .map(|u| u.acked.unwrap_or_else(|| u.partials.values().sum()))
+            .sum()
+    }
+
+    /// Acked *vertex* coverage (range + task kinds; batch units are a
+    /// separate axis): sorted, merged `[lo, hi)` intervals.
+    pub fn acked_ranges(&self) -> Vec<(u32, u32)> {
+        let g = self.inner.lock().unwrap();
+        let mut spans: Vec<(u32, u32)> = g
+            .units
+            .iter()
+            .filter(|(u, s)| u.kind <= 1 && s.acked.is_some() && u.hi > u.lo)
+            .map(|(u, _)| (u.lo, u.hi))
+            .collect();
+        spans.sort_unstable();
+        let mut merged: Vec<(u32, u32)> = Vec::with_capacity(spans.len());
+        for (lo, hi) in spans {
+            match merged.last_mut() {
+                Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+                _ => merged.push((lo, hi)),
+            }
+        }
+        merged
+    }
+
+    /// The un-acked remainder of `[0, n)` — what recovery re-counts.
+    pub fn complement(&self, n: u32) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        let mut at = 0u32;
+        for (lo, hi) in self.acked_ranges() {
+            if lo > at {
+                out.push((at, lo.min(n)));
+            }
+            at = at.max(hi);
+            if at >= n {
+                break;
+            }
+        }
+        if at < n {
+            out.push((at, n));
+        }
+        out
+    }
+
+    /// Acked stream batches as `(index, signed Δ)` in batch order. The Δ
+    /// was bit-cast to `u64` at the ack site; decode it here.
+    pub fn acked_batches(&self) -> Vec<(u32, i64)> {
+        let g = self.inner.lock().unwrap();
+        g.units
+            .iter()
+            .filter(|(u, s)| u.kind == 2 && s.acked.is_some())
+            .map(|(u, s)| (u.lo, s.acked.unwrap() as i64))
+            .collect()
+    }
+
+    /// `(acked units, partial-only units)` — the recovery report's view
+    /// of how much checkpointed state the fault left behind.
+    pub fn unit_counts(&self) -> (usize, usize) {
+        let g = self.inner.lock().unwrap();
+        let acked = g.units.values().filter(|u| u.acked.is_some()).count();
+        (acked, g.units.len() - acked)
+    }
+
+    /// Per-rank ack watermarks (how many units each rank resolved).
+    pub fn watermarks(&self) -> BTreeMap<usize, u64> {
+        self.inner.lock().unwrap().acks_by_rank.clone()
+    }
+}
+
+/// Explicit survivor map for recovery clusters. Recovery launches a fresh
+/// contiguous cluster of `survivors.len()` ranks; this map records which
+/// *original* rank each new rank stands in for, so nothing downstream
+/// assumes the survivor set is `0..p'` of the original ids — recovery
+/// works identically when rank 0 (the §V coordinator) is the victim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RankMap {
+    /// Original rank ids of the survivors, ascending; index = new rank id.
+    pub survivors: Vec<usize>,
+}
+
+impl RankMap {
+    /// Survivors of a `p`-rank cluster after `dead` died.
+    pub fn surviving(p: usize, dead: &[usize]) -> Self {
+        RankMap { survivors: (0..p).filter(|r| !dead.contains(r)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.survivors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.survivors.is_empty()
+    }
+
+    /// The original rank a recovery rank stands in for.
+    pub fn old_of(&self, new_rank: usize) -> usize {
+        self.survivors[new_rank]
+    }
+
+    /// The recovery rank of an original rank (`None` if it died).
+    pub fn new_of(&self, old_rank: usize) -> Option<usize> {
+        self.survivors.binary_search(&old_rank).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acks_and_partials_roll_up() {
+        let s = CheckpointStore::new();
+        s.ack(1, ProgressUnit::range(0, 10), 100);
+        s.ack(2, ProgressUnit::task(10, 5), 7);
+        s.partial(3, ProgressUnit::range(15, 20), 3);
+        s.partial(4, ProgressUnit::range(15, 20), 9);
+        assert_eq!(s.acked_sum(), 107);
+        assert_eq!(s.floor_sum(), 107 + 3 + 9);
+        assert_eq!(s.acked_ranges(), vec![(0, 15)]);
+        assert_eq!(s.complement(30), vec![(15, 30)]);
+        assert_eq!(s.unit_counts(), (2, 1));
+        assert_eq!(s.watermarks().get(&1), Some(&1));
+    }
+
+    #[test]
+    fn partial_is_overwrite_not_accumulate() {
+        let s = CheckpointStore::new();
+        s.partial(0, ProgressUnit::range(0, 4), 5);
+        s.partial(0, ProgressUnit::range(0, 4), 8); // monotone refresh
+        assert_eq!(s.floor_sum(), 8);
+        // An ack supersedes the partials for the same unit.
+        s.ack(0, ProgressUnit::range(0, 4), 11);
+        assert_eq!(s.floor_sum(), 11);
+    }
+
+    #[test]
+    fn complement_of_empty_store_is_everything() {
+        let s = CheckpointStore::new();
+        assert_eq!(s.complement(42), vec![(0, 42)]);
+        assert_eq!(s.acked_sum(), 0);
+    }
+
+    #[test]
+    fn complement_merges_adjacent_acks() {
+        let s = CheckpointStore::new();
+        // §V tasks acked out of order, tiling [0,8) and [12,16).
+        s.ack(1, ProgressUnit::task(4, 4), 1);
+        s.ack(2, ProgressUnit::task(0, 4), 1);
+        s.ack(1, ProgressUnit::task(12, 4), 1);
+        assert_eq!(s.acked_ranges(), vec![(0, 8), (12, 16)]);
+        assert_eq!(s.complement(20), vec![(8, 12), (16, 20)]);
+    }
+
+    #[test]
+    fn batch_deltas_survive_the_bit_cast() {
+        let s = CheckpointStore::new();
+        s.ack(0, ProgressUnit::batch(0), 5i64 as u64);
+        s.ack(0, ProgressUnit::batch(1), (-3i64) as u64);
+        assert_eq!(s.acked_batches(), vec![(0, 5), (1, -3)]);
+    }
+
+    #[test]
+    fn rank_map_handles_dead_rank_zero() {
+        let m = RankMap::surviving(4, &[0]);
+        assert_eq!(m.survivors, vec![1, 2, 3]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.old_of(0), 1); // new coordinator is old rank 1
+        assert_eq!(m.new_of(0), None);
+        assert_eq!(m.new_of(3), Some(2));
+    }
+}

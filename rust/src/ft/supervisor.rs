@@ -1,0 +1,716 @@
+//! Supervised execution: run a counting job, survive rank death
+//! (DESIGN.md §13).
+//!
+//! [`supervise`] wraps every counting path behind one fault policy:
+//!
+//! * **fail** — propagate the cluster error (the pre-`ft/` behavior).
+//! * **recover** — identify the victims (the virtual fabric's
+//!   [`TraceReport::dead_mask`], or [`Error::RankFailure`] on the channel
+//!   fabric), salvage the [`CheckpointStore`]'s acked units, and
+//!   re-execute only the un-acked remainder on the survivors. The result
+//!   is the **exact** oracle count on every path.
+//! * **degrade** — answer immediately from the checkpoints with a stated
+//!   confidence bound `lower ≤ T ≤ upper` (DOULION-style cost-fraction
+//!   scaling for the point estimate, `approx.rs`'s rescaling idea applied
+//!   to coverage instead of sampling probability).
+//!
+//! Recovery strategy per path (what §IV/§V allow):
+//!
+//! | path         | salvage                  | remainder execution            |
+//! |--------------|--------------------------|--------------------------------|
+//! | surrogate    | none (entangled partials)| §IV re-extraction on survivors |
+//! | direct       | acked own-range counts   | §V survivors steal the rest    |
+//! | patric       | acked core-range counts  | §IV re-extraction of remainder |
+//! | dynamic-lb   | acked task counts        | §V survivors steal the rest    |
+//! | local-counts | acked task counts        | §V survivors steal the rest    |
+//! | stream       | none (Δ watermarks only) | full re-stream on survivors    |
+//!
+//! Exactness holds because every salvageable unit carries **min-≺-vertex
+//! attribution** (a triangle is counted at exactly one vertex range/task),
+//! so `acked + recount(complement)` is the oracle count by construction.
+//! Surrogate counting is entangled — a rank's total mixes triangles served
+//! for other ranks — so its checkpoints are lower-bound partials only and
+//! recovery is full re-execution on the shrunken cluster.
+
+use std::sync::Arc;
+
+use crate::adj::hub::HubThreshold;
+use crate::algo::tasks::Task;
+use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate};
+use crate::comm::metrics::ClusterMetrics;
+use crate::comm::threads::Progress;
+use crate::config::CostFn;
+use crate::error::{Error, Result};
+use crate::ft::checkpoint::{CheckpointStore, RankMap};
+use crate::graph::csr::Csr;
+use crate::graph::ordering::Oriented;
+use crate::partition::balance::balanced_ranges;
+use crate::partition::cost::{cost_vector, prefix_sums};
+use crate::seq::node_iterator;
+use crate::stream::batch::Batch;
+use crate::stream::parallel::{self, StreamOptions};
+use crate::testkit::sched::SimConfig;
+use crate::testkit::sim::Fabric;
+use crate::testkit::trace::{combine_hashes, TraceReport};
+use crate::TriangleCount;
+
+/// Recovery attempts before the supervisor gives up (each attempt runs on
+/// a fabric whose kill plan is stripped, so >1 only happens when the
+/// surviving schedule itself fails — drops on the recovery wire).
+const MAX_ATTEMPTS: u32 = 3;
+
+/// What `--on-fault` selects.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Propagate the error (pre-`ft/` behavior).
+    #[default]
+    Fail,
+    /// Re-execute un-acked work on the survivors; exact count.
+    Recover,
+    /// Answer from checkpoints with a confidence bound; no re-execution.
+    Degrade,
+}
+
+impl std::str::FromStr for FaultPolicy {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fail" => Ok(FaultPolicy::Fail),
+            "recover" => Ok(FaultPolicy::Recover),
+            "degrade" => Ok(FaultPolicy::Degrade),
+            other => Err(Error::Config(format!(
+                "unknown fault policy `{other}` (expected fail|recover|degrade)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultPolicy::Fail => "fail",
+            FaultPolicy::Recover => "recover",
+            FaultPolicy::Degrade => "degrade",
+        })
+    }
+}
+
+/// A counting job the supervisor knows how to run, kill, and finish.
+/// Partition ranges are *not* part of the job — the supervisor re-derives
+/// them from the cost function for whatever cluster size recovery ends up
+/// with.
+pub enum Job<'a> {
+    Surrogate { graph: &'a Arc<Oriented>, cost: CostFn, hub: HubThreshold },
+    Direct { graph: &'a Arc<Oriented>, cost: CostFn, hub: HubThreshold },
+    Patric { g: &'a Csr, graph: &'a Arc<Oriented>, cost: CostFn, hub: HubThreshold },
+    DynamicLb { graph: &'a Arc<Oriented>, opts: dynamic_lb::Options },
+    LocalCounts { graph: &'a Arc<Oriented> },
+    Stream { base: &'a Csr, batches: &'a [Batch], opts: StreamOptions, initial: TriangleCount },
+}
+
+/// The degraded answer's confidence bound: `lower ≤ T ≤ upper` holds
+/// unconditionally (lower = checkpointed floor, upper = checkpointed exact
+/// + Σ C(d̂_v, 2) over un-acked vertices — no un-acked vertex can anchor
+/// more min-vertex triangles than its oriented out-degree pairs allow).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Bound {
+    pub lower: u64,
+    pub estimate: u64,
+    pub upper: u64,
+}
+
+impl Bound {
+    pub fn contains(&self, truth: u64) -> bool {
+        self.lower <= truth && truth <= self.upper
+    }
+}
+
+/// What the supervisor did about a fault (all-zero on a fault-free run).
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Recovery clusters launched (0 = no fault).
+    pub attempts: u32,
+    /// Original rank ids of every victim, across all attempts.
+    pub dead_ranks: Vec<usize>,
+    /// Survivor map of the final recovery cluster.
+    pub survivors: Option<RankMap>,
+    /// Work units spent re-executing (the cost of surviving the fault).
+    pub reexec_work_units: u64,
+    /// Payload bytes re-sent during recovery.
+    pub reexec_bytes: u64,
+    /// Checkpoint units salvaged exactly (not re-counted).
+    pub salvaged_units: usize,
+    /// Units that had only partial sums when the fault hit.
+    pub partial_units: usize,
+    /// True iff the answer is a degraded estimate, not an exact count.
+    pub degraded: bool,
+}
+
+/// Result of a supervised run.
+#[derive(Debug)]
+pub struct SupervisedRun {
+    pub count: TriangleCount,
+    /// `Some` iff the run degraded.
+    pub bound: Option<Bound>,
+    /// Per-rank metrics: the run's own on success, the recovery cluster's
+    /// (with `reexec_*` attribution) after a recovery.
+    pub metrics: ClusterMetrics,
+    pub recovery: RecoveryReport,
+    /// Combined trace fingerprint over primary + recovery runs (`Some`
+    /// iff the fabric is virtual) — the replay-determinism gate's key.
+    pub trace_hash: Option<u64>,
+}
+
+/// Run `job` on `p` ranks under `policy`. See the module docs for the
+/// per-path recovery strategy.
+pub fn supervise(
+    job: &Job<'_>,
+    fabric: &Fabric,
+    p: usize,
+    policy: FaultPolicy,
+) -> Result<SupervisedRun> {
+    let store = Arc::new(CheckpointStore::new());
+    let sink: Arc<dyn Progress> = store.clone();
+    let (res, trace) = run_primary(job, fabric, p, Some(sink));
+    let mut hashes: Vec<u64> = trace.iter().map(|t| t.hash).collect();
+    match res {
+        Ok((count, metrics)) => Ok(SupervisedRun {
+            count,
+            bound: None,
+            metrics,
+            recovery: RecoveryReport::default(),
+            trace_hash: hash_of(&hashes),
+        }),
+        Err(e) => match policy {
+            FaultPolicy::Fail => Err(e),
+            FaultPolicy::Degrade => degrade(job, &store, &trace, &e, hashes),
+            FaultPolicy::Recover => recover(job, fabric, p, &store, &trace, e, hashes),
+        },
+    }
+}
+
+fn hash_of(hashes: &[u64]) -> Option<u64> {
+    (!hashes.is_empty()).then(|| combine_hashes(hashes.iter().copied()))
+}
+
+/// Victims of a failed run: the trace's dead mask where there is one, the
+/// attributed [`Error::RankFailure`] rank otherwise. Empty = unattributable.
+fn victims_of(trace: &Option<TraceReport>, err: &Error) -> Vec<usize> {
+    if let Some(t) = trace {
+        let dead = t.dead_ranks();
+        if !dead.is_empty() {
+            return dead;
+        }
+    }
+    if let Error::RankFailure { rank, .. } = err {
+        return vec![*rank];
+    }
+    Vec::new()
+}
+
+/// The fabric a recovery attempt runs on: same transport family, kills
+/// stripped (a victim cannot die twice), seed re-derived so replaying the
+/// whole supervised run is still one deterministic schedule.
+fn recovery_fabric(fabric: &Fabric, attempt: u32) -> Fabric {
+    match fabric {
+        Fabric::Channel => Fabric::Channel,
+        Fabric::Sim(cfg) => Fabric::Sim(SimConfig {
+            seed: combine_hashes([cfg.seed, attempt as u64]),
+            policy: cfg.policy.clone(),
+            faults: cfg.faults.without_kills(),
+        }),
+    }
+}
+
+/// Balanced consecutive ranges for a `p`-rank cluster (what every §IV
+/// driver's caller computes; the supervisor re-derives it per cluster size).
+fn ranges_for(graph: &Oriented, cost: CostFn, p: usize) -> Vec<std::ops::Range<u32>> {
+    balanced_ranges(&prefix_sums(&cost_vector(graph, cost)), p)
+}
+
+fn run_primary(
+    job: &Job<'_>,
+    fabric: &Fabric,
+    p: usize,
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<(TriangleCount, ClusterMetrics)>, Option<TraceReport>) {
+    match job {
+        Job::Surrogate { graph, cost, hub } => {
+            let ranges = ranges_for(graph, *cost, p);
+            let (r, t) = surrogate::run_hooked_on(fabric, graph, &ranges, *hub, progress);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
+        Job::Direct { graph, cost, hub } => {
+            let ranges = ranges_for(graph, *cost, p);
+            let (r, t) = direct::run_hooked_on(fabric, graph, &ranges, *hub, progress);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
+        Job::Patric { g, graph, cost, hub } => {
+            let ranges = ranges_for(graph, *cost, p);
+            let (r, t) = patric::run_hooked_on(fabric, g, graph, &ranges, *hub, progress);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
+        Job::DynamicLb { graph, opts } => {
+            let (r, t) = dynamic_lb::run_hooked_on(fabric, graph, p, *opts, progress);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
+        Job::LocalCounts { graph } => {
+            let (r, t) = local_counts::per_node_counts_hooked_on(fabric, graph, p, progress);
+            (r.map(|(tv, m)| (tv.iter().sum::<u64>() / 3, m)), t)
+        }
+        Job::Stream { base, batches, opts, initial } => {
+            let (r, t) = parallel::run_with_initial_hooked_on(
+                fabric, base, batches, p, *opts, *initial, progress,
+            );
+            (r.map(|r| (r.final_triangles, r.metrics)), t)
+        }
+    }
+}
+
+fn recover(
+    job: &Job<'_>,
+    fabric: &Fabric,
+    p: usize,
+    store: &Arc<CheckpointStore>,
+    trace: &Option<TraceReport>,
+    first_err: Error,
+    mut hashes: Vec<u64>,
+) -> Result<SupervisedRun> {
+    let mut victims = victims_of(trace, &first_err);
+    if victims.is_empty() {
+        return Err(first_err); // unattributable — nothing to recover from
+    }
+    // Snapshot the salvage *before* recovery runs publish into the store.
+    let (salvaged_units, partial_units) = store.unit_counts();
+
+    for attempt in 1..=MAX_ATTEMPTS {
+        let map = RankMap::surviving(p, &victims);
+        if map.is_empty() {
+            return Err(Error::Cluster(format!(
+                "recovery impossible: all {p} ranks died ({victims:?})"
+            )));
+        }
+        let rf = recovery_fabric(fabric, attempt);
+        let (res, rtrace) = run_recovery(job, &rf, &map, store);
+        if let Some(t) = &rtrace {
+            hashes.push(t.hash);
+        }
+        match res {
+            Ok((count, mut metrics)) => {
+                let mut reexec_work = 0u64;
+                let mut reexec_bytes = 0u64;
+                for m in &mut metrics.per_rank {
+                    m.reexec_work_units = m.work_units;
+                    m.reexec_bytes = m.bytes_sent;
+                    reexec_work += m.work_units;
+                    reexec_bytes += m.bytes_sent;
+                }
+                return Ok(SupervisedRun {
+                    count,
+                    bound: None,
+                    metrics,
+                    recovery: RecoveryReport {
+                        attempts: attempt,
+                        dead_ranks: victims,
+                        survivors: Some(map),
+                        reexec_work_units: reexec_work,
+                        reexec_bytes,
+                        salvaged_units,
+                        partial_units,
+                        degraded: false,
+                    },
+                    trace_hash: hash_of(&hashes),
+                });
+            }
+            Err(e) => {
+                // A recovery cluster failed too. Its victims are in *new*
+                // rank ids — map them back before shrinking further.
+                let more = victims_of(&rtrace, &e);
+                if more.is_empty() || attempt == MAX_ATTEMPTS {
+                    return Err(Error::Cluster(format!(
+                        "recovery attempt {attempt} failed: {e}"
+                    )));
+                }
+                for new in more {
+                    let old = map.old_of(new);
+                    if !victims.contains(&old) {
+                        victims.push(old);
+                    }
+                }
+                victims.sort_unstable();
+            }
+        }
+    }
+    unreachable!("the attempt loop always returns")
+}
+
+/// One recovery attempt on the survivor cluster. Exact by the min-≺-vertex
+/// attribution argument in the module docs.
+fn run_recovery(
+    job: &Job<'_>,
+    fabric: &Fabric,
+    map: &RankMap,
+    store: &Arc<CheckpointStore>,
+) -> (Result<(TriangleCount, ClusterMetrics)>, Option<TraceReport>) {
+    let p2 = map.len();
+    match job {
+        // Entangled partials: full §IV re-extraction on the survivors.
+        Job::Surrogate { graph, cost, hub } => {
+            let ranges = ranges_for(graph, *cost, p2);
+            let (r, t) = surrogate::run_hooked_on(fabric, graph, &ranges, *hub, None);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
+        // Replicated state, Δ-watermarks only: full re-stream.
+        Job::Stream { base, batches, opts, initial } => {
+            let (r, t) = parallel::run_with_initial_hooked_on(
+                fabric, base, batches, p2, *opts, *initial, None,
+            );
+            (r.map(|r| (r.final_triangles, r.metrics)), t)
+        }
+        // Acked core ranges are exact: §IV re-extraction over the
+        // complement intervals only (each interval becomes a core range;
+        // the recovery cluster is one rank per interval — at most the
+        // original victim count plus boundary splits).
+        Job::Patric { g, graph, cost: _, hub } => {
+            let salvage = store.acked_sum();
+            let rem = store.complement(graph.num_nodes() as u32);
+            if rem.is_empty() {
+                return (Ok((salvage, ClusterMetrics::default())), None);
+            }
+            let ranges: Vec<std::ops::Range<u32>> =
+                rem.iter().map(|&(lo, hi)| lo..hi).collect();
+            let (r, t) = patric::run_hooked_on(fabric, g, graph, &ranges, *hub, None);
+            (r.map(|r| (salvage + r.triangles, r.metrics)), t)
+        }
+        // §V survivors-steal: the un-acked vertex intervals become the
+        // dynamic task queue of a fresh coordinator/worker cluster (or a
+        // sequential sweep when only one survivor remains).
+        Job::Direct { graph, .. } | Job::DynamicLb { graph, .. } | Job::LocalCounts { graph } => {
+            let salvage = store.acked_sum();
+            let rem = store.complement(graph.num_nodes() as u32);
+            if rem.is_empty() {
+                return (Ok((salvage, ClusterMetrics::default())), None);
+            }
+            if p2 >= 2 {
+                let tasks = remainder_tasks(&rem, p2 - 1);
+                let (r, t) =
+                    dynamic_lb::run_tasks_on(fabric, graph, p2, &tasks, Some(store.clone()));
+                (r.map(|r| (salvage + r.triangles, r.metrics)), t)
+            } else {
+                // Lone survivor: count the remainder sequentially.
+                let mut t: TriangleCount = 0;
+                let mut work = 0u64;
+                for &(lo, hi) in &rem {
+                    node_iterator::count_range(graph, lo, hi, &mut t);
+                    for v in lo..hi {
+                        work += node_iterator::node_work_true(graph, v);
+                    }
+                }
+                let mut metrics = ClusterMetrics::default();
+                metrics.per_rank.push(crate::comm::metrics::CommMetrics {
+                    work_units: work,
+                    ..Default::default()
+                });
+                (Ok((salvage + t, metrics)), None)
+            }
+        }
+    }
+}
+
+/// Split the complement intervals into a §V-style task list: roughly two
+/// tasks per worker per interval, so the steal queue still load-balances.
+fn remainder_tasks(rem: &[(u32, u32)], workers: usize) -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for &(lo, hi) in rem {
+        let len = hi - lo;
+        let chunk = (len / (2 * workers.max(1)) as u32).max(1);
+        let mut at = lo;
+        while at < hi {
+            let l = chunk.min(hi - at);
+            tasks.push(Task { start: at, len: l });
+            at += l;
+        }
+    }
+    tasks
+}
+
+fn degrade(
+    job: &Job<'_>,
+    store: &Arc<CheckpointStore>,
+    trace: &Option<TraceReport>,
+    err: &Error,
+    hashes: Vec<u64>,
+) -> Result<SupervisedRun> {
+    let bound = match job {
+        Job::Stream { base, batches, initial, .. } => {
+            stream_bound(base, batches, *initial, store)
+        }
+        Job::Surrogate { graph, cost, .. } | Job::Direct { graph, cost, .. } => {
+            static_bound(graph, *cost, store)
+        }
+        Job::Patric { graph, cost, .. } => static_bound(graph, *cost, store),
+        Job::DynamicLb { graph, opts } => static_bound(graph, opts.cost_fn, store),
+        Job::LocalCounts { graph } => static_bound(graph, CostFn::Degree, store),
+    };
+    let (salvaged_units, partial_units) = store.unit_counts();
+    Ok(SupervisedRun {
+        count: bound.estimate,
+        bound: Some(bound),
+        metrics: ClusterMetrics::default(),
+        recovery: RecoveryReport {
+            attempts: 0,
+            dead_ranks: victims_of(trace, err),
+            survivors: None,
+            reexec_work_units: 0,
+            reexec_bytes: 0,
+            salvaged_units,
+            partial_units,
+            degraded: true,
+        },
+        trace_hash: hash_of(&hashes),
+    })
+}
+
+/// Bound for the static (non-stream) paths.
+///
+/// * `lower` — the checkpointed floor (acked exacts + disjoint partials).
+/// * `upper` — acked exacts + Σ C(d̂_v, 2) over un-acked vertices: a vertex
+///   with `d̂` oriented out-neighbors anchors at most `d̂(d̂−1)/2`
+///   min-vertex triangles.
+/// * `estimate` — the floor rescaled by the inverse covered-cost fraction
+///   (DOULION's `1/p³` trick with coverage in place of sampling
+///   probability), clamped into `[lower, upper]`; midpoint when nothing
+///   was acked (no coverage signal at all).
+fn static_bound(graph: &Oriented, cost: CostFn, store: &CheckpointStore) -> Bound {
+    let n = graph.num_nodes() as u32;
+    let lower = store.floor_sum();
+    let mut upper = store.acked_sum();
+    for &(lo, hi) in &store.complement(n) {
+        for v in lo..hi {
+            let d = graph.nbrs(v).len() as u64;
+            upper += d * d.saturating_sub(1) / 2;
+        }
+    }
+    let upper = upper.max(lower);
+
+    let prefix = prefix_sums(&cost_vector(graph, cost));
+    let total = *prefix.last().unwrap_or(&0);
+    let covered: u64 =
+        store.acked_ranges().iter().map(|&(lo, hi)| prefix[hi as usize] - prefix[lo as usize]).sum();
+    let estimate = if covered > 0 && total > 0 {
+        let scaled = (lower as f64 * total as f64 / covered as f64).round() as u64;
+        scaled.clamp(lower, upper)
+    } else {
+        lower + (upper - lower) / 2
+    };
+    Bound { lower, estimate, upper }
+}
+
+/// Bound for the stream path. `known` = initial count + Σ acked batch Δs
+/// (the watermark). Each un-acked update `{u,v}` can change the count by
+/// at most `min(d_u, d_v)` common neighbors in the *current* graph, which
+/// is bounded by the base degree plus every update in the stream (an
+/// update raises any one degree by at most 1) — summed into `slack`.
+fn stream_bound(base: &Csr, batches: &[Batch], initial: TriangleCount, store: &CheckpointStore) -> Bound {
+    let acked = store.acked_batches();
+    let known: i64 = initial as i64 + acked.iter().map(|&(_, d)| d).sum::<i64>();
+    let acked_idx: std::collections::BTreeSet<u32> = acked.iter().map(|&(i, _)| i).collect();
+    let total_ops: u64 = batches.iter().map(|b| b.updates.len() as u64).sum();
+    let mut slack: i64 = 0;
+    for (bi, b) in batches.iter().enumerate() {
+        if acked_idx.contains(&(bi as u32)) {
+            continue;
+        }
+        for up in &b.updates {
+            let d = base.degree(up.u).min(base.degree(up.v)) as u64 + total_ops;
+            slack += d as i64;
+        }
+    }
+    let lower = (known - slack).max(0) as u64;
+    let upper = (known + slack).max(0) as u64;
+    let estimate = (known.max(0) as u64).clamp(lower, upper);
+    Bound { lower, estimate, upper }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::classic;
+    use crate::testkit::sched::FaultPlan;
+
+    fn sim_kill(seed: u64, rank: usize, at_op: u64) -> Fabric {
+        Fabric::Sim(SimConfig::with_faults(seed, FaultPlan::kill_one(rank, at_op)))
+    }
+
+    fn karate() -> Arc<Oriented> {
+        Arc::new(Oriented::from_graph(&classic::karate()))
+    }
+
+    #[test]
+    fn fail_policy_propagates_the_error() {
+        let o = karate();
+        let job = Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() };
+        let r = supervise(&job, &sim_kill(3, 1, 2), 4, FaultPolicy::Fail);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fault_free_supervised_run_is_plain() {
+        let o = karate();
+        let job = Job::Surrogate { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto };
+        let r = supervise(&job, &Fabric::Sim(SimConfig::adversarial(7)), 4, FaultPolicy::Recover)
+            .unwrap();
+        assert_eq!(r.count, 45);
+        assert_eq!(r.recovery.attempts, 0);
+        assert!(r.bound.is_none());
+        assert!(r.trace_hash.is_some());
+    }
+
+    #[test]
+    fn dynamic_lb_recovers_from_dead_coordinator() {
+        // Regression for the contiguous-rank-id assumption: rank 0 (the
+        // coordinator) is the victim, so the survivor set {1,2,3} must be
+        // re-mapped, not assumed to start at 0.
+        let o = karate();
+        let job = Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() };
+        let r = supervise(&job, &sim_kill(11, 0, 1), 4, FaultPolicy::Recover).unwrap();
+        assert_eq!(r.count, 45);
+        assert_eq!(r.recovery.dead_ranks, vec![0]);
+        let map = r.recovery.survivors.as_ref().unwrap();
+        assert_eq!(map.survivors, vec![1, 2, 3]);
+        assert_eq!(map.new_of(0), None);
+    }
+
+    #[test]
+    fn each_path_recovers_exact_after_kill() {
+        // Kill at the victim's *first* transport op — the only position
+        // guaranteed to exist on every path (PATRIC's only transport op is
+        // the reduce). The first/middle/last matrix with probe-derived
+        // positions lives in the conformance suite.
+        let g = classic::karate();
+        let o = karate();
+        let jobs: Vec<(&str, Job<'_>)> = vec![
+            ("surrogate", Job::Surrogate { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }),
+            ("direct", Job::Direct { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }),
+            ("patric", Job::Patric { g: &g, graph: &o, cost: CostFn::PatricBest, hub: HubThreshold::Auto }),
+            ("dynamic-lb", Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() }),
+            ("local-counts", Job::LocalCounts { graph: &o }),
+        ];
+        for (name, job) in &jobs {
+            let r = supervise(job, &sim_kill(23, 1, 1), 4, FaultPolicy::Recover)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.count, 45, "{name}");
+            assert_eq!(r.recovery.attempts, 1, "{name}");
+            assert!(!r.recovery.degraded, "{name}");
+        }
+    }
+
+    #[test]
+    fn stream_recovers_exact() {
+        use crate::stream::batch::EdgeUpdate;
+        let base = classic::karate();
+        let batches = vec![
+            Batch::new(vec![EdgeUpdate::insert(0, 9), EdgeUpdate::delete(0, 1)]),
+            Batch::new(vec![EdgeUpdate::insert(14, 15)]),
+        ];
+        let initial = node_iterator::count(&Oriented::from_graph(&base));
+        let oracle = {
+            let mut st = crate::stream::state::StreamState::new(base.clone());
+            for b in &batches {
+                st.apply_batch(b).unwrap();
+            }
+            st.triangles()
+        };
+        let job = Job::Stream {
+            base: &base,
+            batches: &batches,
+            opts: StreamOptions::default(),
+            initial,
+        };
+        let r = supervise(&job, &sim_kill(31, 2, 2), 4, FaultPolicy::Recover).unwrap();
+        assert_eq!(r.count, oracle);
+        assert_eq!(r.recovery.attempts, 1);
+    }
+
+    #[test]
+    fn recovery_replays_to_identical_hash_and_count() {
+        let o = karate();
+        let job = Job::Direct { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto };
+        let a = supervise(&job, &sim_kill(5, 2, 4), 4, FaultPolicy::Recover).unwrap();
+        let b = supervise(&job, &sim_kill(5, 2, 4), 4, FaultPolicy::Recover).unwrap();
+        assert_eq!(a.count, b.count);
+        assert_eq!(a.trace_hash, b.trace_hash);
+        assert!(a.trace_hash.is_some());
+    }
+
+    #[test]
+    fn degrade_bound_contains_truth_on_every_static_path() {
+        let g = classic::karate();
+        let o = karate();
+        let jobs: Vec<(&str, Job<'_>)> = vec![
+            ("surrogate", Job::Surrogate { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }),
+            ("direct", Job::Direct { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }),
+            ("patric", Job::Patric { g: &g, graph: &o, cost: CostFn::PatricBest, hub: HubThreshold::Auto }),
+            ("dynamic-lb", Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() }),
+            ("local-counts", Job::LocalCounts { graph: &o }),
+        ];
+        for (name, job) in &jobs {
+            let r = supervise(job, &sim_kill(41, 1, 1), 4, FaultPolicy::Degrade)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let bound = r.bound.unwrap_or_else(|| panic!("{name}: no bound"));
+            assert!(bound.contains(45), "{name}: {bound:?} must contain 45");
+            assert!(r.recovery.degraded, "{name}");
+            assert_eq!(r.count, bound.estimate, "{name}");
+        }
+    }
+
+    #[test]
+    fn degrade_bound_contains_truth_on_stream() {
+        use crate::stream::batch::EdgeUpdate;
+        let base = classic::karate();
+        let batches =
+            vec![Batch::new(vec![EdgeUpdate::insert(0, 9)]), Batch::new(vec![EdgeUpdate::delete(0, 1)])];
+        let initial = node_iterator::count(&Oriented::from_graph(&base));
+        let oracle = {
+            let mut st = crate::stream::state::StreamState::new(base.clone());
+            for b in &batches {
+                st.apply_batch(b).unwrap();
+            }
+            st.triangles()
+        };
+        let job = Job::Stream {
+            base: &base,
+            batches: &batches,
+            opts: StreamOptions::default(),
+            initial,
+        };
+        let r = supervise(&job, &sim_kill(43, 1, 2), 4, FaultPolicy::Degrade).unwrap();
+        assert!(r.bound.unwrap().contains(oracle), "{:?} vs {oracle}", r.bound);
+    }
+
+    #[test]
+    fn recovery_reports_reexecuted_work() {
+        let o = karate();
+        let job = Job::Surrogate { graph: &o, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto };
+        let r = supervise(&job, &sim_kill(47, 1, 3), 4, FaultPolicy::Recover).unwrap();
+        assert_eq!(r.count, 45);
+        // Surrogate recovery is full re-execution: re-executed work must be
+        // visible, and attributed in the per-rank metrics too.
+        assert!(r.recovery.reexec_work_units > 0);
+        assert_eq!(
+            r.recovery.reexec_work_units,
+            r.metrics.per_rank.iter().map(|m| m.reexec_work_units).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn remainder_tasks_tile_the_complement() {
+        let tasks = remainder_tasks(&[(3, 10), (20, 21)], 3);
+        let mut covered = Vec::new();
+        for t in &tasks {
+            covered.extend(t.range());
+        }
+        let expect: Vec<u32> = (3..10).chain(20..21).collect();
+        assert_eq!(covered, expect);
+    }
+}

@@ -63,6 +63,20 @@
 //!   (`tricount bench-pipeline`) times the stages against the retained
 //!   comparison-sort baseline and writes `BENCH_pipeline.json`, the
 //!   repo's recorded perf baseline.
+//! * **`ft/`** — fault-tolerant execution (DESIGN.md §13): every counting
+//!   path runs under [`ft::supervisor::supervise`], which installs a
+//!   shared [`ft::checkpoint::CheckpointStore`] (per-rank partial sums +
+//!   acked progress units at phase boundaries), detects rank death through
+//!   the transport's liveness board / the virtual fabric's dead mask, and
+//!   applies the `--on-fault` policy: `fail` propagates, `recover`
+//!   re-executes only the un-acked remainder on the survivors (exact
+//!   count, §IV re-extraction or §V task stealing per path), `degrade`
+//!   answers from checkpoints with a stated `lower ≤ T ≤ upper` confidence
+//!   bound. Transport-level hardening (deadline-based `recv_deadline`,
+//!   bounded deterministic retries, heartbeat liveness distinguishing slow
+//!   from dead) lives in [`comm::transport`] / [`comm::threads`] and is
+//!   answered in *virtual time* on the testkit fabric, so every fault
+//!   schedule replays to an identical trace hash.
 //! * **`obs/`** — the observability layer: per-rank phase-span timelines
 //!   ([`obs::span`], ring-buffered, wall-clock on the channel fabric and
 //!   *virtual-time* on the testkit fabric so adversarial schedules replay
@@ -168,6 +182,13 @@ pub mod testkit {
     pub use sched::{FaultPlan, SchedulePolicy, SimConfig};
     pub use sim::Fabric;
     pub use trace::TraceReport;
+}
+
+pub mod ft {
+    pub mod checkpoint;
+    pub mod supervisor;
+    pub use checkpoint::{CheckpointStore, RankMap};
+    pub use supervisor::{supervise, Bound, FaultPolicy, Job, RecoveryReport, SupervisedRun};
 }
 
 pub mod partition {

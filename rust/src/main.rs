@@ -44,6 +44,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "convert" => cmd_convert(&args[1..]),
         "partition-stats" => cmd_partition_stats(&args[1..]),
         "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
+        "bench-recovery" => cmd_bench_recovery(&args[1..]),
         "conformance" => cmd_conformance(&args[1..]),
         "obs-report" => cmd_obs_report(&args[1..]),
         "exp" => cmd_exp(&args[1..]),
@@ -84,6 +85,14 @@ COMMANDS:
                     --dense-core K --artifacts-dir DIR --config FILE
                     --out DIR (write count.{{csv,json}} incl. representation
                     stats: hub count, bitmap bytes, kernel-path hits)
+                    --on-fault fail|recover|degrade (what a supervised run
+                    does when a rank dies: fail propagates, recover
+                    re-executes the un-acked remainder on survivors for
+                    the exact count, degrade answers from checkpoints
+                    with a lower ≤ T ≤ upper confidence bound)
+                    --fault kill:R:O (inject: kill rank R at its O-th
+                    transport op on the seeded virtual fabric — the run
+                    replays deterministically; prints the trace hash)
   stream            incremental counting over batched edge updates
                     --workload SPEC --procs P --batch-size N --batches B
                     --window W (0 = no expiry) --delete-frac F --base-frac F
@@ -110,6 +119,12 @@ COMMANDS:
                     --reps N --seed S --hub-threshold T
                     --format text|tcg (for file-backed workload specs)
                     --out PATH (default BENCH_pipeline.json)
+  bench-recovery    measure rank-death recovery: latency and re-executed
+                    work fraction vs kill position (first / middle / last
+                    transport op of the victim) on the seeded virtual
+                    fabric, each cell verified exact vs the fault-free run
+                    --workload SPEC --procs P --algorithm A --seed S
+                    --out PATH (default BENCH_recovery.json)
   conformance       adversarial-schedule conformance suite: every counting
                     path (surrogate|direct|patric|dynamic-lb|local-counts|
                     stream) on the seeded virtual transport vs the
@@ -176,7 +191,7 @@ fn parse_config(args: &[String]) -> Result<(RunConfig, std::collections::BTreeMa
 
 fn cmd_count(args: &[String]) -> Result<()> {
     let (mut cfg, extra) = parse_config(args)?;
-    reject_unknown(&extra, &["out", "trace-out", "obs-out", "format"])?;
+    reject_unknown(&extra, &["out", "trace-out", "obs-out", "format", "fault"])?;
     apply_format(&mut cfg, &extra)?;
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
@@ -225,6 +240,14 @@ fn cmd_count(args: &[String]) -> Result<()> {
         hubs.hubs,
         hubs.bitmap_bytes
     );
+
+    // Fault-tolerant execution (DESIGN.md §13): an injected `--fault` or a
+    // non-`fail` `--on-fault` policy routes the run through the supervisor,
+    // which installs the checkpoint store and recovers / degrades per
+    // policy instead of letting a rank death abort the count.
+    if extra.contains_key("fault") || cfg.on_fault != tricount::ft::FaultPolicy::Fail {
+        return count_supervised(&cfg, &extra, &g, &o);
+    }
 
     tricount::adj::stats::reset();
     let t0 = std::time::Instant::now();
@@ -401,6 +424,231 @@ fn cmd_count(args: &[String]) -> Result<()> {
         report.write_json(&format!("{dir}/count.json"))?;
         println!("[written: {dir}/count.{{csv,json}}]");
     }
+    Ok(())
+}
+
+/// Map a CLI algorithm choice onto a supervisable [`tricount::ft::Job`].
+/// Sequential and hybrid are single-process — there is no rank to lose.
+fn supervised_job<'a>(
+    cfg: &RunConfig,
+    g: &'a tricount::graph::csr::Csr,
+    o: &'a Arc<Oriented>,
+) -> Result<tricount::ft::Job<'a>> {
+    use tricount::ft::Job;
+    Ok(match cfg.algorithm {
+        Algorithm::Surrogate => {
+            Job::Surrogate { graph: o, cost: cfg.cost_fn, hub: cfg.hub_threshold }
+        }
+        Algorithm::Direct => Job::Direct { graph: o, cost: cfg.cost_fn, hub: cfg.hub_threshold },
+        Algorithm::Patric => {
+            Job::Patric { g, graph: o, cost: CostFn::PatricBest, hub: cfg.hub_threshold }
+        }
+        Algorithm::DynamicLb => Job::DynamicLb {
+            graph: o,
+            opts: dynamic_lb::Options {
+                cost_fn: cfg.cost_fn,
+                granularity: dynamic_lb::Granularity::Shrinking,
+            },
+        },
+        other => {
+            return Err(Error::Config(format!(
+                "--fault/--on-fault needs a cluster algorithm (surrogate|direct|patric|dynamic-lb), not {other:?}"
+            )))
+        }
+    })
+}
+
+/// Parse `--fault kill:<rank>:<op>` (`op` is 1-based: the victim's N-th
+/// transport operation).
+fn parse_fault(spec: &str, p: usize) -> Result<(usize, u64)> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["kill", rank, op] => {
+            let rank: usize =
+                rank.parse().map_err(|e| Error::Config(format!("--fault rank: {e}")))?;
+            let op: u64 = op.parse().map_err(|e| Error::Config(format!("--fault op: {e}")))?;
+            if rank >= p {
+                return Err(Error::Config(format!(
+                    "--fault rank {rank} out of range (procs {p})"
+                )));
+            }
+            if op == 0 {
+                return Err(Error::Config("--fault op is 1-based (>= 1)".into()));
+            }
+            Ok((rank, op))
+        }
+        _ => Err(Error::Config(format!("--fault expects kill:<rank>:<op>, got `{spec}`"))),
+    }
+}
+
+/// The `--fault` / `--on-fault` arm of `count` (DESIGN.md §13). An
+/// injected fault puts the run on the seeded virtual fabric so the whole
+/// fault + recovery schedule replays deterministically (the printed trace
+/// hash is the replay key); without one, the production channel fabric is
+/// supervised directly.
+fn count_supervised(
+    cfg: &RunConfig,
+    extra: &std::collections::BTreeMap<String, String>,
+    g: &tricount::graph::csr::Csr,
+    o: &Arc<Oriented>,
+) -> Result<()> {
+    use tricount::ft::supervise;
+    use tricount::testkit::{Fabric, FaultPlan, SimConfig};
+
+    let p = if cfg.algorithm == Algorithm::DynamicLb { cfg.procs.max(2) } else { cfg.procs };
+    let job = supervised_job(cfg, g, o)?;
+    let fabric = match extra.get("fault") {
+        Some(spec) => {
+            let (rank, at_op) = parse_fault(spec, p)?;
+            println!(
+                "fault: killing rank {rank} at its transport op {at_op} (virtual fabric, seed {})",
+                cfg.seed
+            );
+            Fabric::Sim(SimConfig::with_faults(cfg.seed, FaultPlan::kill_one(rank, at_op)))
+        }
+        None => Fabric::Channel,
+    };
+    let t0 = std::time::Instant::now();
+    let run = supervise(&job, &fabric, p, cfg.on_fault)?;
+    let elapsed = t0.elapsed();
+    println!(
+        "triangles={} algorithm={:?} procs={p} on-fault={} time={:.3?}",
+        run.count, cfg.algorithm, cfg.on_fault, elapsed
+    );
+    let r = &run.recovery;
+    if r.attempts > 0 || r.degraded {
+        println!(
+            "recovery: attempts={} dead_ranks={:?} survivors={:?} salvaged_units={} partial_units={} reexec_work={} reexec_bytes={}",
+            r.attempts,
+            r.dead_ranks,
+            r.survivors.as_ref().map(|m| m.survivors.clone()).unwrap_or_default(),
+            r.salvaged_units,
+            r.partial_units,
+            r.reexec_work_units,
+            r.reexec_bytes
+        );
+    } else {
+        println!("recovery: none needed (fault-free run)");
+    }
+    if let Some(b) = run.bound {
+        println!(
+            "degraded answer: {} ≤ T ≤ {} (estimate {}; not exact — rerun with --on-fault recover for the exact count)",
+            b.lower, b.upper, b.estimate
+        );
+    }
+    if let Some(h) = run.trace_hash {
+        println!("trace hash: {h:016x} (same workload + seed + fault replays identically)");
+    }
+    tricount::obs::report::print_breakdown(&run.metrics);
+    if let Some(path) = extra.get("trace-out") {
+        let json = tricount::obs::export::cluster_trace_json("tricount count", &run.metrics);
+        std::fs::write(path, &json)?;
+        println!("[written: {path} — load at ui.perfetto.dev or chrome://tracing]");
+    }
+    if let Some(path) = extra.get("obs-out") {
+        let mut reg = tricount::obs::MetricsRegistry::new("count");
+        reg.record_cluster(&run.metrics);
+        reg.record_ft(&run.recovery, run.trace_hash);
+        reg.note(&format!("workload={}", cfg.workload));
+        reg.note(&format!("algorithm={:?}", cfg.algorithm));
+        std::fs::write(path, reg.snapshot_json())?;
+        println!("[written: {path} — inspect with `tricount obs-report {path}`]");
+    }
+    Ok(())
+}
+
+/// `tricount bench-recovery` — recovery latency and re-executed-work
+/// fraction vs kill position (first / middle / last transport op of the
+/// victim), written to `BENCH_recovery.json`. Runs on the seeded virtual
+/// fabric so every cell is deterministic, and verifies each recovered
+/// count against the fault-free baseline.
+fn cmd_bench_recovery(args: &[String]) -> Result<()> {
+    use tricount::ft::{supervise, FaultPolicy};
+    use tricount::testkit::{Fabric, FaultPlan, SimConfig};
+
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &["out"])?;
+    let out = extra.get("out").map(String::as_str).unwrap_or("BENCH_recovery.json");
+    let g = cfg.build_graph()?;
+    let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
+    let p = cfg.procs.max(2);
+    let job = supervised_job(&cfg, &g, &o)?;
+    println!(
+        "bench-recovery: workload={} n={} m={} algorithm={:?} P={p} seed={}",
+        cfg.workload,
+        g.num_nodes(),
+        g.num_edges(),
+        cfg.algorithm,
+        cfg.seed
+    );
+
+    // Fault-free baseline on the same fabric family: the oracle count, the
+    // total counting work, and the victim's transport-op budget (which
+    // positions the middle/last kills).
+    let t0 = std::time::Instant::now();
+    let probe =
+        supervise(&job, &Fabric::Sim(SimConfig::adversarial(cfg.seed)), p, FaultPolicy::Fail)?;
+    let base_wall = t0.elapsed();
+    let base_work = probe.metrics.totals().work_units.max(1);
+    let victim = 1usize; // a worker rank on every path (0 is the §V coordinator)
+    let v_ops = probe.metrics.per_rank[victim].transport_ops;
+
+    let mut report = exp::report::Report::new([
+        "position", "victim", "at_op", "attempts", "triangles", "exact", "wall_s",
+        "reexec_work_frac", "reexec_bytes", "salvaged_units",
+    ]);
+    report.row([
+        "baseline".into(),
+        "-".into(),
+        0u64.into(),
+        0u64.into(),
+        probe.count.into(),
+        "true".into(),
+        exp::report::Cell::Secs(base_wall.as_secs_f64()),
+        0.0f64.into(),
+        0u64.into(),
+        0u64.into(),
+    ]);
+    let cells =
+        [("first", 1u64), ("middle", (v_ops / 2).max(1)), ("last", v_ops.max(1))];
+    for (pos, at_op) in cells {
+        let fabric =
+            Fabric::Sim(SimConfig::with_faults(cfg.seed, FaultPlan::kill_one(victim, at_op)));
+        let t0 = std::time::Instant::now();
+        let run = supervise(&job, &fabric, p, FaultPolicy::Recover)?;
+        let wall = t0.elapsed();
+        let exact = run.count == probe.count;
+        let frac = run.recovery.reexec_work_units as f64 / base_work as f64;
+        println!(
+            "{pos:>7} (op {at_op}): triangles={} exact={exact} attempts={} wall={:.3?} reexec_work_frac={frac:.4} reexec_bytes={}",
+            run.count, run.recovery.attempts, wall, run.recovery.reexec_bytes
+        );
+        report.row([
+            pos.into(),
+            victim.into(),
+            at_op.into(),
+            (run.recovery.attempts as usize).into(),
+            run.count.into(),
+            exact.to_string().into(),
+            exp::report::Cell::Secs(wall.as_secs_f64()),
+            frac.into(),
+            run.recovery.reexec_bytes.into(),
+            run.recovery.salvaged_units.into(),
+        ]);
+        if !exact {
+            return Err(Error::Cluster(format!(
+                "bench-recovery: {pos} kill recovered {} != baseline {}",
+                run.count, probe.count
+            )));
+        }
+    }
+    report.note(format!(
+        "victim rank {victim} of P={p}; its fault-free transport-op budget is {v_ops}; \
+         reexec_work_frac is recovery work / fault-free counting work ({base_work} units)"
+    ));
+    report.print();
+    report.write_json(out)?;
+    println!("[written: {out}]");
     Ok(())
 }
 

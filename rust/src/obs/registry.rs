@@ -53,6 +53,21 @@ struct BatchRow {
     work: u64,
 }
 
+/// Fault-tolerance summary of a supervised run (the additive `ft` key,
+/// present iff [`MetricsRegistry::record_ft`] was called).
+#[derive(Clone, Debug, Default)]
+struct FtRow {
+    attempts: u32,
+    degraded: bool,
+    dead_ranks: Vec<usize>,
+    survivors: Vec<usize>,
+    salvaged_units: usize,
+    partial_units: usize,
+    reexec_work_units: u64,
+    reexec_bytes: u64,
+    trace_hash: Option<u64>,
+}
+
 /// Collects a run's measurements and serializes them as one snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsRegistry {
@@ -62,6 +77,7 @@ pub struct MetricsRegistry {
     batches: Vec<BatchRow>,
     phases: Vec<(String, f64)>,
     notes: Vec<String>,
+    ft: Option<FtRow>,
 }
 
 impl MetricsRegistry {
@@ -98,6 +114,24 @@ impl MetricsRegistry {
         self.phases.push((name.to_string(), secs));
     }
 
+    /// Record the fault-tolerance outcome of a supervised run (DESIGN.md
+    /// §13): recovery attempts, victims, re-executed work/bytes and the
+    /// replay trace hash. Emitted as the additive `ft` key — absent on
+    /// unsupervised runs, so pre-`ft/` snapshots stay byte-identical.
+    pub fn record_ft(&mut self, r: &crate::ft::RecoveryReport, trace_hash: Option<u64>) {
+        self.ft = Some(FtRow {
+            attempts: r.attempts,
+            degraded: r.degraded,
+            dead_ranks: r.dead_ranks.clone(),
+            survivors: r.survivors.as_ref().map(|m| m.survivors.clone()).unwrap_or_default(),
+            salvaged_units: r.salvaged_units,
+            partial_units: r.partial_units,
+            reexec_work_units: r.reexec_work_units,
+            reexec_bytes: r.reexec_bytes,
+            trace_hash,
+        });
+    }
+
     /// Attach a free-form annotation (workload, algorithm, config).
     pub fn note(&mut self, s: &str) {
         self.notes.push(s.to_string());
@@ -131,7 +165,8 @@ impl MetricsRegistry {
                  \"messages_received\": {}, \"control_sent\": {}, \"control_received\": {}, \
                  \"recv_wait_us\": {}, \"total_us\": {}, \"work_units\": {}, \
                  \"partition_bytes\": {}, \"partition_bytes_pred\": {}, \"accel_bytes\": {}, \
-                 \"kernel\": {}, \
+                 \"transport_ops\": {}, \"retries\": {}, \"reexec_work_units\": {}, \
+                 \"reexec_bytes\": {}, \"kernel\": {}, \
                  \"spans\": {{\"recorded\": {}, \"dropped\": {}, \"by_phase_us\": {{{}}}}}}}{}\n",
                 m.messages_sent,
                 m.bytes_sent,
@@ -144,6 +179,10 @@ impl MetricsRegistry {
                 m.partition_bytes,
                 m.partition_bytes_pred,
                 m.accel_bytes,
+                m.transport_ops,
+                m.retries,
+                m.reexec_work_units,
+                m.reexec_bytes,
                 kernel_json(&m.kernel),
                 m.spans.recorded(),
                 m.spans.dropped,
@@ -176,6 +215,24 @@ impl MetricsRegistry {
             ));
         }
         s.push_str("  ],\n");
+        // Additive `ft` section (schema evolution contract: adding keys
+        // bumps nothing; the key is absent on unsupervised runs).
+        if let Some(ft) = &self.ft {
+            s.push_str(&format!(
+                "  \"ft\": {{\"attempts\": {}, \"degraded\": {}, \"dead_ranks\": {:?}, \
+                 \"survivors\": {:?}, \"salvaged_units\": {}, \"partial_units\": {}, \
+                 \"reexec_work_units\": {}, \"reexec_bytes\": {}, \"trace_hash\": {}}},\n",
+                ft.attempts,
+                ft.degraded,
+                ft.dead_ranks,
+                ft.survivors,
+                ft.salvaged_units,
+                ft.partial_units,
+                ft.reexec_work_units,
+                ft.reexec_bytes,
+                ft.trace_hash.map_or("null".to_string(), |h| quote(&format!("{h:016x}")))
+            ));
+        }
         let notes: Vec<String> = self.notes.iter().map(|n| quote(n)).collect();
         s.push_str(&format!("  \"notes\": [{}]\n", notes.join(", ")));
         s.push_str("}\n");
@@ -458,7 +515,9 @@ pub fn parse_json(s: &str) -> Result<JsonValue, String> {
 // Schema validation
 // ---------------------------------------------------------------------------
 
-const RANK_KEYS: [&str; 14] = [
+// `transport_ops`/`retries`/`reexec_*` were added by the `ft/` PR under
+// the evolution contract, like `simd_blocked` before them.
+const RANK_KEYS: [&str; 18] = [
     "rank",
     "messages_sent",
     "bytes_sent",
@@ -471,6 +530,10 @@ const RANK_KEYS: [&str; 14] = [
     "partition_bytes",
     "partition_bytes_pred",
     "accel_bytes",
+    "transport_ops",
+    "retries",
+    "reexec_work_units",
+    "reexec_bytes",
     "kernel",
     "spans",
 ];
@@ -538,6 +601,24 @@ pub fn validate_snapshot(json: &str) -> Result<JsonValue, String> {
     require_kernel(require(&v, "kernels_global", "snapshot")?, "kernels_global")?;
     require(&v, "batches", "snapshot")?.as_arr().ok_or("snapshot: batches must be an array")?;
     require(&v, "phases", "snapshot")?.as_arr().ok_or("snapshot: phases must be an array")?;
+    // `ft` is additive (present only on supervised runs), but when present
+    // it must carry the full recovery summary.
+    if let Some(ft) = v.get("ft") {
+        for k in [
+            "attempts",
+            "salvaged_units",
+            "partial_units",
+            "reexec_work_units",
+            "reexec_bytes",
+        ] {
+            require(ft, k, "ft")?
+                .as_u64()
+                .ok_or_else(|| format!("ft: \"{k}\" must be a non-negative integer"))?;
+        }
+        for k in ["degraded", "dead_ranks", "survivors", "trace_hash"] {
+            require(ft, k, "ft")?;
+        }
+    }
     require(&v, "notes", "snapshot")?.as_arr().ok_or("snapshot: notes must be an array")?;
     Ok(v)
 }
@@ -635,6 +716,39 @@ mod tests {
         assert_eq!(batches[0].get("work").unwrap().as_u64(), Some(11));
         let notes = v.get("notes").unwrap().as_arr().unwrap();
         assert_eq!(notes[0].as_str(), Some("quoted \"note\" with\nnewline"));
+    }
+
+    #[test]
+    fn ft_section_serializes_and_validates() {
+        let mut reg = MetricsRegistry::new("count");
+        reg.record_cluster(&synthetic_cluster());
+        // Absent unless recorded — unsupervised snapshots are unchanged.
+        assert!(validate_snapshot(&reg.snapshot_json()).unwrap().get("ft").is_none());
+        let rec = crate::ft::RecoveryReport {
+            attempts: 1,
+            dead_ranks: vec![2],
+            survivors: Some(crate::ft::RankMap::surviving(4, &[2])),
+            reexec_work_units: 77,
+            reexec_bytes: 123,
+            salvaged_units: 5,
+            partial_units: 1,
+            degraded: false,
+        };
+        reg.record_ft(&rec, Some(0xDEAD_BEEF));
+        let json = reg.snapshot_json();
+        let v = validate_snapshot(&json).unwrap();
+        let ft = v.get("ft").expect("ft section present after record_ft");
+        assert_eq!(ft.get("attempts").unwrap().as_u64(), Some(1));
+        assert_eq!(ft.get("reexec_work_units").unwrap().as_u64(), Some(77));
+        assert_eq!(ft.get("dead_ranks").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(ft.get("survivors").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(ft.get("trace_hash").unwrap().as_str(), Some("00000000deadbeef"));
+        // Per-rank retry/re-execution counters are part of the rank rows.
+        let ranks = v.get("ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks[0].get("retries").unwrap().as_u64(), Some(0));
+        assert_eq!(ranks[0].get("transport_ops").unwrap().as_u64(), Some(0));
+        // Determinism: same registry ⇒ identical bytes.
+        assert_eq!(json, reg.snapshot_json());
     }
 
     #[test]

@@ -38,17 +38,22 @@ pub enum SpanPhase {
     Reduce,
     /// Applying a normalized stream batch to owned state (+ compaction).
     BatchApply,
+    /// Fault-tolerant re-execution (`ft::supervisor`): work performed on a
+    /// recovery attempt after a rank death — the ticks the run would not
+    /// have spent fault-free.
+    Recovery,
 }
 
 impl SpanPhase {
     /// Every phase, in schema order.
-    pub const ALL: [SpanPhase; 6] = [
+    pub const ALL: [SpanPhase; 7] = [
         SpanPhase::Compute,
         SpanPhase::Send,
         SpanPhase::RecvWait,
         SpanPhase::Barrier,
         SpanPhase::Reduce,
         SpanPhase::BatchApply,
+        SpanPhase::Recovery,
     ];
 
     /// Stable schema / trace-event name.
@@ -60,6 +65,7 @@ impl SpanPhase {
             SpanPhase::Barrier => "barrier",
             SpanPhase::Reduce => "reduce",
             SpanPhase::BatchApply => "batch_apply",
+            SpanPhase::Recovery => "recovery",
         }
     }
 }

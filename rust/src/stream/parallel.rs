@@ -20,7 +20,7 @@
 use std::sync::Arc;
 
 use crate::comm::metrics::ClusterMetrics;
-use crate::comm::threads::Comm;
+use crate::comm::threads::{Comm, Progress, ProgressUnit};
 use crate::config::CostFn;
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
@@ -140,6 +140,23 @@ pub fn run_with_initial_on(
     opts: StreamOptions,
     initial: TriangleCount,
 ) -> (Result<StreamRunResult>, Option<TraceReport>) {
+    run_with_initial_hooked_on(fabric, base, batches, p, opts, initial, None)
+}
+
+/// [`run_with_initial_on`] with an `ft/` checkpoint sink (`ft::supervisor`
+/// entry point). Rank 0 acks each batch with its reduced signed Δ
+/// (bit-cast to `u64`) after the allreduce pair — a phase-boundary
+/// watermark; batches past the watermark are re-streamed on recovery.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with_initial_hooked_on(
+    fabric: &Fabric,
+    base: &Csr,
+    batches: &[Batch],
+    p: usize,
+    opts: StreamOptions,
+    initial: TriangleCount,
+    progress: Option<Arc<dyn Progress>>,
+) -> (Result<StreamRunResult>, Option<TraceReport>) {
     assert!(p >= 1, "need at least one rank");
     // Balance node ownership by degree (the streaming analogue of §IV-B:
     // an update's cost is the degree of its endpoints). Only degrees are
@@ -152,7 +169,7 @@ pub fn run_with_initial_on(
     let base: Arc<Csr> = Arc::new(base.clone());
     let batches: Arc<Vec<Batch>> = Arc::new(batches.to_vec());
 
-    let (results, trace) = fabric.try_run::<u64, RankOutput, _>(p, |c| {
+    let (results, trace) = fabric.try_run_hooked::<u64, RankOutput, _>(p, progress, |c| {
         rank_main(c, base.clone(), batches.clone(), owner.clone(), opts, initial)
     });
     let results = match results {
@@ -218,7 +235,7 @@ fn rank_main(
     let mut scratch = Scratch::default();
     let mut per_batch = Vec::with_capacity(batches.len());
 
-    for batch in batches.iter() {
+    for (bi, batch) in batches.iter().enumerate() {
         // Normalize + count under one Compute span; the replica update
         // below gets its own BatchApply span. The allreduce pair between
         // them records Reduce spans on its own.
@@ -248,6 +265,11 @@ fn rank_main(
         c.span_end();
         // MPI_Allreduce(SUM) ×2: positive and negative magnitudes.
         let delta = c.reduce_sum(plus)? as i64 - c.reduce_sum(minus)? as i64;
+        // Batch watermark: the reduced Δ is identical on every rank; rank 0
+        // publishes it once (signed, bit-cast) at this phase boundary.
+        if c.rank() == 0 {
+            c.ckpt_ack(ProgressUnit::batch(bi as u32), delta as u64);
+        }
         c.metrics.work_units += work;
         c.span_begin(SpanPhase::BatchApply);
         state.apply_normalized(&nb, delta)?;

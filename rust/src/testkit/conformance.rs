@@ -15,10 +15,16 @@
 //!    and Σ control_sent == Σ control_received per tag class, i.e. every
 //!    protocol drains its own traffic.
 //!
-//! A separate fault pass injects rank death into *every* path (must yield
-//! `Err`, never hang) and message loss into every path with point-to-point
-//! traffic (outcome must replay identically; for the request/reply
-//! protocols the lost message must trip the virtual recv guard).
+//! A separate fault pass injects rank death into *every* path (under
+//! `--on-fault fail` the run must yield `Err`, never hang) and message
+//! loss into every path with point-to-point traffic (outcome must replay
+//! identically; the request/reply protocols must *survive* the loss via
+//! the `ft/` bounded-retry machinery — retries > 0, zero recv-guard trips,
+//! exact count). A recovery matrix then kills one rank per cell — first /
+//! middle / last transport op of the victim, probe-derived — across every
+//! path × P and asserts `--on-fault recover` reproduces the exact oracle
+//! count (twice, identical combined trace hash) and `--on-fault degrade`
+//! returns a confidence bound containing the truth (DESIGN.md §13).
 //!
 //! Used by `tricount conformance --seeds n` (CI gates on it, twice, and
 //! diffs the emitted JSON for the replay-determinism check) and by
@@ -430,6 +436,7 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
     if opts.faults {
         if let Some(w) = prepared.first() {
             fault_suite(w, &opts.paths, &mut report);
+            recovery_suite(w, &opts.paths, &opts.procs, &mut report);
         }
     }
     report.matrix_hash = combine_hashes(all_hashes);
@@ -466,8 +473,13 @@ fn fault_suite(w: &Prepared, paths: &[Path], report: &mut ConformanceReport) {
             )),
         }
 
-        // Message loss: outcome must replay identically; for request/reply
-        // protocols the receiver must stall into the virtual recv guard.
+        // Message loss: outcome must replay identically. The request/reply
+        // protocols (direct, dynamic-lb, local-counts) must *survive* the
+        // loss through the `ft/` bounded-retry machinery: exact count,
+        // retries > 0, deadline expiries recorded, zero recv-guard trips.
+        // Surrogate's one-way data plane has no reply to time out on — a
+        // lost data message is the supervisor's domain (DESIGN.md §13), so
+        // its drop cell asserts determinism only.
         if !path.has_p2p() {
             continue;
         }
@@ -489,13 +501,180 @@ fn fault_suite(w: &Prepared, paths: &[Path], report: &mut ConformanceReport) {
                 .push(format!("{} message-drop: nondeterministic (`{o1}` vs `{o2}`)", path.name()));
         }
         if matches!(path, Path::Direct | Path::DynamicLb | Path::LocalCounts) {
-            match &r1 {
-                Err(e) if e.to_string().contains("virtual recv guard") => {}
-                other => report.failures.push(format!(
-                    "{} message-drop: expected a virtual recv guard trip, got {}",
+            match (&r1, &t1) {
+                (Ok(run), Some(t)) => {
+                    if run.count != w.oracle_for(path) {
+                        report.failures.push(format!(
+                            "{} message-drop: retried count {} != oracle {}",
+                            path.name(),
+                            run.count,
+                            w.oracle_for(path)
+                        ));
+                    }
+                    let retries: u64 =
+                        run.metrics.per_rank.iter().map(|m| m.retries).sum();
+                    if retries == 0 {
+                        report.failures.push(format!(
+                            "{} message-drop: survived without retries — the drop never bit",
+                            path.name()
+                        ));
+                    }
+                    if t.guards != 0 {
+                        report.failures.push(format!(
+                            "{} message-drop: {} recv-guard trips (retry machinery must \
+                             resolve the loss before the guard)",
+                            path.name(),
+                            t.guards
+                        ));
+                    }
+                    if t.deadlines == 0 {
+                        report.failures.push(format!(
+                            "{} message-drop: no deadline expiries recorded, yet retries ran",
+                            path.name()
+                        ));
+                    }
+                }
+                _ => report.failures.push(format!(
+                    "{} message-drop: expected bounded-retry recovery (Ok + trace), got {}",
                     path.name(),
-                    outcome_string(other)
+                    o1
                 )),
+            }
+        }
+    }
+}
+
+/// Where in the victim's life the kill lands (positions derived from a
+/// fault-free probe of the same schedule family).
+#[derive(Clone, Copy, Debug)]
+enum KillPos {
+    First,
+    Middle,
+    Last,
+}
+
+/// Build the supervisor job for a path over a prepared workload — mirrors
+/// [`run_path`]'s launch parameters exactly, so supervised and plain runs
+/// count the same protocol.
+fn job_for<'a>(path: Path, w: &'a Prepared) -> crate::ft::Job<'a> {
+    use crate::ft::Job;
+    match path {
+        Path::Surrogate => {
+            Job::Surrogate { graph: &w.oriented, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }
+        }
+        Path::Direct => {
+            Job::Direct { graph: &w.oriented, cost: CostFn::SurrogateNew, hub: HubThreshold::Auto }
+        }
+        Path::Patric => Job::Patric {
+            g: &w.graph,
+            graph: &w.oriented,
+            cost: CostFn::PatricBest,
+            hub: HubThreshold::Auto,
+        },
+        Path::DynamicLb => {
+            Job::DynamicLb { graph: &w.oriented, opts: dynamic_lb::Options::default() }
+        }
+        Path::LocalCounts => Job::LocalCounts { graph: &w.oriented },
+        Path::Stream => Job::Stream {
+            base: &w.stream_base,
+            batches: &w.stream_batches,
+            opts: StreamOptions::default(),
+            initial: w.stream_initial,
+        },
+    }
+}
+
+/// The recovery matrix: every path × P × {first, middle, last} kill
+/// position. Per cell: `recover` must reproduce the exact oracle count —
+/// twice, with identical combined trace hash — and `degrade` must return a
+/// bound containing the truth. Kill positions are probed from a fault-free
+/// run so "middle" and "last" track each protocol's actual op counts.
+fn recovery_suite(w: &Prepared, paths: &[Path], procs: &[usize], report: &mut ConformanceReport) {
+    use crate::ft::{supervise, FaultPolicy};
+    for (pi, &path) in paths.iter().enumerate() {
+        for &p in procs {
+            let probe_fabric = Fabric::Sim(SimConfig::adversarial(cell_seed(0xFA07, p, pi, 0)));
+            let (probe, _) = run_path(path, &probe_fabric, w, p);
+            let ops: Vec<u64> = match &probe {
+                Ok(run) => run.metrics.per_rank.iter().map(|m| m.transport_ops).collect(),
+                Err(e) => {
+                    report
+                        .failures
+                        .push(format!("{} P={p} recovery probe failed: {e}", path.name()));
+                    continue;
+                }
+            };
+            let cells = [(0usize, KillPos::First), (p / 2, KillPos::Middle), (p - 1, KillPos::Last)];
+            for (ci, &(victim, pos)) in cells.iter().enumerate() {
+                let v_ops = ops.get(victim).copied().unwrap_or(1).max(1);
+                let at_op = match pos {
+                    KillPos::First => 1,
+                    KillPos::Middle => (v_ops / 2).max(1),
+                    KillPos::Last => v_ops,
+                };
+                let cfg = SimConfig::with_faults(
+                    cell_seed(0xFA07, p, pi, 1 + ci as u64),
+                    FaultPlan::kill_one(victim, at_op),
+                );
+                let fabric = Fabric::Sim(cfg);
+                let job = job_for(path, w);
+                let oracle = w.oracle_for(path);
+                let cell = format!("{} P={p} kill(rank {victim} @op {at_op}, {pos:?})", path.name());
+                report.fault_checks += 1;
+
+                let a = supervise(&job, &fabric, p, FaultPolicy::Recover);
+                let b = supervise(&job, &fabric, p, FaultPolicy::Recover);
+                match (&a, &b) {
+                    (Ok(a), Ok(b)) => {
+                        if a.count != oracle {
+                            report.failures.push(format!(
+                                "{cell}: recovered count {} != oracle {oracle}",
+                                a.count
+                            ));
+                        }
+                        if b.count != a.count || b.trace_hash != a.trace_hash {
+                            report.failures.push(format!(
+                                "{cell}: recovery replay diverged (count {} vs {}, hash {:x?} \
+                                 vs {:x?})",
+                                b.count, a.count, b.trace_hash, a.trace_hash
+                            ));
+                        }
+                    }
+                    _ => {
+                        let sup_outcome = |r: &Result<crate::ft::SupervisedRun>| match r {
+                            Ok(run) => format!("ok: {}", run.count),
+                            Err(e) => format!("err: {e}"),
+                        };
+                        report.failures.push(format!(
+                            "{cell}: recovery failed ({} / replay {})",
+                            sup_outcome(&a),
+                            sup_outcome(&b)
+                        ));
+                    }
+                }
+
+                match supervise(&job, &fabric, p, FaultPolicy::Degrade) {
+                    Ok(d) => match d.bound {
+                        Some(bound) if !bound.contains(oracle) => {
+                            report.failures.push(format!(
+                                "{cell}: degrade bound {bound:?} excludes oracle {oracle}"
+                            ));
+                        }
+                        // The kill landed after all counting finished (e.g.
+                        // silently on the victim's final try_recv): the run
+                        // completed and no bound was needed — exactness holds.
+                        None if d.count != oracle => {
+                            report.failures.push(format!(
+                                "{cell}: degrade without bound returned {} != oracle {oracle}",
+                                d.count
+                            ));
+                        }
+                        _ => {}
+                    },
+                    Err(e) => {
+                        report.failures.push(format!("{cell}: degrade errored: {e}"));
+                    }
+                }
             }
         }
     }

@@ -98,6 +98,20 @@ impl FaultPlan {
         FaultPlan { kills: vec![Kill { rank, at_op }], ..Default::default() }
     }
 
+    /// Alias for [`FaultPlan::kill`] under the name the conformance fault
+    /// matrix uses: exactly *one* victim per cell, so recovery always has
+    /// `p − 1` survivors to re-execute on.
+    pub fn kill_one(rank: usize, at_op: u64) -> Self {
+        Self::kill(rank, at_op)
+    }
+
+    /// Strip the kills, keep drops/slow — the supervisor's recovery
+    /// attempts run on a fabric where the victim cannot die twice but the
+    /// schedule stays adversarial.
+    pub fn without_kills(&self) -> Self {
+        FaultPlan { kills: Vec::new(), drops: self.drops.clone(), slow: self.slow.clone() }
+    }
+
     /// Drop the `nth` message on `src → dst`.
     pub fn drop_nth(src: usize, dst: usize, nth: u64) -> Self {
         FaultPlan { drops: vec![DropRule { src, dst, nth }], ..Default::default() }

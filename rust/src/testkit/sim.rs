@@ -37,10 +37,11 @@
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
 
 use crate::comm::metrics::CommMetrics;
-use crate::comm::threads::{Cluster, Comm};
-use crate::comm::transport::{Envelope, Payload, Transport};
+use crate::comm::threads::{try_recv_guard, Cluster, Comm, Progress};
+use crate::comm::transport::{Envelope, Liveness, Payload, Transport};
 use crate::error::{Error, Result};
 use crate::gen::rng::Rng;
 use crate::testkit::sched::SimConfig;
@@ -71,10 +72,27 @@ impl Fabric {
         R: Send,
         F: Fn(&mut Comm<M>) -> Result<R> + Sync,
     {
+        self.try_run_hooked(p, None, f)
+    }
+
+    /// [`Fabric::try_run`] with an `ft/` checkpoint sink installed on every
+    /// rank — the supervised entry point (`ft::supervisor` uses this to
+    /// harvest partial sums and acknowledgements across a faulting run).
+    pub fn try_run_hooked<M, R, F>(
+        &self,
+        p: usize,
+        progress: Option<Arc<dyn Progress>>,
+        f: F,
+    ) -> (Result<Vec<(R, CommMetrics)>>, Option<TraceReport>)
+    where
+        M: Payload,
+        R: Send,
+        F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+    {
         match self {
-            Fabric::Channel => (Cluster::try_run(p, f), None),
+            Fabric::Channel => (Cluster::try_run_supervised(p, progress, f), None),
             Fabric::Sim(cfg) => {
-                let (r, t) = try_run_sim(p, cfg, f);
+                let (r, t) = try_run_sim_hooked(p, cfg, progress, f);
                 (r, Some(t))
             }
         }
@@ -136,6 +154,10 @@ struct RankCell<M> {
     fail: Option<String>,
     /// Transport ops performed — the `Kill::at_op` trigger counter.
     ops: u64,
+    /// Virtual-time deadline armed by `recv_deadline`. A `BlockedRecv`
+    /// rank carrying one is *woken* (empty-handed) instead of guard-failed
+    /// when the fabric stalls — the ft/ retry tier's wake-up call.
+    timeout_at: Option<u64>,
 }
 
 struct SimState<M> {
@@ -170,6 +192,7 @@ impl<M: Payload> SimState<M> {
                     handed: None,
                     fail: None,
                     ops: 0,
+                    timeout_at: None,
                 })
                 .collect(),
             in_flight: BinaryHeap::new(),
@@ -249,8 +272,39 @@ impl<M: Payload> SimState<M> {
                 self.current = Some(pick);
                 return;
             }
-            // Nothing runnable, nothing on the wire: every blocked rank is
-            // provably deadlocked — fail them all, deterministically.
+            // Nothing runnable, nothing on the wire. Before declaring
+            // deadlock, expire recv deadlines: in virtual time a total
+            // stall means *every* pending deadline fires, so advance the
+            // clock to the earliest one and wake the ranks it covers
+            // empty-handed (their `recv_deadline` returns `Ok(None)` and
+            // the retry tier takes over). Waking earliest-first keeps the
+            // schedule faithful — a woken rank may resend and revive the
+            // fabric before later deadlines ever fire. Livelock-free
+            // because retries are bounded (`RetryPolicy::max_retries`).
+            let next_deadline = self
+                .cells
+                .iter()
+                .filter(|c| c.phase == Phase::BlockedRecv)
+                .filter_map(|c| c.timeout_at)
+                .min();
+            if let Some(at) = next_deadline {
+                if at > self.now {
+                    self.now = at;
+                }
+                let now = self.now;
+                for i in 0..self.cells.len() {
+                    if self.cells[i].phase == Phase::BlockedRecv
+                        && self.cells[i].timeout_at.is_some_and(|t| t <= now)
+                    {
+                        self.trace.event(EventKind::Deadline, i as u64, 0, 0, 0, now);
+                        self.cells[i].timeout_at = None;
+                        self.cells[i].phase = Phase::Ready;
+                    }
+                }
+                continue;
+            }
+            // Every blocked rank is provably deadlocked — fail them all,
+            // deterministically.
             let mut any_blocked = false;
             for i in 0..self.cells.len() {
                 let what = match self.cells[i].phase {
@@ -464,6 +518,43 @@ impl<M: Payload> Transport<M> for VirtualEndpoint<M> {
         Ok(env)
     }
 
+    /// Deadline recv in *virtual* time: `d` converts to virtual ticks
+    /// (1 tick = 1µs), and the deadline only fires when the fabric stalls
+    /// — which in virtual time is exactly when infinite wall time passes.
+    /// Returns `Ok(None)` on expiry; the rank stays alive and retries.
+    /// Fully replayable: the wake is a scheduler decision under the token,
+    /// folded into the trace as [`EventKind::Deadline`].
+    fn recv_deadline(&mut self, d: Duration) -> Result<Option<Envelope<M>>> {
+        let mut g = self.shared.state.lock().unwrap();
+        self.preamble(&mut g)?;
+        g = self.maybe_switch(g);
+        if let Some(env) = g.cells[self.rank].mailbox.pop_front() {
+            return Ok(Some(env));
+        }
+        let ticks = (d.as_micros() as u64).max(1);
+        let at = g.now.saturating_add(ticks);
+        g.cells[self.rank].timeout_at = Some(at);
+        g = self.block(g, Phase::BlockedRecv);
+        g.cells[self.rank].timeout_at = None;
+        if let Some(msg) = g.cells[self.rank].fail.take() {
+            return Err(Error::Cluster(msg));
+        }
+        // `None` here means the scheduler woke us on the deadline.
+        Ok(g.cells[self.rank].handed.take())
+    }
+
+    /// Peer state straight from the scheduler: a killed or finished rank
+    /// is `Dead`, everything else is `Alive`. `Slow` never occurs — the
+    /// one-token sim has no wall-clock staleness, and slowness faults only
+    /// stretch delivery latency, which deadlines already observe.
+    fn liveness(&self, rank: usize, _stale_after: Duration) -> Liveness {
+        let g = self.shared.state.lock().unwrap();
+        match g.cells[rank].phase {
+            Phase::Dead | Phase::Done => Liveness::Dead,
+            _ => Liveness::Alive,
+        }
+    }
+
     fn barrier(&mut self) -> Result<()> {
         let mut g = self.shared.state.lock().unwrap();
         self.preamble(&mut g)?;
@@ -563,7 +654,27 @@ where
     R: Send,
     F: Fn(&mut Comm<M>) -> Result<R> + Sync,
 {
+    try_run_sim_hooked(p, cfg, None, f)
+}
+
+/// [`try_run_sim`] with an `ft/` checkpoint sink installed on every rank.
+pub fn try_run_sim_hooked<M, R, F>(
+    p: usize,
+    cfg: &SimConfig,
+    progress: Option<Arc<dyn Progress>>,
+    f: F,
+) -> (Result<Vec<(R, CommMetrics)>>, TraceReport)
+where
+    M: Payload,
+    R: Send,
+    F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+{
     assert!(p >= 1, "cluster needs at least one rank");
+    // Same startup contract as the channel fabric: a malformed recv-guard
+    // override is a config error before any rank spawns.
+    if let Err(e) = try_recv_guard() {
+        return (Err(e), TraceRecorder::default().report(0));
+    }
     let shared = Arc::new(SimShared {
         state: Mutex::new(SimState::new(p, cfg.clone())),
         cv: Condvar::new(),
@@ -571,7 +682,7 @@ where
     let comms: Vec<Comm<M>> = (0..p)
         .map(|rank| Comm::from_virtual(VirtualEndpoint { rank, size: p, shared: shared.clone() }))
         .collect();
-    let result = Cluster::launch(comms, f);
+    let result = Cluster::launch(comms, progress, f);
     let g = shared.state.lock().unwrap();
     let report = g.trace.report(g.now);
     drop(g);
@@ -736,6 +847,99 @@ mod tests {
         assert_eq!(t1, t2);
         assert_eq!(t1.dropped, 1);
         assert_eq!(t1.guards, 1);
+    }
+
+    #[test]
+    fn recv_deadline_wakes_instead_of_guard_tripping() {
+        // A rank waiting on a message that never comes, with a deadline
+        // armed, is *woken* (Ok(None)) rather than failed by the guard.
+        let cfg = SimConfig::adversarial(17);
+        let run = || {
+            try_run_sim::<u64, bool, _>(2, &cfg, |c| {
+                if c.rank() == 1 {
+                    let got = c.recv_deadline(Duration::from_millis(5))?;
+                    Ok(got.is_none())
+                } else {
+                    Ok(true)
+                }
+            })
+        };
+        let (r1, t1) = run();
+        let (r2, t2) = run();
+        for (timed_out, _) in r1.unwrap() {
+            assert!(timed_out, "nothing was sent — the deadline must expire");
+        }
+        assert_eq!(t1, t2, "deadline wakes must replay identically");
+        assert_eq!(t1.deadlines, 1);
+        assert_eq!(t1.guards, 0, "a deadline expiry is not a deadlock");
+        r2.unwrap();
+    }
+
+    #[test]
+    fn bounded_retry_recovers_a_dropped_request() {
+        use crate::comm::transport::RetryPolicy;
+        // Rank 1's first request to rank 0 is eaten by the fault plan; the
+        // retry tier re-sends it after a virtual deadline and the exchange
+        // completes — no guard trip, exactly one retry on the books.
+        let cfg = SimConfig::with_faults(19, FaultPlan::drop_nth(1, 0, 1));
+        let policy = RetryPolicy::default();
+        let run = || {
+            try_run_sim::<u64, u64, _>(2, &cfg, |c| {
+                if c.rank() == 1 {
+                    c.send(0, 7)?; // dropped
+                    let got = c
+                        .recv_retry(0, &policy, |c| c.send(0, 7))?
+                        .expect("bounded retries must recover the exchange");
+                    Ok(got.1)
+                } else {
+                    let (_src, v) = c.recv()?;
+                    c.send(1, v * 6)?;
+                    Ok(0)
+                }
+            })
+        };
+        let (r1, t1) = run();
+        let (r2, t2) = run();
+        let res = r1.unwrap();
+        assert_eq!(res[1].0, 42);
+        assert_eq!(res[1].1.retries, 1, "exactly one retransmission");
+        assert_eq!(t1.dropped, 1);
+        assert_eq!(t1.guards, 0, "retry must preempt the deadlock guard");
+        assert!(t1.deadlines >= 1);
+        assert_eq!(t1, t2, "retry schedules must replay identically");
+        r2.unwrap();
+    }
+
+    #[test]
+    fn liveness_reports_dead_peer_fast() {
+        use crate::comm::transport::RetryPolicy;
+        // Rank 0 dies *silently* on its first op (a kill landing in
+        // `try_recv` cannot error); rank 1's retry loop must fail via the
+        // liveness board ("peer is dead") instead of burning all retries
+        // against a corpse.
+        let cfg = SimConfig::with_faults(23, FaultPlan::kill(0, 1));
+        let policy = RetryPolicy::default();
+        let (r, t) = try_run_sim::<u64, u64, _>(2, &cfg, |c| {
+            if c.rank() == 1 {
+                let got = c.recv_retry(0, &policy, |c| {
+                    // Peer already dead — resends fail; swallow and retry.
+                    let _ = c.send(0, 7);
+                    Ok(())
+                })?;
+                Ok(got.map(|(_, v)| v).unwrap_or(0))
+            } else {
+                let _ = c.try_recv(); // kill fires here (op 1), silently
+                Ok(0)
+            }
+        });
+        match r {
+            Err(Error::RankFailure { rank, msg, .. }) => {
+                assert_eq!(rank, 1, "the liveness check is the only surfaced failure");
+                assert!(msg.contains("peer rank 0 is dead"), "{msg}");
+            }
+            other => panic!("expected rank 1's liveness failure, got {other:?}"),
+        }
+        assert_eq!(t.deaths, 1);
     }
 
     #[test]

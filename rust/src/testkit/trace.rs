@@ -30,6 +30,9 @@ pub enum EventKind {
     Barrier = 7,
     /// A reduce generation completed.
     Reduce = 8,
+    /// A `recv_deadline` expired and woke its rank (ft/ retry machinery);
+    /// unlike [`EventKind::Guard`] the rank continues, it does not fail.
+    Deadline = 9,
 }
 
 const FNV_OFFSET: u64 = 0xcbf29ce484222325;
@@ -56,6 +59,8 @@ pub struct TraceRecorder {
     dropped: u64,
     deaths: u64,
     guards: u64,
+    deadlines: u64,
+    dead_mask: u64,
 }
 
 impl Default for TraceRecorder {
@@ -68,6 +73,8 @@ impl Default for TraceRecorder {
             dropped: 0,
             deaths: 0,
             guards: 0,
+            deadlines: 0,
+            dead_mask: 0,
         }
     }
 }
@@ -87,8 +94,14 @@ impl TraceRecorder {
             EventKind::Send => self.sends += 1,
             EventKind::Deliver => self.delivered += 1,
             EventKind::DropFault | EventKind::DropUnreachable => self.dropped += 1,
-            EventKind::Death => self.deaths += 1,
+            EventKind::Death => {
+                self.deaths += 1;
+                if src < 64 {
+                    self.dead_mask |= 1u64 << src;
+                }
+            }
             EventKind::Guard => self.guards += 1,
+            EventKind::Deadline => self.deadlines += 1,
             EventKind::Barrier | EventKind::Reduce => {}
         }
     }
@@ -103,6 +116,8 @@ impl TraceRecorder {
             dropped: self.dropped,
             deaths: self.deaths,
             guards: self.guards,
+            deadlines: self.deadlines,
+            dead_mask: self.dead_mask,
             vt_end,
         }
     }
@@ -126,8 +141,22 @@ pub struct TraceReport {
     pub deaths: u64,
     /// Ranks failed by the virtual recv guard.
     pub guards: u64,
+    /// `recv_deadline` expiries (ranks woken to retry, not failed).
+    pub deadlines: u64,
+    /// Bit `r` set ⇔ rank `r` was killed by a fault plan (ranks ≥ 64
+    /// are counted in `deaths` but not representable here; the sim caps
+    /// out far below that). The `ft/` supervisor reads the victim set
+    /// from this mask instead of parsing error strings.
+    pub dead_mask: u64,
     /// Virtual clock at the end of the run.
     pub vt_end: u64,
+}
+
+impl TraceReport {
+    /// The killed ranks, decoded from [`TraceReport::dead_mask`].
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        (0..64).filter(|r| self.dead_mask >> r & 1 == 1).collect()
+    }
 }
 
 /// Combine per-cell trace hashes into one matrix fingerprint (order

@@ -1,0 +1,40 @@
+//! End-to-end check for the `TRICOUNT_RECV_GUARD_SECS` startup contract:
+//! a malformed override is an [`Error::Config`] *before any rank spawns*,
+//! on both the channel and the virtual fabric — not a silent fallback to
+//! the 30-minute default, and not a mid-run surprise.
+//!
+//! This lives in its own integration-test binary (own process) because it
+//! mutates the environment; in the unit-test binary it would race every
+//! other test that launches a cluster.
+
+use tricount::comm::Cluster;
+use tricount::error::Error;
+use tricount::testkit::sim::try_run_sim;
+use tricount::testkit::SimConfig;
+
+#[test]
+fn malformed_recv_guard_fails_startup_on_both_fabrics() {
+    std::env::set_var("TRICOUNT_RECV_GUARD_SECS", "bogus");
+
+    let channel = Cluster::try_run::<u64, (), _>(2, |_| Ok(()));
+    match channel {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("TRICOUNT_RECV_GUARD_SECS"), "{msg}");
+            assert!(msg.contains("bogus"), "{msg}");
+        }
+        other => panic!("channel fabric: expected config error at startup, got {other:?}"),
+    }
+
+    let (sim, _trace) = try_run_sim::<u64, (), _>(2, &SimConfig::adversarial(1), |_| Ok(()));
+    match sim {
+        Err(Error::Config(msg)) => {
+            assert!(msg.contains("TRICOUNT_RECV_GUARD_SECS"), "{msg}")
+        }
+        other => panic!("virtual fabric: expected config error at startup, got {other:?}"),
+    }
+
+    // A well-formed override passes the same gate.
+    std::env::set_var("TRICOUNT_RECV_GUARD_SECS", "900");
+    Cluster::try_run::<u64, (), _>(2, |_| Ok(())).expect("valid guard must pass");
+    std::env::remove_var("TRICOUNT_RECV_GUARD_SECS");
+}
