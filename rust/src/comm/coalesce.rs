@@ -1,0 +1,237 @@
+//! Per-destination message aggregation (after Sanders & Uhl,
+//! arXiv 2302.11443): many small logical messages to the same peer are
+//! packed into bounded **frames**, so the per-message constant α is paid
+//! once per frame instead of once per envelope. The 2D tile driver
+//! (`algo::tile2d`) broadcasts its row/column pieces this way, and the
+//! direct scheme (`algo::direct`) batches its per-edge request/reply
+//! traffic through the same buffer — [`crate::comm::metrics::CommMetrics`]
+//! counts frames and logical items separately so the aggregation ratio is
+//! auditable (`coalesced_sent / frames_sent`).
+//!
+//! ## Frame format
+//!
+//! A frame's payload is a flat `Vec<u32>` of back-to-back records:
+//!
+//! ```text
+//! [tag, len, payload_0, …, payload_{len-1}]  [tag, len, …]  …
+//! ```
+//!
+//! `tag` is protocol-defined (a vertex id for the tile broadcasts, a
+//! request/response discriminant for the direct scheme); `len` is the
+//! payload word count. Packing order is push order, so identical pushes
+//! produce byte-identical frames — replay determinism needs nothing more.
+//!
+//! ## Flush watermark
+//!
+//! A buffer closes its current frame as soon as the payload reaches the
+//! watermark (in words): frames are bounded by `watermark + 2 + largest
+//! record`, and a single record larger than the watermark travels alone.
+//! `flush()` drains whatever remains — senders call it at the end of a
+//! sweep (and whenever a peer may be blocked waiting on the content).
+
+/// Default flush watermark: 1024 payload words = 4 KiB frames.
+pub const DEFAULT_WATERMARK_WORDS: usize = 1024;
+
+/// A packed frame: `items` logical records in `words`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    /// Number of logical records packed into this frame.
+    pub items: u64,
+    /// Back-to-back `[tag, len, payload…]` records.
+    pub words: Vec<u32>,
+}
+
+impl Frame {
+    /// Wire size of the frame as a message payload (8-byte header + the
+    /// packed words) — what [`crate::comm::threads::Payload::size_bytes`]
+    /// reports for frame-carrying message variants.
+    pub fn bytes(&self) -> u64 {
+        8 + 4 * self.words.len() as u64
+    }
+
+    /// Iterate the `(tag, payload)` records of this frame.
+    pub fn records(&self) -> Records<'_> {
+        records(&self.words)
+    }
+}
+
+/// Per-destination coalescing buffer. One per peer; see the module docs.
+#[derive(Debug)]
+pub struct CoalescingBuffer {
+    watermark: usize,
+    items: u64,
+    words: Vec<u32>,
+}
+
+impl CoalescingBuffer {
+    /// A buffer that closes frames at `watermark` payload words
+    /// (`watermark ≥ 1`; use [`DEFAULT_WATERMARK_WORDS`] unless the
+    /// protocol has a reason not to).
+    pub fn new(watermark: usize) -> Self {
+        assert!(watermark >= 1, "coalescing watermark must be positive");
+        CoalescingBuffer { watermark, items: 0, words: Vec::new() }
+    }
+
+    /// Append one logical record. Returns the closed frame when the
+    /// appended record brings the payload to (or past) the watermark —
+    /// the caller sends it immediately, keeping frames bounded.
+    #[must_use = "a returned frame must be sent, or its records are lost"]
+    pub fn push(&mut self, tag: u32, payload: &[u32]) -> Option<Frame> {
+        self.words.reserve(2 + payload.len());
+        self.words.push(tag);
+        self.words.push(payload.len() as u32);
+        self.words.extend_from_slice(payload);
+        self.items += 1;
+        if self.words.len() >= self.watermark {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Drain the buffered records as a final (possibly short) frame;
+    /// `None` when nothing is buffered.
+    pub fn flush(&mut self) -> Option<Frame> {
+        if self.items == 0 {
+            return None;
+        }
+        let f = Frame { items: self.items, words: std::mem::take(&mut self.words) };
+        self.items = 0;
+        Some(f)
+    }
+
+    /// True iff no records are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.items == 0
+    }
+}
+
+/// Iterate `[tag, len, payload…]` records out of a packed word slice.
+/// Frames are only built by [`CoalescingBuffer`], so malformation is a
+/// protocol bug: a truncated trailing record stops iteration (and trips a
+/// debug assertion) rather than panicking on the wire path.
+pub fn records(words: &[u32]) -> Records<'_> {
+    Records { words, at: 0 }
+}
+
+/// See [`records`]. Yields `(tag, payload)` per record.
+pub struct Records<'a> {
+    words: &'a [u32],
+    at: usize,
+}
+
+impl<'a> Iterator for Records<'a> {
+    type Item = (u32, &'a [u32]);
+
+    fn next(&mut self) -> Option<(u32, &'a [u32])> {
+        if self.at >= self.words.len() {
+            return None;
+        }
+        if self.at + 2 > self.words.len() {
+            debug_assert!(false, "truncated record header");
+            return None;
+        }
+        let tag = self.words[self.at];
+        let len = self.words[self.at + 1] as usize;
+        let start = self.at + 2;
+        if start + len > self.words.len() {
+            debug_assert!(false, "truncated record payload");
+            return None;
+        }
+        self.at = start + len;
+        Some((tag, &self.words[start..start + len]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_closes_frames() {
+        // Watermark 8: each record is 2 + 2 = 4 words, so every second
+        // push closes a frame.
+        let mut b = CoalescingBuffer::new(8);
+        assert!(b.push(1, &[10, 11]).is_none());
+        let f = b.push(2, &[20, 21]).expect("watermark reached");
+        assert_eq!(f.items, 2);
+        assert_eq!(f.words.len(), 8);
+        assert!(b.is_empty());
+        assert!(b.flush().is_none(), "flush after close is empty");
+    }
+
+    #[test]
+    fn oversize_record_travels_alone() {
+        let mut b = CoalescingBuffer::new(4);
+        let big: Vec<u32> = (0..100).collect();
+        let f = b.push(7, &big).expect("oversize record closes immediately");
+        assert_eq!(f.items, 1);
+        assert_eq!(f.words.len(), 102);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let mut b = CoalescingBuffer::new(1 << 20);
+        let recs: Vec<(u32, Vec<u32>)> = (0..50)
+            .map(|i| (i, (0..(i % 7) as u32).map(|x| x * 3 + i).collect()))
+            .collect();
+        for (tag, payload) in &recs {
+            assert!(b.push(*tag, payload).is_none());
+        }
+        let f = b.flush().expect("non-empty");
+        assert_eq!(f.items, recs.len() as u64);
+        let got: Vec<(u32, Vec<u32>)> =
+            f.records().map(|(t, p)| (t, p.to_vec())).collect();
+        assert_eq!(got, recs);
+        assert_eq!(f.bytes(), 8 + 4 * f.words.len() as u64);
+    }
+
+    #[test]
+    fn packing_order_is_deterministic() {
+        // Identical push sequences ⇒ byte-identical frame sequences.
+        let run = || {
+            let mut b = CoalescingBuffer::new(16);
+            let mut frames = Vec::new();
+            for i in 0..40u32 {
+                let payload: Vec<u32> = (0..(i % 5)).collect();
+                if let Some(f) = b.push(i, &payload) {
+                    frames.push(f);
+                }
+            }
+            frames.extend(b.flush());
+            frames
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn items_conserved_across_frames() {
+        let mut b = CoalescingBuffer::new(8);
+        let mut frames = Vec::new();
+        for i in 0..100u32 {
+            if let Some(f) = b.push(i, &[i, i + 1, i + 2]) {
+                frames.push(f);
+            }
+        }
+        frames.extend(b.flush());
+        let items: u64 = frames.iter().map(|f| f.items).sum();
+        let records: usize = frames.iter().map(|f| f.records().count()).sum();
+        assert_eq!(items, 100);
+        assert_eq!(records, 100);
+        // Every frame except possibly the last is at or just past the
+        // watermark; none exceeds watermark + header + record.
+        for f in &frames {
+            assert!(f.words.len() <= 8 + 2 + 3, "bounded: {}", f.words.len());
+        }
+    }
+
+    #[test]
+    fn empty_payload_records() {
+        let mut b = CoalescingBuffer::new(64);
+        assert!(b.push(5, &[]).is_none());
+        let f = b.flush().unwrap();
+        let recs: Vec<_> = f.records().collect();
+        assert_eq!(recs, vec![(5u32, &[][..])]);
+    }
+}

@@ -34,6 +34,29 @@ pub struct CommMetrics {
     /// the key the cluster launcher orders failures by (lowest op count =
     /// root cause).
     pub transport_ops: u64,
+    /// Coalesced frames sent (`comm::coalesce`): wire envelopes that each
+    /// carry `≥ 1` logical records. A frame is *also* counted once in
+    /// `messages_sent` (it is one envelope); the aggregation ratio is
+    /// `coalesced_sent / frames_sent`.
+    pub frames_sent: u64,
+    /// Coalesced frames received and unpacked.
+    pub frames_received: u64,
+    /// Logical records packed into outgoing frames. The conformance suite
+    /// asserts Σ `coalesced_sent` == Σ `coalesced_received` cluster-wide —
+    /// the frame-content analogue of the envelope symmetry above.
+    pub coalesced_sent: u64,
+    /// Logical records unpacked from incoming frames.
+    pub coalesced_received: u64,
+    /// Row-broadcast records sent (`algo::tile2d` phase 1): the tag-class
+    /// split of `coalesced_sent` the 2D driver's audit needs — Σ sent ==
+    /// Σ received per class, checked by the conformance suite.
+    pub row_bcast_sent: u64,
+    /// Row-broadcast records received.
+    pub row_bcast_received: u64,
+    /// Column-broadcast records sent (`algo::tile2d` phase 2).
+    pub col_bcast_sent: u64,
+    /// Column-broadcast records received.
+    pub col_bcast_received: u64,
     /// Request retransmissions after a `recv_deadline` expiry (ft/ bounded
     /// retry). 0 on a fault-free run — the conformance drop cells assert
     /// these are bounded and non-zero where a message was eaten.
@@ -91,6 +114,14 @@ impl CommMetrics {
         self.control_received += other.control_received;
         self.recv_wait += other.recv_wait;
         self.transport_ops += other.transport_ops;
+        self.frames_sent += other.frames_sent;
+        self.frames_received += other.frames_received;
+        self.coalesced_sent += other.coalesced_sent;
+        self.coalesced_received += other.coalesced_received;
+        self.row_bcast_sent += other.row_bcast_sent;
+        self.row_bcast_received += other.row_bcast_received;
+        self.col_bcast_sent += other.col_bcast_sent;
+        self.col_bcast_received += other.col_bcast_received;
         self.retries += other.retries;
         self.reexec_work_units += other.reexec_work_units;
         self.reexec_bytes += other.reexec_bytes;
@@ -144,6 +175,18 @@ impl ClusterMetrics {
             .position(|m| m.partition_bytes != m.partition_bytes_pred)
     }
 
+    /// Logical records per wire frame (`coalesced_sent / frames_sent`) —
+    /// the aggregation win of `comm::coalesce`. 1.0 when nothing was
+    /// coalesced (no frames sent).
+    pub fn aggregation_ratio(&self) -> f64 {
+        let t = self.totals();
+        if t.frames_sent == 0 {
+            1.0
+        } else {
+            t.coalesced_sent as f64 / t.frames_sent as f64
+        }
+    }
+
     /// Load imbalance: max work / mean work (1.0 = perfectly balanced).
     pub fn imbalance(&self) -> f64 {
         if self.per_rank.is_empty() {
@@ -175,6 +218,10 @@ mod tests {
             partition_bytes: 100,
             partition_bytes_pred: 100,
             accel_bytes: 16,
+            frames_sent: 2,
+            coalesced_sent: 9,
+            row_bcast_sent: 5,
+            col_bcast_received: 3,
             kernel: KernelStats { list_list: 3, list_bitmap: 1, bitmap_bitmap: 2, simd_blocked: 0 },
             ..Default::default()
         };
@@ -183,6 +230,10 @@ mod tests {
         assert_eq!(a.bytes_sent, 15);
         assert_eq!(a.work_units, 7);
         assert_eq!(a.control_received, 4);
+        assert_eq!(a.frames_sent, 2);
+        assert_eq!(a.coalesced_sent, 9);
+        assert_eq!(a.row_bcast_sent, 5);
+        assert_eq!(a.col_bcast_received, 3);
         assert_eq!(a.partition_bytes, 100);
         assert_eq!(a.partition_bytes_pred, 100);
         assert_eq!(a.accel_bytes, 16);
@@ -217,6 +268,18 @@ mod tests {
             ],
         };
         assert!((cm.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregation_ratio_totals() {
+        assert_eq!(ClusterMetrics::default().aggregation_ratio(), 1.0);
+        let cm = ClusterMetrics {
+            per_rank: vec![
+                CommMetrics { frames_sent: 2, coalesced_sent: 10, ..Default::default() },
+                CommMetrics { frames_sent: 2, coalesced_sent: 6, ..Default::default() },
+            ],
+        };
+        assert!((cm.aggregation_ratio() - 4.0).abs() < 1e-12);
     }
 
     #[test]

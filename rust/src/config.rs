@@ -23,6 +23,9 @@ pub enum Algorithm {
     Patric,
     /// §V dynamic load balancing.
     DynamicLb,
+    /// 2D tile-partitioned driver with coalesced row/column broadcasts
+    /// (O(m/√P) per-rank traffic; DESIGN.md §14).
+    Tile2d,
     /// Hybrid dense-core (XLA tensor path) + sparse remainder.
     Hybrid,
 }
@@ -36,6 +39,7 @@ impl std::str::FromStr for Algorithm {
             "direct" => Algorithm::Direct,
             "patric" => Algorithm::Patric,
             "dynamic" | "dynamic-lb" => Algorithm::DynamicLb,
+            "tile2d" | "2d" => Algorithm::Tile2d,
             "hybrid" => Algorithm::Hybrid,
             other => return Err(Error::Config(format!("unknown algorithm `{other}`"))),
         })
@@ -298,6 +302,8 @@ mod tests {
         c.set("cost_fn", "dv").unwrap();
         assert_eq!(c.procs, 16);
         assert_eq!(c.algorithm, Algorithm::DynamicLb);
+        c.set("algorithm", "tile2d").unwrap();
+        assert_eq!(c.algorithm, Algorithm::Tile2d);
         assert_eq!(c.cost_fn, CostFn::Degree);
         assert_eq!(c.hub_threshold, crate::adj::HubThreshold::Auto);
         c.set("hub-threshold", "off").unwrap();

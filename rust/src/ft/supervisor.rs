@@ -24,6 +24,7 @@
 //! | dynamic-lb   | acked task counts        | §V survivors steal the rest    |
 //! | local-counts | acked task counts        | §V survivors steal the rest    |
 //! | stream       | none (Δ watermarks only) | full re-stream on survivors    |
+//! | tile2d       | acked tile counts        | sequential recount of missing tiles |
 //!
 //! Exactness holds because every salvageable unit carries **min-≺-vertex
 //! attribution** (a triangle is counted at exactly one vertex range/task),
@@ -36,7 +37,7 @@ use std::sync::Arc;
 
 use crate::adj::hub::HubThreshold;
 use crate::algo::tasks::Task;
-use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate};
+use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate, tile2d};
 use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::Progress;
 use crate::config::CostFn;
@@ -106,6 +107,7 @@ pub enum Job<'a> {
     DynamicLb { graph: &'a Arc<Oriented>, opts: dynamic_lb::Options },
     LocalCounts { graph: &'a Arc<Oriented> },
     Stream { base: &'a Csr, batches: &'a [Batch], opts: StreamOptions, initial: TriangleCount },
+    Tile2d { graph: &'a Arc<Oriented>, hub: HubThreshold },
 }
 
 /// The degraded answer's confidence bound: `lower ≤ T ≤ upper` holds
@@ -183,7 +185,7 @@ pub fn supervise(
         }),
         Err(e) => match policy {
             FaultPolicy::Fail => Err(e),
-            FaultPolicy::Degrade => degrade(job, &store, &trace, &e, hashes),
+            FaultPolicy::Degrade => degrade(job, p, &store, &trace, &e, hashes),
             FaultPolicy::Recover => recover(job, fabric, p, &store, &trace, e, hashes),
         },
     }
@@ -264,6 +266,10 @@ fn run_primary(
             );
             (r.map(|r| (r.final_triangles, r.metrics)), t)
         }
+        Job::Tile2d { graph, hub } => {
+            let (r, t) = tile2d::run_hooked_on(fabric, graph, p, *hub, progress);
+            (r.map(|r| (r.triangles, r.metrics)), t)
+        }
     }
 }
 
@@ -291,7 +297,7 @@ fn recover(
             )));
         }
         let rf = recovery_fabric(fabric, attempt);
-        let (res, rtrace) = run_recovery(job, &rf, &map, store);
+        let (res, rtrace) = run_recovery(job, &rf, p, &map, store);
         if let Some(t) = &rtrace {
             hashes.push(t.hash);
         }
@@ -349,6 +355,7 @@ fn recover(
 fn run_recovery(
     job: &Job<'_>,
     fabric: &Fabric,
+    p: usize,
     map: &RankMap,
     store: &Arc<CheckpointStore>,
 ) -> (Result<(TriangleCount, ClusterMetrics)>, Option<TraceReport>) {
@@ -381,6 +388,35 @@ fn run_recovery(
                 rem.iter().map(|&(lo, hi)| lo..hi).collect();
             let (r, t) = patric::run_hooked_on(fabric, g, graph, &ranges, *hub, None);
             (r.map(|r| (salvage + r.triangles, r.metrics)), t)
+        }
+        // Tile partials are globally disjoint (each tile owns a distinct
+        // set of oriented mask edges), so acked tiles are exact salvage.
+        // The missing tiles are recounted sequentially against the
+        // *original* p-rank layout — no fresh cluster is needed because a
+        // tile recount touches only replicated read-only graph state.
+        Job::Tile2d { graph, hub: _ } => {
+            // Re-derive the driver's exact (shuffled graph, layout) pair
+            // — the fixed-seed shuffle makes them identical.
+            let sh = crate::partition::tile2d::shuffled(graph);
+            let layout = crate::partition::tile2d::layout(&sh, p);
+            let acked: std::collections::BTreeSet<u32> =
+                store.acked_batches().iter().map(|&(i, _)| i).collect();
+            let mut total = store.acked_sum();
+            let mut work = 0u64;
+            for rank in 0..layout.grid.active() {
+                if acked.contains(&(rank as u32)) {
+                    continue;
+                }
+                let (t, w) = tile2d::count_tile_seq(&sh, &layout, rank);
+                total += t;
+                work += w;
+            }
+            let mut metrics = ClusterMetrics::default();
+            metrics.per_rank.push(crate::comm::metrics::CommMetrics {
+                work_units: work,
+                ..Default::default()
+            });
+            (Ok((total, metrics)), None)
         }
         // §V survivors-steal: the un-acked vertex intervals become the
         // dynamic task queue of a fresh coordinator/worker cluster (or a
@@ -436,6 +472,7 @@ fn remainder_tasks(rem: &[(u32, u32)], workers: usize) -> Vec<Task> {
 
 fn degrade(
     job: &Job<'_>,
+    p: usize,
     store: &Arc<CheckpointStore>,
     trace: &Option<TraceReport>,
     err: &Error,
@@ -451,6 +488,7 @@ fn degrade(
         Job::Patric { graph, cost, .. } => static_bound(graph, *cost, store),
         Job::DynamicLb { graph, opts } => static_bound(graph, opts.cost_fn, store),
         Job::LocalCounts { graph } => static_bound(graph, CostFn::Degree, store),
+        Job::Tile2d { graph, .. } => tile_bound(graph, p, store),
     };
     let (salvaged_units, partial_units) = store.unit_counts();
     Ok(SupervisedRun {
@@ -499,6 +537,40 @@ fn static_bound(graph: &Oriented, cost: CostFn, store: &CheckpointStore) -> Boun
         store.acked_ranges().iter().map(|&(lo, hi)| prefix[hi as usize] - prefix[lo as usize]).sum();
     let estimate = if covered > 0 && total > 0 {
         let scaled = (lower as f64 * total as f64 / covered as f64).round() as u64;
+        scaled.clamp(lower, upper)
+    } else {
+        lower + (upper - lower) / 2
+    };
+    Bound { lower, estimate, upper }
+}
+
+/// Bound for the 2D-tiled path. Tiles partition the oriented mask-edge
+/// set, so:
+///
+/// * `lower` — the checkpointed floor (acked tile exacts + monotone
+///   partials of in-flight tiles, all globally disjoint).
+/// * `upper` — acked exacts + Σ [`tile2d::tile_upper_bound`] over
+///   un-acked tiles (no mask edge (v, u) of a tile can close more
+///   wedges than v's oriented out-degree).
+/// * `estimate` — the floor rescaled by the inverse acked-tile fraction
+///   (the same coverage trick as [`static_bound`], with tiles as the
+///   coverage unit), clamped into `[lower, upper]`.
+fn tile_bound(graph: &Oriented, p: usize, store: &CheckpointStore) -> Bound {
+    let sh = crate::partition::tile2d::shuffled(graph);
+    let layout = crate::partition::tile2d::layout(&sh, p);
+    let acked: std::collections::BTreeSet<u32> =
+        store.acked_batches().iter().map(|&(i, _)| i).collect();
+    let lower = store.floor_sum();
+    let mut upper = store.acked_sum();
+    let active = layout.grid.active();
+    for rank in 0..active {
+        if !acked.contains(&(rank as u32)) {
+            upper += tile2d::tile_upper_bound(&sh, &layout, rank);
+        }
+    }
+    let upper = upper.max(lower);
+    let estimate = if !acked.is_empty() && active > 0 {
+        let scaled = (lower as f64 * active as f64 / acked.len() as f64).round() as u64;
         scaled.clamp(lower, upper)
     } else {
         lower + (upper - lower) / 2
@@ -595,6 +667,7 @@ mod tests {
             ("patric", Job::Patric { g: &g, graph: &o, cost: CostFn::PatricBest, hub: HubThreshold::Auto }),
             ("dynamic-lb", Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() }),
             ("local-counts", Job::LocalCounts { graph: &o }),
+            ("tile2d", Job::Tile2d { graph: &o, hub: HubThreshold::Auto }),
         ];
         for (name, job) in &jobs {
             let r = supervise(job, &sim_kill(23, 1, 1), 4, FaultPolicy::Recover)
@@ -653,6 +726,7 @@ mod tests {
             ("patric", Job::Patric { g: &g, graph: &o, cost: CostFn::PatricBest, hub: HubThreshold::Auto }),
             ("dynamic-lb", Job::DynamicLb { graph: &o, opts: dynamic_lb::Options::default() }),
             ("local-counts", Job::LocalCounts { graph: &o }),
+            ("tile2d", Job::Tile2d { graph: &o, hub: HubThreshold::Auto }),
         ];
         for (name, job) in &jobs {
             let r = supervise(job, &sim_kill(41, 1, 1), 4, FaultPolicy::Degrade)

@@ -209,6 +209,45 @@ impl Oriented {
             + self.hubs.bytes()
     }
 
+    /// Relabel every vertex by `perm` (`perm[v]` is `v`'s new id),
+    /// keeping the directed structure: `perm[u] ∈ N'_{perm[v]} ⇔ u ∈ N_v`.
+    /// Rows are re-sorted by new id, degrees travel with their vertices,
+    /// and the hub index is rebuilt under `hub` over the new rows. The
+    /// mask (which oriented edges exist) was decided *before* the
+    /// relabel, so triangle counts are invariant — but the id tie-break
+    /// of `≺` is not re-derived, so [`Oriented::validate`] only holds for
+    /// the original labeling. Used by
+    /// [`crate::partition::tile2d::shuffled`] to decorrelate id intervals
+    /// from degree. O(m log d̂) for the per-row sorts.
+    pub fn relabeled(&self, perm: &[VertexId], hub: HubThreshold) -> Oriented {
+        let n = self.num_nodes();
+        assert_eq!(perm.len(), n, "perm must cover the id space");
+        let mut degree = vec![0u32; n];
+        let mut offsets = vec![0u64; n + 1];
+        for v in 0..n {
+            let nv = perm[v] as usize;
+            degree[nv] = self.degree[v];
+            offsets[nv + 1] = self.offsets[v + 1] - self.offsets[v];
+        }
+        for v in 0..n {
+            offsets[v + 1] += offsets[v];
+        }
+        let mut targets = vec![0 as VertexId; self.targets.len()];
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        for v in 0..n {
+            let nv = perm[v] as usize;
+            for &u in self.nbrs(v as VertexId) {
+                targets[cursor[nv] as usize] = perm[u as usize];
+                cursor[nv] += 1;
+            }
+        }
+        for v in 0..n {
+            targets[offsets[v] as usize..offsets[v + 1] as usize].sort_unstable();
+        }
+        let hubs = HubIndex::build_threads(&offsets, &targets, hub, 1);
+        Oriented { offsets, targets, degree, hubs }
+    }
+
     /// Check orientation invariants (tests only; O(m log m)).
     pub fn validate(&self, g: &Csr) -> Result<(), String> {
         if self.num_nodes() != g.num_nodes() {
@@ -354,6 +393,31 @@ mod tests {
                 par.validate(&g).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn relabeled_preserves_structure_and_count() {
+        let g = classic::karate();
+        let o = Oriented::from_graph(&g);
+        let n = g.num_nodes();
+        // Reversal is the worst-case relabel for sortedness: every row
+        // must be re-sorted end to end.
+        let perm: Vec<VertexId> = (0..n as VertexId).map(|v| (n as u32 - 1) - v).collect();
+        let r = o.relabeled(&perm, HubThreshold::Auto);
+        assert_eq!(r.num_nodes(), n);
+        assert_eq!(r.num_edges(), o.num_edges());
+        for v in 0..n as VertexId {
+            assert_eq!(r.degree(perm[v as usize]), o.degree(v));
+            let mut want: Vec<VertexId> =
+                o.nbrs(v).iter().map(|&u| perm[u as usize]).collect();
+            want.sort_unstable();
+            assert_eq!(r.nbrs(perm[v as usize]), &want[..], "row {v}");
+        }
+        assert_eq!(
+            crate::seq::node_iterator::count(&r),
+            crate::seq::node_iterator::count(&o),
+            "triangle count is relabel-invariant"
+        );
     }
 
     #[test]

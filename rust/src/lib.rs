@@ -29,6 +29,15 @@
 //!   pairs, list×bitmap probe, bitmap×bitmap word-AND) — see DESIGN.md §7
 //!   for the representation rule and kernel matrix, §12 for the SWAR
 //!   dispatch guard.
+//! * **`algo/tile2d` + `comm/coalesce`** — the 2D tile-partitioned driver
+//!   (DESIGN.md §14): an r×c process grid over the oriented adjacency
+//!   matrix ([`partition::tile2d`]), a three-phase row/column-broadcast
+//!   exchange whose pieces travel as per-destination coalescing frames
+//!   ([`comm::coalesce`], flush-watermark bounded, frames vs logical
+//!   records audited in [`comm::metrics::CommMetrics`]), O(m/√P) per-rank
+//!   traffic vs the 1D drivers' O(m) — gated measured == predicted
+//!   against `sim::space_efficient::simulate_tile2d`, compared across all
+//!   four §IV drivers by `tricount bench-comm` (`BENCH_comm.json`).
 //! * **`stream/`** — incremental parallel counting over edge-update
 //!   batches: an [`stream::overlay::AdjDelta`] mutable overlay on the
 //!   immutable CSR, an exact per-batch Δ counter going through the `adj/`
@@ -158,6 +167,7 @@ pub mod seq {
 }
 
 pub mod comm {
+    pub mod coalesce;
     pub mod metrics;
     pub mod threads;
     pub mod transport;
@@ -197,6 +207,7 @@ pub mod partition {
     pub mod nonoverlap;
     pub mod overlap;
     pub mod owned;
+    pub mod tile2d;
 }
 
 pub mod algo {
@@ -207,6 +218,7 @@ pub mod algo {
     pub mod patric;
     pub mod surrogate;
     pub mod tasks;
+    pub mod tile2d;
     pub use driver::RunResult;
 }
 

@@ -45,6 +45,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "partition-stats" => cmd_partition_stats(&args[1..]),
         "bench-pipeline" => cmd_bench_pipeline(&args[1..]),
         "bench-recovery" => cmd_bench_recovery(&args[1..]),
+        "bench-comm" => cmd_bench_comm(&args[1..]),
         "conformance" => cmd_conformance(&args[1..]),
         "obs-report" => cmd_obs_report(&args[1..]),
         "exp" => cmd_exp(&args[1..]),
@@ -71,13 +72,17 @@ COMMANDS:
                     --format text|tcg (reinterpret a file-backed workload:
                     text = edge-list parse, tcg = zero-parse binary load;
                     see `tricount convert`)
-                    --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|hybrid)
+                    --algorithm A    (seq|surrogate|direct|patric|dynamic-lb|
+                                      tile2d|hybrid)
                     --procs P --cost-fn F (unit|dv|patric|new|hybrid) --scale X
-                    --mem-budget B   (bytes, kb/mb/gb suffixes; surrogate|direct:
-                    overrides --procs with the smallest P whose largest
-                    partition fits B — partitioned runs report measured
-                    per-rank partition bytes and fail on any divergence
-                    from the PartitionSize prediction)
+                    --mem-budget B   (bytes, kb/mb/gb suffixes; surrogate|
+                    direct|tile2d: searches BOTH the 1D range layout and the
+                    2D tile layout, overrides --procs with the smallest P
+                    whose largest partition/tile fits B, reports both
+                    candidates and switches the algorithm to the winning
+                    layout — partitioned runs report measured per-rank
+                    partition bytes and fail on any divergence from the
+                    prediction)
                     --hub-threshold T (n|auto|off: bitmap rows for d̂ ≥ T)
                     --build-threads T (n|auto: preprocessing threads — CSR
                     build, relabel, orientation, hub packing; output is
@@ -125,9 +130,17 @@ COMMANDS:
                     fabric, each cell verified exact vs the fault-free run
                     --workload SPEC --procs P --algorithm A --seed S
                     --out PATH (default BENCH_recovery.json)
+  bench-comm        per-rank communication volume for the four §IV-family
+                    drivers (surrogate|direct|patric|tile2d) across a P
+                    sweep; tile2d rows are gated within 1.1× of the
+                    cost-model prediction (which replays the exact coalesced
+                    frame plan), and on pa: workloads per-rank 2D bytes must
+                    strictly fall with P and beat the best 1D driver
+                    --workloads S1,S2,… --procs P1,P2,… --seed S
+                    --out PATH (default BENCH_comm.json)
   conformance       adversarial-schedule conformance suite: every counting
                     path (surrogate|direct|patric|dynamic-lb|local-counts|
-                    stream) on the seeded virtual transport vs the
+                    stream|tile2d) on the seeded virtual transport vs the
                     sequential oracle, each cell run twice (replay
                     determinism: identical trace hash), plus rank-death and
                     message-loss fault checks
@@ -206,23 +219,53 @@ fn cmd_count(args: &[String]) -> Result<()> {
     // The prefix sums are reused by the counting arm below.
     let mut balance_prefix: Option<Vec<u64>> = None;
     if let Some(budget) = cfg.mem_budget {
-        if !matches!(cfg.algorithm, Algorithm::Surrogate | Algorithm::Direct) {
+        use tricount::partition::nonoverlap::{
+            min_procs_for_budget, min_procs_for_budget_layouts, Layout,
+        };
+        if !matches!(
+            cfg.algorithm,
+            Algorithm::Surrogate | Algorithm::Direct | Algorithm::Tile2d
+        ) {
             return Err(Error::Config(
-                "--mem-budget needs a non-overlapping partitioned algorithm (surrogate|direct)"
-                    .into(),
+                "--mem-budget needs a partitioned algorithm (surrogate|direct|tile2d)".into(),
             ));
         }
         let prefix = prefix_sums(&cost_vector(&o, cfg.cost_fn));
         let max_p = o.num_nodes().max(1);
-        let p = tricount::partition::nonoverlap::min_procs_for_budget(&o, &prefix, budget, max_p)
+        let one_d = min_procs_for_budget(&o, &prefix, budget, max_p);
+        let (p, layout) = min_procs_for_budget_layouts(&o, &prefix, budget, max_p)
             .ok_or_else(|| {
                 Error::Config(format!(
-                    "mem-budget {budget} B unsatisfiable: a single node's partition exceeds it even at P={max_p}"
+                    "mem-budget {budget} B unsatisfiable under either layout even at P={max_p}"
                 ))
             })?;
-        println!("mem-budget: {budget} B → P={p} (smallest P whose largest partition fits)");
+        match one_d {
+            Some(q) => println!(
+                "mem-budget: {budget} B → 1D candidate P={q}, 2D tiles searched up to it — winner: {layout} layout at P={p}"
+            ),
+            None => println!(
+                "mem-budget: {budget} B → 1D unsatisfiable ≤ P={max_p} — winner: {layout} layout at P={p}"
+            ),
+        }
         cfg.procs = p;
-        balance_prefix = Some(prefix);
+        match layout {
+            Layout::Tile2d => {
+                if cfg.algorithm != Algorithm::Tile2d {
+                    println!(
+                        "mem-budget: switching algorithm {:?} → Tile2d (winning layout)",
+                        cfg.algorithm
+                    );
+                    cfg.algorithm = Algorithm::Tile2d;
+                }
+            }
+            Layout::OneD => {
+                if cfg.algorithm == Algorithm::Tile2d {
+                    println!("mem-budget: switching algorithm Tile2d → Surrogate (1D layout won)");
+                    cfg.algorithm = Algorithm::Surrogate;
+                }
+                balance_prefix = Some(prefix);
+            }
+        }
     }
     println!(
         "workload={} n={} m={} d̄={:.1} (gen {:.2?}, orient {:.2?})",
@@ -285,6 +328,21 @@ fn cmd_count(args: &[String]) -> Result<()> {
             let ranges = balanced_ranges(&prefix, cfg.procs);
             let r = patric::run(&g, &o, &ranges, cfg.hub_threshold)?;
             let detail = format!("imbalance={:.3}", r.metrics.imbalance());
+            cluster = Some(r.metrics.clone());
+            partitioned = Some(r.metrics);
+            (r.triangles, detail)
+        }
+        Algorithm::Tile2d => {
+            let r = tricount::algo::tile2d::run(&o, cfg.procs, cfg.hub_threshold)?;
+            let t = r.metrics.totals();
+            let detail = format!(
+                "frames={} records={} bytes={} agg={:.1}x imbalance={:.3}",
+                t.frames_sent,
+                t.coalesced_sent,
+                t.bytes_sent,
+                r.metrics.aggregation_ratio(),
+                r.metrics.imbalance()
+            );
             cluster = Some(r.metrics.clone());
             partitioned = Some(r.metrics);
             (r.triangles, detail)
@@ -450,9 +508,10 @@ fn supervised_job<'a>(
                 granularity: dynamic_lb::Granularity::Shrinking,
             },
         },
+        Algorithm::Tile2d => Job::Tile2d { graph: o, hub: cfg.hub_threshold },
         other => {
             return Err(Error::Config(format!(
-                "--fault/--on-fault needs a cluster algorithm (surrogate|direct|patric|dynamic-lb), not {other:?}"
+                "--fault/--on-fault needs a cluster algorithm (surrogate|direct|patric|dynamic-lb|tile2d), not {other:?}"
             )))
         }
     })
@@ -646,6 +705,146 @@ fn cmd_bench_recovery(args: &[String]) -> Result<()> {
         "victim rank {victim} of P={p}; its fault-free transport-op budget is {v_ops}; \
          reexec_work_frac is recovery work / fault-free counting work ({base_work} units)"
     ));
+    report.print();
+    report.write_json(out)?;
+    println!("[written: {out}]");
+    Ok(())
+}
+
+/// `tricount bench-comm` — per-rank communication volume for the four
+/// §IV-family drivers (surrogate / direct / patric / tile2d) across a P
+/// sweep, written to `BENCH_comm.json`.
+///
+/// Gates (CI smoke runs this on a small preset):
+/// * every driver's count equals the others' on every cell;
+/// * tile2d measured sent bytes ≤ 1.1× the cost-model prediction
+///   ([`simulate_tile2d`] replays the exact coalesced frame plan, so the
+///   two are normally *equal*);
+/// * on `pa:` workloads, tile2d per-rank bytes strictly fall along the P
+///   sweep and beat the best 1D §IV driver at the largest P — the
+///   O(m/√P)-vs-O(m) headline.
+fn cmd_bench_comm(args: &[String]) -> Result<()> {
+    use tricount::sim::model::CostModel;
+    use tricount::sim::space_efficient::simulate_tile2d;
+
+    let (cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &["workloads", "procs", "out"])?;
+    let out = extra.get("out").map(String::as_str).unwrap_or("BENCH_comm.json");
+    let workloads: Vec<String> = match extra.get("workloads") {
+        Some(w) => {
+            w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => vec!["pa:100000:64".into(), "rmat:16:16".into(), "er:200000:16".into()],
+    };
+    if workloads.is_empty() {
+        return Err(Error::Config("--workloads needs at least one spec".into()));
+    }
+    // `--procs` here is a sweep list; a single value that parsed into the
+    // RunConfig is honored as a one-point sweep.
+    let procs: Vec<usize> = match extra.get("procs") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim().parse::<usize>().map_err(|e| Error::Config(format!("--procs: {e}")))
+            })
+            .collect::<Result<Vec<usize>>>()?,
+        None if args.iter().any(|a| a == "--procs") => vec![cfg.procs],
+        None => vec![4, 9, 16],
+    };
+    if procs.iter().any(|&p| p < 2) {
+        return Err(Error::Config("--procs entries must be >= 2".into()));
+    }
+
+    let model = CostModel::default();
+    let mut report = exp::report::Report::new([
+        "workload", "algorithm", "P", "max_rank_sent_bytes", "total_sent_bytes", "frames",
+        "logical_msgs", "agg_ratio", "pred_total_bytes",
+    ]);
+    for spec in &workloads {
+        let g = tricount::config::build_workload(spec, cfg.scale, cfg.seed)?;
+        let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
+        println!("bench-comm: workload={spec} n={} m={}", g.num_nodes(), g.num_edges());
+        let prefix = prefix_sums(&cost_vector(&o, cfg.cost_fn));
+        let patric_prefix = prefix_sums(&cost_vector(&o, CostFn::PatricBest));
+        let mut tile_prev: Option<u64> = None;
+        for (pi, &p) in procs.iter().enumerate() {
+            let ranges = balanced_ranges(&prefix, p);
+            let patric_ranges = balanced_ranges(&patric_prefix, p);
+            let sim = simulate_tile2d(&o, p, &model);
+            let runs: Vec<(&str, tricount::algo::RunResult, u64)> = vec![
+                ("surrogate", surrogate::run(&o, &ranges, cfg.hub_threshold)?, 0),
+                ("direct", direct::run(&o, &ranges, cfg.hub_threshold)?, 0),
+                ("patric", patric::run(&g, &o, &patric_ranges, cfg.hub_threshold)?, 0),
+                ("tile2d", tricount::algo::tile2d::run(&o, p, cfg.hub_threshold)?, sim.total_bytes()),
+            ];
+            let oracle = runs[0].1.triangles;
+            let mut best_1d = u64::MAX;
+            let mut tile_max = 0u64;
+            for (name, r, pred) in &runs {
+                if r.triangles != oracle {
+                    return Err(Error::Cluster(format!(
+                        "bench-comm: {name} on {spec} P={p} counted {} != {oracle}",
+                        r.triangles
+                    )));
+                }
+                let t = r.metrics.totals();
+                let max_rank =
+                    r.metrics.per_rank.iter().map(|m| m.bytes_sent).max().unwrap_or(0);
+                // Logical messages: coalesced records where the driver
+                // frames (direct, tile2d), raw envelopes where it doesn't.
+                let logical = if t.coalesced_sent > 0 { t.coalesced_sent } else { t.messages_sent };
+                println!(
+                    "  {name:>9} P={p:<2}: max-rank {max_rank} B, total {} B, frames {}, records {}, agg {:.1}x",
+                    t.bytes_sent, t.frames_sent, logical, r.metrics.aggregation_ratio()
+                );
+                report.row([
+                    spec.clone().into(),
+                    (*name).into(),
+                    p.into(),
+                    max_rank.into(),
+                    t.bytes_sent.into(),
+                    t.frames_sent.into(),
+                    logical.into(),
+                    r.metrics.aggregation_ratio().into(),
+                    (*pred).into(),
+                ]);
+                match *name {
+                    "surrogate" | "direct" => best_1d = best_1d.min(max_rank),
+                    "tile2d" => {
+                        tile_max = max_rank;
+                        if t.bytes_sent > *pred + *pred / 10 {
+                            return Err(Error::Cluster(format!(
+                                "bench-comm: tile2d on {spec} P={p} sent {} B > 1.1× predicted {pred} B",
+                                t.bytes_sent
+                            )));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if spec.starts_with("pa:") {
+                if let Some(prev) = tile_prev {
+                    if tile_max >= prev {
+                        return Err(Error::Cluster(format!(
+                            "bench-comm: tile2d per-rank bytes did not fall on {spec}: {prev} → {tile_max} at P={p}"
+                        )));
+                    }
+                }
+                tile_prev = Some(tile_max);
+                if pi == procs.len() - 1 && tile_max >= best_1d {
+                    return Err(Error::Cluster(format!(
+                        "bench-comm: tile2d {tile_max} B !< best 1D {best_1d} B on {spec} at P={p}"
+                    )));
+                }
+            }
+        }
+    }
+    report.note(
+        "max_rank_sent_bytes is the per-rank data-plane traffic (control markers excluded); \
+         agg_ratio = logical records / frames for coalescing drivers, 1.0 otherwise; \
+         pred_total_bytes (tile2d) replays the exact frame plan in the cost model"
+            .to_string(),
+    );
     report.print();
     report.write_json(out)?;
     println!("[written: {out}]");
@@ -998,6 +1197,30 @@ fn cmd_partition_stats(args: &[String]) -> Result<()> {
     );
     if !exact {
         return Err(Error::Cluster("partition-stats: measured != predicted".into()));
+    }
+    // 2D tile layout at the same P (DESIGN.md §14): per-tile prediction vs
+    // the materialized tiles, same gate as the 1D layouts above. Sizes are
+    // taken over the driver's shuffled labeling.
+    let sh = tricount::partition::tile2d::shuffled(&o);
+    let l = tricount::partition::tile2d::layout(&sh, cfg.procs);
+    let sizes = tricount::partition::tile2d::tile_sizes(&sh, &l);
+    let tiles = tricount::partition::tile2d::extract_tiles(&sh, &l, cfg.hub_threshold);
+    let pred_max = sizes.iter().map(|s| s.bytes()).max().unwrap_or(0);
+    let meas_max = tiles.iter().map(|t| t.resident_bytes()).max().unwrap_or(0);
+    let tiles_exact =
+        tiles.iter().zip(&sizes).all(|(t, s)| t.resident_bytes() == s.bytes());
+    let idle = cfg.procs - l.grid.active();
+    println!(
+        "tile2d ({}×{} grid{}): largest tile {:.2} MB predicted, {:.2} MB measured — {}",
+        l.grid.r,
+        l.grid.c,
+        if idle > 0 { format!(" + {idle} idle") } else { String::new() },
+        pred_max as f64 / (1024.0 * 1024.0),
+        meas_max as f64 / (1024.0 * 1024.0),
+        if tiles_exact { "measured == predicted on every tile" } else { "DIVERGED from prediction" }
+    );
+    if !tiles_exact {
+        return Err(Error::Cluster("partition-stats: tile2d measured != predicted".into()));
     }
     Ok(())
 }

@@ -166,7 +166,8 @@ impl MetricsRegistry {
                  \"recv_wait_us\": {}, \"total_us\": {}, \"work_units\": {}, \
                  \"partition_bytes\": {}, \"partition_bytes_pred\": {}, \"accel_bytes\": {}, \
                  \"transport_ops\": {}, \"retries\": {}, \"reexec_work_units\": {}, \
-                 \"reexec_bytes\": {}, \"kernel\": {}, \
+                 \"reexec_bytes\": {}, \"frames_sent\": {}, \"frames_received\": {}, \
+                 \"coalesced_sent\": {}, \"coalesced_received\": {}, \"kernel\": {}, \
                  \"spans\": {{\"recorded\": {}, \"dropped\": {}, \"by_phase_us\": {{{}}}}}}}{}\n",
                 m.messages_sent,
                 m.bytes_sent,
@@ -183,6 +184,10 @@ impl MetricsRegistry {
                 m.retries,
                 m.reexec_work_units,
                 m.reexec_bytes,
+                m.frames_sent,
+                m.frames_received,
+                m.coalesced_sent,
+                m.coalesced_received,
                 kernel_json(&m.kernel),
                 m.spans.recorded(),
                 m.spans.dropped,
@@ -516,8 +521,9 @@ pub fn parse_json(s: &str) -> Result<JsonValue, String> {
 // ---------------------------------------------------------------------------
 
 // `transport_ops`/`retries`/`reexec_*` were added by the `ft/` PR under
-// the evolution contract, like `simd_blocked` before them.
-const RANK_KEYS: [&str; 18] = [
+// the evolution contract, like `simd_blocked` before them;
+// `frames_*`/`coalesced_*` by the coalescing-plane PR the same way.
+const RANK_KEYS: [&str; 22] = [
     "rank",
     "messages_sent",
     "bytes_sent",
@@ -534,6 +540,10 @@ const RANK_KEYS: [&str; 18] = [
     "retries",
     "reexec_work_units",
     "reexec_bytes",
+    "frames_sent",
+    "frames_received",
+    "coalesced_sent",
+    "coalesced_received",
     "kernel",
     "spans",
 ];

@@ -136,6 +136,73 @@ pub fn min_procs_for_budget(
     Some(hi)
 }
 
+/// Which decomposition a budget search settled on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// 1D consecutive ranges ([`balanced_ranges`] over the cost prefix).
+    OneD,
+    /// 2D process-grid tiles ([`crate::partition::tile2d::layout`]).
+    Tile2d,
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Layout::OneD => "1d",
+            Layout::Tile2d => "tile2d",
+        })
+    }
+}
+
+/// [`min_procs_for_budget`] searching **both** decompositions: the 1D
+/// consecutive ranges and the 2D tile grid. Returns the smallest fitting
+/// `P` and which layout achieved it (ties prefer 1D — same footprint,
+/// simpler protocol). Tiles are not monotone in `P` (a remainder rank or
+/// an uneven grid can regress one step), so the 2D side is a linear scan
+/// with an O(1) lower-bound prune (`Σ tile bytes / (r·c) > budget` ⇒ the
+/// largest tile cannot fit either); each surviving probe is an O(n + m)
+/// [`crate::partition::tile2d::tile_sizes`] pass. `tricount count
+/// --mem-budget` reports both candidates and runs the winner.
+pub fn min_procs_for_budget_layouts(
+    o: &Oriented,
+    prefix: &[u64],
+    budget: u64,
+    max_p: usize,
+) -> Option<(usize, Layout)> {
+    use crate::partition::tile2d;
+    let max_p = max_p.max(1);
+    let one_d = min_procs_for_budget(o, prefix, budget, max_p);
+    let cap = one_d.unwrap_or(max_p); // no point scanning past a known fit
+    let mut two_d = None;
+    let n = o.num_nodes() as u64;
+    let m = o.num_edges();
+    // Size tiles over the same shuffled labeling the driver will run on.
+    let sh = tile2d::shuffled(o);
+    for p in 1..=cap {
+        let g = tile2d::grid_for(p);
+        let active = g.active() as u64;
+        // Lower bound: (r·c + sum of per-tile (rows+1)) offsets + m targets
+        // spread over the active tiles — if the *average* tile busts the
+        // budget, the largest certainly does.
+        let avg = ((n + active) * 8 + m * 4) / active;
+        if avg > budget {
+            continue;
+        }
+        let l = tile2d::layout(&sh, p);
+        let worst = tile2d::tile_sizes(&sh, &l).iter().map(|s| s.bytes()).max().unwrap_or(0);
+        if worst <= budget {
+            two_d = Some(p);
+            break;
+        }
+    }
+    match (one_d, two_d) {
+        (Some(a), Some(b)) if b < a => Some((b, Layout::Tile2d)),
+        (Some(a), _) => Some((a, Layout::OneD)),
+        (None, Some(b)) => Some((b, Layout::Tile2d)),
+        (None, None) => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +274,48 @@ mod tests {
         assert!(max_bytes(p - 1) > budget, "P−1 must not fit");
         // Impossible budget: even one node per partition cannot fit 1 byte.
         assert_eq!(min_procs_for_budget(&o, &prefix, 1, 4096), None);
+    }
+
+    #[test]
+    fn layout_search_never_worse_than_one_d() {
+        // The two-layout search dominates the 1D-only answer and its
+        // returned candidate is directly verified to fit.
+        use crate::partition::tile2d;
+        let g = crate::gen::pa::preferential_attachment(
+            3000,
+            12,
+            &mut crate::gen::rng::Rng::seeded(11),
+        );
+        let o = Oriented::from_graph(&g);
+        let prefix = prefix_sums(&cost_vector(&o, CostFn::SurrogateNew));
+        let max_1d = |p: usize| {
+            partition_sizes(&o, &balanced_ranges(&prefix, p))
+                .iter()
+                .map(|s| s.bytes())
+                .max()
+                .unwrap()
+        };
+        for budget in [max_1d(1), max_1d(3), max_1d(6), max_1d(12)] {
+            let (p, layout) = min_procs_for_budget_layouts(&o, &prefix, budget, 256).unwrap();
+            let one_d = min_procs_for_budget(&o, &prefix, budget, 256).unwrap();
+            assert!(p <= one_d, "budget {budget}: {p} !≤ 1D {one_d}");
+            let worst = match layout {
+                Layout::OneD => max_1d(p),
+                Layout::Tile2d => {
+                    let sh = tile2d::shuffled(&o);
+                    let l = tile2d::layout(&sh, p);
+                    tile2d::tile_sizes(&sh, &l).iter().map(|s| s.bytes()).max().unwrap()
+                }
+            };
+            assert!(worst <= budget, "budget {budget}: winner does not fit");
+        }
+        // Whole graph fits ⇒ P=1, and both layouts are the same there —
+        // the tie goes to 1D.
+        assert_eq!(
+            min_procs_for_budget_layouts(&o, &prefix, max_1d(1), 256),
+            Some((1, Layout::OneD))
+        );
+        assert_eq!(min_procs_for_budget_layouts(&o, &prefix, 1, 4096), None);
     }
 
     #[test]

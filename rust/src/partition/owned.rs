@@ -147,6 +147,25 @@ impl OwnedPartition {
     pub fn accel_bytes(&self) -> u64 {
         self.hubs.bytes()
     }
+
+    /// Assemble a partition from pre-materialized rows — the 2D tile
+    /// extractor (`partition::tile2d`) filters each row's targets to its
+    /// column block and reuses this exact layout (rows = `range`, no
+    /// member table), so tile residency is accounted by the same
+    /// [`OwnedPartition::resident_bytes`] rule the 1D layouts are gated
+    /// on. `offsets` must have `range.len() + 1` entries rebased to 0.
+    pub(crate) fn from_rows(
+        range: Range<u32>,
+        offsets: Vec<u64>,
+        targets: Vec<VertexId>,
+        hub: HubThreshold,
+        owners: OwnerTable,
+    ) -> OwnedPartition {
+        debug_assert_eq!(offsets.len(), range.len() + 1);
+        debug_assert_eq!(*offsets.last().unwrap() as usize, targets.len());
+        let hubs = HubIndex::build(&offsets, &targets, hub);
+        OwnedPartition { range, members: None, offsets, targets, hubs, owners }
+    }
 }
 
 /// Materialize the non-overlapping partition of every range (paper

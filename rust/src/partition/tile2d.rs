@@ -1,0 +1,432 @@
+//! 2D tile decomposition of the oriented adjacency matrix (after Tom &
+//! Karypis, arXiv 1907.09575).
+//!
+//! The §IV algorithms all partition *rows* (1D): per-rank communication
+//! grows as O(m) and the wire dominates once P is large. A 2D r×c
+//! process grid assigns oriented edge `(v, u)` to tile
+//! `(rowblk(v), colblk(u))`; counting then needs each rank to see only
+//! its grid *row* of tiles (full rows `N_v` for `v ∈ R_i`) and its grid
+//! *column* of tiles (full in-columns for `u ∈ C_j`), so per-rank traffic
+//! is `m/r + m/c ≈ 2m/√P` — the O(m/√P) bound `algo::tile2d` realizes
+//! over the coalescing layer.
+//!
+//! ## Grid factorization
+//!
+//! [`grid_for`] picks `(r, c)` minimizing the per-rank traffic factor
+//! `1/r + 1/c` subject to `r·c ≤ P` (ties: fuller grid, then squarer):
+//! P=2 → 1×2, 6 → 2×3, 8 → 2×4, 9 → 3×3, 16 → 4×4. When `r·c < P` the
+//! leftover ranks form the **remainder row**: they hold an empty tile,
+//! idle through the exchange and join the final reduce — trading a few
+//! idle ranks for strictly less traffic than any exact factorization
+//! (P=5 runs a 2×2 grid, not 1×5).
+//!
+//! ## The shuffle: why blocks are intervals of *shuffled* ids
+//!
+//! In degree order the oriented matrix is upper-triangular with its mass
+//! piled against the hub corner, so consecutive id-intervals **cannot**
+//! balance tiles: the last row block's out-edges can only land in the
+//! last column blocks, the max tile grows ≈ √P faster than the average,
+//! and per-rank broadcast bytes stop falling with P. [`shuffled`]
+//! relabels the oriented graph by a seeded Fisher–Yates permutation
+//! first (the same remedy as CombBLAS's random symmetric permutation for
+//! 2D SpGEMM): over shuffled ids every interval block is a uniform
+//! vertex sample, tiles concentrate to `m/(r·c)`, and the O(m/√P) bound
+//! holds — while every interval/slice mechanism below stays intact. The
+//! seed is fixed, so the driver, the simulator, `ft/` recovery and
+//! `partition-stats` all derive the identical labeling (and identical
+//! replay traces).
+//!
+//! ## Blocks and tiles
+//!
+//! Row blocks balance oriented out-degree (row-broadcast volume), column
+//! blocks balance oriented *in*-degree (column-broadcast volume); both
+//! are consecutive id-intervals, so a tile's row piece is one contiguous
+//! subslice of `N_v`. Tiles are materialized as
+//! [`OwnedPartition`]s through the same rebased-offsets machinery as the
+//! 1D layouts ([`OwnedPartition::from_rows`]) — no rank captures the
+//! shared graph, and measured residency equals [`TileSize::bytes`]
+//! exactly (the same measured==predicted gate as PR 4's 1D layouts).
+
+use std::ops::Range;
+
+use crate::adj::hub::HubThreshold;
+use crate::gen::rng::Rng;
+use crate::graph::ordering::Oriented;
+use crate::partition::balance::{balanced_ranges, OwnerTable};
+use crate::partition::cost::prefix_sums;
+use crate::partition::owned::OwnedPartition;
+use crate::VertexId;
+
+/// An r×c process grid over `P ≥ r·c` ranks. Rank `i·c + j` owns tile
+/// `(i, j)`; ranks `≥ r·c` are the remainder row (empty tiles).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub r: usize,
+    pub c: usize,
+}
+
+impl Grid {
+    /// Ranks holding a real tile (`r·c`).
+    #[inline]
+    pub fn active(&self) -> usize {
+        self.r * self.c
+    }
+
+    /// Grid coordinates of `rank`, `None` for remainder ranks.
+    #[inline]
+    pub fn coords(&self, rank: usize) -> Option<(usize, usize)> {
+        (rank < self.active()).then(|| (rank / self.c, rank % self.c))
+    }
+
+    /// Rank owning tile `(i, j)`.
+    #[inline]
+    pub fn rank_of(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.r && j < self.c);
+        i * self.c + j
+    }
+}
+
+/// Nearest `r·c ≤ p` factorization minimizing per-rank traffic
+/// `1/r + 1/c` (see module docs). `r ≤ c` always.
+pub fn grid_for(p: usize) -> Grid {
+    assert!(p >= 1, "grid needs at least one rank");
+    let mut best = Grid { r: 1, c: p };
+    let mut best_cost = f64::INFINITY;
+    let mut r = 1usize;
+    while r * r <= p {
+        let c = p / r;
+        let g = Grid { r, c };
+        let cost = 1.0 / r as f64 + 1.0 / c as f64;
+        let better = cost < best_cost - 1e-12
+            || ((cost - best_cost).abs() <= 1e-12
+                && (g.active() > best.active()
+                    || (g.active() == best.active() && c - r < best.c - best.r)));
+        if better {
+            best = g;
+            best_cost = cost;
+        }
+        r += 1;
+    }
+    best
+}
+
+/// Fixed seed of the tile shuffle. Changing it changes every tile
+/// boundary — committed benchmarks and replay traces would shift.
+const SHUFFLE_SEED: u64 = 0x7119_2d5e_ed00_91f3;
+
+/// Degree-decorrelating relabel applied before tiling (see module docs):
+/// a Fisher–Yates permutation under the fixed [`SHUFFLE_SEED`], so every
+/// caller — driver, simulator, `ft/` recovery, `partition-stats` —
+/// derives the identical labeling. The triangle count is invariant under
+/// relabeling; [`layout`] / [`extract_tiles`] / [`count_tile_seq`] must
+/// all be fed the *same* shuffled graph.
+pub fn shuffled(o: &Oriented) -> Oriented {
+    let n = o.num_nodes();
+    let mut rng = Rng::seeded(SHUFFLE_SEED);
+    let mut perm: Vec<VertexId> = (0..n as VertexId).collect();
+    for i in (1..n).rev() {
+        let j = rng.below_usize(i + 1);
+        perm.swap(i, j);
+    }
+    o.relabeled(&perm, HubThreshold::default())
+}
+
+/// The full 2D decomposition for `procs` ranks: the grid plus the row /
+/// column id-interval blocks. O(P) metadata, shared by every rank like
+/// the 1D range list.
+#[derive(Clone, Debug)]
+pub struct TileLayout {
+    pub grid: Grid,
+    /// Total ranks (active grid + remainder row).
+    pub procs: usize,
+    /// `grid.r` consecutive id-intervals tiling `[0, n)` — balanced by
+    /// oriented out-degree.
+    pub row_blocks: Vec<Range<u32>>,
+    /// `grid.c` consecutive id-intervals tiling `[0, n)` — balanced by
+    /// oriented in-degree.
+    pub col_blocks: Vec<Range<u32>>,
+}
+
+impl TileLayout {
+    /// The tile index (== owning rank) of oriented edge `(v, u)`.
+    pub fn tile_of(&self, v: VertexId, u: VertexId) -> usize {
+        let i = self
+            .row_blocks
+            .partition_point(|r| r.end <= v)
+            .min(self.grid.r - 1);
+        let j = self
+            .col_blocks
+            .partition_point(|r| r.end <= u)
+            .min(self.grid.c - 1);
+        self.grid.rank_of(i, j)
+    }
+}
+
+/// Compute the 2D layout for `p` ranks over `o`.
+pub fn layout(o: &Oriented, p: usize) -> TileLayout {
+    let grid = grid_for(p);
+    let n = o.num_nodes();
+    let goff = o.offsets();
+    // Row cost: oriented out-degree (+1 so empty-degree prefixes still
+    // spread rows); column cost: oriented in-degree (+1 likewise).
+    let mut row_cost = vec![0u64; n];
+    for (v, w) in row_cost.iter_mut().enumerate() {
+        *w = goff[v + 1] - goff[v] + 1;
+    }
+    let mut col_cost = vec![1u64; n];
+    for &u in o.targets() {
+        col_cost[u as usize] += 1;
+    }
+    TileLayout {
+        grid,
+        procs: p,
+        row_blocks: balanced_ranges(&prefix_sums(&row_cost), grid.r),
+        col_blocks: balanced_ranges(&prefix_sums(&col_cost), grid.c),
+    }
+}
+
+/// Arithmetic size prediction for one tile — the quantity each tile
+/// rank's measured [`OwnedPartition::resident_bytes`] must equal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileSize {
+    /// Rows stored (`|R_i|`; 0 for remainder ranks).
+    pub rows: u64,
+    /// Oriented edges in the tile (`|E ∩ R_i×C_j|`).
+    pub edges: u64,
+}
+
+impl TileSize {
+    /// Resident bytes of the materialized tile: `(rows+1)·8` offset
+    /// entries + `edges·4` target ids (remainder ranks keep the single
+    /// empty-offset entry: 8 bytes).
+    pub fn bytes(&self) -> u64 {
+        (self.rows + 1) * 8 + self.edges * 4
+    }
+}
+
+/// Per-rank tile sizes in rank order (`procs` entries; remainder ranks
+/// get `rows == edges == 0`). One O(m) sweep.
+pub fn tile_sizes(o: &Oriented, layout: &TileLayout) -> Vec<TileSize> {
+    let grid = layout.grid;
+    let mut sizes = vec![TileSize { rows: 0, edges: 0 }; layout.procs];
+    let cols = OwnerTable::new(&layout.col_blocks);
+    for (i, rb) in layout.row_blocks.iter().enumerate() {
+        for j in 0..grid.c {
+            sizes[grid.rank_of(i, j)].rows = rb.len() as u64;
+        }
+        for v in rb.clone() {
+            for (j, run) in cols.runs(o.nbrs(v)) {
+                sizes[grid.rank_of(i, j as usize)].edges += run.len() as u64;
+            }
+        }
+    }
+    sizes
+}
+
+/// Materialize every rank's tile (active grid tiles + empty remainder
+/// tiles), fanned out over the [`crate::par`] scoped-thread helpers like
+/// the 1D extractions — one tile per work item, bit-identical at every
+/// thread count.
+pub fn extract_tiles(
+    o: &Oriented,
+    layout: &TileLayout,
+    hub: HubThreshold,
+) -> Vec<OwnedPartition> {
+    let owners = OwnerTable::new(&layout.row_blocks);
+    let p = layout.procs;
+    let n = o.num_nodes() as u32;
+    let t = crate::par::clamp_threads(crate::par::default_threads(), p, 1);
+    crate::par::for_ranges(p, t, |_, idx| {
+        idx.map(|rank| match layout.grid.coords(rank) {
+            Some((i, j)) => extract_tile(o, layout, i, j, hub, owners.clone()),
+            // Remainder rank: an empty tile (one offset entry, no rows).
+            None => OwnedPartition::from_rows(n..n, vec![0], Vec::new(), hub, owners.clone()),
+        })
+        .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+fn extract_tile(
+    o: &Oriented,
+    layout: &TileLayout,
+    i: usize,
+    j: usize,
+    hub: HubThreshold,
+    owners: OwnerTable,
+) -> OwnedPartition {
+    let rb = layout.row_blocks[i].clone();
+    let cb = layout.col_blocks[j].clone();
+    let mut offsets = Vec::with_capacity(rb.len() + 1);
+    offsets.push(0u64);
+    let mut targets = Vec::new();
+    for v in rb.clone() {
+        // The column block is an id-interval, so the tile's piece of N_v
+        // is one contiguous subslice — the same slice discipline as the
+        // 1D extraction, per column.
+        let nv = o.nbrs(v);
+        let lo = nv.partition_point(|&u| u < cb.start);
+        let hi = nv.partition_point(|&u| u < cb.end);
+        targets.extend_from_slice(&nv[lo..hi]);
+        offsets.push(targets.len() as u64);
+    }
+    OwnedPartition::from_rows(rb, offsets, targets, hub, owners)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::rng::Rng;
+
+    #[test]
+    fn grid_factorization_pins() {
+        for (p, r, c) in [
+            (1, 1, 1),
+            (2, 1, 2),
+            (3, 1, 3),
+            (4, 2, 2),
+            (5, 2, 2),
+            (6, 2, 3),
+            (8, 2, 4),
+            (9, 3, 3),
+            (12, 3, 4),
+            (13, 3, 4),
+            (16, 4, 4),
+        ] {
+            let g = grid_for(p);
+            assert_eq!((g.r, g.c), (r, c), "P={p}");
+            assert!(g.active() <= p);
+        }
+    }
+
+    #[test]
+    fn grid_coords_round_trip() {
+        let g = grid_for(13);
+        assert_eq!(g.active(), 12);
+        for rank in 0..12 {
+            let (i, j) = g.coords(rank).unwrap();
+            assert_eq!(g.rank_of(i, j), rank);
+        }
+        assert_eq!(g.coords(12), None, "remainder rank");
+    }
+
+    fn test_oriented(n: usize, d: usize, seed: u64) -> Oriented {
+        let g = crate::gen::pa::preferential_attachment(n, d, &mut Rng::seeded(seed));
+        Oriented::from_graph(&g)
+    }
+
+    #[test]
+    fn blocks_tile_the_id_space() {
+        let o = test_oriented(800, 6, 3);
+        for p in [1, 2, 4, 6, 8, 9, 16] {
+            let l = layout(&o, p);
+            for blocks in [&l.row_blocks, &l.col_blocks] {
+                assert_eq!(blocks[0].start, 0);
+                assert_eq!(blocks.last().unwrap().end, o.num_nodes() as u32);
+                for w in blocks.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_cover_is_exact() {
+        // Every oriented edge lands in exactly one tile; the union of the
+        // tiles is the orientation; measured bytes == TileSize prediction.
+        let o = test_oriented(600, 8, 11);
+        let mut full: Vec<(u32, u32)> = Vec::new();
+        for v in 0..o.num_nodes() as u32 {
+            full.extend(o.nbrs(v).iter().map(|&u| (v, u)));
+        }
+        full.sort_unstable();
+        for p in [1, 2, 4, 6, 8, 9, 16] {
+            let l = layout(&o, p);
+            let tiles = extract_tiles(&o, &l, HubThreshold::Auto);
+            let sizes = tile_sizes(&o, &l);
+            assert_eq!(tiles.len(), p);
+            assert_eq!(sizes.len(), p);
+            let mut union: Vec<(u32, u32)> = Vec::new();
+            for (rank, (tile, size)) in tiles.iter().zip(&sizes).enumerate() {
+                assert_eq!(tile.resident_bytes(), size.bytes(), "P={p} rank={rank}");
+                assert_eq!(tile.num_edges(), size.edges);
+                for v in tile.range() {
+                    for &u in tile.nbrs(v) {
+                        assert_eq!(l.tile_of(v, u), rank, "edge ({v},{u})");
+                        union.push((v, u));
+                    }
+                }
+            }
+            union.sort_unstable();
+            assert_eq!(union, full, "P={p}: tiles tile E exactly");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_preserves_the_count() {
+        let o = test_oriented(900, 8, 17);
+        let a = shuffled(&o);
+        let b = shuffled(&o);
+        assert_eq!(a.offsets(), b.offsets());
+        assert_eq!(a.targets(), b.targets());
+        assert_eq!(a.num_edges(), o.num_edges());
+        assert_eq!(
+            crate::seq::node_iterator::count(&a),
+            crate::seq::node_iterator::count(&o)
+        );
+    }
+
+    #[test]
+    fn shuffle_balances_tiles_on_skewed_graphs() {
+        // Degree-ordered PA piles hub–hub edges into the corner tile
+        // (max tile grows ≈ √P over the mean); over shuffled ids every
+        // block is a uniform vertex sample, so the max tile must stay
+        // near the mean — the property the bench-comm traffic gate
+        // (bytes falling as √P) rests on.
+        let o = test_oriented(3000, 16, 9);
+        let sh = shuffled(&o);
+        for p in [4, 9, 16] {
+            let l = layout(&sh, p);
+            let sizes = tile_sizes(&sh, &l);
+            let max = sizes.iter().map(|s| s.edges).max().unwrap();
+            let avg = sh.num_edges() / l.grid.active() as u64;
+            assert!(
+                max as f64 <= avg as f64 * 1.35,
+                "P={p}: max tile {max} vs avg {avg}"
+            );
+        }
+    }
+
+    #[test]
+    fn remainder_ranks_hold_empty_tiles() {
+        let o = test_oriented(300, 5, 4);
+        let l = layout(&o, 5); // 2×2 grid + 1 remainder rank
+        assert_eq!(l.grid.active(), 4);
+        let tiles = extract_tiles(&o, &l, HubThreshold::Auto);
+        assert_eq!(tiles.len(), 5);
+        assert_eq!(tiles[4].num_rows(), 0);
+        assert_eq!(tiles[4].num_edges(), 0);
+        assert_eq!(tiles[4].resident_bytes(), 8);
+        assert_eq!(tile_sizes(&o, &l)[4].bytes(), 8);
+    }
+
+    #[test]
+    fn extraction_identical_at_any_thread_count() {
+        let o = test_oriented(1200, 7, 21);
+        let l = layout(&o, 6);
+        let prev = crate::par::default_threads();
+        crate::par::set_default_threads(1);
+        let serial = extract_tiles(&o, &l, HubThreshold::Auto);
+        crate::par::set_default_threads(4);
+        let par = extract_tiles(&o, &l, HubThreshold::Auto);
+        crate::par::set_default_threads(prev);
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.range(), b.range());
+            assert_eq!(a.num_edges(), b.num_edges());
+            assert_eq!(a.resident_bytes(), b.resident_bytes());
+            assert_eq!(a.accel_bytes(), b.accel_bytes());
+        }
+    }
+}

@@ -35,7 +35,7 @@
 use std::sync::Arc;
 
 use crate::adj::HubThreshold;
-use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate};
+use crate::algo::{direct, dynamic_lb, local_counts, patric, surrogate, tile2d};
 use crate::comm::metrics::ClusterMetrics;
 use crate::config::CostFn;
 use crate::error::Result;
@@ -69,16 +69,20 @@ pub enum Path {
     LocalCounts,
     /// Incremental counting over edge-update batches (allreduce per batch).
     Stream,
+    /// 2D process-grid tiling with coalesced row/column broadcasts
+    /// (DESIGN.md §14).
+    Tile2d,
 }
 
 impl Path {
-    pub const ALL: [Path; 6] = [
+    pub const ALL: [Path; 7] = [
         Path::Surrogate,
         Path::Direct,
         Path::Patric,
         Path::DynamicLb,
         Path::LocalCounts,
         Path::Stream,
+        Path::Tile2d,
     ];
 
     pub fn name(self) -> &'static str {
@@ -89,6 +93,7 @@ impl Path {
             Path::DynamicLb => "dynamic-lb",
             Path::LocalCounts => "local-counts",
             Path::Stream => "stream",
+            Path::Tile2d => "tile2d",
         }
     }
 
@@ -269,7 +274,28 @@ fn run_path(
             );
             (r.map(|r| PathRun { count: r.final_triangles, metrics: r.metrics }), t)
         }
+        Path::Tile2d => {
+            let (r, t) = tile2d::run_on(fabric, &w.oriented, p, HubThreshold::Auto);
+            (r.map(|r| PathRun { count: r.triangles, metrics: r.metrics }), t)
+        }
     }
+}
+
+/// Cluster sizes a path is exercised at. The 2D path additionally runs at
+/// perfect-square sizes (9, 16) so the grid factorization's square cells —
+/// the configuration the O(m/√P) bound is about — are always in the
+/// matrix, whatever `--procs` says.
+fn procs_for(path: Path, procs: &[usize]) -> Vec<usize> {
+    let mut out = procs.to_vec();
+    if path == Path::Tile2d {
+        for extra in [9usize, 16] {
+            if !out.contains(&extra) {
+                out.push(extra);
+            }
+        }
+        out.sort_unstable();
+    }
+    out
 }
 
 /// Deterministic per-cell schedule seed.
@@ -307,8 +333,8 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
         opts.workloads.iter().map(|s| Prepared::build(s)).collect::<Result<_>>()?;
 
     for (wi, w) in prepared.iter().enumerate() {
-        for &p in &opts.procs {
-            for (pi, &path) in opts.paths.iter().enumerate() {
+        for (pi, &path) in opts.paths.iter().enumerate() {
+            for p in procs_for(path, &opts.procs) {
                 let mut cfg_hashes = Vec::with_capacity(opts.seeds as usize);
                 let mut ok = true;
                 for s in 0..opts.seeds {
@@ -406,6 +432,24 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
                                     &mut ok,
                                 );
                             }
+                            // Coalescing-plane tag classes drain too:
+                            // envelopes, logical records, and the 2D
+                            // path's row/column broadcast split each
+                            // conserve sent == received (trivially 0 on
+                            // the unframed paths).
+                            for (name, sent, received) in [
+                                ("frames", tot.frames_sent, tot.frames_received),
+                                ("records", tot.coalesced_sent, tot.coalesced_received),
+                                ("row-bcast", tot.row_bcast_sent, tot.row_bcast_received),
+                                ("col-bcast", tot.col_bcast_sent, tot.col_bcast_received),
+                            ] {
+                                if sent != received {
+                                    fail(
+                                        format!("{name} sent {sent} != received {received}"),
+                                        &mut ok,
+                                    );
+                                }
+                            }
                             cfg_hashes.push(t1.hash);
                             all_hashes.push(t1.hash);
                         }
@@ -477,9 +521,9 @@ fn fault_suite(w: &Prepared, paths: &[Path], report: &mut ConformanceReport) {
         // protocols (direct, dynamic-lb, local-counts) must *survive* the
         // loss through the `ft/` bounded-retry machinery: exact count,
         // retries > 0, deadline expiries recorded, zero recv-guard trips.
-        // Surrogate's one-way data plane has no reply to time out on — a
-        // lost data message is the supervisor's domain (DESIGN.md §13), so
-        // its drop cell asserts determinism only.
+        // Surrogate's and tile2d's one-way data planes have no reply to
+        // time out on — a lost data message is the supervisor's domain
+        // (DESIGN.md §13), so their drop cells assert determinism only.
         if !path.has_p2p() {
             continue;
         }
@@ -581,6 +625,7 @@ fn job_for<'a>(path: Path, w: &'a Prepared) -> crate::ft::Job<'a> {
             opts: StreamOptions::default(),
             initial: w.stream_initial,
         },
+        Path::Tile2d => Job::Tile2d { graph: &w.oriented, hub: HubThreshold::Auto },
     }
 }
 
@@ -592,7 +637,7 @@ fn job_for<'a>(path: Path, w: &'a Prepared) -> crate::ft::Job<'a> {
 fn recovery_suite(w: &Prepared, paths: &[Path], procs: &[usize], report: &mut ConformanceReport) {
     use crate::ft::{supervise, FaultPolicy};
     for (pi, &path) in paths.iter().enumerate() {
-        for &p in procs {
+        for p in procs_for(path, procs) {
             let probe_fabric = Fabric::Sim(SimConfig::adversarial(cell_seed(0xFA07, p, pi, 0)));
             let (probe, _) = run_path(path, &probe_fabric, w, p);
             let ops: Vec<u64> = match &probe {
