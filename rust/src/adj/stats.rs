@@ -142,6 +142,24 @@ pub struct KernelStats {
     pub simd_blocked: u64,
 }
 
+impl crate::comm::transport::Wire for KernelStats {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        use crate::comm::transport::Wire;
+        self.list_list.write_to(out);
+        self.list_bitmap.write_to(out);
+        self.bitmap_bitmap.write_to(out);
+        self.simd_blocked.write_to(out);
+    }
+    fn read_from(r: &mut crate::comm::transport::WireReader<'_>) -> crate::error::Result<Self> {
+        Ok(KernelStats {
+            list_list: r.u64()?,
+            list_bitmap: r.u64()?,
+            bitmap_bitmap: r.u64()?,
+            simd_blocked: r.u64()?,
+        })
+    }
+}
+
 impl KernelStats {
     /// Total intersections dispatched.
     pub fn total(&self) -> u64 {

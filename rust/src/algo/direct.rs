@@ -24,7 +24,7 @@ use crate::adj::{self, NeighborView};
 use crate::algo::driver::{self, RunResult};
 use crate::comm::coalesce::{CoalescingBuffer, Frame, DEFAULT_WATERMARK_WORDS};
 use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
-use crate::comm::transport::{Liveness, RetryPolicy};
+use crate::comm::transport::{Liveness, RetryPolicy, Wire, WireReader};
 use crate::error::{Error, Result};
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
@@ -57,6 +57,25 @@ impl Payload for Msg {
         match self {
             Msg::Batch(f) => f.bytes(),
             Msg::Completion => 8,
+        }
+    }
+}
+
+impl Wire for Msg {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Batch(f) => {
+                out.push(0);
+                f.write_to(out);
+            }
+            Msg::Completion => out.push(1),
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(Msg::Batch(Frame::read_from(r)?)),
+            1 => Ok(Msg::Completion),
+            b => Err(Error::Comm(format!("direct: unknown message discriminant {b}"))),
         }
     }
 }

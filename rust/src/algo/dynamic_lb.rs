@@ -19,7 +19,7 @@ use std::sync::Arc;
 use crate::algo::driver::{self, RunResult};
 use crate::algo::tasks::{self, Task};
 use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
-use crate::comm::transport::RetryPolicy;
+use crate::comm::transport::{RetryPolicy, Wire, WireReader};
 use crate::error::Result;
 use crate::config::CostFn;
 use crate::graph::ordering::Oriented;
@@ -53,6 +53,32 @@ pub enum Msg {
     Assign(Task),
     /// No more tasks (`⟨terminate⟩`).
     Terminate,
+}
+
+impl Wire for Msg {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Request { completed } => {
+                out.push(0);
+                completed.write_to(out);
+            }
+            Msg::Assign(t) => {
+                out.push(1);
+                t.write_to(out);
+            }
+            Msg::Terminate => out.push(2),
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(Msg::Request { completed: u64::read_from(r)? }),
+            1 => Ok(Msg::Assign(Task::read_from(r)?)),
+            2 => Ok(Msg::Terminate),
+            b => Err(crate::error::Error::Comm(format!(
+                "dynamic-lb: unknown message discriminant {b}"
+            ))),
+        }
+    }
 }
 
 impl Payload for Msg {

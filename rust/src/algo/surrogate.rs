@@ -20,7 +20,8 @@ use crate::adj::hub::HubThreshold;
 use crate::adj::{self, NeighborView};
 use crate::algo::driver::{self, RunResult};
 use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
-use crate::error::Result;
+use crate::comm::transport::{Wire, WireReader};
+use crate::error::{Error, Result};
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
 use crate::partition::nonoverlap::partition_sizes;
@@ -50,6 +51,25 @@ impl Payload for Msg {
         match self {
             Msg::Data(x) => 8 + 4 * x.len() as u64,
             Msg::Completion => 8,
+        }
+    }
+}
+
+impl Wire for Msg {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Data(x) => {
+                out.push(0);
+                x.write_to(out);
+            }
+            Msg::Completion => out.push(1),
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(Msg::Data(Arc::<[u32]>::read_from(r)?)),
+            1 => Ok(Msg::Completion),
+            b => Err(Error::Comm(format!("surrogate: unknown message discriminant {b}"))),
         }
     }
 }

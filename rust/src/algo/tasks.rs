@@ -12,6 +12,7 @@
 //!   toward atomic tasks.
 //! * **Fixed granularity** — the static strawman Fig 13 compares against.
 
+use crate::comm::transport::{Wire, WireReader};
 use crate::VertexId;
 
 /// A task `⟨v, t⟩`: count triangles on nodes `v .. v+t`.
@@ -19,6 +20,16 @@ use crate::VertexId;
 pub struct Task {
     pub start: VertexId,
     pub len: u32,
+}
+
+impl Wire for Task {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.start.write_to(out);
+        self.len.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> crate::error::Result<Self> {
+        Ok(Task { start: u32::read_from(r)?, len: u32::read_from(r)? })
+    }
 }
 
 impl Task {

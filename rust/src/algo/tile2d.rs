@@ -38,6 +38,7 @@ use crate::algo::driver::{self, RunResult};
 use crate::comm::coalesce::{CoalescingBuffer, Frame, DEFAULT_WATERMARK_WORDS};
 use crate::comm::metrics::CommMetrics;
 use crate::comm::threads::{Comm, Payload, Progress, ProgressUnit};
+use crate::comm::transport::{Wire, WireReader};
 use crate::error::Result;
 use crate::graph::ordering::Oriented;
 use crate::obs::span::SpanPhase;
@@ -67,6 +68,34 @@ impl Payload for Msg {
         match self {
             Msg::Row(f) | Msg::Col(f) => f.bytes(),
             Msg::RowDone | Msg::ColDone => 8,
+        }
+    }
+}
+
+impl Wire for Msg {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            Msg::Row(f) => {
+                out.push(0);
+                f.write_to(out);
+            }
+            Msg::Col(f) => {
+                out.push(1);
+                f.write_to(out);
+            }
+            Msg::RowDone => out.push(2),
+            Msg::ColDone => out.push(3),
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(Msg::Row(Frame::read_from(r)?)),
+            1 => Ok(Msg::Col(Frame::read_from(r)?)),
+            2 => Ok(Msg::RowDone),
+            3 => Ok(Msg::ColDone),
+            b => Err(crate::error::Error::Comm(format!(
+                "tile2d: unknown message discriminant {b}"
+            ))),
         }
     }
 }

@@ -29,6 +29,8 @@
 //! `flush()` drains whatever remains — senders call it at the end of a
 //! sweep (and whenever a peer may be blocked waiting on the content).
 
+use crate::comm::transport::{Wire, WireReader};
+
 /// Default flush watermark: 1024 payload words = 4 KiB frames.
 pub const DEFAULT_WATERMARK_WORDS: usize = 1024;
 
@@ -39,6 +41,16 @@ pub struct Frame {
     pub items: u64,
     /// Back-to-back `[tag, len, payload…]` records.
     pub words: Vec<u32>,
+}
+
+impl Wire for Frame {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.items.write_to(out);
+        self.words.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> crate::error::Result<Self> {
+        Ok(Frame { items: u64::read_from(r)?, words: Vec::<u32>::read_from(r)? })
+    }
 }
 
 impl Frame {

@@ -8,6 +8,7 @@
 use std::time::Duration;
 
 use crate::adj::stats::KernelStats;
+use crate::comm::transport::{Wire, WireReader};
 use crate::obs::span::SpanLog;
 
 /// Counters a single rank accumulates during a run.
@@ -61,6 +62,14 @@ pub struct CommMetrics {
     /// retry). 0 on a fault-free run — the conformance drop cells assert
     /// these are bounded and non-zero where a message was eaten.
     pub retries: u64,
+    /// Socket-fabric framing bytes (`comm::tcp`): per-frame headers,
+    /// handshakes, collective/retire/result frames, and any delta between
+    /// a payload's encoded length and its declared `size_bytes`. Purely
+    /// **additive** on top of `bytes_sent` — the declared-payload counters
+    /// are identical across fabrics (the byte-accounting equivalence the
+    /// conformance suite pins), and this field is 0 everywhere except the
+    /// TCP backend. Sent-side accounting only.
+    pub wire_overhead_bytes: u64,
     /// Work units re-executed on recovery attempts (`ft::supervisor`):
     /// the measured cost of surviving the fault, reported apart from
     /// `work_units` so the fault-free cost stays comparable.
@@ -123,6 +132,7 @@ impl CommMetrics {
         self.col_bcast_sent += other.col_bcast_sent;
         self.col_bcast_received += other.col_bcast_received;
         self.retries += other.retries;
+        self.wire_overhead_bytes += other.wire_overhead_bytes;
         self.reexec_work_units += other.reexec_work_units;
         self.reexec_bytes += other.reexec_bytes;
         self.total = self.total.max(other.total);
@@ -131,6 +141,71 @@ impl CommMetrics {
         self.partition_bytes_pred += other.partition_bytes_pred;
         self.accel_bytes += other.accel_bytes;
         self.kernel.merge(&other.kernel);
+    }
+}
+
+/// Per-rank metrics cross the socket fabric in the result gather
+/// (`comm::tcp::run_tcp_hooked`), span timeline included, so rank 0 can
+/// merge remote snapshots exactly as the in-process launcher does.
+/// Field order is declaration order; durations travel as microseconds.
+impl Wire for CommMetrics {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.messages_sent.write_to(out);
+        self.bytes_sent.write_to(out);
+        self.messages_received.write_to(out);
+        self.control_sent.write_to(out);
+        self.control_received.write_to(out);
+        self.recv_wait.write_to(out);
+        self.transport_ops.write_to(out);
+        self.frames_sent.write_to(out);
+        self.frames_received.write_to(out);
+        self.coalesced_sent.write_to(out);
+        self.coalesced_received.write_to(out);
+        self.row_bcast_sent.write_to(out);
+        self.row_bcast_received.write_to(out);
+        self.col_bcast_sent.write_to(out);
+        self.col_bcast_received.write_to(out);
+        self.retries.write_to(out);
+        self.wire_overhead_bytes.write_to(out);
+        self.reexec_work_units.write_to(out);
+        self.reexec_bytes.write_to(out);
+        self.total.write_to(out);
+        self.work_units.write_to(out);
+        self.partition_bytes.write_to(out);
+        self.partition_bytes_pred.write_to(out);
+        self.accel_bytes.write_to(out);
+        self.kernel.write_to(out);
+        self.spans.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> crate::error::Result<Self> {
+        Ok(CommMetrics {
+            messages_sent: u64::read_from(r)?,
+            bytes_sent: u64::read_from(r)?,
+            messages_received: u64::read_from(r)?,
+            control_sent: u64::read_from(r)?,
+            control_received: u64::read_from(r)?,
+            recv_wait: Duration::read_from(r)?,
+            transport_ops: u64::read_from(r)?,
+            frames_sent: u64::read_from(r)?,
+            frames_received: u64::read_from(r)?,
+            coalesced_sent: u64::read_from(r)?,
+            coalesced_received: u64::read_from(r)?,
+            row_bcast_sent: u64::read_from(r)?,
+            row_bcast_received: u64::read_from(r)?,
+            col_bcast_sent: u64::read_from(r)?,
+            col_bcast_received: u64::read_from(r)?,
+            retries: u64::read_from(r)?,
+            wire_overhead_bytes: u64::read_from(r)?,
+            reexec_work_units: u64::read_from(r)?,
+            reexec_bytes: u64::read_from(r)?,
+            total: Duration::read_from(r)?,
+            work_units: u64::read_from(r)?,
+            partition_bytes: u64::read_from(r)?,
+            partition_bytes_pred: u64::read_from(r)?,
+            accel_bytes: u64::read_from(r)?,
+            kernel: KernelStats::read_from(r)?,
+            spans: SpanLog::read_from(r)?,
+        })
     }
 }
 
@@ -222,6 +297,7 @@ mod tests {
             coalesced_sent: 9,
             row_bcast_sent: 5,
             col_bcast_received: 3,
+            wire_overhead_bytes: 40,
             kernel: KernelStats { list_list: 3, list_bitmap: 1, bitmap_bitmap: 2, simd_blocked: 0 },
             ..Default::default()
         };
@@ -237,9 +313,34 @@ mod tests {
         assert_eq!(a.partition_bytes, 100);
         assert_eq!(a.partition_bytes_pred, 100);
         assert_eq!(a.accel_bytes, 16);
+        assert_eq!(a.wire_overhead_bytes, 40);
         // Kernel mixes sum field-wise; span logs stay per-rank (empty here).
         assert_eq!(a.kernel.total(), 6);
         assert_eq!(a.spans.recorded(), 0);
+    }
+
+    #[test]
+    fn metrics_wire_roundtrip_is_exact() {
+        use crate::obs::span::{ClockDomain, Span, SpanLog, SpanPhase};
+        let m = CommMetrics {
+            messages_sent: 3,
+            bytes_sent: 99,
+            control_sent: 2,
+            recv_wait: Duration::from_micros(1234),
+            transport_ops: 17,
+            retries: 1,
+            wire_overhead_bytes: 60,
+            total: Duration::from_micros(5678),
+            kernel: KernelStats { list_list: 4, list_bitmap: 2, bitmap_bitmap: 1, simd_blocked: 3 },
+            spans: SpanLog {
+                domain: ClockDomain::Wall,
+                spans: vec![Span { phase: SpanPhase::Compute, t_start: 1, t_end: 9 }],
+                dropped: 0,
+            },
+            ..Default::default()
+        };
+        let back = CommMetrics::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]

@@ -1,0 +1,1547 @@
+//! The socket fabric: [`Transport`] over length-prefixed binary frames on
+//! real TCP streams, so a counting cluster can span OS *processes* (and, in
+//! principle, machines) instead of threads in one address space.
+//!
+//! ## Wire protocol (DESIGN.md §15)
+//!
+//! Every connection opens with a 24-byte hello — `[MAGIC u32,
+//! WIRE_VERSION u32, job_id u64, rank u32, procs u32]`, all little-endian —
+//! and then carries a stream of frames: a 20-byte header `[src, dst, tag,
+//! control, len]` (five LE `u32`s) followed by `len` payload bytes encoded
+//! with the [`Wire`] codec. One ordered TCP stream per (src, dst) pair *is*
+//! the non-overtaking guarantee the [`Transport`] contract demands: TCP
+//! delivers bytes in order, frames are parsed in order, and the per-peer
+//! reader enqueues them in order — nothing can overtake on an edge.
+//!
+//! Decoding is total: truncated frames, oversized length prefixes,
+//! mid-stream disconnects and undecodable payloads all surface as
+//! deterministic [`Error::Comm`] (hello-level mismatches as
+//! [`Error::Config`]) — never a panic, never a hang (every blocking wait is
+//! bounded by [`recv_guard`]).
+//!
+//! ## Rendezvous
+//!
+//! Rank 0 hosts: it binds the `--connect` address, accepts `P-1` workers
+//! within the join timeout, validates the roster (job id, wire version,
+//! duplicate / out-of-range ranks) and broadcasts the peer address table.
+//! Each worker binds a mesh listener, presents it in its hello, then dials
+//! every lower-ranked worker and accepts from every higher-ranked one —
+//! the uniform orientation cannot deadlock because dials complete against
+//! the OS listen backlog without a synchronous accept. Rank 0's edges are
+//! the rendezvous streams themselves.
+//!
+//! ## Collectives and results
+//!
+//! Barriers and reductions ride the same streams as control-tagged frames
+//! coordinated by rank 0, keyed by a shared epoch counter (both collectives
+//! advance it, so the epoch alone identifies the collective; a fast peer
+//! can be at most one epoch ahead, which rank 0 absorbs in a pending map).
+//! When the rank program returns, every rank's `(result, metrics)` is
+//! gathered at rank 0 and the complete rank-ordered vector is broadcast
+//! back, so [`run_tcp_hooked`] returns the *identical* allgather on every
+//! rank — the drivers' fold/zip logic works unchanged in every process.
+//!
+//! ## Byte accounting
+//!
+//! `CommMetrics::bytes_sent` keeps counting declared [`Payload::size_bytes`]
+//! exactly as on the channel fabric; the framing this module adds on top
+//! (headers, collective/retire frames) accumulates separately and is
+//! stamped into `CommMetrics::wire_overhead_bytes` after the rank program
+//! returns. The result/GO frames themselves are sent *after* that stamp
+//! and are deliberately excluded — the counter is "overhead during the
+//! run", snapshotted at the same instant as every other counter.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::marker::PhantomData;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::comm::metrics::CommMetrics;
+use crate::comm::threads::{recv_guard, try_recv_guard, Cluster, Comm, Progress};
+use crate::comm::transport::{
+    Envelope, Liveness, Payload, Transport, Wire, WireReader, LIVE_DONE, LIVE_FAILED, LIVE_RUNNING,
+};
+use crate::error::{Error, Result};
+
+/// First word of every hello: identifies a tricount peer.
+pub const MAGIC: u32 = 0x5452_4943;
+
+/// Wire schema version; both ends must agree exactly.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Fixed hello size: magic, version, job id, rank, procs.
+pub const HELLO_BYTES: usize = 24;
+
+/// Fixed frame header size: `[src, dst, tag, control, len]` as LE u32s.
+pub const FRAME_HEADER_BYTES: usize = 20;
+
+/// Upper bound on a single frame payload — a corrupt length prefix fails
+/// here instead of driving a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+const MAX_ADDR_BYTES: usize = 4096;
+const MAX_REASON_BYTES: usize = 1 << 16;
+const MAX_TABLE_BYTES: usize = 1 << 20;
+
+/// Application data plane ([`Envelope`] payloads).
+pub const TAG_MSG: u32 = 0;
+/// Barrier contribution (worker → rank 0).
+pub const TAG_BARRIER: u32 = 1;
+/// Barrier release (rank 0 → worker).
+pub const TAG_BARRIER_GO: u32 = 2;
+/// Reduce contribution (worker → rank 0).
+pub const TAG_REDUCE: u32 = 3;
+/// Reduce total (rank 0 → worker).
+pub const TAG_REDUCE_GO: u32 = 4;
+/// Rank retirement; `control` is the success flag.
+pub const TAG_RETIRE: u32 = 5;
+/// Per-rank result upload (worker → rank 0); `control` = ok flag.
+pub const TAG_RESULT: u32 = 6;
+/// Allgathered results / failure verdict (rank 0 → worker).
+pub const TAG_RESULT_GO: u32 = 7;
+
+/// One decoded frame as it came off the socket.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RawFrame {
+    pub src: u32,
+    pub dst: u32,
+    pub tag: u32,
+    pub control: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Assemble one frame: 20-byte header + payload.
+pub fn encode_frame(src: u32, dst: u32, tag: u32, control: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    for w in [src, dst, tag, control, payload.len() as u32] {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read exactly `buf.len()` bytes; EOF or an I/O error mid-read is a
+/// deterministic [`Error::Comm`] naming what was being read.
+fn read_exact_or<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(Error::Comm(format!(
+                    "mid-stream disconnect while reading {what}: got {got} of {} bytes",
+                    buf.len()
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Comm(format!("socket read failed while reading {what}: {e}"))),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on a clean EOF at a frame boundary (the
+/// peer closed after its last complete frame); every partial read is an
+/// [`Error::Comm`], and a length prefix beyond [`MAX_FRAME_BYTES`] fails
+/// before any allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<RawFrame>> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    let mut got = 0;
+    while got < hdr.len() {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(Error::Comm(format!(
+                    "mid-stream disconnect: got {got} of {FRAME_HEADER_BYTES} frame-header bytes"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Comm(format!("socket read failed: {e}"))),
+        }
+    }
+    let word = |i: usize| u32::from_le_bytes(hdr[4 * i..4 * i + 4].try_into().unwrap());
+    let (src, dst, tag, control, len) = (word(0), word(1), word(2), word(3), word(4));
+    if len as usize > MAX_FRAME_BYTES {
+        return Err(Error::Comm(format!(
+            "frame length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload, "frame payload")?;
+    Ok(Some(RawFrame { src, dst, tag, control, payload }))
+}
+
+/// A decoded hello (magic and version already verified).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hello {
+    pub job_id: u64,
+    pub rank: u32,
+    pub procs: u32,
+}
+
+/// Encode the fixed-size connection hello.
+pub fn encode_hello(job_id: u64, rank: u32, procs: u32) -> [u8; HELLO_BYTES] {
+    let mut b = [0u8; HELLO_BYTES];
+    b[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    b[4..8].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    b[8..16].copy_from_slice(&job_id.to_le_bytes());
+    b[16..20].copy_from_slice(&rank.to_le_bytes());
+    b[20..24].copy_from_slice(&procs.to_le_bytes());
+    b
+}
+
+/// Read and validate a hello: a non-tricount peer ([`MAGIC`]) or a build
+/// from a different wire schema ([`WIRE_VERSION`]) is an [`Error::Config`]
+/// — a deployment mistake, not a transient wire fault.
+pub fn read_hello<R: Read>(r: &mut R) -> Result<Hello> {
+    let mut b = [0u8; HELLO_BYTES];
+    read_exact_or(r, &mut b, "hello")?;
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(Error::Config(format!(
+            "bad rendezvous magic {magic:#010x} (expected {MAGIC:#010x}) — not a tricount peer"
+        )));
+    }
+    let version = u32::from_le_bytes(b[4..8].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(Error::Config(format!(
+            "wire version mismatch: peer speaks v{version}, this build speaks v{WIRE_VERSION}"
+        )));
+    }
+    Ok(Hello {
+        job_id: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        rank: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+        procs: u32::from_le_bytes(b[20..24].try_into().unwrap()),
+    })
+}
+
+/// Append a `u64` count followed by each element's encoding.
+pub fn write_seq<T: Wire>(items: &[T], out: &mut Vec<u8>) {
+    (items.len() as u64).write_to(out);
+    for it in items {
+        it.write_to(out);
+    }
+}
+
+/// Inverse of [`write_seq`]; the count is validated as a length prefix so
+/// a corrupt value fails before allocation.
+pub fn read_seq<T: Wire>(r: &mut WireReader<'_>) -> Result<Vec<T>> {
+    let n = r.len_prefix(1)?;
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        v.push(T::read_from(r)?);
+    }
+    Ok(v)
+}
+
+/// Write a `u64`-length-prefixed byte blob (rendezvous metadata, sent raw
+/// before the frame readers start).
+fn write_blob<W: Write>(w: &mut W, bytes: &[u8]) -> Result<()> {
+    w.write_all(&(bytes.len() as u64).to_le_bytes())
+        .and_then(|_| w.write_all(bytes))
+        .map_err(|e| Error::Comm(format!("rendezvous write failed: {e}")))
+}
+
+/// Read a blob with an explicit size cap ([`Error::Config`] above it).
+fn read_blob<R: Read>(r: &mut R, cap: usize, what: &str) -> Result<Vec<u8>> {
+    let mut hdr = [0u8; 8];
+    read_exact_or(r, &mut hdr, what)?;
+    let n = u64::from_le_bytes(hdr);
+    if n > cap as u64 {
+        return Err(Error::Config(format!("{what} length {n} exceeds the {cap}-byte cap")));
+    }
+    let mut buf = vec![0u8; n as usize];
+    read_exact_or(r, &mut buf, what)?;
+    Ok(buf)
+}
+
+/// Configuration of one rank's endpoint into a TCP cluster, carried by
+/// `Fabric::Tcp` and built by the CLI (`tricount worker` / `launch`).
+#[derive(Clone, Debug)]
+pub struct TcpFabric {
+    /// Rendezvous address: rank 0 binds it, workers dial it.
+    pub connect: String,
+    /// This process's rank in `0..procs`.
+    pub rank: usize,
+    /// Cluster size `P`.
+    pub procs: usize,
+    /// Launch-unique id; a worker from a different launch is rejected at
+    /// rendezvous instead of silently joining the wrong cluster.
+    pub job_id: u64,
+    /// Rendezvous join timeout in milliseconds; `0` means "use the
+    /// [`recv_guard`]", which is how `TRICOUNT_RECV_GUARD_SECS` bounds a
+    /// worker whose peers never connect.
+    pub join_timeout_ms: u64,
+}
+
+impl TcpFabric {
+    /// Effective join timeout (see [`TcpFabric::join_timeout_ms`]).
+    pub fn join_timeout(&self) -> Duration {
+        if self.join_timeout_ms == 0 {
+            recv_guard()
+        } else {
+            Duration::from_millis(self.join_timeout_ms)
+        }
+    }
+}
+
+/// Per-peer liveness board: run state + last-heard stamp, updated by the
+/// reader threads on every frame and read by [`Transport::liveness`] —
+/// the same semantics the channel fabric's shared board provides, so the
+/// `ft/` supervisor's slow-vs-dead classification carries over.
+struct Board {
+    state: Vec<AtomicU8>,
+    beat: Vec<AtomicU64>,
+    epoch: Instant,
+}
+
+impl Board {
+    fn new(p: usize) -> Arc<Board> {
+        Arc::new(Board {
+            state: (0..p).map(|_| AtomicU8::new(LIVE_RUNNING)).collect(),
+            beat: (0..p).map(|_| AtomicU64::new(0)).collect(),
+            epoch: Instant::now(),
+        })
+    }
+
+    #[inline]
+    fn beat_now(&self, rank: usize) {
+        self.beat[rank].store(self.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    fn set_state(&self, rank: usize, s: u8) {
+        self.state[rank].store(s, Ordering::Release);
+    }
+
+    fn classify(&self, rank: usize, stale_after: Duration) -> Liveness {
+        match self.state[rank].load(Ordering::Acquire) {
+            LIVE_DONE | LIVE_FAILED => Liveness::Dead,
+            _ => {
+                let last = self.beat[rank].load(Ordering::Relaxed);
+                let now = self.epoch.elapsed().as_micros() as u64;
+                if now.saturating_sub(last) > stale_after.as_micros() as u64 {
+                    Liveness::Slow
+                } else {
+                    Liveness::Alive
+                }
+            }
+        }
+    }
+}
+
+/// Data-plane delivery from a reader thread to the rank thread. Payload
+/// stays as bytes: `M` is deserialized *in the rank thread*, so a corrupt
+/// payload surfaces as that rank's deterministic receive error, never as
+/// a reader-thread panic.
+enum MailItem {
+    Env { src: usize, control: bool, bytes: Vec<u8> },
+    Fault(String),
+}
+
+/// Collective-plane delivery (barrier/reduce contributions and GOs).
+enum CollItem {
+    Frame { src: usize, tag: u32, epoch: u64, value: u64 },
+    Fault(String),
+}
+
+/// Result-plane delivery (the end-of-run allgather).
+enum ResultItem {
+    Frame { src: usize, tag: u32, control: u32, bytes: Vec<u8> },
+    Fault(String),
+}
+
+/// Serialize one frame onto the (mutex-guarded) stream to `dst`.
+fn write_frame(
+    writers: &[Option<Arc<Mutex<TcpStream>>>],
+    my_rank: usize,
+    dst: usize,
+    frame: &[u8],
+) -> Result<()> {
+    let w = writers
+        .get(dst)
+        .and_then(|w| w.as_ref())
+        .ok_or_else(|| Error::Cluster(format!("rank {my_rank}: no stream to rank {dst}")))?;
+    let mut s = match w.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    s.write_all(frame)
+        .map_err(|e| Error::Cluster(format!("rank {my_rank} send to rank {dst} failed: {e}")))
+}
+
+/// One byte-level reader per peer: parses frames off the stream and
+/// demuxes by tag into the mail/collective/result queues. `M`-agnostic by
+/// design — any wire-level failure becomes a `Fault` pushed to all three
+/// queues plus a `FAILED` mark on the board, and the thread exits.
+#[allow(clippy::too_many_arguments)]
+fn spawn_reader(
+    me: usize,
+    peer: usize,
+    stream: TcpStream,
+    board: Arc<Board>,
+    closing: Arc<AtomicBool>,
+    mail_tx: Sender<MailItem>,
+    coll_tx: Sender<CollItem>,
+    result_tx: Sender<ResultItem>,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        let mut r = io::BufReader::new(stream);
+        let fault = |m: String| {
+            let _ = mail_tx.send(MailItem::Fault(m.clone()));
+            let _ = coll_tx.send(CollItem::Fault(m.clone()));
+            let _ = result_tx.send(ResultItem::Fault(m));
+        };
+        loop {
+            match read_frame(&mut r) {
+                Ok(None) => {
+                    // Clean EOF. If the peer is still marked running and we
+                    // are not tearing down ourselves, it died mid-run.
+                    if !closing.load(Ordering::Acquire)
+                        && board.state[peer].load(Ordering::Acquire) == LIVE_RUNNING
+                    {
+                        board.set_state(peer, LIVE_FAILED);
+                        fault(format!("rank {peer} disconnected mid-run"));
+                    }
+                    return;
+                }
+                Ok(Some(f)) => {
+                    board.beat_now(peer);
+                    if f.dst as usize != me {
+                        board.set_state(peer, LIVE_FAILED);
+                        fault(format!(
+                            "misrouted frame from rank {}: dst {} arrived at rank {me}",
+                            f.src, f.dst
+                        ));
+                        return;
+                    }
+                    match f.tag {
+                        TAG_MSG => {
+                            let _ = mail_tx.send(MailItem::Env {
+                                src: f.src as usize,
+                                control: f.control != 0,
+                                bytes: f.payload,
+                            });
+                        }
+                        TAG_BARRIER | TAG_BARRIER_GO | TAG_REDUCE | TAG_REDUCE_GO => {
+                            match <(u64, u64)>::from_bytes(&f.payload) {
+                                Ok((epoch, value)) => {
+                                    let _ = coll_tx.send(CollItem::Frame {
+                                        src: f.src as usize,
+                                        tag: f.tag,
+                                        epoch,
+                                        value,
+                                    });
+                                }
+                                Err(e) => {
+                                    board.set_state(peer, LIVE_FAILED);
+                                    fault(format!("rank {peer}: undecodable collective frame: {e}"));
+                                    return;
+                                }
+                            }
+                        }
+                        TAG_RETIRE => {
+                            board.set_state(
+                                peer,
+                                if f.control != 0 { LIVE_DONE } else { LIVE_FAILED },
+                            );
+                        }
+                        TAG_RESULT | TAG_RESULT_GO => {
+                            let _ = result_tx.send(ResultItem::Frame {
+                                src: f.src as usize,
+                                tag: f.tag,
+                                control: f.control,
+                                bytes: f.payload,
+                            });
+                        }
+                        other => {
+                            board.set_state(peer, LIVE_FAILED);
+                            fault(format!("unknown frame tag {other} from rank {}", f.src));
+                            return;
+                        }
+                    }
+                }
+                Err(e) => {
+                    if closing.load(Ordering::Acquire) {
+                        return;
+                    }
+                    board.set_state(peer, LIVE_FAILED);
+                    fault(e.to_string());
+                    return;
+                }
+            }
+        }
+    })
+}
+
+/// Read a hello from an accepted rendezvous connection and validate it
+/// against this launch; returns the worker's rank and mesh address.
+fn admit(cfg: &TcpFabric, s: &mut TcpStream) -> Result<(usize, String)> {
+    let hello = read_hello(s)?;
+    if hello.job_id != cfg.job_id {
+        return Err(Error::Config(format!(
+            "rendezvous job-id mismatch: worker presented {:#x}, this launch is {:#x}",
+            hello.job_id, cfg.job_id
+        )));
+    }
+    if hello.procs as usize != cfg.procs {
+        return Err(Error::Config(format!(
+            "rendezvous procs mismatch: worker built for P={}, this launch is P={}",
+            hello.procs, cfg.procs
+        )));
+    }
+    let r = hello.rank as usize;
+    if r == 0 || r >= cfg.procs {
+        return Err(Error::Config(format!(
+            "rendezvous rank {r} out of range 1..{}",
+            cfg.procs
+        )));
+    }
+    let addr_bytes = read_blob(s, MAX_ADDR_BYTES, "mesh address")?;
+    let addr = String::from_bytes(&addr_bytes)?;
+    Ok((r, addr))
+}
+
+/// Rank 0's side of the rendezvous: accept, validate, broadcast the peer
+/// table (or the rejection reason). Returns the per-peer streams, `None`
+/// at index 0.
+fn host_rendezvous(cfg: &TcpFabric) -> Result<Vec<Option<TcpStream>>> {
+    let listener = TcpListener::bind(&cfg.connect).map_err(|e| {
+        Error::Config(format!("cannot bind rendezvous address {}: {e}", cfg.connect))
+    })?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::Comm(format!("cannot make rendezvous listener non-blocking: {e}")))?;
+    let deadline = Instant::now() + cfg.join_timeout();
+    let mut streams: Vec<Option<TcpStream>> = (0..cfg.procs).map(|_| None).collect();
+    let mut addrs: Vec<String> = vec![String::new(); cfg.procs];
+    let mut joined = 1usize; // rank 0 is the host
+
+    let outcome: Result<()> = loop {
+        if joined == cfg.procs {
+            break Ok(());
+        }
+        if Instant::now() >= deadline {
+            let missing: Vec<String> = (1..cfg.procs)
+                .filter(|r| streams[*r].is_none())
+                .map(|r| r.to_string())
+                .collect();
+            break Err(Error::Config(format!(
+                "rendezvous join timeout after {:?}: missing rank(s) {}",
+                cfg.join_timeout(),
+                missing.join(", ")
+            )));
+        }
+        match listener.accept() {
+            Ok((mut s, _peer)) => {
+                if let Err(e) = s.set_nonblocking(false) {
+                    break Err(Error::Comm(format!("rendezvous socket setup failed: {e}")));
+                }
+                s.set_nodelay(true).ok();
+                match admit(cfg, &mut s) {
+                    Ok((r, addr)) => {
+                        if streams[r].is_some() {
+                            break Err(Error::Config(format!("duplicate rank {r} at rendezvous")));
+                        }
+                        streams[r] = Some(s);
+                        addrs[r] = addr;
+                        joined += 1;
+                    }
+                    Err(e) => break Err(e),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => break Err(Error::Comm(format!("rendezvous accept failed: {e}"))),
+        }
+    };
+    match outcome {
+        Ok(()) => {
+            let mut table = Vec::new();
+            write_seq(&addrs, &mut table);
+            for r in 1..cfg.procs {
+                let s = streams[r].as_mut().expect("all ranks joined");
+                s.write_all(&[0u8]).map_err(|e| {
+                    Error::Comm(format!("rendezvous table send to rank {r} failed: {e}"))
+                })?;
+                write_blob(s, &table)?;
+            }
+            Ok(streams)
+        }
+        Err(e) => {
+            // Tell every already-joined worker why before failing rank 0,
+            // so they exit with the reason instead of a bare disconnect.
+            let mut reason = Vec::new();
+            e.to_string().write_to(&mut reason);
+            for s in streams.iter_mut().flatten() {
+                let _ = s.write_all(&[1u8]);
+                let _ = write_blob(s, &reason);
+            }
+            Err(e)
+        }
+    }
+}
+
+/// A worker's side of the rendezvous plus the mesh dial-up. Returns the
+/// per-peer streams, `None` at this rank's own index.
+fn worker_rendezvous(cfg: &TcpFabric) -> Result<Vec<Option<TcpStream>>> {
+    let deadline = Instant::now() + cfg.join_timeout();
+    // Dial rank 0 with bounded retry — the host may not have bound yet.
+    let mut s0 = loop {
+        match TcpStream::connect(&cfg.connect) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Config(format!(
+                        "rank {}: could not reach rendezvous at {} within {:?}: {e}",
+                        cfg.rank,
+                        cfg.connect,
+                        cfg.join_timeout()
+                    )));
+                }
+                thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    s0.set_nodelay(true).ok();
+    // Mesh listener, advertised to higher ranks through rank 0's table.
+    // Bound on the same interface the rendezvous connection uses, so the
+    // advertised address is reachable in multi-host deployments too.
+    let local_ip = s0
+        .local_addr()
+        .map_err(|e| Error::Comm(format!("local_addr failed: {e}")))?
+        .ip();
+    let mesh = TcpListener::bind(SocketAddr::new(local_ip, 0))
+        .map_err(|e| Error::Comm(format!("rank {}: cannot bind mesh listener: {e}", cfg.rank)))?;
+    let mesh_addr = mesh
+        .local_addr()
+        .map_err(|e| Error::Comm(format!("mesh local_addr failed: {e}")))?
+        .to_string();
+
+    s0.write_all(&encode_hello(cfg.job_id, cfg.rank as u32, cfg.procs as u32))
+        .map_err(|e| Error::Comm(format!("rendezvous hello send failed: {e}")))?;
+    let mut addr_enc = Vec::new();
+    mesh_addr.write_to(&mut addr_enc);
+    write_blob(&mut s0, &addr_enc)?;
+
+    let mut status = [0u8; 1];
+    read_exact_or(&mut s0, &mut status, "rendezvous status")?;
+    if status[0] == 1 {
+        let reason = read_blob(&mut s0, MAX_REASON_BYTES, "rendezvous rejection")?;
+        let msg = String::from_bytes(&reason)?;
+        return Err(Error::Config(format!(
+            "rank {}: rendezvous rejected this worker: {msg}",
+            cfg.rank
+        )));
+    }
+    if status[0] != 0 {
+        return Err(Error::Comm(format!("invalid rendezvous status byte {}", status[0])));
+    }
+    let table_bytes = read_blob(&mut s0, MAX_TABLE_BYTES, "peer address table")?;
+    let mut rd = WireReader::new(&table_bytes);
+    let table = read_seq::<String>(&mut rd)?;
+    rd.finish()?;
+    if table.len() != cfg.procs {
+        return Err(Error::Comm(format!(
+            "peer table has {} entries, expected {}",
+            table.len(),
+            cfg.procs
+        )));
+    }
+
+    let mut streams: Vec<Option<TcpStream>> = (0..cfg.procs).map(|_| None).collect();
+    streams[0] = Some(s0);
+    // Dial every lower-ranked worker; accept from every higher one. The
+    // uniform orientation cannot deadlock: dials complete against the OS
+    // listen backlog without a synchronous accept on the other side.
+    for i in 1..cfg.rank {
+        let mut s = loop {
+            match TcpStream::connect(table[i].as_str()) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Comm(format!(
+                            "rank {}: could not reach rank {i} at {} within the join timeout: {e}",
+                            cfg.rank, table[i]
+                        )));
+                    }
+                    thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        s.set_nodelay(true).ok();
+        s.write_all(&encode_hello(cfg.job_id, cfg.rank as u32, cfg.procs as u32))
+            .map_err(|e| Error::Comm(format!("mesh hello to rank {i} failed: {e}")))?;
+        streams[i] = Some(s);
+    }
+    mesh.set_nonblocking(true)
+        .map_err(|e| Error::Comm(format!("mesh listener setup failed: {e}")))?;
+    let expected = cfg.procs - cfg.rank - 1;
+    let mut accepted = 0;
+    while accepted < expected {
+        if Instant::now() >= deadline {
+            return Err(Error::Comm(format!(
+                "rank {}: mesh join timeout: {accepted} of {expected} higher-ranked peers connected",
+                cfg.rank
+            )));
+        }
+        match mesh.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)
+                    .map_err(|e| Error::Comm(format!("mesh socket setup failed: {e}")))?;
+                s.set_nodelay(true).ok();
+                let hello = read_hello(&mut s)?;
+                let j = hello.rank as usize;
+                if hello.job_id != cfg.job_id || hello.procs as usize != cfg.procs {
+                    return Err(Error::Config(format!(
+                        "rank {}: mesh hello mismatch from rank {j}",
+                        cfg.rank
+                    )));
+                }
+                if j <= cfg.rank || j >= cfg.procs || streams[j].is_some() {
+                    return Err(Error::Comm(format!(
+                        "rank {}: unexpected mesh hello from rank {j}",
+                        cfg.rank
+                    )));
+                }
+                streams[j] = Some(s);
+                accepted += 1;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5))
+            }
+            Err(e) => return Err(Error::Comm(format!("mesh accept failed: {e}"))),
+        }
+    }
+    Ok(streams)
+}
+
+/// The socket-side resources that must outlive the rank program: writers,
+/// raw stream handles (for shutdown), the reader threads and the result
+/// queue. Owned by [`run_tcp_hooked`], *not* by the transport — the
+/// `Comm` is consumed by `Cluster::launch`, and the end-of-run result
+/// exchange still needs the sockets after it returns.
+pub(crate) struct TcpSession {
+    rank: usize,
+    writers: Vec<Option<Arc<Mutex<TcpStream>>>>,
+    raw: Vec<Option<TcpStream>>,
+    closing: Arc<AtomicBool>,
+    overhead: Arc<AtomicU64>,
+    result_rx: Receiver<ResultItem>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpSession {
+    fn write_frame_to(&self, dst: usize, frame: &[u8]) -> Result<()> {
+        write_frame(&self.writers, self.rank, dst, frame)
+    }
+
+    /// Framing bytes accumulated so far (see the module docs on stamping).
+    fn overhead_bytes(&self) -> u64 {
+        self.overhead.load(Ordering::Relaxed)
+    }
+
+    /// Tear down: mark closing (so our readers treat the wakeup as clean),
+    /// shut both directions of every socket — which unblocks this
+    /// process's own blocked `read`s with EOF — and join the readers.
+    pub(crate) fn shutdown(&mut self) {
+        self.closing.store(true, Ordering::SeqCst);
+        for s in self.raw.iter().flatten() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpSession {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One rank's [`Transport`] endpoint over the TCP mesh.
+pub struct TcpTransport<M: Payload> {
+    rank: usize,
+    procs: usize,
+    writers: Vec<Option<Arc<Mutex<TcpStream>>>>,
+    board: Arc<Board>,
+    overhead: Arc<AtomicU64>,
+    /// Self-sends short-circuit into our own mailbox (no wire, no
+    /// overhead) — mirroring the channel fabric, where a self-send goes
+    /// through the same queue as remote deliveries.
+    mail_tx: Sender<MailItem>,
+    mail_rx: Receiver<MailItem>,
+    coll_rx: Receiver<CollItem>,
+    /// Shared collective epoch: both [`Transport::barrier`] and
+    /// [`Transport::reduce_sum`] advance it, so identical collective
+    /// sequences on all ranks mean the epoch alone names the collective.
+    epoch: u64,
+    /// Rank 0 only: early contributions to a *future* epoch (a fast peer
+    /// is at most one ahead — it cannot pass epoch `e+1` without our GO
+    /// for `e`), keyed by epoch as `(count, partial_sum)`.
+    pending: BTreeMap<u64, (usize, u64)>,
+    /// A wire fault observed by [`Transport::try_recv`] (which has no
+    /// error channel): stashed here and surfaced by the next fallible
+    /// receive or collective.
+    pending_fault: Option<String>,
+    _msg: PhantomData<M>,
+}
+
+impl<M: Payload> TcpTransport<M> {
+    fn check_fault(&self) -> Result<()> {
+        match &self.pending_fault {
+            Some(m) => Err(Error::Comm(m.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// The rank-0-coordinated collective shared by barrier and reduce:
+    /// workers send `(epoch, value)` to rank 0; rank 0 sums `P-1`
+    /// contributions for the current epoch (stashing early next-epoch
+    /// ones) and broadcasts `(epoch, total)` as the GO.
+    fn collective(&mut self, contrib_tag: u32, go_tag: u32, value: u64) -> Result<u64> {
+        self.board.beat_now(self.rank);
+        self.check_fault()?;
+        let epoch = self.epoch;
+        self.epoch += 1;
+        if self.procs == 1 {
+            return Ok(value);
+        }
+        let deadline = Instant::now() + recv_guard();
+        if self.rank == 0 {
+            let (mut have, mut sum) = self.pending.remove(&epoch).unwrap_or((0, 0));
+            while have < self.procs - 1 {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(Error::Cluster(format!(
+                        "rank 0 collective epoch {epoch} timed out after {:?} ({have}/{} contributions)",
+                        recv_guard(),
+                        self.procs - 1
+                    )));
+                }
+                match self.coll_rx.recv_timeout(left) {
+                    Ok(CollItem::Frame { src, tag, epoch: e, value: v }) => {
+                        if e == epoch {
+                            if tag != contrib_tag {
+                                return Err(Error::Comm(format!(
+                                    "collective tag mismatch at epoch {epoch}: rank {src} sent tag {tag}, expected {contrib_tag}"
+                                )));
+                            }
+                            have += 1;
+                            sum += v;
+                        } else if e > epoch {
+                            let slot = self.pending.entry(e).or_insert((0, 0));
+                            slot.0 += 1;
+                            slot.1 += v;
+                        } else {
+                            return Err(Error::Comm(format!(
+                                "stale collective epoch {e} from rank {src} (rank 0 is at epoch {epoch})"
+                            )));
+                        }
+                    }
+                    Ok(CollItem::Fault(m)) => return Err(Error::Comm(m)),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(Error::Cluster(format!(
+                            "rank {} peers disconnected",
+                            self.rank
+                        )))
+                    }
+                }
+            }
+            let total = sum + value;
+            let mut buf = Vec::new();
+            epoch.write_to(&mut buf);
+            total.write_to(&mut buf);
+            for dst in 1..self.procs {
+                let frame = encode_frame(0, dst as u32, go_tag, 0, &buf);
+                self.overhead.fetch_add(frame.len() as u64, Ordering::Relaxed);
+                write_frame(&self.writers, self.rank, dst, &frame)?;
+            }
+            Ok(total)
+        } else {
+            let mut buf = Vec::new();
+            epoch.write_to(&mut buf);
+            value.write_to(&mut buf);
+            let frame = encode_frame(self.rank as u32, 0, contrib_tag, 0, &buf);
+            self.overhead.fetch_add(frame.len() as u64, Ordering::Relaxed);
+            write_frame(&self.writers, self.rank, 0, &frame)?;
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(Error::Cluster(format!(
+                        "rank {} collective epoch {epoch} timed out waiting for rank 0",
+                        self.rank
+                    )));
+                }
+                match self.coll_rx.recv_timeout(left) {
+                    Ok(CollItem::Frame { src, tag, epoch: e, value: total }) => {
+                        // GOs arrive on rank 0's FIFO edge, so the next one
+                        // must be ours — anything else is protocol skew.
+                        if src != 0 || tag != go_tag || e != epoch {
+                            return Err(Error::Comm(format!(
+                                "collective epoch mismatch: rank {} at epoch {epoch} (tag {go_tag}) got tag {tag} epoch {e} from rank {src}",
+                                self.rank
+                            )));
+                        }
+                        return Ok(total);
+                    }
+                    Ok(CollItem::Fault(m)) => return Err(Error::Comm(m)),
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(Error::Cluster(format!(
+                            "rank {} peers disconnected",
+                            self.rank
+                        )))
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<M: Payload> Transport<M> for TcpTransport<M> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.procs
+    }
+
+    fn send(&mut self, dst: usize, env: Envelope<M>) -> Result<()> {
+        self.board.beat_now(self.rank);
+        if dst == self.rank {
+            return self
+                .mail_tx
+                .send(MailItem::Env {
+                    src: env.src,
+                    control: env.control,
+                    bytes: env.msg.to_bytes(),
+                })
+                .map_err(|_| {
+                    Error::Cluster(format!("rank {} self-send failed (mailbox closed)", self.rank))
+                });
+        }
+        let payload = env.msg.to_bytes();
+        let frame =
+            encode_frame(self.rank as u32, dst as u32, TAG_MSG, env.control as u32, &payload);
+        // Framing overhead = actual frame bytes beyond the declared
+        // payload size (`Payload::size_bytes` stays the byte-accounting
+        // truth for `bytes_sent` on every fabric).
+        self.overhead
+            .fetch_add((frame.len() as u64).saturating_sub(env.msg.size_bytes()), Ordering::Relaxed);
+        write_frame(&self.writers, self.rank, dst, &frame)
+    }
+
+    fn try_recv(&mut self) -> Option<Envelope<M>> {
+        self.board.beat_now(self.rank);
+        if self.pending_fault.is_some() {
+            return None;
+        }
+        match self.mail_rx.try_recv() {
+            Ok(MailItem::Env { src, control, bytes }) => match M::from_bytes(&bytes) {
+                Ok(msg) => Some(Envelope { src, control, msg }),
+                Err(e) => {
+                    // No error channel here — stash for the next fallible op.
+                    self.pending_fault = Some(format!("rank {}: {e}", self.rank));
+                    None
+                }
+            },
+            Ok(MailItem::Fault(m)) => {
+                self.pending_fault = Some(m);
+                None
+            }
+            Err(_) => None,
+        }
+    }
+
+    fn recv(&mut self) -> Result<Envelope<M>> {
+        let guard = recv_guard();
+        match self.recv_deadline(guard)? {
+            Some(env) => Ok(env),
+            None => Err(Error::Cluster(format!(
+                "rank {} recv timed out after {guard:?} (protocol deadlock?)",
+                self.rank
+            ))),
+        }
+    }
+
+    fn recv_deadline(&mut self, d: Duration) -> Result<Option<Envelope<M>>> {
+        self.board.beat_now(self.rank);
+        self.check_fault()?;
+        match self.mail_rx.recv_timeout(d) {
+            Ok(MailItem::Env { src, control, bytes }) => {
+                let msg = M::from_bytes(&bytes)
+                    .map_err(|e| Error::Comm(format!("rank {}: {e}", self.rank)))?;
+                Ok(Some(Envelope { src, control, msg }))
+            }
+            Ok(MailItem::Fault(m)) => Err(Error::Comm(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Cluster(format!("rank {} peers disconnected", self.rank)))
+            }
+        }
+    }
+
+    fn liveness(&self, rank: usize, stale_after: Duration) -> Liveness {
+        self.board.classify(rank, stale_after)
+    }
+
+    fn retire(&mut self, ok: bool) {
+        let ctrl = ok as u32;
+        for dst in 0..self.procs {
+            if dst == self.rank {
+                continue;
+            }
+            let frame = encode_frame(self.rank as u32, dst as u32, TAG_RETIRE, ctrl, &[]);
+            self.overhead.fetch_add(frame.len() as u64, Ordering::Relaxed);
+            // Best-effort: a peer that already tore down must not turn our
+            // clean exit into an error.
+            let _ = write_frame(&self.writers, self.rank, dst, &frame);
+        }
+        self.board.set_state(self.rank, if ok { LIVE_DONE } else { LIVE_FAILED });
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.collective(TAG_BARRIER, TAG_BARRIER_GO, 0).map(|_| ())
+    }
+
+    fn reduce_sum(&mut self, value: u64) -> Result<u64> {
+        self.collective(TAG_REDUCE, TAG_REDUCE_GO, value)
+    }
+}
+
+/// Wire up one rank's endpoint: rendezvous, mesh dial-up, reader threads.
+pub(crate) fn establish<M: Payload>(cfg: &TcpFabric) -> Result<(TcpTransport<M>, TcpSession)> {
+    if cfg.procs == 0 {
+        return Err(Error::Config("tcp fabric needs --procs >= 1".into()));
+    }
+    if cfg.rank >= cfg.procs {
+        return Err(Error::Config(format!(
+            "--rank {} out of range for --procs {}",
+            cfg.rank, cfg.procs
+        )));
+    }
+    let peer_streams: Vec<Option<TcpStream>> = if cfg.procs == 1 {
+        vec![None]
+    } else if cfg.rank == 0 {
+        host_rendezvous(cfg)?
+    } else {
+        worker_rendezvous(cfg)?
+    };
+
+    let (mail_tx, mail_rx) = mpsc::channel();
+    let (coll_tx, coll_rx) = mpsc::channel();
+    let (result_tx, result_rx) = mpsc::channel();
+    let board = Board::new(cfg.procs);
+    let closing = Arc::new(AtomicBool::new(false));
+    let overhead = Arc::new(AtomicU64::new(0));
+
+    let mut writers: Vec<Option<Arc<Mutex<TcpStream>>>> = (0..cfg.procs).map(|_| None).collect();
+    let mut raw: Vec<Option<TcpStream>> = (0..cfg.procs).map(|_| None).collect();
+    let mut readers = Vec::new();
+    for (peer, s) in peer_streams.into_iter().enumerate() {
+        let s = match s {
+            Some(s) => s,
+            None => continue,
+        };
+        let clone_err = |e: io::Error| Error::Comm(format!("stream clone failed: {e}"));
+        let reader_half = s.try_clone().map_err(clone_err)?;
+        raw[peer] = Some(s.try_clone().map_err(clone_err)?);
+        writers[peer] = Some(Arc::new(Mutex::new(s)));
+        readers.push(spawn_reader(
+            cfg.rank,
+            peer,
+            reader_half,
+            board.clone(),
+            closing.clone(),
+            mail_tx.clone(),
+            coll_tx.clone(),
+            result_tx.clone(),
+        ));
+    }
+
+    let transport = TcpTransport {
+        rank: cfg.rank,
+        procs: cfg.procs,
+        writers: writers.clone(),
+        board,
+        overhead: overhead.clone(),
+        mail_tx,
+        mail_rx,
+        coll_rx,
+        epoch: 0,
+        pending: BTreeMap::new(),
+        pending_fault: None,
+        _msg: PhantomData,
+    };
+    let session = TcpSession {
+        rank: cfg.rank,
+        writers,
+        raw,
+        closing,
+        overhead,
+        result_rx,
+        readers,
+    };
+    Ok((transport, session))
+}
+
+/// `(ops, msg)` for broadcasting a failure verdict.
+fn failure_parts(e: &Error) -> (u64, String) {
+    match e {
+        Error::RankFailure { ops, msg, .. } => (*ops, msg.clone()),
+        other => (0, other.to_string()),
+    }
+}
+
+/// End-of-run allgather (see the module docs): workers upload their
+/// `(result, metrics)` to rank 0; rank 0 assembles the rank-ordered
+/// vector (or attributes the earliest failure, mirroring the launcher's
+/// min-(ops, rank) rule) and broadcasts the verdict.
+fn exchange_results<R: Wire>(
+    session: &TcpSession,
+    cfg: &TcpFabric,
+    local: Result<(R, CommMetrics)>,
+) -> Result<Vec<(R, CommMetrics)>> {
+    if cfg.rank != 0 {
+        let frame = match &local {
+            Ok((r, m)) => {
+                let mut buf = Vec::new();
+                r.write_to(&mut buf);
+                m.write_to(&mut buf);
+                encode_frame(cfg.rank as u32, 0, TAG_RESULT, 1, &buf)
+            }
+            Err(e) => {
+                let (ops, msg) = failure_parts(e);
+                let mut buf = Vec::new();
+                ops.write_to(&mut buf);
+                msg.write_to(&mut buf);
+                encode_frame(cfg.rank as u32, 0, TAG_RESULT, 0, &buf)
+            }
+        };
+        session.write_frame_to(0, &frame)?;
+        let deadline = Instant::now() + recv_guard();
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Cluster(format!(
+                    "rank {} result exchange timed out after {:?}",
+                    cfg.rank,
+                    recv_guard()
+                )));
+            }
+            match session.result_rx.recv_timeout(left) {
+                Ok(ResultItem::Frame { src, tag, control, bytes }) => {
+                    if src != 0 || tag != TAG_RESULT_GO {
+                        return Err(Error::Comm(format!(
+                            "unexpected result-plane frame (tag {tag}) from rank {src}"
+                        )));
+                    }
+                    if control == 1 {
+                        let mut rd = WireReader::new(&bytes);
+                        let all = read_seq::<(R, CommMetrics)>(&mut rd)?;
+                        rd.finish()?;
+                        if all.len() != cfg.procs {
+                            return Err(Error::Comm(format!(
+                                "result allgather has {} entries, expected {}",
+                                all.len(),
+                                cfg.procs
+                            )));
+                        }
+                        return Ok(all);
+                    }
+                    let mut rd = WireReader::new(&bytes);
+                    let rank = rd.u64()? as usize;
+                    let ops = rd.u64()?;
+                    let msg = String::read_from(&mut rd)?;
+                    rd.finish()?;
+                    return Err(Error::RankFailure { rank, ops, msg });
+                }
+                Ok(ResultItem::Fault(m)) => return Err(Error::Comm(m)),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Cluster(format!(
+                        "rank {} peers disconnected during result exchange",
+                        cfg.rank
+                    )))
+                }
+            }
+        }
+    }
+
+    // Rank 0: gather P-1 uploads, then broadcast the verdict.
+    let mut slots: Vec<Option<Result<(R, CommMetrics)>>> = (0..cfg.procs).map(|_| None).collect();
+    slots[0] = Some(local);
+    let gathered: Result<()> = (|| {
+        let deadline = Instant::now() + recv_guard();
+        let mut have = 1usize;
+        while have < cfg.procs {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                let missing: Vec<String> = (1..cfg.procs)
+                    .filter(|r| slots[*r].is_none())
+                    .map(|r| r.to_string())
+                    .collect();
+                return Err(Error::Cluster(format!(
+                    "rank 0 timed out gathering results; missing rank(s) {}",
+                    missing.join(", ")
+                )));
+            }
+            match session.result_rx.recv_timeout(left) {
+                Ok(ResultItem::Frame { src, tag, control, bytes }) => {
+                    if tag != TAG_RESULT {
+                        return Err(Error::Comm(format!(
+                            "unexpected result-plane tag {tag} from rank {src}"
+                        )));
+                    }
+                    if src == 0 || src >= cfg.procs || slots[src].is_some() {
+                        return Err(Error::Comm(format!(
+                            "duplicate or out-of-range result from rank {src}"
+                        )));
+                    }
+                    let parsed: Result<(R, CommMetrics)> = if control == 1 {
+                        let mut rd = WireReader::new(&bytes);
+                        let r = R::read_from(&mut rd)?;
+                        let m = CommMetrics::read_from(&mut rd)?;
+                        rd.finish()?;
+                        Ok((r, m))
+                    } else {
+                        let mut rd = WireReader::new(&bytes);
+                        let ops = rd.u64()?;
+                        let msg = String::read_from(&mut rd)?;
+                        rd.finish()?;
+                        Err(Error::RankFailure { rank: src, ops, msg })
+                    };
+                    slots[src] = Some(parsed);
+                    have += 1;
+                }
+                Ok(ResultItem::Fault(m)) => return Err(Error::Comm(m)),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Cluster(
+                        "rank 0 peers disconnected during result gather".into(),
+                    ))
+                }
+            }
+        }
+        Ok(())
+    })();
+
+    let broadcast_error = |rank: usize, ops: u64, msg: &str| {
+        let mut buf = Vec::new();
+        (rank as u64).write_to(&mut buf);
+        ops.write_to(&mut buf);
+        msg.to_string().write_to(&mut buf);
+        for dst in 1..cfg.procs {
+            let frame = encode_frame(0, dst as u32, TAG_RESULT_GO, 0, &buf);
+            let _ = session.write_frame_to(dst, &frame);
+        }
+    };
+
+    if let Err(e) = gathered {
+        let (ops, msg) = failure_parts(&e);
+        broadcast_error(0, ops, &msg);
+        return Err(e);
+    }
+
+    // Attribute the earliest failure across all ranks: min (ops, rank),
+    // the same root-cause rule `Cluster::launch` applies in-process.
+    let mut worst: Option<(u64, usize, String)> = None;
+    for (rank, slot) in slots.iter().enumerate() {
+        if let Some(Err(e)) = slot {
+            let (ops, msg) = failure_parts(e);
+            let better = match &worst {
+                Some((wops, wrank, _)) => (ops, rank) < (*wops, *wrank),
+                None => true,
+            };
+            if better {
+                worst = Some((ops, rank, msg));
+            }
+        }
+    }
+    if let Some((ops, rank, msg)) = worst {
+        broadcast_error(rank, ops, &msg);
+        return Err(Error::RankFailure { rank, ops, msg });
+    }
+
+    let mut all = Vec::with_capacity(cfg.procs);
+    for slot in slots {
+        match slot {
+            Some(Ok(v)) => all.push(v),
+            _ => return Err(Error::Comm("result slot invariant violated".into())),
+        }
+    }
+    let mut buf = Vec::new();
+    write_seq(&all, &mut buf);
+    for dst in 1..cfg.procs {
+        let frame = encode_frame(0, dst as u32, TAG_RESULT_GO, 1, &buf);
+        session.write_frame_to(dst, &frame)?;
+    }
+    Ok(all)
+}
+
+/// Run this process's rank of a `P`-rank TCP cluster: rendezvous, run `f`
+/// through the standard launcher (so spans, kernel counters and failure
+/// attribution behave identically to the channel fabric), then allgather —
+/// **every** rank returns the identical rank-ordered `(result, metrics)`
+/// vector, or the same attributed [`Error::RankFailure`].
+pub fn run_tcp_hooked<M, R, F>(
+    cfg: &TcpFabric,
+    p: usize,
+    progress: Option<Arc<dyn Progress>>,
+    f: F,
+) -> Result<Vec<(R, CommMetrics)>>
+where
+    M: Payload,
+    R: Wire + Send,
+    F: Fn(&mut Comm<M>) -> Result<R> + Sync,
+{
+    try_recv_guard()?;
+    if p != cfg.procs {
+        return Err(Error::Config(format!(
+            "tcp fabric launched with --procs {} but this run wants {p} ranks",
+            cfg.procs
+        )));
+    }
+    let (transport, mut session) = establish::<M>(cfg)?;
+    let comm = Comm::from_tcp(transport);
+    let local: Result<(R, CommMetrics)> = match Cluster::launch(vec![comm], progress, f) {
+        Ok(mut v) => {
+            let (r, mut m) = v.pop().expect("one tcp rank");
+            // Stamp the framing overhead at the same instant as every
+            // other counter; the result/GO frames below are post-snapshot
+            // and deliberately excluded.
+            m.wire_overhead_bytes += session.overhead_bytes();
+            Ok((r, m))
+        }
+        // The launcher saw a single-element vec, so it attributed the
+        // failure to index 0 — rewrite to this process's cluster rank.
+        Err(Error::RankFailure { ops, msg, .. }) => {
+            Err(Error::RankFailure { rank: cfg.rank, ops, msg })
+        }
+        Err(e) => Err(e),
+    };
+    let out = exchange_results(&session, cfg, local);
+    session.shutdown();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn free_port_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = l.local_addr().unwrap().to_string();
+        drop(l);
+        a
+    }
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let frame = encode_frame(3, 1, TAG_MSG, 1, &[9, 8, 7]);
+        let mut cur = io::Cursor::new(frame);
+        let got = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!(
+            got,
+            RawFrame { src: 3, dst: 1, tag: TAG_MSG, control: 1, payload: vec![9, 8, 7] }
+        );
+        // Clean EOF at a frame boundary is end-of-stream, not an error.
+        assert!(read_frame(&mut cur).unwrap().is_none());
+        // Empty payload frames work too.
+        let mut cur = io::Cursor::new(encode_frame(0, 2, TAG_RETIRE, 1, &[]));
+        let got = read_frame(&mut cur).unwrap().unwrap();
+        assert_eq!((got.tag, got.control, got.payload.len()), (TAG_RETIRE, 1, 0));
+    }
+
+    #[test]
+    fn frame_truncation_and_oversize_are_comm_errors() {
+        let full = encode_frame(1, 0, TAG_MSG, 0, &[1, 2, 3, 4, 5]);
+        // Truncation at every interior cut — header or payload — is a
+        // deterministic Comm error, never a panic or a hang.
+        for cut in 1..full.len() {
+            let mut cur = io::Cursor::new(full[..cut].to_vec());
+            match read_frame(&mut cur) {
+                Err(Error::Comm(_)) => {}
+                other => panic!("cut={cut}: expected Comm error, got {other:?}"),
+            }
+        }
+        // A length prefix beyond the cap fails before any allocation.
+        let mut hdr = Vec::new();
+        for w in [1u32, 0, TAG_MSG, 0, u32::MAX] {
+            hdr.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut cur = io::Cursor::new(hdr);
+        match read_frame(&mut cur) {
+            Err(Error::Comm(m)) => assert!(m.contains("exceeds"), "{m}"),
+            other => panic!("expected oversize Comm error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip_and_magic_version_gates() {
+        let enc = encode_hello(0xDEAD_BEEF, 3, 8);
+        let h = read_hello(&mut io::Cursor::new(enc.to_vec())).unwrap();
+        assert_eq!(h, Hello { job_id: 0xDEAD_BEEF, rank: 3, procs: 8 });
+        // Bad magic: a non-tricount peer is a Config error.
+        let mut bad = enc;
+        bad[0] ^= 0xFF;
+        match read_hello(&mut io::Cursor::new(bad.to_vec())) {
+            Err(Error::Config(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // Version skew is a Config error naming both versions.
+        let mut skew = encode_hello(1, 0, 2);
+        skew[4] = 99;
+        match read_hello(&mut io::Cursor::new(skew.to_vec())) {
+            Err(Error::Config(m)) => assert!(m.contains("version"), "{m}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // A truncated hello is a wire fault.
+        match read_hello(&mut io::Cursor::new(enc[..10].to_vec())) {
+            Err(Error::Comm(_)) => {}
+            other => panic!("expected Comm error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn seq_roundtrip() {
+        let items = vec![(1u64, String::from("a")), (2, String::from("bb"))];
+        let mut buf = Vec::new();
+        write_seq(&items, &mut buf);
+        let mut rd = WireReader::new(&buf);
+        let back = read_seq::<(u64, String)>(&mut rd).unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back, items);
+    }
+
+    #[test]
+    fn loopback_two_rank_transport_smoke() {
+        let addr = free_port_addr();
+        let cfg0 =
+            TcpFabric { connect: addr.clone(), rank: 0, procs: 2, job_id: 0xAB, join_timeout_ms: 10_000 };
+        let cfg1 = TcpFabric { connect: addr, rank: 1, procs: 2, job_id: 0xAB, join_timeout_ms: 10_000 };
+        let worker = thread::spawn(move || {
+            let (mut t, mut s) = establish::<Vec<u32>>(&cfg1).unwrap();
+            t.send(0, Envelope { src: 1, control: false, msg: vec![7, 8, 9] }).unwrap();
+            let sum = t.reduce_sum(5).unwrap();
+            t.barrier().unwrap();
+            t.retire(true);
+            s.shutdown();
+            sum
+        });
+        let (mut t, mut s) = establish::<Vec<u32>>(&cfg0).unwrap();
+        let env = t.recv().unwrap();
+        assert_eq!((env.src, env.control, env.msg), (1, false, vec![7, 8, 9]));
+        let sum = t.reduce_sum(37).unwrap();
+        t.barrier().unwrap();
+        t.retire(true);
+        s.shutdown();
+        assert_eq!(sum, 42);
+        assert_eq!(worker.join().unwrap(), 42);
+    }
+
+    fn ring_prog(c: &mut Comm<u64>) -> Result<u64> {
+        let next = (c.rank() + 1) % c.size();
+        c.send(next, (c.rank() as u64 + 1) * 10)?;
+        let (_src, v) = c.recv()?;
+        c.reduce_sum(v)
+    }
+
+    #[test]
+    fn run_tcp_hooked_returns_full_allgather_on_every_rank() {
+        let addr = free_port_addr();
+        let cfg1 =
+            TcpFabric { connect: addr.clone(), rank: 1, procs: 2, job_id: 7, join_timeout_ms: 10_000 };
+        let cfg0 = TcpFabric { connect: addr, rank: 0, procs: 2, job_id: 7, join_timeout_ms: 10_000 };
+        let worker = thread::spawn(move || run_tcp_hooked::<u64, u64, _>(&cfg1, 2, None, ring_prog));
+        let r0 = run_tcp_hooked::<u64, u64, _>(&cfg0, 2, None, ring_prog).unwrap();
+        let r1 = worker.join().unwrap().unwrap();
+        // Both ranks: 10 + 20 reduced on each side.
+        assert_eq!(r0.len(), 2);
+        assert_eq!(r1.len(), 2);
+        assert_eq!(r0[0].0, 30);
+        assert_eq!(r0[1].0, 30);
+        // The allgather is *identical* on every rank, counter for counter.
+        for (a, b) in r0.iter().zip(&r1) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.messages_sent, b.1.messages_sent);
+            assert_eq!(a.1.bytes_sent, b.1.bytes_sent);
+            assert_eq!(a.1.wire_overhead_bytes, b.1.wire_overhead_bytes);
+        }
+        // Framing overhead is visible on a socket fabric.
+        assert!(r0[0].1.wire_overhead_bytes > 0, "{:?}", r0[0].1.wire_overhead_bytes);
+    }
+
+    #[test]
+    fn run_tcp_hooked_attributes_failures_across_processes() {
+        let addr = free_port_addr();
+        let cfg1 =
+            TcpFabric { connect: addr.clone(), rank: 1, procs: 2, job_id: 9, join_timeout_ms: 10_000 };
+        let cfg0 = TcpFabric { connect: addr, rank: 0, procs: 2, job_id: 9, join_timeout_ms: 10_000 };
+        let prog = |c: &mut Comm<u64>| -> Result<u64> {
+            if c.rank() == 1 {
+                Err(Error::Cluster("injected worker failure".into()))
+            } else {
+                Ok(1)
+            }
+        };
+        let worker = thread::spawn(move || run_tcp_hooked::<u64, u64, _>(&cfg1, 2, None, prog));
+        let r0 = run_tcp_hooked::<u64, u64, _>(&cfg0, 2, None, prog);
+        let r1 = worker.join().unwrap();
+        for r in [r0, r1] {
+            match r {
+                Err(Error::RankFailure { rank, msg, .. }) => {
+                    assert_eq!(rank, 1);
+                    assert!(msg.contains("injected worker failure"), "{msg}");
+                }
+                other => panic!("expected rank 1's failure on both ranks, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rendezvous_rejects_garbage_hello() {
+        let addr = free_port_addr();
+        let cfg0 =
+            TcpFabric { connect: addr.clone(), rank: 0, procs: 2, job_id: 1, join_timeout_ms: 10_000 };
+        let host = thread::spawn(move || establish::<u64>(&cfg0));
+        // Dial the rendezvous and present 24 bytes of garbage.
+        let mut s = loop {
+            match TcpStream::connect(addr.as_str()) {
+                Ok(s) => break s,
+                Err(_) => thread::sleep(Duration::from_millis(10)),
+            }
+        };
+        s.write_all(&[0xAAu8; HELLO_BYTES]).unwrap();
+        match host.join().unwrap() {
+            Err(Error::Config(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("expected Config error at rank 0, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn single_rank_tcp_cluster_is_trivial() {
+        let cfg = TcpFabric {
+            connect: "127.0.0.1:1".into(), // never dialed at P=1
+            rank: 0,
+            procs: 1,
+            job_id: 3,
+            join_timeout_ms: 1000,
+        };
+        let out = run_tcp_hooked::<u64, u64, _>(&cfg, 1, None, |c| c.reduce_sum(7)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 7);
+        assert_eq!(out[0].1.wire_overhead_bytes, 0);
+    }
+}

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::adj::stats as kernel_stats;
 use crate::comm::metrics::CommMetrics;
+use crate::comm::tcp::TcpTransport;
 use crate::comm::transport::{
     channel_fabric, ChannelTransport, Envelope, Liveness, RetryPolicy, Transport,
 };
@@ -127,6 +128,7 @@ pub trait Progress: Send + Sync {
 enum Backend<M: Payload> {
     Channel(ChannelTransport<M>),
     Virtual(VirtualEndpoint<M>),
+    Tcp(TcpTransport<M>),
 }
 
 /// Statically dispatch one [`Transport`] call to the active variant.
@@ -135,6 +137,7 @@ macro_rules! with_transport {
         match $backend {
             Backend::Channel($t) => $call,
             Backend::Virtual($t) => $call,
+            Backend::Tcp($t) => $call,
         }
     };
 }
@@ -176,6 +179,17 @@ impl<M: Payload> Comm<M> {
         }
     }
 
+    /// Endpoint over the socket fabric (`comm::tcp`): wall-clock spans,
+    /// exactly like the channel fabric — the wire is the only difference.
+    pub(crate) fn from_tcp(t: TcpTransport<M>) -> Self {
+        Comm {
+            backend: Backend::Tcp(t),
+            metrics: CommMetrics::default(),
+            spans: SpanRecorder::wall(),
+            progress: None,
+        }
+    }
+
     /// Publish a monotone partial sum for a unit (no-op unsupervised).
     #[inline]
     pub fn ckpt_partial(&self, unit: ProgressUnit, sum: u64) {
@@ -197,7 +211,7 @@ impl<M: Payload> Comm<M> {
     #[inline]
     fn ticks(&self) -> u64 {
         match &self.backend {
-            Backend::Channel(_) => self.spans.wall_now(),
+            Backend::Channel(_) | Backend::Tcp(_) => self.spans.wall_now(),
             Backend::Virtual(t) => t.virtual_now().unwrap_or(0),
         }
     }
@@ -291,7 +305,8 @@ impl<M: Payload> Comm<M> {
     pub fn recv(&mut self) -> Result<(usize, M)> {
         self.metrics.transport_ops += 1;
         let t0 = self.ticks();
-        let start = matches!(self.backend, Backend::Channel(_)).then(Instant::now);
+        let start =
+            matches!(self.backend, Backend::Channel(_) | Backend::Tcp(_)).then(Instant::now);
         let r = with_transport!(&mut self.backend, t => t.recv());
         let t1 = self.ticks();
         self.metrics.recv_wait += match start {
@@ -310,7 +325,8 @@ impl<M: Payload> Comm<M> {
     pub fn recv_deadline(&mut self, d: Duration) -> Result<Option<(usize, M)>> {
         self.metrics.transport_ops += 1;
         let t0 = self.ticks();
-        let start = matches!(self.backend, Backend::Channel(_)).then(Instant::now);
+        let start =
+            matches!(self.backend, Backend::Channel(_) | Backend::Tcp(_)).then(Instant::now);
         let r = with_transport!(&mut self.backend, t => t.recv_deadline(d));
         let t1 = self.ticks();
         self.metrics.recv_wait += match start {
@@ -387,7 +403,7 @@ impl<M: Payload> Comm<M> {
     /// scheduler token, so every reading is deterministic.
     fn finish(&mut self, start: Instant, kernels: &kernel_stats::RankKernelCounters) {
         self.metrics.total = match &self.backend {
-            Backend::Channel(_) => start.elapsed(),
+            Backend::Channel(_) | Backend::Tcp(_) => start.elapsed(),
             Backend::Virtual(t) => Duration::from_micros(t.virtual_now().unwrap_or(0)),
         };
         self.metrics.kernel = kernels.snapshot();

@@ -32,9 +32,250 @@ use std::time::{Duration, Instant};
 use crate::comm::threads::recv_guard;
 use crate::error::{Error, Result};
 
+/// Binary wire codec for values that cross a real socket (`comm::tcp`).
+/// Little-endian, length-prefixed sequences, no self-description — both
+/// ends run the same build, and the TCP handshake pins a wire version.
+///
+/// Decoding is *total*: every malformed input returns [`Error::Comm`]
+/// (never a panic, never unbounded allocation — length prefixes are
+/// validated against the bytes actually present before any `Vec` is
+/// reserved), which is what the wire-corruption property tests pin.
+pub trait Wire: Sized {
+    /// Append this value's encoding to `out`.
+    fn write_to(&self, out: &mut Vec<u8>);
+
+    /// Decode one value from the cursor, consuming exactly what
+    /// [`Wire::write_to`] produced.
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self>;
+
+    /// Encode into a fresh buffer (convenience for frame assembly).
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.write_to(&mut out);
+        out
+    }
+
+    /// Decode a value that must occupy the *entire* buffer — trailing
+    /// bytes are a framing error ([`Error::Comm`]).
+    fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut r = WireReader::new(buf);
+        let v = Self::read_from(&mut r)?;
+        r.finish()?;
+        Ok(v)
+    }
+}
+
+/// Bounds-checked little-endian cursor over a received byte buffer. Every
+/// overrun is an [`Error::Comm`] naming the shortfall.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, at: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Comm(format!(
+                "truncated frame: wanted {n} bytes at offset {}, {} left",
+                self.at,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` length prefix for `elem_bytes`-wide elements, validated
+    /// against the bytes actually remaining — a corrupt prefix fails here
+    /// instead of driving a multi-gigabyte `Vec::with_capacity`.
+    pub fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let need = (n as usize).checked_mul(elem_bytes).unwrap_or(usize::MAX);
+        if n > self.remaining() as u64 || need > self.remaining() {
+            return Err(Error::Comm(format!(
+                "length prefix {n} exceeds payload ({} bytes left)",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    /// Assert the buffer is fully consumed (exact framing).
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Comm(format!(
+                "{} trailing bytes after decoded value",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+macro_rules! wire_le_int {
+    ($($t:ty => $read:ident),*) => {$(
+        impl Wire for $t {
+            fn write_to(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            #[allow(clippy::useless_conversion, clippy::unnecessary_cast)]
+            fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+                r.$read().map(|v| v as $t)
+            }
+        }
+    )*};
+}
+wire_le_int!(u32 => u32, u64 => u64, i64 => u64);
+
+impl Wire for () {
+    fn write_to(&self, _out: &mut Vec<u8>) {}
+    fn read_from(_r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl Wire for bool {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(Error::Comm(format!("invalid bool byte {b}"))),
+        }
+    }
+}
+
+impl Wire for Vec<u32> {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_to(out);
+        for v in self {
+            v.write_to(out);
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.len_prefix(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(r.u32()?);
+        }
+        Ok(v)
+    }
+}
+
+impl Wire for Vec<u64> {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_to(out);
+        for v in self {
+            v.write_to(out);
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.len_prefix(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(r.u64()?);
+        }
+        Ok(v)
+    }
+}
+
+impl Wire for std::sync::Arc<[u32]> {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_to(out);
+        for v in self.iter() {
+            v.write_to(out);
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(Vec::<u32>::read_from(r)?.into())
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.write_to(out);
+            }
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::read_from(r)?)),
+            b => Err(Error::Comm(format!("invalid option byte {b}"))),
+        }
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.0.write_to(out);
+        self.1.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok((A::read_from(r)?, B::read_from(r)?))
+    }
+}
+
+/// Durations travel as whole microseconds — the resolution every clock
+/// domain in the crate already reports in.
+impl Wire for Duration {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.as_micros() as u64).write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(Duration::from_micros(r.u64()?))
+    }
+}
+
+impl Wire for String {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).write_to(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.len_prefix(1)?;
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Comm("invalid utf-8 in wire string".into()))
+    }
+}
+
 /// Messages must declare their wire size so the metrics layer can account
-/// bytes the way the paper reasons about them (neighbor-list words).
-pub trait Payload: Send + 'static {
+/// bytes the way the paper reasons about them (neighbor-list words), and
+/// must be wire-codable ([`Wire`]) so the socket fabric (`comm::tcp`) can
+/// carry them. `size_bytes` stays the single byte-accounting truth:
+/// `CommMetrics::bytes_sent` counts declared sizes on every fabric, and
+/// the framing the TCP encoder adds on top is reported separately
+/// (`CommMetrics::wire_overhead_bytes`).
+pub trait Payload: Wire + Send + 'static {
     /// Serialized size in bytes if this were on an MPI wire.
     fn size_bytes(&self) -> u64;
 }
@@ -339,5 +580,66 @@ impl<M: Payload> Transport<M> for ChannelTransport<M> {
         }
         self.shared.barrier.wait();
         Ok(self.shared.reduce_acc.load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Wire + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = v.to_bytes();
+        assert_eq!(T::from_bytes(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn wire_roundtrips() {
+        roundtrip(0u32);
+        roundtrip(u32::MAX);
+        roundtrip(u64::MAX);
+        roundtrip(-42i64);
+        roundtrip(true);
+        roundtrip(());
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(Vec::<u32>::new());
+        roundtrip(vec![u64::MAX, 0]);
+        roundtrip(Some(7u64));
+        roundtrip(Option::<u64>::None);
+        roundtrip((3u32, vec![9u64]));
+        roundtrip(String::from("hello wire"));
+        roundtrip(Duration::from_micros(123_456));
+        let a: std::sync::Arc<[u32]> = vec![5u32, 6].into();
+        let b = std::sync::Arc::<[u32]>::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(&*a, &*b);
+    }
+
+    #[test]
+    fn wire_decode_is_total_on_malformed_input() {
+        // Truncation at every prefix of a valid encoding → Error::Comm.
+        let full = (vec![1u32, 2, 3], 7u64).to_bytes();
+        for cut in 0..full.len() {
+            match <(Vec<u32>, u64)>::from_bytes(&full[..cut]) {
+                Err(Error::Comm(_)) => {}
+                other => panic!("cut={cut}: expected Comm error, got {other:?}"),
+            }
+        }
+        // Trailing garbage is a framing error, not silently ignored.
+        let mut padded = full.clone();
+        padded.push(0xAB);
+        assert!(matches!(<(Vec<u32>, u64)>::from_bytes(&padded), Err(Error::Comm(_))));
+        // A length prefix far beyond the buffer must fail *before* any
+        // allocation of that size.
+        let mut huge = Vec::new();
+        u64::MAX.write_to(&mut huge);
+        assert!(matches!(Vec::<u32>::from_bytes(&huge), Err(Error::Comm(_))));
+        // Invalid enum-ish bytes.
+        assert!(matches!(bool::from_bytes(&[2]), Err(Error::Comm(_))));
+        assert!(matches!(Option::<u64>::from_bytes(&[9]), Err(Error::Comm(_))));
+        assert!(matches!(String::from_bytes(&{
+            let mut b = Vec::new();
+            2u64.write_to(&mut b);
+            b.extend_from_slice(&[0xFF, 0xFE]);
+            b
+        }), Err(Error::Comm(_))));
     }
 }

@@ -122,6 +122,36 @@ pub struct RunConfig {
     /// survivors for the exact count, `degrade` answers from checkpoints
     /// with a stated confidence bound.
     pub on_fault: crate::ft::FaultPolicy,
+    /// `--fabric <threads|tcp>`: which communication fabric carries the
+    /// run. `threads` (default) is the in-process channel fabric; `tcp`
+    /// runs each rank as its own OS process over loopback sockets
+    /// (`comm::tcp`, DESIGN.md §15) — `tricount count --fabric tcp`
+    /// delegates to the `launch` machinery.
+    pub fabric: FabricKind,
+}
+
+/// Which communication fabric a `count` run uses (`--fabric`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FabricKind {
+    /// In-process ranks over mpsc channels (the default).
+    Threads,
+    /// One OS process per rank over loopback TCP (`comm::tcp`).
+    Tcp,
+}
+
+impl std::str::FromStr for FabricKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "threads" | "channel" => FabricKind::Threads,
+            "tcp" | "socket" => FabricKind::Tcp,
+            other => {
+                return Err(Error::Config(format!(
+                    "unknown fabric `{other}` (expected threads|tcp)"
+                )))
+            }
+        })
+    }
 }
 
 impl Default for RunConfig {
@@ -139,6 +169,7 @@ impl Default for RunConfig {
             build_threads: crate::par::BuildThreads::Auto,
             mem_budget: None,
             on_fault: crate::ft::FaultPolicy::Fail,
+            fabric: FabricKind::Threads,
         }
     }
 }
@@ -202,6 +233,7 @@ impl RunConfig {
                 self.mem_budget = Some(b);
             }
             "on_fault" | "on-fault" => self.on_fault = value.parse()?,
+            "fabric" => self.fabric = value.parse()?,
             other => return Err(Error::Config(format!("unknown key `{other}`"))),
         }
         if key == "procs" && self.procs == 0 {
@@ -358,6 +390,17 @@ mod tests {
         c.set("on-fault", "fail").unwrap();
         assert_eq!(c.on_fault, crate::ft::FaultPolicy::Fail);
         assert!(c.set("on-fault", "panic").is_err());
+    }
+
+    #[test]
+    fn fabric_key() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.fabric, FabricKind::Threads);
+        c.set("fabric", "tcp").unwrap();
+        assert_eq!(c.fabric, FabricKind::Tcp);
+        c.set("fabric", "threads").unwrap();
+        assert_eq!(c.fabric, FabricKind::Threads);
+        assert!(c.set("fabric", "carrier-pigeon").is_err());
     }
 
     #[test]

@@ -23,6 +23,13 @@ pub enum Error {
     /// A parallel run failed (worker panic, channel breakage).
     Cluster(String),
 
+    /// Wire-level communication failure on a socket fabric: a malformed
+    /// or truncated frame, a mid-stream disconnect, an undecodable
+    /// payload. Distinct from [`Error::Cluster`] (protocol-level failure)
+    /// so the conformance suite can assert corruption surfaces as a
+    /// deterministic transport error, never a panic or a hang.
+    Comm(String),
+
     /// A specific rank failed mid-protocol. Carries the rank id and the
     /// transport-op count at which it failed so the cluster launcher can
     /// attribute the *root cause* (lowest op count = earliest failure in
@@ -49,6 +56,7 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(m) => write!(f, "invalid config: {m}"),
             Error::Cluster(m) => write!(f, "cluster execution failed: {m}"),
+            Error::Comm(m) => write!(f, "communication error: {m}"),
             Error::RankFailure { rank, ops, msg } => {
                 write!(f, "cluster execution failed: rank {rank} after {ops} transport ops: {msg}")
             }
@@ -96,6 +104,7 @@ mod tests {
             "parse error at line 3: bad"
         );
         assert_eq!(Error::Config("k".into()).to_string(), "invalid config: k");
+        assert_eq!(Error::Comm("short frame".into()).to_string(), "communication error: short frame");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! sorted ascending by node id, which the intersection kernels and the
 //! paper's `LastProc` message-elimination trick both rely on.
 
+use crate::comm::transport::{Wire, WireReader};
 use crate::VertexId;
 
 /// An immutable undirected graph in CSR form.
@@ -23,6 +24,18 @@ pub struct Csr {
     targets: Vec<VertexId>,
 }
 
+impl Wire for Csr {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.offsets.write_to(out);
+        self.targets.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> crate::error::Result<Self> {
+        let offsets = Vec::<u64>::read_from(r)?;
+        let targets = Vec::<VertexId>::read_from(r)?;
+        Csr::from_wire_parts(offsets, targets)
+    }
+}
+
 impl Csr {
     /// Build from raw parts. `offsets` must have length `n + 1`, start at 0,
     /// be non-decreasing and end at `targets.len()`.
@@ -31,6 +44,20 @@ impl Csr {
         debug_assert_eq!(*offsets.first().unwrap(), 0);
         debug_assert_eq!(*offsets.last().unwrap() as usize, targets.len());
         Csr { offsets, targets }
+    }
+
+    /// [`Csr::from_parts`] for data of wire provenance (`comm::tcp` result
+    /// frames): the structural invariants are *checked*, not debug-asserted
+    /// — a corrupt frame must surface as an error, never as UB downstream.
+    fn from_wire_parts(offsets: Vec<u64>, targets: Vec<VertexId>) -> crate::error::Result<Self> {
+        let bad = offsets.is_empty()
+            || offsets[0] != 0
+            || *offsets.last().unwrap() as usize != targets.len()
+            || offsets.windows(2).any(|w| w[0] > w[1]);
+        if bad {
+            return Err(crate::error::Error::Comm("malformed CSR offsets on wire".into()));
+        }
+        Ok(Csr { offsets, targets })
     }
 
     /// The empty graph on `n` nodes.

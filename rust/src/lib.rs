@@ -46,6 +46,18 @@
 //!   over `comm::threads`, sliding-window expiry, periodic compaction back
 //!   into a fresh CSR, and a cost-model throughput projector in
 //!   `sim::streaming`. See `DESIGN.md` §6 for the lifecycle.
+//! * **`comm/tcp`** — the socket fabric (DESIGN.md §15): the same
+//!   [`comm::Transport`] contract carried over real TCP streams with
+//!   length-prefixed binary frames ([`comm::transport::Wire`]), a rank-0
+//!   rendezvous (magic + wire version + job id handshake, validated
+//!   roster, broadcast peer table), rank-0-coordinated collectives on the
+//!   same streams, and an end-of-run result allgather so every process
+//!   returns the identical rank-ordered `(result, metrics)` vector.
+//!   `tricount launch --procs P -- count …` runs a multi-*process*
+//!   cluster on loopback; `tricount worker` joins one rank by hand.
+//!   Declared payload bytes stay the accounting truth on every fabric;
+//!   TCP framing is reported separately
+//!   (`CommMetrics::wire_overhead_bytes`).
 //! * **`testkit/`** — deterministic cluster simulation behind the
 //!   [`comm::Transport`] trait: `Cluster` runs every protocol unchanged
 //!   over either the production channel fabric or a seeded virtual fabric
@@ -169,6 +181,7 @@ pub mod seq {
 pub mod comm {
     pub mod coalesce;
     pub mod metrics;
+    pub mod tcp;
     pub mod threads;
     pub mod transport;
     pub use threads::{Cluster, Comm};

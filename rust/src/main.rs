@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use tricount::algo::{direct, dynamic_lb, patric, surrogate};
-use tricount::config::{Algorithm, CostFn, RunConfig};
+use tricount::config::{Algorithm, CostFn, FabricKind, RunConfig};
 use tricount::error::{Error, Result};
 use tricount::exp;
 use tricount::graph::ordering::Oriented;
@@ -38,6 +38,8 @@ fn dispatch(args: &[String]) -> Result<()> {
     };
     match cmd.as_str() {
         "count" => cmd_count(&args[1..]),
+        "launch" => cmd_launch(&args[1..]),
+        "worker" => cmd_worker(&args[1..]),
         "stream" => cmd_stream(&args[1..]),
         "analyze" => cmd_analyze(&args[1..]),
         "generate" => cmd_generate(&args[1..]),
@@ -98,6 +100,20 @@ COMMANDS:
                     --fault kill:R:O (inject: kill rank R at its O-th
                     transport op on the seeded virtual fabric — the run
                     replays deterministically; prints the trace hash)
+                    --fabric threads|tcp (threads = in-process ranks over
+                    channels, the default; tcp = one OS process per rank
+                    over loopback sockets — delegates to `launch`)
+  launch            run a multi-process count over loopback TCP: spawns
+                    P−1 `worker` processes of this binary, runs rank 0
+                    in-process, reaps every child (DESIGN.md §15)
+                    tricount launch --procs P [--bind IP:PORT]
+                      [--job-id J] -- count <count flags>
+  worker            join one rank of a TCP cluster by hand (two-terminal
+                    loopback runs, remote hosts; see README)
+                    tricount worker --connect IP:PORT --rank R --procs P
+                      [--job-id J] [--join-timeout-ms N]
+                      -- count <count flags> | conformance-cell
+                         --path NAME --workload SPEC
   stream            incremental counting over batched edge updates
                     --workload SPEC --procs P --batch-size N --batches B
                     --window W (0 = no expiry) --delete-frac F --base-frac F
@@ -147,6 +163,10 @@ COMMANDS:
                     --seeds N (schedules per config, default 16)
                     --procs P1,P2,…  --workloads S1,S2,…
                     --paths p1,p2,…  --faults on|off  --out DIR
+                    --fabric sim|tcp (tcp: the same path × workload × P
+                    grid with every cell as P OS processes over loopback
+                    TCP — spawned from this binary and always reaped;
+                    seeds/faults/trace-out apply to the sim fabric only)
   obs-report        validate and pretty-print an obs snapshot written by
                     `count --obs-out` / `stream --obs-out` (schema v1):
                     per-rank idle/imbalance breakdown, kernel mix, batches
@@ -206,6 +226,21 @@ fn cmd_count(args: &[String]) -> Result<()> {
     let (mut cfg, extra) = parse_config(args)?;
     reject_unknown(&extra, &["out", "trace-out", "obs-out", "format", "fault"])?;
     apply_format(&mut cfg, &extra)?;
+    // `--fabric tcp`: one OS process per rank over loopback sockets —
+    // delegate to the `launch` machinery with these same count flags.
+    // Fault injection and the supervisor policies are in-process
+    // machinery (virtual fabric, shared checkpoint store) and don't cross
+    // the socket boundary.
+    if cfg.fabric == FabricKind::Tcp {
+        if extra.contains_key("fault") || cfg.on_fault != tricount::ft::FaultPolicy::Fail {
+            return Err(Error::Config(
+                "--fabric tcp does not support --fault/--on-fault (in-process machinery; \
+                 rerun on the threads fabric)"
+                    .into(),
+            ));
+        }
+        return launch_processes(cfg.procs, None, None, args);
+    }
     let t0 = std::time::Instant::now();
     let g = cfg.build_graph()?;
     let gen_time = t0.elapsed();
@@ -481,6 +516,365 @@ fn cmd_count(args: &[String]) -> Result<()> {
         report.write_csv(&format!("{dir}/count.csv"))?;
         report.write_json(&format!("{dir}/count.json"))?;
         println!("[written: {dir}/count.{{csv,json}}]");
+    }
+    Ok(())
+}
+
+/// Split `args` at the first bare `--` into (own flags, nested command).
+fn split_nested(args: &[String]) -> (&[String], &[String]) {
+    match args.iter().position(|a| a == "--") {
+        Some(i) => (&args[..i], &args[i + 1..]),
+        None => (args, &[]),
+    }
+}
+
+/// A fresh job id for a `launch` rendezvous: pid ‖ wall nanos, so two
+/// launches on one host (even back-to-back) can't cross-join workers.
+fn fresh_job_id() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    ((std::process::id() as u64) << 32) ^ nanos
+}
+
+/// Resolve `--bind`: a concrete address passes through; none (or a `:0`
+/// port) picks a free loopback port by bind-and-drop.
+fn resolve_bind(bind: Option<&str>) -> Result<String> {
+    match bind {
+        Some(a) if !a.ends_with(":0") => Ok(a.to_string()),
+        Some(a) => {
+            let l = std::net::TcpListener::bind(a)
+                .map_err(|e| Error::Config(format!("launch: cannot bind `{a}`: {e}")))?;
+            Ok(l.local_addr()?.to_string())
+        }
+        None => tricount::testkit::conformance::free_loopback_addr(),
+    }
+}
+
+/// `tricount launch` — run a multi-process count over TCP: spawn P−1
+/// `worker` processes of this binary against a rendezvous address, run
+/// rank 0 in this process (it hosts the rendezvous and prints the
+/// report), then reap every child — wait-with-timeout, then kill, so a
+/// wedged worker fails the launch instead of orphaning.
+fn cmd_launch(args: &[String]) -> Result<()> {
+    let (own, nested) = split_nested(args);
+    let mut procs = 4usize;
+    let mut bind: Option<String> = None;
+    let mut job_id: Option<u64> = None;
+    let mut i = 0;
+    while i < own.len() {
+        let key = own[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got `{}`", own[i])))?;
+        let value = own
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        match key {
+            "procs" => {
+                procs = value.parse().map_err(|e| Error::Config(format!("--procs: {e}")))?;
+                if procs == 0 {
+                    return Err(Error::Config("--procs must be >= 1".into()));
+                }
+            }
+            "bind" => bind = Some(value.clone()),
+            "job-id" => {
+                job_id =
+                    Some(value.parse().map_err(|e| Error::Config(format!("--job-id: {e}")))?)
+            }
+            other => return Err(Error::Config(format!("unknown launch flag `--{other}`"))),
+        }
+        i += 2;
+    }
+    let Some((cmd, count_args)) = nested.split_first() else {
+        return Err(Error::Config(
+            "launch needs a nested command: `launch --procs P -- count <flags>`".into(),
+        ));
+    };
+    if cmd != "count" {
+        return Err(Error::Config(format!("launch runs `count`, got `{cmd}`")));
+    }
+    launch_processes(procs, bind.as_deref(), job_id, count_args)
+}
+
+/// The launch engine shared by `tricount launch` and `count --fabric tcp`.
+fn launch_processes(
+    procs: usize,
+    bind: Option<&str>,
+    job_id: Option<u64>,
+    count_args: &[String],
+) -> Result<()> {
+    use tricount::testkit::conformance::reap_children;
+    let addr = resolve_bind(bind)?;
+    let job_id = job_id.unwrap_or_else(fresh_job_id);
+    let join_timeout_ms = 30_000u64;
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<(usize, std::process::Child)> = Vec::new();
+    for rank in 1..procs {
+        let spawned = std::process::Command::new(&exe)
+            .arg("worker")
+            .args(["--connect", &addr])
+            .args(["--rank", &rank.to_string()])
+            .args(["--procs", &procs.to_string()])
+            .args(["--job-id", &job_id.to_string()])
+            .args(["--join-timeout-ms", &join_timeout_ms.to_string()])
+            .arg("--")
+            .arg("count")
+            .args(count_args)
+            .spawn();
+        match spawned {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => {
+                reap_children(&mut children, std::time::Duration::from_secs(1), true);
+                return Err(Error::Config(format!("launch: cannot spawn worker {rank}: {e}")));
+            }
+        }
+    }
+    let net = tricount::comm::tcp::TcpFabric {
+        connect: addr,
+        rank: 0,
+        procs,
+        job_id,
+        join_timeout_ms,
+    };
+    let r0 = count_one_rank_tcp(&net, count_args);
+    let timeout =
+        tricount::comm::threads::recv_guard() + std::time::Duration::from_secs(5);
+    let failures = reap_children(&mut children, timeout, r0.is_err());
+    r0?;
+    if !failures.is_empty() {
+        return Err(Error::Cluster(format!("launch: {}", failures.join("; "))));
+    }
+    Ok(())
+}
+
+/// `tricount worker` — join one rank of a TCP cluster. The nested command
+/// after `--` says what the cluster computes: `count <flags>` (every rank
+/// must be handed the identical flags — workload prep is deterministic,
+/// so no graph bytes cross the wire) or `conformance-cell` (spawned by
+/// the `--fabric tcp` conformance matrix).
+fn cmd_worker(args: &[String]) -> Result<()> {
+    let (own, nested) = split_nested(args);
+    let mut connect: Option<String> = None;
+    let mut rank: Option<usize> = None;
+    let mut procs: Option<usize> = None;
+    let mut job_id = 0u64;
+    let mut join_timeout_ms = 30_000u64;
+    let mut i = 0;
+    while i < own.len() {
+        let key = own[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got `{}`", own[i])))?;
+        let value = own
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        match key {
+            "connect" => connect = Some(value.clone()),
+            "rank" => {
+                rank = Some(value.parse().map_err(|e| Error::Config(format!("--rank: {e}")))?)
+            }
+            "procs" => {
+                procs =
+                    Some(value.parse().map_err(|e| Error::Config(format!("--procs: {e}")))?)
+            }
+            "job-id" => {
+                job_id = value.parse().map_err(|e| Error::Config(format!("--job-id: {e}")))?
+            }
+            "join-timeout-ms" => {
+                join_timeout_ms = value
+                    .parse()
+                    .map_err(|e| Error::Config(format!("--join-timeout-ms: {e}")))?
+            }
+            other => return Err(Error::Config(format!("unknown worker flag `--{other}`"))),
+        }
+        i += 2;
+    }
+    let net = tricount::comm::tcp::TcpFabric {
+        connect: connect.ok_or_else(|| Error::Config("worker needs --connect <ip:port>".into()))?,
+        rank: rank.ok_or_else(|| Error::Config("worker needs --rank <r>".into()))?,
+        procs: procs.ok_or_else(|| Error::Config("worker needs --procs <P>".into()))?,
+        job_id,
+        join_timeout_ms,
+    };
+    match nested.split_first() {
+        Some((cmd, rest)) if cmd == "count" => count_one_rank_tcp(&net, rest),
+        Some((cmd, rest)) if cmd == "conformance-cell" => conformance_cell_rank(&net, rest),
+        _ => Err(Error::Config(
+            "worker needs `-- count <flags>` or `-- conformance-cell --path NAME --workload SPEC`"
+                .into(),
+        )),
+    }
+}
+
+/// One rank of a `--fabric tcp` count. Every process re-derives the
+/// workload from the flags and runs the chosen driver over the socket
+/// fabric; the end-of-run allgather hands each process the identical
+/// rank-ordered result vector, so rank 0's report speaks for the cluster
+/// and workers print nothing on success.
+fn count_one_rank_tcp(net: &tricount::comm::tcp::TcpFabric, args: &[String]) -> Result<()> {
+    use tricount::testkit::Fabric;
+    let (mut cfg, extra) = parse_config(args)?;
+    reject_unknown(&extra, &["out", "trace-out", "obs-out", "format", "fault"])?;
+    apply_format(&mut cfg, &extra)?;
+    if extra.contains_key("fault") || cfg.on_fault != tricount::ft::FaultPolicy::Fail {
+        return Err(Error::Config(
+            "--fabric tcp does not support --fault/--on-fault".into(),
+        ));
+    }
+    if extra.contains_key("out") {
+        return Err(Error::Config(
+            "--out is not supported with --fabric tcp (use --obs-out / --trace-out)".into(),
+        ));
+    }
+    let p = net.procs;
+    cfg.procs = p;
+    let t0 = std::time::Instant::now();
+    let g = cfg.build_graph()?;
+    let o = Arc::new(Oriented::from_graph_with(&g, cfg.hub_threshold));
+    let prep = t0.elapsed();
+    let fabric = Fabric::Tcp(net.clone());
+    let t0 = std::time::Instant::now();
+    let r = match cfg.algorithm {
+        Algorithm::Surrogate | Algorithm::Direct => {
+            let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, cfg.cost_fn)), p);
+            let (r, _) = if cfg.algorithm == Algorithm::Surrogate {
+                surrogate::run_on(&fabric, &o, &ranges, cfg.hub_threshold)
+            } else {
+                direct::run_on(&fabric, &o, &ranges, cfg.hub_threshold)
+            };
+            r?
+        }
+        Algorithm::Patric => {
+            let ranges = balanced_ranges(&prefix_sums(&cost_vector(&o, CostFn::PatricBest)), p);
+            let (r, _) = patric::run_on(&fabric, &g, &o, &ranges, cfg.hub_threshold);
+            r?
+        }
+        Algorithm::Tile2d => {
+            let (r, _) = tricount::algo::tile2d::run_on(&fabric, &o, p, cfg.hub_threshold);
+            r?
+        }
+        Algorithm::DynamicLb => {
+            if p < 2 {
+                return Err(Error::Config("dynamic-lb needs --procs >= 2".into()));
+            }
+            let (r, _) = dynamic_lb::run_on(
+                &fabric,
+                &o,
+                p,
+                dynamic_lb::Options {
+                    cost_fn: cfg.cost_fn,
+                    granularity: dynamic_lb::Granularity::Shrinking,
+                },
+            );
+            r?
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "--fabric tcp needs a cluster algorithm \
+                 (surrogate|direct|patric|dynamic-lb|tile2d), not {other:?}"
+            )))
+        }
+    };
+    let elapsed = t0.elapsed();
+    if net.rank != 0 {
+        return Ok(());
+    }
+    let t = r.metrics.totals();
+    println!(
+        "workload={} n={} m={} d̄={:.1} (prep {:.2?})",
+        cfg.workload,
+        g.num_nodes(),
+        g.num_edges(),
+        g.avg_degree(),
+        prep
+    );
+    println!(
+        "triangles={} algorithm={:?} procs={p} fabric=tcp time={:.3?} msgs={} bytes={} \
+         wire_overhead={} B imbalance={:.3}",
+        r.triangles,
+        cfg.algorithm,
+        elapsed,
+        t.messages_sent,
+        t.bytes_sent,
+        t.wire_overhead_bytes,
+        r.metrics.imbalance()
+    );
+    tricount::obs::report::print_breakdown(&r.metrics);
+    if let Some(path) = extra.get("trace-out") {
+        let json = tricount::obs::export::cluster_trace_json("tricount count", &r.metrics);
+        std::fs::write(path, &json)?;
+        println!("[written: {path} — load at ui.perfetto.dev or chrome://tracing]");
+    }
+    if let Some(path) = extra.get("obs-out") {
+        let mut reg = tricount::obs::MetricsRegistry::new("count");
+        reg.record_cluster(&r.metrics);
+        reg.note(&format!("workload={}", cfg.workload));
+        reg.note(&format!("algorithm={:?}", cfg.algorithm));
+        reg.note("fabric=tcp");
+        std::fs::write(path, reg.snapshot_json())?;
+        println!("[written: {path} — inspect with `tricount obs-report {path}`]");
+    }
+    Ok(())
+}
+
+/// One rank of a TCP conformance cell. Every rank re-derives the
+/// deterministic workload, runs the protocol over the wire, and checks
+/// the allgathered count against its own oracle — a disagreeing worker
+/// exits nonzero on its own, before rank 0 tallies the cell.
+fn conformance_cell_rank(
+    net: &tricount::comm::tcp::TcpFabric,
+    args: &[String],
+) -> Result<()> {
+    use tricount::testkit::conformance::{self, Path};
+    let mut path: Option<Path> = None;
+    let mut workload: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| Error::Config(format!("expected --flag, got `{}`", args[i])))?;
+        let value = args
+            .get(i + 1)
+            .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?;
+        match key {
+            "path" => {
+                path = Some(Path::from_name(value).ok_or_else(|| {
+                    Error::Config(format!("unknown conformance path `{value}`"))
+                })?)
+            }
+            "workload" => workload = Some(value.clone()),
+            other => {
+                return Err(Error::Config(format!("unknown conformance-cell flag `--{other}`")))
+            }
+        }
+        i += 2;
+    }
+    let path = path.ok_or_else(|| Error::Config("conformance-cell needs --path NAME".into()))?;
+    let workload =
+        workload.ok_or_else(|| Error::Config("conformance-cell needs --workload SPEC".into()))?;
+    let outcome = conformance::run_cell(
+        path,
+        &workload,
+        net.procs,
+        &tricount::testkit::Fabric::Tcp(net.clone()),
+    )?;
+    if outcome.count != outcome.oracle {
+        return Err(Error::Cluster(format!(
+            "conformance-cell {} {workload} P={} rank {}: count {} != oracle {}",
+            path.name(),
+            net.procs,
+            net.rank,
+            outcome.count,
+            outcome.oracle
+        )));
+    }
+    if net.rank == 0 {
+        println!(
+            "cell ok: {} {workload} P={} count={}",
+            path.name(),
+            net.procs,
+            outcome.count
+        );
     }
     Ok(())
 }
@@ -1304,6 +1698,7 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
     let mut opts = Options::default();
     let mut out: Option<String> = None;
     let mut trace_out: Option<String> = None;
+    let mut fabric = "sim".to_string();
     let mut i = 0;
     while i < args.len() {
         let key = args[i]
@@ -1366,9 +1761,56 @@ fn cmd_conformance(args: &[String]) -> Result<()> {
             }
             "out" => out = Some(value.clone()),
             "trace-out" => trace_out = Some(value.clone()),
+            "fabric" => fabric = value.clone(),
             other => return Err(Error::Config(format!("unknown conformance flag `--{other}`"))),
         }
         i += 2;
+    }
+
+    // `--fabric tcp`: the live-wire matrix — every cell as P OS processes
+    // over loopback TCP, spawned from this binary (DESIGN.md §15). The
+    // seeds/faults/trace-out knobs are sim-fabric concepts and don't
+    // apply here.
+    if fabric == "tcp" {
+        let mut topts =
+            conformance::TcpOptions::new(std::env::current_exe()?);
+        topts.workloads = opts.workloads;
+        topts.procs = opts.procs;
+        topts.paths = opts.paths;
+        let t0 = std::time::Instant::now();
+        let r = conformance::run_tcp_matrix(&topts)?;
+        let mut report = exp::report::Report::new(["path", "workload", "P", "status"]);
+        for c in &r.configs {
+            report.row([
+                c.path.into(),
+                c.workload.clone().into(),
+                c.p.into(),
+                (if c.ok { "ok" } else { "FAIL" }).into(),
+            ]);
+        }
+        report.note(format!("{} cells over loopback TCP, every worker process reaped", r.cells));
+        report.print();
+        println!(
+            "conformance [tcp]: {} cells, {} failures ({:.2?})",
+            r.cells,
+            r.failures.len(),
+            t0.elapsed()
+        );
+        for f in &r.failures {
+            eprintln!("conformance FAIL: {f}");
+        }
+        if !r.failures.is_empty() {
+            return Err(Error::Cluster(format!(
+                "tcp conformance matrix failed: {} violation(s)",
+                r.failures.len()
+            )));
+        }
+        return Ok(());
+    }
+    if fabric != "sim" {
+        return Err(Error::Config(format!(
+            "conformance --fabric expects sim|tcp, got `{fabric}`"
+        )));
     }
 
     let t0 = std::time::Instant::now();

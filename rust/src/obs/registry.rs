@@ -167,7 +167,8 @@ impl MetricsRegistry {
                  \"partition_bytes\": {}, \"partition_bytes_pred\": {}, \"accel_bytes\": {}, \
                  \"transport_ops\": {}, \"retries\": {}, \"reexec_work_units\": {}, \
                  \"reexec_bytes\": {}, \"frames_sent\": {}, \"frames_received\": {}, \
-                 \"coalesced_sent\": {}, \"coalesced_received\": {}, \"kernel\": {}, \
+                 \"coalesced_sent\": {}, \"coalesced_received\": {}, \
+                 \"wire_overhead_bytes\": {}, \"kernel\": {}, \
                  \"spans\": {{\"recorded\": {}, \"dropped\": {}, \"by_phase_us\": {{{}}}}}}}{}\n",
                 m.messages_sent,
                 m.bytes_sent,
@@ -188,6 +189,7 @@ impl MetricsRegistry {
                 m.frames_received,
                 m.coalesced_sent,
                 m.coalesced_received,
+                m.wire_overhead_bytes,
                 kernel_json(&m.kernel),
                 m.spans.recorded(),
                 m.spans.dropped,
@@ -522,8 +524,10 @@ pub fn parse_json(s: &str) -> Result<JsonValue, String> {
 
 // `transport_ops`/`retries`/`reexec_*` were added by the `ft/` PR under
 // the evolution contract, like `simd_blocked` before them;
-// `frames_*`/`coalesced_*` by the coalescing-plane PR the same way.
-const RANK_KEYS: [&str; 22] = [
+// `frames_*`/`coalesced_*` by the coalescing-plane PR the same way, and
+// `wire_overhead_bytes` by the socket-fabric PR (TCP framing bytes,
+// additive over the declared-payload counters; 0 on in-process fabrics).
+const RANK_KEYS: [&str; 23] = [
     "rank",
     "messages_sent",
     "bytes_sent",
@@ -544,6 +548,7 @@ const RANK_KEYS: [&str; 22] = [
     "frames_received",
     "coalesced_sent",
     "coalesced_received",
+    "wire_overhead_bytes",
     "kernel",
     "spans",
 ];

@@ -21,6 +21,9 @@
 
 use std::time::Instant;
 
+use crate::comm::transport::{Wire, WireReader};
+use crate::error::{Error, Result};
+
 /// Phases a rank timeline is decomposed into. `name()` strings are part
 /// of the snapshot schema (`obs::registry`) — append variants, never
 /// rename.
@@ -70,6 +73,22 @@ impl SpanPhase {
     }
 }
 
+/// Phases travel as their index in [`SpanPhase::ALL`] (schema order —
+/// append-only, like the snapshot names).
+impl Wire for SpanPhase {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        let idx = SpanPhase::ALL.iter().position(|p| p == self).unwrap() as u8;
+        out.push(idx);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let idx = r.u8()? as usize;
+        SpanPhase::ALL
+            .get(idx)
+            .copied()
+            .ok_or_else(|| Error::Comm(format!("unknown span phase index {idx}")))
+    }
+}
+
 /// Which clock the ticks of a [`SpanLog`] were read from.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ClockDomain {
@@ -90,6 +109,22 @@ impl ClockDomain {
     }
 }
 
+impl Wire for ClockDomain {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        out.push(match self {
+            ClockDomain::Wall => 0,
+            ClockDomain::Virtual => 1,
+        });
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        match r.u8()? {
+            0 => Ok(ClockDomain::Wall),
+            1 => Ok(ClockDomain::Virtual),
+            b => Err(Error::Comm(format!("unknown clock domain byte {b}"))),
+        }
+    }
+}
+
 /// One closed interval on a rank's timeline, in the log's clock domain.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Span {
@@ -106,6 +141,21 @@ impl Span {
     }
 }
 
+impl Wire for Span {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.phase.write_to(out);
+        self.t_start.write_to(out);
+        self.t_end.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(Span {
+            phase: SpanPhase::read_from(r)?,
+            t_start: u64::read_from(r)?,
+            t_end: u64::read_from(r)?,
+        })
+    }
+}
+
 /// A finished, chronologically ordered span timeline for one rank, as
 /// carried by `CommMetrics::spans`. Equality is structural, which is what
 /// the conformance suite uses to assert replayed schedules reproduce
@@ -116,6 +166,27 @@ pub struct SpanLog {
     pub spans: Vec<Span>,
     /// Spans overwritten by ring wrap-around (oldest-first eviction).
     pub dropped: u64,
+}
+
+impl Wire for SpanLog {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.domain.write_to(out);
+        self.dropped.write_to(out);
+        (self.spans.len() as u64).write_to(out);
+        for s in &self.spans {
+            s.write_to(out);
+        }
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let domain = ClockDomain::read_from(r)?;
+        let dropped = u64::read_from(r)?;
+        let n = r.len_prefix(17)?;
+        let mut spans = Vec::with_capacity(n);
+        for _ in 0..n {
+            spans.push(Span::read_from(r)?);
+        }
+        Ok(SpanLog { domain, spans, dropped })
+    }
 }
 
 impl SpanLog {

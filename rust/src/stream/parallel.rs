@@ -21,6 +21,7 @@ use std::sync::Arc;
 
 use crate::comm::metrics::ClusterMetrics;
 use crate::comm::threads::{Comm, Progress, ProgressUnit};
+use crate::comm::transport::{Wire, WireReader};
 use crate::config::CostFn;
 use crate::error::{Error, Result};
 use crate::graph::csr::Csr;
@@ -100,12 +101,56 @@ struct RankBatch {
     deletes: u32,
 }
 
+impl Wire for RankBatch {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        self.delta.write_to(out);
+        self.work.write_to(out);
+        self.inserts.write_to(out);
+        self.deletes.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        Ok(RankBatch {
+            delta: i64::read_from(r)?,
+            work: u64::read_from(r)?,
+            inserts: u32::read_from(r)?,
+            deletes: u32::read_from(r)?,
+        })
+    }
+}
+
 /// What each rank returns to the driver.
 struct RankOutput {
     per_batch: Vec<RankBatch>,
     /// Rank 0 materializes the final graph; other ranks skip it.
     final_graph: Option<Csr>,
     compactions: u64,
+}
+
+/// `RankOutput` crosses the socket fabric twice: worker → rank 0 in the
+/// result gather and back out in the assembled broadcast, final graph
+/// included — the stream driver's fold reads `outputs[0].final_graph` on
+/// every rank, so stripping it in transit would break worker-side folds.
+impl Wire for RankOutput {
+    fn write_to(&self, out: &mut Vec<u8>) {
+        (self.per_batch.len() as u64).write_to(out);
+        for b in &self.per_batch {
+            b.write_to(out);
+        }
+        self.final_graph.write_to(out);
+        self.compactions.write_to(out);
+    }
+    fn read_from(r: &mut WireReader<'_>) -> Result<Self> {
+        let n = r.len_prefix(24)?;
+        let mut per_batch = Vec::with_capacity(n);
+        for _ in 0..n {
+            per_batch.push(RankBatch::read_from(r)?);
+        }
+        Ok(RankOutput {
+            per_batch,
+            final_graph: Option::<Csr>::read_from(r)?,
+            compactions: u64::read_from(r)?,
+        })
+    }
 }
 
 /// Stream `batches` through `p` ranks. The initial count is taken once on

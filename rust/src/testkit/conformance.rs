@@ -31,6 +31,16 @@
 //! `rust/tests/conformance.rs`. To add a new protocol, give it a
 //! `run_on(&Fabric, …)` entry point, a [`Path`] variant, and an arm in
 //! [`run_path`] — DESIGN.md §10 walks through it.
+//!
+//! **The live-wire axis** ([`run_tcp_matrix`], `tricount conformance
+//! --fabric tcp`): the same path × workload × P grid, but each cell runs
+//! as P OS processes over loopback TCP (`comm::tcp`, DESIGN.md §15) —
+//! rank 0 in the calling process, ranks 1..P spawned as `tricount worker
+//! … -- conformance-cell` children. Every rank re-derives the
+//! deterministic workload (no graph bytes cross the wire), the oracle and
+//! per-tag-class conservation are asserted on the allgathered metrics,
+//! and children are always reaped (wait-with-timeout, then kill), so a
+//! wedged cell fails the matrix instead of orphaning processes.
 
 use std::sync::Arc;
 
@@ -95,6 +105,11 @@ impl Path {
             Path::Stream => "stream",
             Path::Tile2d => "tile2d",
         }
+    }
+
+    /// Inverse of [`Path::name`] (CLI `--paths`, `worker -- conformance-cell`).
+    pub fn from_name(s: &str) -> Option<Path> {
+        Path::ALL.iter().copied().find(|p| p.name() == s)
     }
 
     /// Does the protocol exchange point-to-point messages (and can
@@ -323,6 +338,249 @@ fn outcome_string(r: &Result<PathRun>) -> String {
     }
 }
 
+/// Σ sent == Σ received per tag class — the conservation predicate the
+/// suite asserts on every cell: data envelopes, control markers, coalesced
+/// frames, logical records, and the 2D row/column broadcast split each
+/// drain (trivially 0 where a path doesn't use a class). Empty vec =
+/// conserved.
+pub fn conservation_violations(m: &ClusterMetrics) -> Vec<String> {
+    let tot = m.totals();
+    [
+        ("data messages", tot.messages_sent, tot.messages_received),
+        ("control messages", tot.control_sent, tot.control_received),
+        ("frames", tot.frames_sent, tot.frames_received),
+        ("records", tot.coalesced_sent, tot.coalesced_received),
+        ("row-bcast", tot.row_bcast_sent, tot.row_bcast_received),
+        ("col-bcast", tot.col_bcast_sent, tot.col_bcast_received),
+    ]
+    .iter()
+    .filter(|(_, sent, received)| sent != received)
+    .map(|(name, sent, received)| format!("{name} sent {sent} != received {received}"))
+    .collect()
+}
+
+/// One conformance cell's observable outcome. On the TCP fabric every
+/// rank's process gets the identical value (the result allgather), so a
+/// worker can check its own copy and exit nonzero without waiting for
+/// rank 0's verdict.
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    pub count: TriangleCount,
+    pub oracle: TriangleCount,
+    pub metrics: ClusterMetrics,
+}
+
+/// Run one `(path, workload, P)` cell on an arbitrary fabric. Workload
+/// preparation is deterministic (fixed seeds), so separate processes
+/// calling this with the same spec count the same graph — TCP cells ship
+/// no graph bytes, only protocol traffic.
+pub fn run_cell(path: Path, workload: &str, p: usize, fabric: &Fabric) -> Result<CellOutcome> {
+    let w = Prepared::build(workload)?;
+    let (r, _) = run_path(path, fabric, &w, p);
+    let run = r?;
+    Ok(CellOutcome { count: run.count, oracle: w.oracle_for(path), metrics: run.metrics })
+}
+
+// ---------------------------------------------------------------------------
+// The live-wire (TCP) axis
+// ---------------------------------------------------------------------------
+
+/// Options for [`run_tcp_matrix`]: the same grid as [`Options`], each cell
+/// run as P OS processes over loopback TCP.
+#[derive(Clone, Debug)]
+pub struct TcpOptions {
+    /// The `tricount` binary to spawn workers from (tests:
+    /// `env!("CARGO_BIN_EXE_tricount")`; CLI: `std::env::current_exe()`).
+    pub bin: std::path::PathBuf,
+    pub workloads: Vec<String>,
+    pub procs: Vec<usize>,
+    pub paths: Vec<Path>,
+    /// Per-cell rendezvous join timeout (bounds a worker that never sees a
+    /// full roster).
+    pub join_timeout_ms: u64,
+}
+
+impl TcpOptions {
+    /// The acceptance grid ([`Options::default`]) over a given binary.
+    pub fn new(bin: impl Into<std::path::PathBuf>) -> TcpOptions {
+        let d = Options::default();
+        TcpOptions {
+            bin: bin.into(),
+            workloads: d.workloads,
+            procs: d.procs,
+            paths: d.paths,
+            join_timeout_ms: 20_000,
+        }
+    }
+}
+
+/// Bind-and-drop a loopback listener to pick a free `ip:port` for a cell's
+/// rendezvous.
+pub fn free_loopback_addr() -> Result<String> {
+    let l = std::net::TcpListener::bind("127.0.0.1:0")?;
+    Ok(l.local_addr()?.to_string())
+}
+
+/// Reap spawned worker processes: wait-with-timeout, then kill. Returns
+/// one failure string per worker that exited nonzero, timed out, or could
+/// not be waited on; with `kill_now` the workers are killed first (the
+/// local rank already failed) and only reaping errors are reported.
+pub fn reap_children(
+    children: &mut Vec<(usize, std::process::Child)>,
+    timeout: std::time::Duration,
+    kill_now: bool,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    let deadline = std::time::Instant::now() + timeout;
+    if kill_now {
+        for (_, c) in children.iter_mut() {
+            let _ = c.kill();
+        }
+    }
+    for (rank, c) in children.iter_mut() {
+        loop {
+            match c.try_wait() {
+                Ok(Some(status)) => {
+                    if !status.success() && !kill_now {
+                        failures.push(format!("worker rank {rank} exited with {status}"));
+                    }
+                    break;
+                }
+                Ok(None) if std::time::Instant::now() >= deadline => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    failures.push(format!(
+                        "worker rank {rank} still running after {timeout:?} (killed)"
+                    ));
+                    break;
+                }
+                Ok(None) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                Err(e) => {
+                    failures.push(format!("worker rank {rank} wait failed: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+    failures
+}
+
+/// Run one cell as P OS processes: rank 0 in this process (so the caller
+/// gets the allgathered metrics back as a value), ranks 1..P spawned as
+/// `worker … -- conformance-cell` children of `opts.bin`. Children are
+/// always reaped before this returns.
+pub fn run_tcp_cell(
+    opts: &TcpOptions,
+    path: Path,
+    workload: &str,
+    p: usize,
+    job_id: u64,
+) -> Result<CellOutcome> {
+    use std::process::{Command, Stdio};
+    let addr = free_loopback_addr()?;
+    let mut children: Vec<(usize, std::process::Child)> = Vec::new();
+    for rank in 1..p {
+        let spawned = Command::new(&opts.bin)
+            .args([
+                "worker",
+                "--connect",
+                &addr,
+                "--rank",
+                &rank.to_string(),
+                "--procs",
+                &p.to_string(),
+                "--job-id",
+                &job_id.to_string(),
+                "--join-timeout-ms",
+                &opts.join_timeout_ms.to_string(),
+                "--",
+                "conformance-cell",
+                "--path",
+                path.name(),
+                "--workload",
+                workload,
+            ])
+            .stdout(Stdio::null())
+            .spawn();
+        match spawned {
+            Ok(child) => children.push((rank, child)),
+            Err(e) => {
+                let _ = reap_children(&mut children, std::time::Duration::from_secs(1), true);
+                return Err(crate::error::Error::Config(format!(
+                    "cannot spawn worker rank {rank} from `{}`: {e}",
+                    opts.bin.display()
+                )));
+            }
+        }
+    }
+    let net = crate::comm::tcp::TcpFabric {
+        connect: addr,
+        rank: 0,
+        procs: p,
+        job_id,
+        join_timeout_ms: opts.join_timeout_ms,
+    };
+    let outcome = run_cell(path, workload, p, &Fabric::Tcp(net));
+    let timeout = std::time::Duration::from_millis(opts.join_timeout_ms)
+        + crate::comm::threads::recv_guard();
+    let worker_failures = reap_children(&mut children, timeout, outcome.is_err());
+    let outcome = outcome?;
+    if !worker_failures.is_empty() {
+        return Err(crate::error::Error::Cluster(format!(
+            "tcp cell workers failed: {}",
+            worker_failures.join("; ")
+        )));
+    }
+    Ok(outcome)
+}
+
+/// The live-wire matrix: every `(workload, path, P)` cell over loopback
+/// TCP, oracle equality and per-tag-class conservation asserted on the
+/// allgathered metrics. Job ids are deterministic per matrix run (pid ‖
+/// cell counter), so concurrent suites on one host can't cross-join.
+pub fn run_tcp_matrix(opts: &TcpOptions) -> Result<ConformanceReport> {
+    let mut report = ConformanceReport::default();
+    let mut job_id = (std::process::id() as u64) << 32;
+    for w in &opts.workloads {
+        for &path in &opts.paths {
+            for &p in &opts.procs {
+                job_id += 1;
+                report.cells += 1;
+                let cell = format!("{} {} P={p} [tcp]", path.name(), w);
+                let mut ok = true;
+                match run_tcp_cell(opts, path, w, p, job_id) {
+                    Ok(outcome) => {
+                        if outcome.count != outcome.oracle {
+                            report.failures.push(format!(
+                                "{cell}: count {} != oracle {}",
+                                outcome.count, outcome.oracle
+                            ));
+                            ok = false;
+                        }
+                        for v in conservation_violations(&outcome.metrics) {
+                            report.failures.push(format!("{cell}: {v}"));
+                            ok = false;
+                        }
+                    }
+                    Err(e) => {
+                        report.failures.push(format!("{cell}: {e}"));
+                        ok = false;
+                    }
+                }
+                report.configs.push(ConfigSummary {
+                    path: path.name(),
+                    workload: w.clone(),
+                    p,
+                    schedules: 1,
+                    hash: 0,
+                    ok,
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
 /// Run the full matrix. `Err` only for setup failures (bad workload
 /// spec); conformance violations are collected in
 /// [`ConformanceReport::failures`].
@@ -413,42 +671,8 @@ pub fn run(opts: &Options) -> Result<ConformanceReport> {
                                     );
                                 }
                             }
-                            let tot = a.metrics.totals();
-                            if tot.messages_sent != tot.messages_received {
-                                fail(
-                                    format!(
-                                        "data messages sent {} != received {}",
-                                        tot.messages_sent, tot.messages_received
-                                    ),
-                                    &mut ok,
-                                );
-                            }
-                            if tot.control_sent != tot.control_received {
-                                fail(
-                                    format!(
-                                        "control messages sent {} != received {}",
-                                        tot.control_sent, tot.control_received
-                                    ),
-                                    &mut ok,
-                                );
-                            }
-                            // Coalescing-plane tag classes drain too:
-                            // envelopes, logical records, and the 2D
-                            // path's row/column broadcast split each
-                            // conserve sent == received (trivially 0 on
-                            // the unframed paths).
-                            for (name, sent, received) in [
-                                ("frames", tot.frames_sent, tot.frames_received),
-                                ("records", tot.coalesced_sent, tot.coalesced_received),
-                                ("row-bcast", tot.row_bcast_sent, tot.row_bcast_received),
-                                ("col-bcast", tot.col_bcast_sent, tot.col_bcast_received),
-                            ] {
-                                if sent != received {
-                                    fail(
-                                        format!("{name} sent {sent} != received {received}"),
-                                        &mut ok,
-                                    );
-                                }
+                            for v in conservation_violations(&a.metrics) {
+                                fail(v, &mut ok);
                             }
                             cfg_hashes.push(t1.hash);
                             all_hashes.push(t1.hash);

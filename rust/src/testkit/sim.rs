@@ -40,8 +40,9 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::comm::metrics::CommMetrics;
+use crate::comm::tcp::TcpFabric;
 use crate::comm::threads::{try_recv_guard, Cluster, Comm, Progress};
-use crate::comm::transport::{Envelope, Liveness, Payload, Transport};
+use crate::comm::transport::{Envelope, Liveness, Payload, Transport, Wire};
 use crate::error::{Error, Result};
 use crate::gen::rng::Rng;
 use crate::testkit::sched::SimConfig;
@@ -56,6 +57,10 @@ pub enum Fabric {
     Channel,
     /// Seeded deterministic simulator — returns a [`TraceReport`].
     Sim(SimConfig),
+    /// Socket fabric (`comm::tcp`): this process runs ONE rank of a
+    /// multi-process cluster described by the [`TcpFabric`] config; the
+    /// result vector is the full allgather, identical on every rank.
+    Tcp(TcpFabric),
 }
 
 impl Fabric {
@@ -69,7 +74,7 @@ impl Fabric {
     ) -> (Result<Vec<(R, CommMetrics)>>, Option<TraceReport>)
     where
         M: Payload,
-        R: Send,
+        R: Wire + Send,
         F: Fn(&mut Comm<M>) -> Result<R> + Sync,
     {
         self.try_run_hooked(p, None, f)
@@ -86,7 +91,7 @@ impl Fabric {
     ) -> (Result<Vec<(R, CommMetrics)>>, Option<TraceReport>)
     where
         M: Payload,
-        R: Send,
+        R: Wire + Send,
         F: Fn(&mut Comm<M>) -> Result<R> + Sync,
     {
         match self {
@@ -95,6 +100,7 @@ impl Fabric {
                 let (r, t) = try_run_sim_hooked(p, cfg, progress, f);
                 (r, Some(t))
             }
+            Fabric::Tcp(cfg) => (crate::comm::tcp::run_tcp_hooked(cfg, p, progress, f), None),
         }
     }
 }

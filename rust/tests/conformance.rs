@@ -117,6 +117,23 @@ fn virtual_and_channel_fabrics_agree_on_surrogate() {
     assert!(t.sends > 0 && t.delivered == t.sends);
 }
 
+/// The live-wire axis (ISSUE 10): the same acceptance matrix — every
+/// path × workload × P∈{2,4,8} — each cell run as P OS processes over
+/// loopback TCP, spawned from this test's own binary. Oracle equality and
+/// per-tag-class byte conservation are asserted on the allgathered
+/// metrics; every worker process also checks its own copy of the result
+/// (the end-of-run allgather) and exits nonzero on disagreement.
+#[test]
+fn full_matrix_matches_oracle_over_loopback_tcp() {
+    use tricount::testkit::conformance::{run_tcp_matrix, TcpOptions};
+    let opts = TcpOptions::new(env!("CARGO_BIN_EXE_tricount"));
+    let r = run_tcp_matrix(&opts).unwrap();
+    assert_clean(&r);
+    let expected =
+        (opts.workloads.len() * opts.procs.len() * opts.paths.len()) as u64;
+    assert_eq!(r.cells, expected);
+}
+
 /// A straggler rank (slow-rank fault) reschedules everything but moves no
 /// counts — checked here on the dynamic load balancer, whose whole point
 /// is tolerating exactly this.

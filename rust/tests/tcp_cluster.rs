@@ -1,0 +1,222 @@
+//! Process-level tests for the socket fabric (DESIGN.md §15): rendezvous
+//! failures are deterministic typed errors that leave no orphan worker
+//! processes, and the byte accounting a TCP cell reports is *identical*
+//! to the in-process channel fabric's — the framing cost appears only in
+//! the additive `wire_overhead_bytes` counter.
+//!
+//! Workers are real OS processes spawned from `CARGO_BIN_EXE_tricount`;
+//! rank 0 always runs in this test process so errors and metrics come
+//! back as values. Every spawned child is reaped with a wait-with-timeout
+//! before a test returns.
+
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use tricount::comm::tcp::TcpFabric;
+use tricount::error::Error;
+use tricount::testkit::conformance::{
+    free_loopback_addr, reap_children, run_cell, run_tcp_cell, Path, TcpOptions,
+};
+use tricount::testkit::sim::Fabric;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tricount")
+}
+
+/// Spawn `worker --connect … -- conformance-cell` with an explicit rank /
+/// procs / job id — the building block for the failure-injection tests.
+fn spawn_worker(addr: &str, rank: usize, procs: usize, job_id: u64, join_ms: u64) -> std::process::Child {
+    Command::new(bin())
+        .args([
+            "worker",
+            "--connect",
+            addr,
+            "--rank",
+            &rank.to_string(),
+            "--procs",
+            &procs.to_string(),
+            "--job-id",
+            &job_id.to_string(),
+            "--join-timeout-ms",
+            &join_ms.to_string(),
+            "--",
+            "conformance-cell",
+            "--path",
+            "surrogate",
+            "--workload",
+            "pa:160:6",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn worker")
+}
+
+fn host_fabric(addr: &str, procs: usize, job_id: u64, join_ms: u64) -> Fabric {
+    Fabric::Tcp(TcpFabric {
+        connect: addr.to_string(),
+        rank: 0,
+        procs,
+        job_id,
+        join_timeout_ms: join_ms,
+    })
+}
+
+fn config_msg(e: Error) -> String {
+    match e {
+        Error::Config(m) => m,
+        other => panic!("expected Error::Config, got {other:?}"),
+    }
+}
+
+/// Reap and assert every child *exited on its own* (any status) — i.e.
+/// nothing was still running when the deadline hit. Returns the failure
+/// strings for callers that also care about exit codes.
+fn assert_no_orphans(mut children: Vec<(usize, std::process::Child)>, timeout: Duration) -> Vec<String> {
+    let failures = reap_children(&mut children, timeout, false);
+    for f in &failures {
+        assert!(
+            !f.contains("still running"),
+            "orphaned worker had to be killed: {f}"
+        );
+    }
+    failures
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous failures
+// ---------------------------------------------------------------------------
+
+/// Two workers presenting the same rank: rank 0 rejects the roster with a
+/// deterministic `Error::Config`, both workers are notified (or see EOF)
+/// and exit without being killed.
+#[test]
+fn duplicate_rank_is_a_config_error_with_no_orphans() {
+    let addr = free_loopback_addr().unwrap();
+    let job = 0x10_0001;
+    let children = vec![
+        (1, spawn_worker(&addr, 1, 3, job, 15_000)),
+        (1, spawn_worker(&addr, 1, 3, job, 15_000)),
+    ];
+    let err = run_cell(Path::Surrogate, "pa:160:6", 3, &host_fabric(&addr, 3, job, 15_000))
+        .expect_err("duplicate rank must fail rendezvous");
+    let msg = config_msg(err);
+    assert!(msg.contains("duplicate rank 1"), "{msg}");
+    // Rejected workers exit nonzero on their own — no kill needed.
+    let failures = assert_no_orphans(children, Duration::from_secs(20));
+    assert_eq!(failures.len(), 2, "both workers must exit nonzero: {failures:?}");
+}
+
+/// A roster that never completes: rank 0 gives up at the join timeout
+/// naming the ranks that never arrived, and drops the joined worker's
+/// socket so it unblocks and exits too.
+#[test]
+fn missing_rank_times_out_deterministically() {
+    let addr = free_loopback_addr().unwrap();
+    let job = 0x10_0002;
+    // P=3 but only rank 1 ever dials in.
+    let children = vec![(1, spawn_worker(&addr, 1, 3, job, 10_000))];
+    let start = Instant::now();
+    let err = run_cell(Path::Surrogate, "pa:160:6", 3, &host_fabric(&addr, 3, job, 1_500))
+        .expect_err("missing rank must time out");
+    let msg = config_msg(err);
+    assert!(msg.contains("join timeout"), "{msg}");
+    assert!(msg.contains("missing rank(s) 2"), "{msg}");
+    // The timeout is honored, not a hang: well under the worker's own 10s.
+    assert!(start.elapsed() < Duration::from_secs(8), "took {:?}", start.elapsed());
+    let failures = assert_no_orphans(children, Duration::from_secs(20));
+    assert_eq!(failures.len(), 1, "the joined worker must exit nonzero: {failures:?}");
+}
+
+/// A worker from a different launch (stale script, recycled port): its
+/// hello carries the wrong job id and rank 0 rejects the roster; the
+/// worker exits cleanly rather than counting into the wrong job.
+#[test]
+fn job_id_mismatch_is_rejected() {
+    let addr = free_loopback_addr().unwrap();
+    let children = vec![
+        (1, spawn_worker(&addr, 1, 2, 0xAAAA, 15_000)), // wrong job id
+    ];
+    let err = run_cell(Path::Surrogate, "pa:160:6", 2, &host_fabric(&addr, 2, 0xBBBB, 15_000))
+        .expect_err("job-id mismatch must fail rendezvous");
+    let msg = config_msg(err);
+    assert!(msg.contains("job-id mismatch"), "{msg}");
+    let failures = assert_no_orphans(children, Duration::from_secs(20));
+    assert_eq!(failures.len(), 1, "mismatched worker must exit nonzero: {failures:?}");
+}
+
+/// A worker whose host never exists: the dial retry loop is bounded by
+/// the join timeout — the process exits nonzero on its own, quickly.
+#[test]
+fn worker_without_a_host_exits_within_its_join_timeout() {
+    // Reserve-and-release a port so nothing is listening there.
+    let addr = free_loopback_addr().unwrap();
+    let children = vec![(1, spawn_worker(&addr, 1, 2, 1, 1_000))];
+    let start = Instant::now();
+    let failures = assert_no_orphans(children, Duration::from_secs(15));
+    assert_eq!(failures.len(), 1, "worker must exit nonzero: {failures:?}");
+    assert!(start.elapsed() < Duration::from_secs(12), "took {:?}", start.elapsed());
+}
+
+// ---------------------------------------------------------------------------
+// Byte-accounting equivalence (channel fabric vs loopback TCP)
+// ---------------------------------------------------------------------------
+
+/// The socket fabric accounts exactly like the channel fabric: every
+/// deterministic per-rank counter matches between an in-process run and a
+/// 4-process loopback run of the same cell, and the TCP framing cost
+/// shows up *only* in `wire_overhead_bytes` (additive, zero in-process).
+#[test]
+fn tcp_and_channel_fabrics_account_identically() {
+    let opts = TcpOptions::new(bin());
+    for (i, path) in [Path::Surrogate, Path::Direct, Path::Tile2d].into_iter().enumerate() {
+        let spec = "pa:160:6";
+        let p = 4;
+        let chan = run_cell(path, spec, p, &Fabric::Channel).unwrap();
+        let tcp = run_tcp_cell(&opts, path, spec, p, 0x2000_0000 + i as u64).unwrap();
+
+        assert_eq!(chan.count, chan.oracle, "{path:?}: channel count");
+        assert_eq!(tcp.count, tcp.oracle, "{path:?}: tcp count");
+        assert_eq!(chan.count, tcp.count, "{path:?}: fabrics disagree");
+
+        assert_eq!(chan.metrics.per_rank.len(), p);
+        assert_eq!(tcp.metrics.per_rank.len(), p);
+        for r in 0..p {
+            let (c, t) = (&chan.metrics.per_rank[r], &tcp.metrics.per_rank[r]);
+            let label = format!("{path:?} rank {r}");
+            assert_eq!(c.messages_sent, t.messages_sent, "{label}: messages_sent");
+            assert_eq!(c.messages_received, t.messages_received, "{label}: messages_received");
+            assert_eq!(c.bytes_sent, t.bytes_sent, "{label}: bytes_sent");
+            assert_eq!(c.control_sent, t.control_sent, "{label}: control_sent");
+            assert_eq!(c.control_received, t.control_received, "{label}: control_received");
+            assert_eq!(c.frames_sent, t.frames_sent, "{label}: frames_sent");
+            assert_eq!(c.frames_received, t.frames_received, "{label}: frames_received");
+            assert_eq!(c.coalesced_sent, t.coalesced_sent, "{label}: coalesced_sent");
+            assert_eq!(c.coalesced_received, t.coalesced_received, "{label}: coalesced_received");
+            assert_eq!(c.row_bcast_sent, t.row_bcast_sent, "{label}: row_bcast_sent");
+            assert_eq!(c.col_bcast_sent, t.col_bcast_sent, "{label}: col_bcast_sent");
+
+            // Framing cost: strictly additive, never claimed in-process.
+            assert_eq!(c.wire_overhead_bytes, 0, "{label}: channel fabric claims framing bytes");
+            if t.messages_sent + t.control_sent > 0 {
+                assert!(t.wire_overhead_bytes > 0, "{label}: tcp rank sent envelopes for free");
+            }
+        }
+
+        // Conservation holds on the allgathered TCP metrics too.
+        let violations = tricount::testkit::conformance::conservation_violations(&tcp.metrics);
+        assert!(violations.is_empty(), "{path:?}: {violations:?}");
+    }
+}
+
+/// Every process in a TCP cell receives the identical allgathered result:
+/// a worker checks its own copy against the oracle (and exits nonzero on
+/// mismatch), so `run_tcp_cell` succeeding certifies *every* rank's view,
+/// not just rank 0's. This runs one extra path (dynamic-lb, the
+/// coordinator/worker protocol) end-to-end over real sockets.
+#[test]
+fn dynamic_lb_counts_over_real_sockets() {
+    let opts = TcpOptions::new(bin());
+    let out = run_tcp_cell(&opts, Path::DynamicLb, "er:220:5", 4, 0x3000_0001).unwrap();
+    assert_eq!(out.count, out.oracle);
+}

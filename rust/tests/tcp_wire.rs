@@ -1,0 +1,323 @@
+//! Wire-protocol corruption suite for the socket fabric (`comm::tcp`,
+//! DESIGN.md §15): every malformed byte stream must produce a typed,
+//! deterministic error — never a panic, never a hang, never a silently
+//! wrong frame. The codec is total over arbitrary input; these tests
+//! sweep every truncation point exhaustively and fuzz the rest through
+//! the in-crate property harness.
+
+use std::io::{Cursor, Read, Write};
+
+use tricount::comm::tcp::{
+    encode_frame, encode_hello, read_frame, read_hello, read_seq, write_seq, RawFrame,
+    FRAME_HEADER_BYTES, HELLO_BYTES, MAGIC, MAX_FRAME_BYTES, WIRE_VERSION,
+};
+use tricount::comm::transport::{Wire, WireReader};
+use tricount::error::Error;
+
+fn comm_msg(e: Error) -> String {
+    match e {
+        Error::Comm(m) => m,
+        other => panic!("expected Error::Comm, got {other:?}"),
+    }
+}
+
+fn config_msg(e: Error) -> String {
+    match e {
+        Error::Config(m) => m,
+        other => panic!("expected Error::Config, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+#[test]
+fn frame_roundtrips_at_every_payload_size_class() {
+    for len in [0usize, 1, 7, 20, 255, 4096] {
+        let payload: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
+        let bytes = encode_frame(3, 1, 6, 42, &payload);
+        assert_eq!(bytes.len(), FRAME_HEADER_BYTES + len);
+        let mut c = Cursor::new(&bytes);
+        let f = read_frame(&mut c).unwrap().expect("one frame in");
+        assert_eq!(
+            f,
+            RawFrame { src: 3, dst: 1, tag: 6, control: 42, payload },
+            "payload size {len}"
+        );
+        // The stream is now at a frame boundary: clean EOF, not an error.
+        assert!(read_frame(&mut c).unwrap().is_none(), "payload size {len}");
+    }
+}
+
+/// Exhaustive truncation sweep: cutting a valid frame at *any* interior
+/// byte is a mid-stream disconnect ([`Error::Comm`]); cutting at offset 0
+/// is a clean EOF (`Ok(None)`). Stronger than random fuzz — every cut
+/// point is visited.
+#[test]
+fn every_truncation_point_is_a_comm_error() {
+    let bytes = encode_frame(0, 2, 0, 0, b"nine-byte");
+    assert!(read_frame(&mut Cursor::new(&bytes[..0])).unwrap().is_none());
+    for cut in 1..bytes.len() {
+        match read_frame(&mut Cursor::new(&bytes[..cut])) {
+            Err(e) => {
+                let msg = comm_msg(e);
+                assert!(msg.contains("disconnect"), "cut {cut}: {msg}");
+            }
+            Ok(other) => panic!("cut at {cut} must fail, got {other:?}"),
+        }
+    }
+}
+
+/// A corrupt length prefix fails *before* the payload allocation: a frame
+/// header claiming `u32::MAX` bytes must be rejected by the cap, not
+/// attempted.
+#[test]
+fn oversize_length_prefix_fails_before_allocation() {
+    for claimed in [MAX_FRAME_BYTES as u32 + 1, u32::MAX] {
+        let mut bytes = encode_frame(0, 1, 0, 0, &[]);
+        bytes[16..20].copy_from_slice(&claimed.to_le_bytes());
+        let msg = comm_msg(read_frame(&mut Cursor::new(&bytes)).unwrap_err());
+        assert!(msg.contains("exceeds"), "{msg}");
+    }
+    // The cap itself is inclusive: a header claiming exactly MAX_FRAME_BYTES
+    // passes validation and then fails as a truncated payload.
+    let mut bytes = encode_frame(0, 1, 0, 0, &[]);
+    bytes[16..20].copy_from_slice(&(MAX_FRAME_BYTES as u32).to_le_bytes());
+    let msg = comm_msg(read_frame(&mut Cursor::new(&bytes)).unwrap_err());
+    assert!(msg.contains("disconnect"), "{msg}");
+}
+
+/// Interleaved frames on one stream decode in order with nothing carried
+/// between them — the non-overtaking base case.
+#[test]
+fn back_to_back_frames_decode_in_order() {
+    let mut stream = Vec::new();
+    for i in 0..5u32 {
+        stream.extend_from_slice(&encode_frame(i, 0, i % 3, i * 10, &vec![i as u8; i as usize]));
+    }
+    let mut c = Cursor::new(&stream);
+    for i in 0..5u32 {
+        let f = read_frame(&mut c).unwrap().unwrap();
+        assert_eq!((f.src, f.tag, f.control, f.payload.len()), (i, i % 3, i * 10, i as usize));
+    }
+    assert!(read_frame(&mut c).unwrap().is_none());
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous hello
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hello_roundtrip_and_field_extraction() {
+    let b = encode_hello(0xDEAD_BEEF_0BAD_F00D, 3, 8);
+    assert_eq!(b.len(), HELLO_BYTES);
+    let h = read_hello(&mut Cursor::new(&b)).unwrap();
+    assert_eq!((h.job_id, h.rank, h.procs), (0xDEAD_BEEF_0BAD_F00D, 3, 8));
+}
+
+/// A peer that is not a tricount build is a *deployment* mistake, not a
+/// transient wire fault: bad magic and bad version are `Error::Config`.
+#[test]
+fn foreign_magic_and_version_are_config_errors() {
+    let mut b = encode_hello(1, 0, 2);
+    b[0] ^= 0xFF;
+    let msg = config_msg(read_hello(&mut Cursor::new(&b)).unwrap_err());
+    assert!(msg.contains("magic") && msg.contains("not a tricount peer"), "{msg}");
+
+    let mut b = encode_hello(1, 0, 2);
+    b[4..8].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    let msg = config_msg(read_hello(&mut Cursor::new(&b)).unwrap_err());
+    assert!(msg.contains("wire version mismatch"), "{msg}");
+
+    // Sanity: the constants the protocol pins.
+    assert_eq!(MAGIC, 0x5452_4943); // "TRIC" LE
+    assert_eq!(WIRE_VERSION, 1);
+}
+
+#[test]
+fn truncated_hello_is_a_comm_error_at_every_cut() {
+    let b = encode_hello(7, 1, 4);
+    for cut in 0..b.len() {
+        let msg = comm_msg(read_hello(&mut Cursor::new(&b[..cut])).unwrap_err());
+        assert!(msg.contains("hello"), "cut {cut}: {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload sequences (the result-allgather body)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seq_roundtrip_rejects_trailing_garbage() {
+    let items: Vec<u64> = vec![0, u64::MAX, 0x0123_4567_89AB_CDEF];
+    let mut buf = Vec::new();
+    write_seq(&items, &mut buf);
+    let mut r = WireReader::new(&buf);
+    assert_eq!(read_seq::<u64>(&mut r).unwrap(), items);
+    r.finish().expect("exact consumption");
+
+    buf.push(0xAA);
+    let mut r = WireReader::new(&buf);
+    assert_eq!(read_seq::<u64>(&mut r).unwrap(), items);
+    let msg = comm_msg(r.finish().unwrap_err());
+    assert!(msg.contains("trailing"), "{msg}");
+}
+
+#[test]
+fn seq_with_corrupt_count_fails_before_allocation() {
+    let mut buf = Vec::new();
+    write_seq(&[1u64, 2, 3], &mut buf);
+    buf[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+    let mut r = WireReader::new(&buf);
+    let msg = comm_msg(read_seq::<u64>(&mut r).unwrap_err());
+    assert!(msg.contains("length prefix"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Randomized totality (in-crate property harness)
+// ---------------------------------------------------------------------------
+
+/// Decoding arbitrary bytes as a frame or hello never panics and never
+/// fabricates an over-long read: either a value consuming exactly what
+/// its header claims, or a typed error.
+#[test]
+fn random_bytes_never_panic_the_decoders() {
+    tricount::prop::quickcheck("tcp wire totality", |rng, _| {
+        let len = rng.below_usize(96);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Ok(Some(f)) => {
+                if FRAME_HEADER_BYTES + f.payload.len() > bytes.len() {
+                    return Err(format!(
+                        "decoded {}-byte payload from {}-byte input",
+                        f.payload.len(),
+                        bytes.len()
+                    ));
+                }
+            }
+            Ok(None) => {
+                if !bytes.is_empty() {
+                    return Err("Ok(None) on non-empty stream".into());
+                }
+            }
+            Err(Error::Comm(_)) => {}
+            Err(other) => return Err(format!("unexpected error class: {other:?}")),
+        }
+        match read_hello(&mut Cursor::new(&bytes)) {
+            Ok(_) | Err(Error::Comm(_)) | Err(Error::Config(_)) => Ok(()),
+            Err(other) => Err(format!("hello: unexpected error class: {other:?}")),
+        }
+    });
+}
+
+/// Single-bit corruption of a valid frame stream: decoding stays total,
+/// and corruption outside the payload-length word can never make the
+/// reader consume more bytes than the original stream held.
+#[test]
+fn bit_flips_never_panic_or_overread() {
+    tricount::prop::quickcheck("tcp frame bit flips", |rng, _| {
+        let payload: Vec<u8> = (0..rng.below_usize(40)).map(|_| rng.below(256) as u8).collect();
+        let mut bytes = encode_frame(
+            rng.below(8) as u32,
+            rng.below(8) as u32,
+            rng.below(8) as u32,
+            rng.below(1 << 16) as u32,
+            &payload,
+        );
+        let bit = rng.below((bytes.len() * 8) as u64) as usize;
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Ok(Some(f)) => {
+                // A flip in the length word may shorten the frame; it can
+                // never lengthen it past the input without erroring.
+                if f.payload.len() > payload.len() {
+                    return Err("bit flip grew the decoded payload".into());
+                }
+                Ok(())
+            }
+            Ok(None) => Err("Ok(None) on non-empty stream".into()),
+            Err(Error::Comm(_)) => Ok(()),
+            Err(other) => Err(format!("unexpected error class: {other:?}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Real sockets
+// ---------------------------------------------------------------------------
+
+/// A peer that dies mid-frame on a real TCP stream surfaces as the same
+/// deterministic `Error::Comm` the cursor sweeps produce — the reader
+/// does not block on the missing bytes.
+#[test]
+fn mid_stream_disconnect_on_a_live_socket_is_a_comm_error() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let writer = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        // Header promises 100 payload bytes; deliver 10, then vanish.
+        let frame = encode_frame(1, 0, 0, 0, &[0u8; 100]);
+        s.write_all(&frame[..FRAME_HEADER_BYTES + 10]).unwrap();
+        // Drop closes the socket.
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let msg = comm_msg(read_frame(&mut conn).unwrap_err());
+    assert!(msg.contains("disconnect"), "{msg}");
+    writer.join().unwrap();
+}
+
+/// A frame written through a real socket in arbitrarily small chunks
+/// (exercising short `read` returns) still reassembles exactly.
+#[test]
+fn dribbled_frame_reassembles_over_a_live_socket() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let payload: Vec<u8> = (0..300).map(|i| (i % 256) as u8).collect();
+    let frame = encode_frame(2, 0, 6, 1, &payload);
+    let chunks = frame.clone();
+    let writer = std::thread::spawn(move || {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        for chunk in chunks.chunks(7) {
+            s.write_all(chunk).unwrap();
+            s.flush().unwrap();
+        }
+        // Half-close the write side so the reader sees clean EOF after.
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        // Keep the socket alive until the reader drains it.
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    let f = read_frame(&mut conn).unwrap().unwrap();
+    assert_eq!(f, RawFrame { src: 2, dst: 0, tag: 6, control: 1, payload });
+    assert!(read_frame(&mut conn).unwrap().is_none());
+    writer.join().unwrap();
+}
+
+/// `CommMetrics` — the result-allgather body — survives a wire roundtrip
+/// bit-exactly, including the socket fabric's own `wire_overhead_bytes`
+/// counter.
+#[test]
+fn comm_metrics_roundtrip_preserves_wire_overhead() {
+    let m = tricount::comm::metrics::CommMetrics {
+        messages_sent: 17,
+        bytes_sent: 4096,
+        wire_overhead_bytes: 620,
+        frames_sent: 3,
+        ..Default::default()
+    };
+    let bytes = m.to_bytes();
+    let back = tricount::comm::metrics::CommMetrics::from_bytes(&bytes).unwrap();
+    assert_eq!(back.wire_overhead_bytes, 620);
+    assert_eq!(back.messages_sent, 17);
+    assert_eq!(back.bytes_sent, 4096);
+    // Truncation of the metrics body is as total as the frame codec.
+    for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+        assert!(
+            tricount::comm::metrics::CommMetrics::from_bytes(&bytes[..cut]).is_err(),
+            "cut {cut}"
+        );
+    }
+}

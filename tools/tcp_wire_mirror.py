@@ -1,0 +1,462 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of the `comm/tcp` wire protocol (DESIGN.md §15).
+
+The authoring container has no Rust toolchain, so this script re-implements
+the socket fabric's protocol state machines — frame codec, rank-0
+rendezvous, lower-dials/higher-accepts mesh, rank-0-coordinated collectives,
+end-of-run result allgather — in Python over real loopback sockets, and
+drives the same scenarios the Rust test suite asserts:
+
+  1. codec totality: every truncation point of a valid frame/hello fails
+     deterministically; oversize length prefixes are rejected before
+     allocation.
+  2. live mesh: a P-rank toy protocol where every rank messages every peer,
+     barriers, reduces, and allgathers results — asserting identical
+     gathered vectors on all ranks, per-(src,dst) non-overtaking sequence
+     numbers, sent==received conservation per tag class, and
+     wire_overhead == FRAME_HEADER_BYTES * frames.
+  3. rendezvous failures: duplicate rank, missing rank (join timeout), and
+     job-id mismatch each produce a deterministic host error while every
+     joined worker unblocks (reject byte or EOF) — no hangs.
+
+Run: python3 tools/tcp_wire_mirror.py
+"""
+
+import io
+import socket
+import struct
+import threading
+import time
+
+MAGIC = 0x54524943  # "TRIC" little-endian
+WIRE_VERSION = 1
+HELLO_BYTES = 24
+FRAME_HEADER_BYTES = 20
+MAX_FRAME_BYTES = 1 << 30
+
+TAG_MSG, TAG_BARRIER, TAG_BARRIER_GO, TAG_REDUCE, TAG_REDUCE_GO, \
+    TAG_RETIRE, TAG_RESULT, TAG_RESULT_GO = range(8)
+
+
+class Comm(Exception):
+    pass
+
+
+class Config(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Codec (mirrors encode_frame / read_frame / encode_hello / read_hello)
+# ---------------------------------------------------------------------------
+
+def encode_frame(src, dst, tag, control, payload):
+    return struct.pack("<5I", src, dst, tag, control, len(payload)) + payload
+
+
+def read_exact(r, n, what):
+    buf = b""
+    while len(buf) < n:
+        chunk = r.read(n - len(buf)) if hasattr(r, "read") else r.recv(n - len(buf))
+        if not chunk:
+            raise Comm(f"mid-stream disconnect while reading {what}: "
+                       f"got {len(buf)} of {n} bytes")
+        buf += chunk
+    return buf
+
+
+def read_frame(r):
+    """Ok(None) analogue: returns None on clean EOF at a frame boundary."""
+    first = r.read(1) if hasattr(r, "read") else r.recv(1)
+    if not first:
+        return None
+    hdr = first + read_exact(r, FRAME_HEADER_BYTES - 1, "frame header")
+    src, dst, tag, control, ln = struct.unpack("<5I", hdr)
+    if ln > MAX_FRAME_BYTES:
+        raise Comm(f"frame length {ln} exceeds the {MAX_FRAME_BYTES}-byte cap")
+    return src, dst, tag, control, read_exact(r, ln, "frame payload")
+
+
+def encode_hello(job_id, rank, procs):
+    return struct.pack("<IIQII", MAGIC, WIRE_VERSION, job_id, rank, procs)
+
+
+def read_hello(r):
+    b = read_exact(r, HELLO_BYTES, "hello")
+    magic, version, job_id, rank, procs = struct.unpack("<IIQII", b)
+    if magic != MAGIC:
+        raise Config(f"bad rendezvous magic {magic:#010x} — not a tricount peer")
+    if version != WIRE_VERSION:
+        raise Config(f"wire version mismatch: peer speaks v{version}")
+    return job_id, rank, procs
+
+
+def scenario_codec_totality():
+    frame = encode_frame(3, 1, TAG_RESULT, 42, bytes(range(9)))
+    got = read_frame(io.BytesIO(frame))
+    assert got == (3, 1, TAG_RESULT, 42, bytes(range(9)))
+    assert read_frame(io.BytesIO(b"")) is None
+    for cut in range(1, len(frame)):
+        try:
+            read_frame(io.BytesIO(frame[:cut]))
+            raise AssertionError(f"cut {cut} decoded")
+        except Comm:
+            pass
+    big = struct.pack("<5I", 0, 1, 0, 0, MAX_FRAME_BYTES + 1)
+    try:
+        read_frame(io.BytesIO(big))
+        raise AssertionError("oversize accepted")
+    except Comm as e:
+        assert "exceeds" in str(e)
+    hello = encode_hello(0xDEADBEEF, 2, 8)
+    assert read_hello(io.BytesIO(hello)) == (0xDEADBEEF, 2, 8)
+    try:
+        read_hello(io.BytesIO(b"\xff" + hello[1:]))
+        raise AssertionError("bad magic accepted")
+    except Config:
+        pass
+    print("ok  codec totality (truncation sweep, oversize cap, hello validation)")
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous + mesh (mirrors host_rendezvous / worker join / establish)
+# ---------------------------------------------------------------------------
+
+def write_blob(sock, b):
+    sock.sendall(struct.pack("<Q", len(b)) + b)
+
+
+def read_blob(sock):
+    (n,) = struct.unpack("<Q", read_exact(sock, 8, "blob length"))
+    return read_exact(sock, n, "blob")
+
+
+def host_rendezvous(listener, procs, job_id, timeout):
+    """Rank 0: accept hellos, validate the roster, broadcast the peer table.
+
+    Returns (streams, mesh_addrs). On any roster error every accepted
+    socket is closed (joined workers unblock via reject byte or EOF)."""
+    listener.settimeout(0.05)
+    joined = {}   # rank -> (sock, mesh_addr)
+    deadline = time.monotonic() + timeout
+    try:
+        while len(joined) < procs - 1:
+            if time.monotonic() >= deadline:
+                missing = sorted(set(range(1, procs)) - set(joined))
+                raise Config("rendezvous join timeout: missing rank(s) "
+                             + ",".join(map(str, missing)))
+            try:
+                s, _ = listener.accept()
+                s.settimeout(None)
+            except socket.timeout:
+                continue
+            jid, rank, p = read_hello(s)
+            mesh_addr = read_blob(s).decode()
+            if jid != job_id:
+                raise Config(f"rendezvous job-id mismatch: worker presented {jid:#x}")
+            if p != procs:
+                raise Config(f"rendezvous procs mismatch: worker built for P={p}")
+            if rank == 0 or rank >= procs:
+                raise Config(f"out-of-range rank {rank} at rendezvous")
+            if rank in joined:
+                raise Config(f"duplicate rank {rank} at rendezvous")
+            joined[rank] = (s, mesh_addr)
+    except Exception as e:
+        reason = str(e).encode()
+        for s, _ in joined.values():
+            try:
+                s.sendall(b"\x01")
+                write_blob(s, reason)
+            except OSError:
+                pass
+            s.close()  # un-notified workers unblock via EOF
+        raise
+    table = ["host"] + [joined[r][1] for r in range(1, procs)]
+    enc = struct.pack("<Q", len(table)) + b"".join(
+        struct.pack("<Q", len(a)) + a.encode() for a in table)
+    for r in range(1, procs):
+        s = joined[r][0]
+        s.sendall(b"\x00")
+        write_blob(s, enc)
+    return {r: joined[r][0] for r in range(1, procs)}
+
+
+def worker_join(connect, rank, procs, job_id, timeout):
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            s0 = socket.create_connection(connect, timeout=0.25)
+            s0.settimeout(None)
+            break
+        except OSError as e:
+            if time.monotonic() >= deadline:
+                raise Config(f"rank {rank}: could not reach rendezvous: {e}")
+            time.sleep(0.025)
+    mesh = socket.socket()
+    mesh.bind(("127.0.0.1", 0))
+    mesh.listen(procs)
+    s0.sendall(encode_hello(job_id, rank, procs))
+    write_blob(s0, f"127.0.0.1:{mesh.getsockname()[1]}".encode())
+    status = read_exact(s0, 1, "rendezvous status")
+    if status == b"\x01":
+        raise Config(f"rank {rank}: rendezvous rejected this worker: "
+                     + read_blob(s0).decode())
+    table_raw = read_blob(s0)
+    (n,) = struct.unpack("<Q", table_raw[:8])
+    table, at = [], 8
+    for _ in range(n):
+        (ln,) = struct.unpack("<Q", table_raw[at:at + 8])
+        table.append(table_raw[at + 8:at + 8 + ln].decode())
+        at += 8 + ln
+    streams = {0: s0}
+    for i in range(1, rank):          # dial every lower-ranked worker
+        host, port = table[i].rsplit(":", 1)
+        s = socket.create_connection((host, int(port)))
+        s.sendall(encode_hello(job_id, rank, procs))
+        streams[i] = s
+    mesh.settimeout(0.05)
+    while len(streams) < procs - 1:   # one stream per peer (all but self)
+        if time.monotonic() >= deadline:
+            raise Comm(f"rank {rank}: mesh join timeout")
+        try:
+            s, _ = mesh.accept()       # accept from every higher-ranked peer
+            s.settimeout(None)
+        except socket.timeout:
+            continue
+        jid, j, p = read_hello(s)
+        if jid != job_id or p != procs or j <= rank or j in streams:
+            raise Comm(f"rank {rank}: unexpected mesh hello from rank {j}")
+        streams[j] = s
+    mesh.close()
+    return streams
+
+
+# ---------------------------------------------------------------------------
+# Transport (per-stream reader threads + rank-0-coordinated collectives)
+# ---------------------------------------------------------------------------
+
+class Rank:
+    def __init__(self, rank, procs, streams):
+        self.rank, self.procs, self.streams = rank, procs, streams
+        self.lock = threading.Lock()
+        self.got = threading.Condition(self.lock)
+        self.inbox = {t: [] for t in range(8)}
+        self.sent = self.received = self.bytes_sent = self.overhead = 0
+        self.frames_sent = 0
+        self.last_seq = {}            # src -> last control value seen
+        self.readers = [threading.Thread(target=self._pump, args=(p,), daemon=True)
+                        for p in streams]
+        for t in self.readers:
+            t.start()
+
+    def _pump(self, peer):
+        while True:
+            try:
+                f = read_frame(self.streams[peer])
+            except (Comm, OSError):
+                return
+            if f is None:
+                return
+            src, _dst, tag, control, payload = f
+            with self.got:
+                if tag == TAG_MSG:
+                    # non-overtaking: one ordered TCP stream per directed
+                    # edge ⇒ per-source sequence numbers arrive monotone.
+                    assert control == self.last_seq.get(src, -1) + 1, \
+                        f"rank {self.rank}: overtaking from {src}"
+                    self.last_seq[src] = control
+                    self.received += 1
+                self.inbox[tag].append((src, control, payload))
+                self.got.notify_all()
+
+    def _send_raw(self, dst, tag, control, payload):
+        frame = encode_frame(self.rank, dst, tag, control, payload)
+        self.streams[dst].sendall(frame)
+        self.frames_sent += 1
+        self.overhead += FRAME_HEADER_BYTES
+
+    def send(self, dst, seq, payload):
+        self._send_raw(dst, TAG_MSG, seq, payload)
+        self.sent += 1
+        self.bytes_sent += len(payload)
+
+    def _wait(self, tag, n=1):
+        with self.got:
+            while len(self.inbox[tag]) < n:
+                assert self.got.wait(timeout=10), f"rank {self.rank}: hang on tag {tag}"
+            out, self.inbox[tag] = self.inbox[tag][:n], self.inbox[tag][n:]
+            return out
+
+    def barrier(self, epoch):
+        if self.rank == 0:
+            self._wait(TAG_BARRIER, self.procs - 1)
+            for d in range(1, self.procs):
+                self._send_raw(d, TAG_BARRIER_GO, epoch, b"")
+        else:
+            self._send_raw(0, TAG_BARRIER, epoch, b"")
+            self._wait(TAG_BARRIER_GO)
+
+    def reduce_sum(self, value, epoch):
+        if self.rank == 0:
+            parts = self._wait(TAG_REDUCE, self.procs - 1)
+            total = value + sum(struct.unpack("<Q", p)[0] for _, _, p in parts)
+            for d in range(1, self.procs):
+                self._send_raw(d, TAG_REDUCE_GO, epoch, struct.pack("<Q", total))
+            return total
+        self._send_raw(0, TAG_REDUCE, epoch, struct.pack("<Q", value))
+        return struct.unpack("<Q", self._wait(TAG_REDUCE_GO)[0][2])[0]
+
+    def allgather_result(self, blob):
+        if self.rank == 0:
+            parts = {0: blob}
+            for src, _, p in self._wait(TAG_RESULT, self.procs - 1):
+                assert src not in parts, f"duplicate result from rank {src}"
+                parts[src] = p
+            joined = b"".join(struct.pack("<Q", len(parts[r])) + parts[r]
+                              for r in range(self.procs))
+            for d in range(1, self.procs):
+                self._send_raw(d, TAG_RESULT_GO, 0, joined)
+        else:
+            self._send_raw(0, TAG_RESULT, 0, blob)
+            joined = self._wait(TAG_RESULT_GO)[0][2]
+        out, at = [], 0
+        while at < len(joined):
+            (ln,) = struct.unpack("<Q", joined[at:at + 8])
+            out.append(joined[at + 8:at + 8 + ln])
+            at += 8 + ln
+        return out
+
+
+def run_rank(rank, procs, job_id, listener, connect, results, errors):
+    try:
+        if rank == 0:
+            peers = host_rendezvous(listener, procs, job_id, 10)
+        else:
+            peers = worker_join(connect, rank, procs, job_id, 10)
+        node = Rank(rank, procs, peers)
+        # Toy protocol: (rank+1)*(dst+2) messages to every peer, sequenced.
+        for dst in range(procs):
+            if dst == rank:
+                continue
+            for seq in range((rank + 1) * (dst + 2)):
+                node.send(dst, seq, bytes([rank]) * (seq % 5))
+        expect = sum((src + 1) * (rank + 2) for src in range(procs) if src != rank)
+        deadline = time.monotonic() + 10
+        while node.received < expect:
+            assert time.monotonic() < deadline, f"rank {rank}: recv hang"
+            time.sleep(0.001)
+        node.barrier(epoch=1)
+        total = node.reduce_sum(rank * 100, epoch=2)
+        blob = struct.pack("<QQQQQ", node.sent, node.received,
+                           node.bytes_sent, node.frames_sent, node.overhead)
+        gathered = node.allgather_result(blob)
+        results[rank] = (total, gathered)
+    except Exception as e:  # noqa: BLE001 — collected and asserted by main
+        errors[rank] = e
+
+
+def scenario_live_mesh(procs=4):
+    listener = socket.socket()
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(procs)
+    connect = listener.getsockname()
+    results, errors = {}, {}
+    threads = [threading.Thread(target=run_rank,
+                                args=(r, procs, 7, listener, connect, results, errors))
+               for r in range(procs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+        assert not t.is_alive(), "rank thread hung"
+    assert not errors, errors
+    base_total, base_gather = results[0]
+    assert base_total == sum(r * 100 for r in range(procs))
+    per_rank = [struct.unpack("<QQQQQ", b) for b in base_gather]
+    for r in range(procs):
+        # identical allgathered vector on every rank
+        assert results[r] == (base_total, base_gather), f"rank {r} result differs"
+    sent = sum(m[0] for m in per_rank)
+    received = sum(m[1] for m in per_rank)
+    assert sent == received, f"conservation: {sent} != {received}"
+    for r, m in enumerate(per_rank):
+        assert m[4] == FRAME_HEADER_BYTES * m[3], f"rank {r}: overhead mismatch"
+        assert m[4] > 0
+    print(f"ok  live mesh P={procs} (identical allgather, non-overtaking, "
+          f"Σsent={sent}==Σreceived, overhead==20*frames)")
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous failures
+# ---------------------------------------------------------------------------
+
+def scenario_rendezvous_failures():
+    def host(procs, job_id, timeout=2.0):
+        listener = socket.socket()
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(procs)
+        return listener, listener.getsockname()
+
+    def join(connect, rank, procs, job_id, errs):
+        try:
+            worker_join(connect, rank, procs, job_id, 8)
+        except Exception as e:  # noqa: BLE001
+            errs[rank] = e
+
+    # duplicate rank: host rejects, both joined workers unblock with errors
+    listener, connect = host(3, 7)
+    errs = {}
+    ts = [threading.Thread(target=join, args=(connect, 1, 3, 7, errs)),
+          threading.Thread(target=join, args=(connect, 1, 3, 7, errs))]
+    for t in ts:
+        t.start()
+    try:
+        host_rendezvous(listener, 3, 7, 5)
+        raise AssertionError("duplicate rank accepted")
+    except Config as e:
+        assert "duplicate rank 1" in str(e), e
+    for t in ts:
+        t.join(timeout=10)
+        assert not t.is_alive(), "worker hung after duplicate-rank reject"
+    assert len(errs) >= 1  # same-rank threads race on one dict slot
+
+    # missing rank: deterministic join timeout naming the absentee
+    listener, connect = host(3, 7)
+    errs = {}
+    t = threading.Thread(target=join, args=(connect, 1, 3, 7, errs))
+    t.start()
+    t0 = time.monotonic()
+    try:
+        host_rendezvous(listener, 3, 7, 1.0)
+        raise AssertionError("missing rank accepted")
+    except Config as e:
+        assert "missing rank(s) 2" in str(e), e
+    assert time.monotonic() - t0 < 5
+    t.join(timeout=10)
+    assert not t.is_alive(), "worker hung after host timeout (EOF must unblock)"
+    assert 1 in errs, "joined worker must observe the abort"
+
+    # job-id mismatch: reject byte + reason reaches the stale worker
+    listener, connect = host(2, 0xBBBB)
+    errs = {}
+    t = threading.Thread(target=join, args=(connect, 1, 2, 0xAAAA, errs))
+    t.start()
+    try:
+        host_rendezvous(listener, 2, 0xBBBB, 5)
+        raise AssertionError("job-id mismatch accepted")
+    except Config as e:
+        assert "job-id mismatch" in str(e), e
+    t.join(timeout=10)
+    assert not t.is_alive()
+    assert "rejected" in str(errs[1]) or isinstance(errs[1], Comm), errs
+    print("ok  rendezvous failures (duplicate rank, missing rank, job-id "
+          "mismatch — deterministic errors, no hangs)")
+
+
+if __name__ == "__main__":
+    scenario_codec_totality()
+    scenario_live_mesh(procs=2)
+    scenario_live_mesh(procs=4)
+    scenario_live_mesh(procs=8)
+    scenario_rendezvous_failures()
+    print("tcp wire mirror: all scenarios passed")
